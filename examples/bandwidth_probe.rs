@@ -1,0 +1,67 @@
+//! Interactive latency/bandwidth probe — the Figure-3 measurement as a
+//! stand-alone tool (put and get vs buffer size, with the fitted
+//! communication model printed at the end).
+//!
+//! Usage: `bandwidth_probe [max_mb] [--copy IMPL]`
+
+use posh::bench::{auto_batch, measure};
+use posh::mem::copy::CopyImpl;
+use posh::model::CostModel;
+use posh::pe::{PoshConfig, World};
+
+fn main() -> posh::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let max_mb: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(64);
+    let imp = args
+        .iter()
+        .position(|a| a == "--copy")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| CopyImpl::parse(s))
+        .unwrap_or(CopyImpl::default_impl());
+
+    let mut cfg = PoshConfig::default();
+    cfg.heap_size = (max_mb << 20) + (8 << 20);
+    let world = World::threads(2, cfg)?;
+    println!("POSH bandwidth probe, copy impl: {}", imp.name());
+    println!("{:>12} {:>14} {:>14} {:>14} {:>14}", "size", "put ns", "put Gb/s", "get ns", "get Gb/s");
+
+    let results: Vec<Vec<(usize, f64, f64)>> = world.run_collect(|ctx| {
+        let max_bytes = max_mb << 20;
+        let buf = ctx.shmalloc_n::<u8>(max_bytes).unwrap();
+        let mut out = Vec::new();
+        if ctx.my_pe() == 0 {
+            let src = vec![0xA5u8; max_bytes];
+            let mut dst = vec![0u8; max_bytes];
+            let mut size = 8usize;
+            while size <= max_bytes {
+                let batch = auto_batch(size as f64 / 10.0);
+                let mput = measure(size, batch, || {
+                    ctx.put_with(imp, buf, &src[..size], 1);
+                });
+                let mget = measure(size, batch, || {
+                    ctx.get_with(imp, &mut dst[..size], buf, 1);
+                });
+                println!(
+                    "{:>12} {:>14.1} {:>14.2} {:>14.1} {:>14.2}",
+                    posh::util::fmt_bytes(size),
+                    mput.latency_ns(),
+                    mput.bandwidth_gbps(),
+                    mget.latency_ns(),
+                    mget.bandwidth_gbps()
+                );
+                out.push((size, mput.latency_ns(), mget.latency_ns()));
+                size *= 4;
+            }
+        }
+        ctx.barrier_all();
+        out
+    });
+
+    let samples = &results[0];
+    let put_model = CostModel::fit(&samples.iter().map(|&(s, p, _)| (s, p)).collect::<Vec<_>>());
+    let get_model = CostModel::fit(&samples.iter().map(|&(s, _, g)| (s, g)).collect::<Vec<_>>());
+    println!("\nfitted communication models (paper §1):");
+    println!("  put: {put_model}");
+    println!("  get: {get_model}");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! 2-D heat diffusion with halo exchange — the classic SHMEM stencil
+//! workload (the kind of kernel SHMEM was built for on the Cray T3).
+//!
+//! The global grid is split into horizontal bands, one per PE. Each Jacobi
+//! iteration: exchange boundary rows with neighbours via one-sided `put`,
+//! `barrier_all`, then relax the interior. Convergence is checked with a
+//! max-reduction over the local residuals.
+//!
+//! Usage: `heat2d [rows cols iters]` (defaults 256×256×200), thread mode
+//! with 4 PEs, or process mode under `oshrun -np K`.
+
+use posh::collectives::{ActiveSet, ReduceOp};
+use posh::pe::{Ctx, PoshConfig, World};
+
+struct Band {
+    rows: usize, // interior rows of this PE
+    cols: usize,
+}
+
+fn pe_body(ctx: Ctx, grid_rows: usize, cols: usize, iters: usize) {
+    let n = ctx.n_pes();
+    let me = ctx.my_pe();
+    let rows = grid_rows / n + if me < grid_rows % n { 1 } else { 0 };
+    let band = Band { rows, cols };
+
+    // Local band with two halo rows, double-buffered. Symmetric so
+    // neighbours can push halos one-sidedly.
+    let total = (band.rows + 2) * cols;
+    let cur = ctx.shmalloc_n::<f64>(total).unwrap();
+    let nxt = ctx.shmalloc_n::<f64>(total).unwrap();
+    let res_src = ctx.shmalloc_n::<f64>(1).unwrap();
+    let res_dst = ctx.shmalloc_n::<f64>(1).unwrap();
+
+    // Initial condition: hot top edge of the global grid, cold elsewhere.
+    unsafe {
+        let g = ctx.local_mut(cur);
+        g.fill(0.0);
+        if me == 0 {
+            for c in 0..cols {
+                g[cols + c] = 100.0; // first interior row of PE 0
+            }
+        }
+        ctx.local_mut(nxt).copy_from_slice(ctx.local(cur));
+    }
+    ctx.barrier_all();
+
+    let world = ActiveSet::world(n);
+    let up = me.checked_sub(1);
+    let down = (me + 1 < n).then_some(me + 1);
+
+    let mut src = cur;
+    let mut dst = nxt;
+    let mut residual = f64::INFINITY;
+    for it in 0..iters {
+        // --- Halo exchange: push my boundary rows into the neighbours'
+        // halo rows (pure one-sided; no receives anywhere).
+        let my_first = unsafe { ctx.local(src.slice(cols, cols)).to_vec() };
+        let my_last = unsafe { ctx.local(src.slice(band.rows * cols, cols)).to_vec() };
+        if let Some(u) = up {
+            // My first interior row becomes u's bottom halo. u has the same
+            // row count only if ranks divide evenly; compute u's halo slot
+            // from its own row count.
+            let u_rows = grid_rows / n + if u < grid_rows % n { 1 } else { 0 };
+            ctx.put(src.slice((u_rows + 1) * cols, cols), &my_first, u);
+        }
+        if let Some(d) = down {
+            // My last interior row becomes d's top halo (row 0).
+            ctx.put(src.slice(0, cols), &my_last, d);
+        }
+        ctx.barrier_all();
+
+        // --- Jacobi relaxation of the interior.
+        let mut local_max = 0.0f64;
+        unsafe {
+            let s = ctx.local(src);
+            let d = ctx.local_mut(dst);
+            for r in 1..=band.rows {
+                // Global boundary rows are Dirichlet: keep them fixed.
+                let is_global_top = me == 0 && r == 1;
+                let is_global_bottom = down.is_none() && r == band.rows;
+                for c in 0..cols {
+                    let idx = r * cols + c;
+                    if is_global_top || is_global_bottom || c == 0 || c == cols - 1 {
+                        d[idx] = s[idx];
+                        continue;
+                    }
+                    let v = 0.25 * (s[idx - cols] + s[idx + cols] + s[idx - 1] + s[idx + 1]);
+                    local_max = local_max.max((v - s[idx]).abs());
+                    d[idx] = v;
+                }
+            }
+        }
+
+        // --- Global residual (max-reduction) every 20 iterations.
+        if it % 20 == 19 {
+            unsafe { ctx.local_mut(res_src)[0] = local_max };
+            ctx.reduce_to_all(res_dst, res_src, 1, ReduceOp::Max, &world);
+            residual = unsafe { ctx.local(res_dst)[0] };
+            if me == 0 {
+                println!("iter {:4}  residual {:.6}", it + 1, residual);
+            }
+            if residual < 1e-4 {
+                break;
+            }
+        }
+        std::mem::swap(&mut src, &mut dst);
+        ctx.barrier_all();
+    }
+
+    // Sanity: heat flows downward — PE 0's band is warmer than the last's.
+    let my_mean: f64 = unsafe {
+        let g = ctx.local(src);
+        g[cols..(band.rows + 1) * cols].iter().sum::<f64>() / (band.rows * cols) as f64
+    };
+    unsafe { ctx.local_mut(res_src)[0] = if me == 0 { my_mean } else { 0.0 } };
+    ctx.barrier_all();
+    ctx.reduce_to_all(res_dst, res_src, 1, ReduceOp::Sum, &world);
+    let top_mean = unsafe { ctx.local(res_dst)[0] };
+    unsafe { ctx.local_mut(res_src)[0] = if me == n - 1 { my_mean } else { 0.0 } };
+    ctx.barrier_all();
+    ctx.reduce_to_all(res_dst, res_src, 1, ReduceOp::Sum, &world);
+    let bottom_mean = unsafe { ctx.local(res_dst)[0] };
+    if me == 0 {
+        println!("top band mean {top_mean:.4}, bottom band mean {bottom_mean:.4}, residual {residual:.6}");
+        assert!(
+            top_mean >= bottom_mean,
+            "heat must not flow uphill: {top_mean} < {bottom_mean}"
+        );
+        println!("heat2d OK");
+    }
+    ctx.barrier_all();
+}
+
+fn main() -> posh::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let rows: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(256);
+    let cols: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(256);
+    let iters: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
+    if World::env_present() {
+        let world = World::from_env()?;
+        pe_body(world.my_ctx(), rows, cols, iters);
+    } else {
+        let world = World::threads(4, PoshConfig::default())?;
+        world.run(|ctx| pe_body(ctx, rows, cols, iters));
+    }
+    Ok(())
+}

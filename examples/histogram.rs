@@ -1,0 +1,90 @@
+//! Distributed histogram — the fine-grained-atomics workload of the SHMEM
+//! world (GUPS-style random updates).
+//!
+//! The histogram is block-distributed across PE heaps: bin `b` lives on PE
+//! `b / bins_per_pe`. Each PE draws samples and updates the owning PE's bin
+//! with a remote `atomic_fadd` — no locks, no messages. A final `fcollect`
+//! gathers the per-PE sub-histograms everywhere and the result is checked
+//! against a serial oracle (possible because the per-PE sample streams are
+//! deterministic).
+//!
+//! Usage: `histogram [samples_per_pe bins]` (defaults 200000, 64).
+
+use posh::collectives::ActiveSet;
+use posh::pe::{Ctx, PoshConfig, World};
+use posh::util::prng::Rng;
+
+fn sample(rng: &mut Rng, bins: usize) -> usize {
+    // Triangular-ish distribution: sum of two uniforms ⇒ middle bins heavy.
+    let a = rng.next_below(bins as u64) as usize;
+    let b = rng.next_below(bins as u64) as usize;
+    (a + b) / 2
+}
+
+fn pe_body(ctx: Ctx, samples: usize, bins: usize) {
+    let n = ctx.n_pes();
+    let me = ctx.my_pe();
+    assert!(bins % n == 0, "bins must divide by PE count for this demo");
+    let per_pe = bins / n;
+
+    // Each PE owns `per_pe` bins of the global histogram.
+    let mine = ctx.shmalloc_n::<i64>(per_pe).unwrap();
+    let gathered = ctx.shmalloc_n::<i64>(bins).unwrap();
+    unsafe { ctx.local_mut(mine).fill(0) };
+    ctx.barrier_all();
+
+    // Scatter updates with remote atomics.
+    let mut rng = Rng::for_pe(0x415, me);
+    let t0 = std::time::Instant::now();
+    for _ in 0..samples {
+        let bin = sample(&mut rng, bins);
+        let owner = bin / per_pe;
+        let slot = bin % per_pe;
+        ctx.atomic_fadd(mine.at(slot), 1i64, owner);
+    }
+    ctx.barrier_all();
+    let updates_per_s = samples as f64 / t0.elapsed().as_secs_f64();
+
+    // Gather the distributed histogram on every PE.
+    let world = ActiveSet::world(n);
+    ctx.fcollect(gathered, mine, per_pe, &world);
+    let hist = unsafe { ctx.local(gathered).to_vec() };
+
+    // Oracle: regenerate every PE's stream serially.
+    let mut expect = vec![0i64; bins];
+    for pe in 0..n {
+        let mut r = Rng::for_pe(0x415, pe);
+        for _ in 0..samples {
+            expect[sample(&mut r, bins)] += 1;
+        }
+    }
+    assert_eq!(hist, expect, "distributed histogram disagrees with oracle");
+    let total: i64 = hist.iter().sum();
+    assert_eq!(total, (samples * n) as i64);
+
+    if me == 0 {
+        println!("bins {bins}, PEs {n}, {samples} samples/PE");
+        println!("remote atomic updates: {:.2} Mupdates/s/PE", updates_per_s / 1e6);
+        // Crude shape print.
+        let max = *hist.iter().max().unwrap() as f64;
+        for (b, &v) in hist.iter().enumerate().step_by(bins / 16) {
+            println!("bin {b:3} {:5} {}", v, "*".repeat((v as f64 / max * 40.0) as usize));
+        }
+        println!("histogram OK");
+    }
+    ctx.barrier_all();
+}
+
+fn main() -> posh::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let samples: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200_000);
+    let bins: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64);
+    if World::env_present() {
+        let world = World::from_env()?;
+        pe_body(world.my_ctx(), samples, bins);
+    } else {
+        let world = World::threads(4, PoshConfig::default())?;
+        world.run(|ctx| pe_body(ctx, samples, bins));
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Quickstart: the OpenSHMEM "hello world" — symmetric allocation, put/get,
+//! barrier, atomics, a reduction, a broadcast, and a lock.
+//!
+//! Run in-process (thread mode):
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//! Or as real processes under the RTE (§4.7):
+//! ```text
+//! cargo run --release --bin oshrun -- -np 4 target/release/examples/quickstart
+//! ```
+
+use posh::collectives::{ActiveSet, ReduceOp};
+use posh::pe::{Ctx, PoshConfig, World};
+
+fn pe_body(ctx: Ctx) {
+    let me = ctx.my_pe();
+    let n = ctx.n_pes();
+    println!("PE {me}/{n} up (mode {:?})", ctx.mode());
+
+    // --- Symmetric allocation (same handle on every PE — Fact 1).
+    let ring = ctx.shmalloc_n::<i64>(1).unwrap();
+    let table = ctx.shmalloc_n::<i64>(n).unwrap();
+
+    // --- One-sided put around a ring.
+    let next = (me + 1) % n;
+    ctx.put_one(ring, me as i64 * 100, next);
+    ctx.barrier_all();
+    let prev = (me + n - 1) % n;
+    let got = ctx.get_one(ring, me); // local read via the get path
+    assert_eq!(got, prev as i64 * 100);
+    println!("PE {me}: ring value {got} (from PE {prev})");
+
+    // --- Everyone writes its slot in everyone's table.
+    for pe in 0..n {
+        ctx.put_one(table.at(me), me as i64 + 1, pe);
+    }
+    ctx.barrier_all();
+
+    // --- Reduction: sum of 1..=n, identical on all PEs.
+    let src = ctx.shmalloc_n::<i64>(1).unwrap();
+    let dst = ctx.shmalloc_n::<i64>(1).unwrap();
+    unsafe { ctx.local_mut(src)[0] = me as i64 + 1 };
+    ctx.barrier_all();
+    let world = ActiveSet::world(n);
+    ctx.reduce_to_all(dst, src, 1, ReduceOp::Sum, &world);
+    let sum = unsafe { ctx.local(dst)[0] };
+    assert_eq!(sum, (n as i64 * (n as i64 + 1)) / 2);
+    if me == 0 {
+        println!("sum over PEs: {sum}");
+    }
+
+    // --- Broadcast from the last PE.
+    let msg = ctx.shmalloc_n::<i64>(4).unwrap();
+    let out = ctx.shmalloc_n::<i64>(4).unwrap();
+    if me == n - 1 {
+        unsafe { ctx.local_mut(msg).copy_from_slice(&[7, 7, 7, 7]) };
+    }
+    ctx.barrier_all();
+    ctx.broadcast(out, msg, 4, n - 1, &world);
+    if me != n - 1 {
+        assert_eq!(unsafe { ctx.local(out) }, &[7i64; 4]);
+    }
+
+    // --- Atomic counter + lock-protected critical section.
+    let counter = ctx.shmalloc_n::<i64>(1).unwrap();
+    let lock = ctx.shmalloc_n::<i64>(1).unwrap();
+    for _ in 0..100 {
+        ctx.atomic_add(counter, 1, 0);
+    }
+    ctx.with_lock(lock, || {
+        // Lock-serialised read-modify-write.
+        let v = ctx.get_one(counter, 0);
+        ctx.put_one(counter, v, 0);
+    });
+    ctx.barrier_all();
+    if me == 0 {
+        let total = ctx.get_one(counter, 0);
+        assert_eq!(total, n as i64 * 100);
+        println!("atomic counter: {total}");
+        println!("quickstart OK");
+    }
+    ctx.barrier_all();
+}
+
+fn main() -> posh::Result<()> {
+    if World::env_present() {
+        // Launched by `oshrun`: process mode, one PE per process.
+        let world = World::from_env()?;
+        pe_body(world.my_ctx());
+    } else {
+        // Standalone: thread mode, 4 PEs.
+        let world = World::threads(4, PoshConfig::default())?;
+        world.run(pe_body);
+    }
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! Distributed sample sort — the classic SHMEM benchmark workload (NAS IS
+//! lineage): every PE holds a shard of keys; splitters are chosen from a
+//! gathered sample, keys are routed to their destination PE with one-sided
+//! puts + remote atomic cursor reservations, and each PE sorts its bucket.
+//!
+//! Exercises, in one program: fcollect (sample gathering), broadcast
+//! (splitters), remote `atomic_fadd` (cursor reservation — the idiomatic
+//! SHMEM "remote append"), bulk `put`, `barrier_all`, and a final
+//! correctness sweep with `get`.
+//!
+//! Usage: `sample_sort [keys_per_pe]` (default 100_000), 4 PEs thread mode,
+//! or any `-np` under `oshrun`.
+
+use posh::collectives::ActiveSet;
+use posh::pe::{Ctx, PoshConfig, World};
+use posh::util::prng::Rng;
+
+const OVERSAMPLE: usize = 16;
+
+fn pe_body(ctx: Ctx, keys_per_pe: usize) {
+    let n = ctx.n_pes();
+    let me = ctx.my_pe();
+    let world = ActiveSet::world(n);
+
+    // Local shard of random keys.
+    let mut rng = Rng::for_pe(0x5047, me);
+    let mine: Vec<u64> = (0..keys_per_pe).map(|_| rng.next_u64() >> 16).collect();
+
+    // --- 1. Sample + gather + broadcast splitters.
+    let sample_n = OVERSAMPLE;
+    let sample_sym = ctx.shmalloc_n::<u64>(sample_n).unwrap();
+    let all_samples = ctx.shmalloc_n::<u64>(sample_n * n).unwrap();
+    unsafe {
+        let s = ctx.local_mut(sample_sym);
+        for (i, slot) in s.iter_mut().enumerate() {
+            *slot = mine[i * mine.len() / sample_n];
+        }
+    }
+    ctx.barrier_all();
+    ctx.fcollect(all_samples, sample_sym, sample_n, &world);
+    // Everyone computes identical splitters from the gathered sample.
+    let mut samples = unsafe { ctx.local(all_samples).to_vec() };
+    samples.sort_unstable();
+    let splitters: Vec<u64> = (1..n)
+        .map(|i| samples[i * samples.len() / n])
+        .collect();
+
+    // --- 2. Partition my keys per destination PE.
+    let dest_of = |k: u64| splitters.partition_point(|&s| s <= k);
+    let mut buckets: Vec<Vec<u64>> = vec![Vec::new(); n];
+    for &k in &mine {
+        buckets[dest_of(k)].push(k);
+    }
+
+    // --- 3. Route: reserve space in the destination's inbox with a remote
+    // fetch-add cursor, then bulk-put the bucket at the reserved offset.
+    let capacity = keys_per_pe * 3; // headroom for skew
+    let inbox = ctx.shmalloc_n::<u64>(capacity).unwrap();
+    let cursor = ctx.shmalloc_n::<u64>(1).unwrap();
+    ctx.barrier_all();
+    for (dest, bucket) in buckets.iter().enumerate() {
+        if bucket.is_empty() {
+            continue;
+        }
+        let off = ctx.atomic_fadd(cursor, bucket.len() as u64, dest) as usize;
+        assert!(
+            off + bucket.len() <= capacity,
+            "PE {dest} inbox overflow (skewed splitters?)"
+        );
+        ctx.put(inbox.slice(off, bucket.len()), bucket, dest);
+    }
+    ctx.barrier_all();
+
+    // --- 4. Local sort of the received bucket.
+    let received = ctx.get_one(cursor, me) as usize;
+    let mut bucket = unsafe { ctx.local(inbox)[..received].to_vec() };
+    bucket.sort_unstable();
+    unsafe {
+        ctx.local_mut(inbox)[..received].copy_from_slice(&bucket);
+    }
+    // Publish the final count for the verification sweep.
+    let counts = ctx.shmalloc_n::<u64>(n).unwrap();
+    for pe in 0..n {
+        ctx.put_one(counts.at(me), received as u64, pe);
+    }
+    ctx.barrier_all();
+
+    // --- 5. Verify global order: my max ≤ next PE's min; totals preserved.
+    let total: u64 = (0..n).map(|pe| unsafe { ctx.local(counts)[pe] }).sum();
+    assert_eq!(total as usize, keys_per_pe * n, "keys lost or duplicated");
+    if me + 1 < n {
+        let next_count = unsafe { ctx.local(counts)[me + 1] } as usize;
+        if received > 0 && next_count > 0 {
+            let my_max = bucket[received - 1];
+            let next_min = ctx.get_one(inbox.at(0), me + 1);
+            assert!(
+                my_max <= next_min,
+                "bucket boundary violated: PE {me} max {my_max} > PE {} min {next_min}",
+                me + 1
+            );
+        }
+    }
+    // Local sortedness.
+    assert!(bucket.windows(2).all(|w| w[0] <= w[1]));
+    ctx.barrier_all();
+    if me == 0 {
+        let sizes: Vec<u64> = (0..n).map(|pe| unsafe { ctx.local(counts)[pe] }).collect();
+        println!("sample_sort: {} keys across {n} PEs, buckets {sizes:?}", total);
+        println!("sample_sort OK");
+    }
+    ctx.barrier_all();
+}
+
+fn main() -> posh::Result<()> {
+    let keys: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100_000);
+    if World::env_present() {
+        let world = World::from_env()?;
+        pe_body(world.my_ctx(), keys);
+    } else {
+        let world = World::threads(4, PoshConfig::default())?;
+        world.run(|ctx| pe_body(ctx, keys));
+    }
+    Ok(())
+}

@@ -1,0 +1,149 @@
+"""AOT pipeline: lower the Layer-2 JAX functions (with their Layer-1 Pallas
+kernels inlined) to **HLO text** artifacts + a flat-JSON manifest + the
+initial parameter image.
+
+Run once by `make artifacts`; the Rust coordinator is self-contained after
+that. HLO *text* — not `.serialize()` — is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 rejects,
+while the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--vocab 256 ...]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import copy as copy_k
+from .kernels import reduce as reduce_k
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, args, path: str) -> int:
+    """Lower `fn(*args)` and write the HLO text; returns the byte count."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def build(out_dir: str, cfg: model.ModelConfig, seed: int = 0,
+          n_shards: int = 8, copy_mb: int = 16) -> dict:
+    """Produce every artifact; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "n_layers": cfg.n_layers,
+        "seq": cfg.seq,
+        "batch": cfg.batch,
+        "lr": cfg.lr,
+        "param_count": model.param_count(cfg),
+        "reduce_shards": n_shards,
+    }
+    p = manifest["param_count"]
+
+    # --- train_step(params, tokens) -> (loss, grads)
+    params_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    n = lower_and_write(
+        functools.partial(model.train_step, cfg),
+        (params_spec, tokens_spec),
+        os.path.join(out_dir, "train_step.hlo.txt"),
+    )
+    manifest["train_step"] = "train_step.hlo.txt"
+    print(f"train_step.hlo.txt        {n/1e6:.2f} MB  (P={p})")
+
+    # --- sgd_update(params, grad_sum, scale) -> (new_params,)
+    scale_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    n = lower_and_write(
+        model.sgd_update,
+        (params_spec, params_spec, scale_spec),
+        os.path.join(out_dir, "sgd_update.hlo.txt"),
+    )
+    manifest["sgd_update"] = "sgd_update.hlo.txt"
+    print(f"sgd_update.hlo.txt        {n/1e6:.2f} MB")
+
+    # --- grad_reduce(parts) -> (sum,) — the Pallas combine kernel.
+    chunk = 1 << 14
+    parts_spec = jax.ShapeDtypeStruct((n_shards, chunk), jnp.float32)
+    n = lower_and_write(
+        lambda parts: (reduce_k.sum_reduce(parts),),
+        (parts_spec,),
+        os.path.join(out_dir, "grad_reduce.hlo.txt"),
+    )
+    manifest["grad_reduce"] = "grad_reduce.hlo.txt"
+    manifest["reduce_chunk"] = chunk
+    print(f"grad_reduce.hlo.txt       {n/1e6:.2f} MB")
+
+    # --- copy-kernel variants (the TPU Table-1 analog, DESIGN.md §6).
+    side = 1024
+    rows = max(1, (copy_mb << 20) // (4 * side))
+    x_spec = jax.ShapeDtypeStruct((rows, side), jnp.float32)
+    for name, (bm, bn) in copy_k.VARIANTS.items():
+        n = lower_and_write(
+            lambda x, bm=bm, bn=bn: (copy_k.copy_tiled(x, bm=bm, bn=bn),),
+            (x_spec,),
+            os.path.join(out_dir, f"{name}.hlo.txt"),
+        )
+        manifest[name] = f"{name}.hlo.txt"
+        manifest[f"{name}_vmem"] = copy_k.vmem_footprint_bytes(bm, bn)
+    manifest["copy_rows"] = rows
+    manifest["copy_cols"] = side
+    print(f"copy variants             {len(copy_k.VARIANTS)} × ({rows}x{side})")
+
+    # --- initial parameters (raw little-endian f32 image).
+    import numpy as np
+
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    raw = np.asarray(params, dtype="<f4").tobytes()
+    with open(os.path.join(out_dir, "params_init.f32"), "wb") as f:
+        f.write(raw)
+    manifest["params_init"] = "params_init.f32"
+    print(f"params_init.f32           {len(raw)/1e6:.2f} MB")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json             {len(manifest)} fields")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--vocab", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--n-heads", type=int, default=4)
+    ap.add_argument("--d-ff", type=int, default=512)
+    ap.add_argument("--n-layers", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    cfg = model.ModelConfig(
+        vocab=a.vocab, d_model=a.d_model, n_heads=a.n_heads, d_ff=a.d_ff,
+        n_layers=a.n_layers, seq=a.seq, batch=a.batch, lr=a.lr,
+    )
+    build(a.out, cfg, seed=a.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Layer 1: tiled copy Pallas kernel — the TPU analog of the paper's §4.4
+memcpy study (DESIGN.md §6 Hardware-Adaptation).
+
+POSH's question "which copy loop (stock/MMX/MMX2/SSE) moves bytes fastest on
+this machine?" becomes, on TPU, "which HBM↔VMEM block schedule?". The block
+shape `(bm, bn)` is the tuning axis: one grid step DMAs a `(bm, bn)` tile
+into VMEM and streams it back out. `aot.py` exports several variants (the
+Table-1 column analog); `vmem_footprint_bytes` is the roofline input used in
+EXPERIMENTS.md §Perf (a copy kernel is DMA-bound: the figure of merit is HBM
+bandwidth utilisation, exactly Table 1's Gb/s column).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def copy_tiled(x, bm: int = 256, bn: int = 256):
+    """Copy a 2-D array tile by tile. x: [M, N] -> [M, N] (same dtype)."""
+    m, n = x.shape
+    bm = _divisor_block(m, bm)
+    bn = _divisor_block(n, bn)
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def _divisor_block(dim: int, preferred: int) -> int:
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def vmem_footprint_bytes(bm: int, bn: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step (in tile + out tile)."""
+    return dtype_bytes * 2 * bm * bn
+
+
+#: The block-shape sweep exported by aot.py — the TPU "Table 1" columns.
+VARIANTS = {
+    "copy_128x128": (128, 128),
+    "copy_256x256": (256, 256),
+    "copy_512x128": (512, 128),
+    "copy_64x512": (64, 512),
+}

@@ -1,0 +1,99 @@
+"""Layer 1: tiled matmul Pallas kernel — the transformer's compute hot-spot.
+
+TPU mapping (DESIGN.md §6 Hardware-Adaptation): the block shape `(bm, bk) ×
+(bk, bn)` is the VMEM working set (`(bm·bk + bk·bn + bm·bn)·4 B ≤ 16 MiB`)
+and the inner `jnp.dot` hits the MXU systolic array. Block last-dims are kept
+multiples of 128 (VPU lane width) by the model's shape choices; the grid
+expresses the HBM↔VMEM schedule that a CUDA kernel would express with its
+threadblock layout.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that any backend
+(including the Rust-side CPU client) executes. Real-TPU performance is
+*estimated* from the footprint in EXPERIMENTS.md §Perf, never from
+interpret-mode wallclock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (bm, bn) output tile. The grid's K axis revisits the same output
+    block (its index map ignores k), so the tile accumulates across K steps
+    — the classic MXU pipelining pattern, without scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of `dim` that is ≤ `preferred` (lane-friendly for the
+    model's multiples-of-128 shapes; degrades gracefully for the odd shapes
+    the hypothesis tests throw at it)."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _matmul_raw(x, w, bm: int, bn: int, bk: int):
+    """The pallas_call itself (no autodiff rule)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    n_k = k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(x, w, bm: int = 128, bn: int = 128, bk: int = 128):
+    """`x @ w` via the Pallas kernel. x: [M, K], w: [K, N] -> [M, N] f32.
+
+    Differentiable: the custom VJP routes both cotangent matmuls
+    (`dx = g·wᵀ`, `dw = xᵀ·g`) back through the same Pallas kernel, so the
+    backward pass of the lowered train_step artifact also runs on the MXU
+    tiles.
+    """
+    return _matmul_raw(x, w, bm, bn, bk)
+
+
+def _matmul_fwd(x, w, bm, bn, bk):
+    return _matmul_raw(x, w, bm, bn, bk), (x, w)
+
+
+def _matmul_bwd(bm, bn, bk, res, g):
+    x, w = res
+    dx = _matmul_raw(g, w.T, bm, bn, bk)
+    dw = _matmul_raw(x.T, g, bm, bn, bk)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step (x tile + w tile + out tile)."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

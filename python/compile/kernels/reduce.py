@@ -1,0 +1,40 @@
+"""Layer 1: sharded sum-reduce Pallas kernel — the combine step of the
+gradient allreduce (DESIGN.md §6: chunks are (8·128)-lane aligned by the
+block-shape choice; the VPU does the adds, no MXU involved).
+
+The Rust coordinator's `reduce_to_all` performs the same combine on the CPU
+side; this kernel is the TPU-resident version, exported as an artifact so a
+TPU deployment would fold the combine into the device step instead of
+round-tripping through host memory.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(parts_ref, o_ref, *, n_shards: int):
+    """Sum `n_shards` rows of one chunk column-block."""
+    acc = parts_ref[0, :]
+    for s in range(1, n_shards):
+        acc = acc + parts_ref[s, :]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bc",))
+def sum_reduce(parts, bc: int = 1024):
+    """parts: [n_shards, chunk] -> [chunk] element-wise sum (f32)."""
+    n_shards, chunk = parts.shape
+    b = min(chunk, bc)
+    while chunk % b != 0:
+        b -= 1
+    return pl.pallas_call(
+        functools.partial(_reduce_kernel, n_shards=n_shards),
+        grid=(chunk // b,),
+        in_specs=[pl.BlockSpec((n_shards, b), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((chunk,), jnp.float32),
+        interpret=True,
+    )(parts.astype(jnp.float32))

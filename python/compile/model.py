@@ -1,0 +1,171 @@
+"""Layer 2: the transformer language model (JAX, build-time only).
+
+A small pre-norm decoder-only transformer whose MLP matmuls run through the
+Layer-1 Pallas kernel (`kernels.matmul`) so the kernel lowers into the same
+HLO artifact the Rust coordinator executes.
+
+Parameters live as a single flat f32 vector: the Rust side holds exactly one
+buffer in the symmetric heap, and the gradient allreduce is one
+`shmem_float_sum_to_all` over it. `ParamSpec` defines the (deterministic)
+flattening; `unflatten` is pure slicing/reshaping, so it lowers cleanly.
+
+Default size is deliberately laptop-scale (~1.8M params): the paper under
+reproduction is a *communication library*, so the e2e driver's job is to
+exercise put/get/collectives with a real gradient payload, not to set MLPerf
+records — see DESIGN.md §3 "E2E". Scale knobs are all here.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul as pallas_matmul
+
+
+class ModelConfig(NamedTuple):
+    """Transformer hyper-parameters (defaults = the shipped artifacts)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    n_layers: int = 2
+    seq: int = 32
+    batch: int = 8
+    lr: float = 0.05
+
+
+def param_shapes(cfg: ModelConfig):
+    """Ordered (name, shape) list — the flattening contract."""
+    shapes = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos", (cfg.seq, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layers):
+        p = f"l{layer}."
+        shapes += [
+            (p + "ln1_g", (cfg.d_model,)),
+            (p + "ln1_b", (cfg.d_model,)),
+            (p + "wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "ln2_g", (cfg.d_model,)),
+            (p + "ln2_b", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    shapes += [("lnf_g", (cfg.d_model,)), ("lnf_b", (cfg.d_model,))]
+    # Output projection ties to the embedding (classic weight tying) — no
+    # extra matrix.
+    return shapes
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total flat parameter count."""
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_shapes(cfg))
+
+
+def init_params(cfg: ModelConfig, key) -> jnp.ndarray:
+    """Initialise the flat parameter vector (scaled-normal weights, unit
+    layer-norm gains, zero biases)."""
+    parts = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            parts.append(jnp.ones(shape, jnp.float32).ravel())
+        elif name.endswith(("_b",)):
+            parts.append(jnp.zeros(shape, jnp.float32).ravel())
+        else:
+            fan_in = shape[0]
+            w = jax.random.normal(sub, shape, jnp.float32) * (fan_in**-0.5)
+            parts.append(w.ravel())
+    return jnp.concatenate(parts)
+
+
+def unflatten(cfg: ModelConfig, flat: jnp.ndarray) -> dict:
+    """Flat vector -> named parameter dict (pure slicing, lowers to HLO)."""
+    out = {}
+    off = 0
+    for name, shape in param_shapes(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        out[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, x, wqkv, wo):
+    """Causal multi-head self-attention. x: [B, S, D]."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    qkv = jnp.einsum("bsd,de->bse", x, wqkv)  # [B, S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)  # [B, H, S, hd]
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return jnp.einsum("bsd,de->bse", ctx, wo)
+
+
+def _mlp(cfg: ModelConfig, x, w1, w2):
+    """Position-wise MLP through the **Pallas matmul kernel** (Layer 1)."""
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    h = pallas_matmul(flat, w1)  # [B*S, d_ff] — MXU tile kernel
+    h = jax.nn.gelu(h)
+    out = pallas_matmul(h, w2)  # [B*S, D]
+    return out.reshape(b, s, d)
+
+
+def forward(cfg: ModelConfig, flat_params: jnp.ndarray, tokens: jnp.ndarray):
+    """Logits for next-token prediction. tokens: [B, S] int32 -> [B, S, V]."""
+    p = unflatten(cfg, flat_params)
+    x = p["embed"][tokens] + p["pos"][None, :, :]
+    for layer in range(cfg.n_layers):
+        q = f"l{layer}."
+        a = _attention(cfg, _layernorm(x, p[q + "ln1_g"], p[q + "ln1_b"]),
+                       p[q + "wqkv"], p[q + "wo"])
+        x = x + a
+        m = _mlp(cfg, _layernorm(x, p[q + "ln2_g"], p[q + "ln2_b"]),
+                 p[q + "w1"], p[q + "w2"])
+        x = x + m
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return jnp.einsum("bsd,vd->bsv", x, p["embed"])  # tied output head
+
+
+def loss_fn(cfg: ModelConfig, flat_params: jnp.ndarray, tokens: jnp.ndarray):
+    """Mean next-token cross-entropy in nats."""
+    logits = forward(cfg, flat_params, tokens)  # [B, S, V]
+    inputs = logits[:, :-1, :]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(inputs, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(picked)
+
+
+def train_step(cfg: ModelConfig, flat_params: jnp.ndarray, tokens: jnp.ndarray):
+    """(loss, grads) — the artifact the Rust coordinator executes per step."""
+    loss, grads = jax.value_and_grad(functools.partial(loss_fn, cfg))(
+        flat_params, tokens
+    )
+    return loss, grads
+
+
+def sgd_update(flat_params: jnp.ndarray, grad_sum: jnp.ndarray, scale: jnp.ndarray):
+    """params − scale·grad_sum. `scale = lr / n_pes` folds the data-parallel
+    mean into the update (the Rust side passes it as a rank-0 literal)."""
+    return (flat_params - scale * grad_sum,)

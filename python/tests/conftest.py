@@ -1,0 +1,8 @@
+"""Make the `compile` package importable regardless of pytest's cwd
+(tests run both as `cd python && pytest tests/` and `pytest python/tests/`
+from the repository root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

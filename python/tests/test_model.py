@@ -1,0 +1,115 @@
+"""Layer-2 correctness: shapes, flattening round-trip, loss semantics, and a
+short pure-JAX training run (the loss must actually fall — same signal the
+Rust e2e driver asserts through the artifacts)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.ModelConfig(
+    vocab=64, d_model=32, n_heads=2, d_ff=64, n_layers=2, seq=16, batch=4
+)
+
+
+def test_param_count_matches_shapes():
+    total = sum(int(np.prod(s)) for _, s in model.param_shapes(CFG))
+    assert model.param_count(CFG) == total
+    flat = model.init_params(CFG, jax.random.PRNGKey(0))
+    assert flat.shape == (total,)
+    assert flat.dtype == jnp.float32
+
+
+def test_unflatten_roundtrip():
+    flat = model.init_params(CFG, jax.random.PRNGKey(1))
+    p = model.unflatten(CFG, flat)
+    # Re-concatenate in spec order == original.
+    rebuilt = jnp.concatenate([p[name].ravel() for name, _ in model.param_shapes(CFG)])
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(flat))
+    # Layer-norm gains start at exactly 1.
+    np.testing.assert_array_equal(np.asarray(p["lnf_g"]), np.ones(CFG.d_model))
+
+
+def test_forward_shape_and_finite():
+    flat = model.init_params(CFG, jax.random.PRNGKey(2))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (CFG.batch, CFG.seq), 0, CFG.vocab)
+    logits = model.forward(CFG, flat, toks)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    # Untrained model ⇒ cross-entropy ≈ ln(vocab).
+    flat = model.init_params(CFG, jax.random.PRNGKey(4))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (CFG.batch, CFG.seq), 0, CFG.vocab)
+    loss = model.loss_fn(CFG, flat, toks)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 1.0, float(loss)
+
+
+def test_loss_matches_reference_xent():
+    flat = model.init_params(CFG, jax.random.PRNGKey(6))
+    toks = jax.random.randint(jax.random.PRNGKey(7), (CFG.batch, CFG.seq), 0, CFG.vocab)
+    logits = model.forward(CFG, flat, toks)
+    want = ref.softmax_xent_ref(
+        logits[:, :-1, :].reshape(-1, CFG.vocab), toks[:, 1:].reshape(-1)
+    )
+    got = model.loss_fn(CFG, flat, toks)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_grads_shape_and_nonzero():
+    flat = model.init_params(CFG, jax.random.PRNGKey(8))
+    toks = jax.random.randint(jax.random.PRNGKey(9), (CFG.batch, CFG.seq), 0, CFG.vocab)
+    loss, grads = model.train_step(CFG, flat, toks)
+    assert grads.shape == flat.shape
+    assert float(jnp.linalg.norm(grads)) > 0
+    assert bool(jnp.isfinite(loss))
+
+
+def test_sgd_update_formula():
+    p = jnp.arange(8.0)
+    g = jnp.ones(8)
+    (new,) = model.sgd_update(p, g, jnp.float32(0.5))
+    np.testing.assert_allclose(np.asarray(new), np.arange(8.0) - 0.5)
+
+
+def _structured_batch(key, cfg, noise=0.05):
+    """Same affine-recurrence stream the Rust dataset generates."""
+    a, c = 5, 7
+    ks = jax.random.split(key, 3)
+    first = jax.random.randint(ks[0], (cfg.batch, 1), 0, cfg.vocab)
+    rows = [first]
+    cur = first
+    for _ in range(cfg.seq - 1):
+        nxt = (a * cur + c) % cfg.vocab
+        cur = nxt
+        rows.append(nxt)
+    toks = jnp.concatenate(rows, axis=1)
+    flip = jax.random.bernoulli(ks[1], noise, toks.shape)
+    rand = jax.random.randint(ks[2], toks.shape, 0, cfg.vocab)
+    return jnp.where(flip, rand, toks)
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    cfg = CFG
+    flat = model.init_params(cfg, jax.random.PRNGKey(10))
+    step = jax.jit(lambda p, t: model.train_step(cfg, p, t))
+    key = jax.random.PRNGKey(11)
+    first = None
+    tail = []
+    for i in range(100):
+        key, sub = jax.random.split(key)
+        toks = _structured_batch(sub, cfg)
+        loss, grads = step(flat, toks)
+        (flat,) = model.sgd_update(flat, grads, jnp.float32(cfg.lr))
+        if i == 0:
+            first = float(loss)
+        tail.append(float(loss))
+    final = float(np.mean(tail[-10:]))
+    assert final < first * 0.85, f"loss did not fall: {first} -> {final}"

@@ -1,0 +1,97 @@
+//! **Ablation C** — atomics & locks microbenchmarks (§4.6): remote
+//! fetch-add/swap/cswap throughput and lock acquire/release cost under
+//! contention levels. Not a paper table, but the data behind its §6 claim
+//! that POSH is a platform for studying distributed algorithms (locks and
+//! atomics being the named examples).
+
+use posh::bench::{measure, Table};
+use posh::pe::{PoshConfig, World};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn main() {
+    // --- Single-PE atomic op costs (no contention).
+    let w = World::threads(1, PoshConfig::small()).unwrap();
+    let mut t = Table::new(
+        "Ablation C1: atomic op latency (self, uncontended)",
+        "ns/op",
+        &["fadd", "finc", "swap", "cswap", "put_one", "get_one"],
+    );
+    w.run(|ctx| {
+        let cell = ctx.shmalloc_n::<i64>(1).unwrap();
+        let row = vec![
+            measure(8, 5000, || {
+                ctx.atomic_fadd(cell, 1, 0);
+            })
+            .latency_ns(),
+            measure(8, 5000, || {
+                ctx.atomic_finc(cell, 0);
+            })
+            .latency_ns(),
+            measure(8, 5000, || {
+                ctx.atomic_swap(cell, 7, 0);
+            })
+            .latency_ns(),
+            measure(8, 5000, || {
+                ctx.atomic_cswap(cell, 7, 7, 0);
+            })
+            .latency_ns(),
+            measure(8, 5000, || {
+                ctx.put_one(cell, 1, 0);
+            })
+            .latency_ns(),
+            measure(8, 5000, || {
+                std::hint::black_box(ctx.get_one(cell, 0));
+            })
+            .latency_ns(),
+        ];
+        let mut table = Table::new(
+            "Ablation C1: atomic op latency (self, uncontended)",
+            "ns/op",
+            &["fadd", "finc", "swap", "cswap", "put_one", "get_one"],
+        );
+        table.row("1 PE", row);
+        table.print();
+        table.write_csv("ablationC_atomics").unwrap();
+    });
+    drop(t);
+
+    // --- Lock throughput under contention.
+    let mut t2 = Table::new(
+        "Ablation C2: lock acquire+release under contention",
+        "ns/op (PE 0's view)",
+        &["spec-ticket-lock", "named-lock"],
+    );
+    for &n in &[1usize, 2, 4] {
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        let spec_ns = AtomicU64::new(0);
+        let named_ns = AtomicU64::new(0);
+        w.run(|ctx| {
+            let lock = ctx.shmalloc_n::<i64>(1).unwrap();
+            ctx.barrier_all();
+            let m = measure(0, 300, || {
+                ctx.with_lock(lock, || {});
+            });
+            if ctx.my_pe() == 0 {
+                spec_ns.store(m.latency_ns() as u64, Ordering::Relaxed);
+            }
+            ctx.barrier_all();
+            let m = measure(0, 300, || {
+                let _g = ctx.named_lock("bench", 0);
+            });
+            if ctx.my_pe() == 0 {
+                named_ns.store(m.latency_ns() as u64, Ordering::Relaxed);
+            }
+            ctx.barrier_all();
+        });
+        t2.row(
+            &format!("{n} PEs contending"),
+            vec![
+                spec_ns.load(Ordering::Relaxed) as f64,
+                named_ns.load(Ordering::Relaxed) as f64,
+            ],
+        );
+    }
+    t2.print();
+    t2.write_csv("ablationC_locks").unwrap();
+    println!("\ncsv: bench_out/ablationC_atomics.csv, bench_out/ablationC_locks.csv");
+}

@@ -1,0 +1,81 @@
+//! **Ablation A** (DESIGN.md §3; paper §4.5.4) — the collective-algorithm
+//! switch: broadcast and reduce latency per algorithm family × payload size
+//! × PE count. Regenerates the data a POSH maintainer would use to pick the
+//! compile-time default.
+
+use posh::bench::{measure, Table};
+use posh::collectives::{ActiveSet, AlgoKind, ReduceOp};
+use posh::pe::{PoshConfig, World};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+fn bench_world(n: usize, algo: AlgoKind, nelems: usize) -> (f64, f64) {
+    let mut cfg = PoshConfig::small();
+    cfg.coll_algo = Some(algo);
+    // LinearPut roots stage (n-1) contributions (Lemma-1 scratch): size for it.
+    cfg.heap_size = (nelems * 8 * (n + 4)).max(4 << 20);
+    let w = World::threads(n, cfg).unwrap();
+    let bcast_ns = AtomicU64::new(0);
+    let reduce_ns = AtomicU64::new(0);
+    w.run(|ctx| {
+        let set = ActiveSet::world(n);
+        let src = ctx.shmalloc_n::<i64>(nelems).unwrap();
+        let dst = ctx.shmalloc_n::<i64>(nelems).unwrap();
+        unsafe {
+            for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                *s = (ctx.my_pe() + j) as i64;
+            }
+        }
+        ctx.barrier_all();
+        let reps = if nelems >= 1 << 18 { 5 } else { 30 };
+        let m = measure(nelems * 8, reps, || {
+            ctx.broadcast(dst, src, nelems, 0, &set);
+        });
+        if ctx.my_pe() == 0 {
+            bcast_ns.store(m.latency_ns() as u64, Ordering::Relaxed);
+        }
+        ctx.barrier_all();
+        let m = measure(nelems * 8, reps, || {
+            ctx.reduce_to_all(dst, src, nelems, ReduceOp::Sum, &set);
+        });
+        if ctx.my_pe() == 0 {
+            reduce_ns.store(m.latency_ns() as u64, Ordering::Relaxed);
+        }
+        ctx.barrier_all();
+    });
+    (
+        bcast_ns.load(Ordering::Relaxed) as f64,
+        reduce_ns.load(Ordering::Relaxed) as f64,
+    )
+}
+
+fn main() {
+    let algo_names: Vec<&str> = AlgoKind::all().iter().map(|a| a.name()).collect();
+    for &nelems in &[64usize, 8192, 262_144] {
+        let mut bcast = Table::new(
+            &format!("Ablation A: broadcast, {} i64/PE", nelems),
+            "ns/op",
+            &algo_names,
+        );
+        let mut reduce = Table::new(
+            &format!("Ablation A: reduce(sum), {} i64/PE", nelems),
+            "ns/op",
+            &algo_names,
+        );
+        for &n in &[2usize, 4, 8] {
+            let mut brow = Vec::new();
+            let mut rrow = Vec::new();
+            for algo in AlgoKind::all() {
+                let (b, r) = bench_world(n, algo, nelems);
+                brow.push(b);
+                rrow.push(r);
+            }
+            bcast.row(&format!("{n} PEs"), brow);
+            reduce.row(&format!("{n} PEs"), rrow);
+        }
+        bcast.print();
+        reduce.print();
+        bcast.write_csv(&format!("ablationA_broadcast_{nelems}")).unwrap();
+        reduce.write_csv(&format!("ablationA_reduce_{nelems}")).unwrap();
+    }
+    println!("\ncsv: bench_out/ablationA_*.csv");
+}

@@ -1,0 +1,90 @@
+//! **Figure 3** — "Communication performance of Paris OpenSHMEM on Maximum":
+//! latency and bandwidth of put/get vs buffer size (log-log), regenerated as
+//! CSV series + terminal ASCII plots, with the paper's Maximum model plotted
+//! alongside for the shape comparison.
+
+use posh::bench::{ascii_plot, auto_batch, measure, write_series_csv, Series};
+use posh::mem::copy::global_impl;
+use posh::model::machines::paper_machines;
+use posh::model::CostModel;
+use posh::pe::{PoshConfig, World};
+
+const MAX_SIZE: usize = 64 << 20;
+
+fn main() {
+    let mut cfg = PoshConfig::default();
+    cfg.heap_size = MAX_SIZE + (8 << 20);
+    let world = World::threads(2, cfg).unwrap();
+    println!("Figure 3 sweep: put/get, 8 B .. 64 MiB, copy impl {}", global_impl().name());
+
+    let samples: Vec<Vec<(usize, f64, f64)>> = world.run_collect(|ctx| {
+        let buf = ctx.shmalloc_n::<u8>(MAX_SIZE).unwrap();
+        let mut out = Vec::new();
+        if ctx.my_pe() == 0 {
+            let src = vec![0x3Cu8; MAX_SIZE];
+            let mut dst = vec![0u8; MAX_SIZE];
+            let mut size = 8usize;
+            while size <= MAX_SIZE {
+                let batch = auto_batch(20.0 + size as f64 / 8.0);
+                let put = measure(size, batch, || {
+                    ctx.put(buf, &src[..size], 1);
+                });
+                let get = measure(size, batch, || {
+                    ctx.get(&mut dst[..size], buf, 1);
+                });
+                out.push((size, put.latency_ns(), get.latency_ns()));
+                size *= 2;
+            }
+        }
+        ctx.barrier_all();
+        out
+    });
+    let samples = &samples[0];
+
+    let mut put_lat = Series::new("put_ns");
+    let mut get_lat = Series::new("get_ns");
+    let mut put_bw = Series::new("put_gbps");
+    let mut get_bw = Series::new("get_gbps");
+    let mut paper_put = Series::new("paper_maximum_put_gbps");
+    let max_model = paper_machines().into_iter().find(|m| m.name == "Maximum").unwrap();
+    for &(size, p, g) in samples {
+        put_lat.push(size, p);
+        get_lat.push(size, g);
+        put_bw.push(size, size as f64 * 8.0 / p);
+        get_bw.push(size, size as f64 * 8.0 / g);
+        paper_put.push(size, max_model.posh_put.predict_gbps(size));
+    }
+
+    println!("\nlatency (ns) vs size:");
+    ascii_plot(&put_lat, 10);
+    println!("\nbandwidth (Gb/s) vs size:");
+    ascii_plot(&put_bw, 10);
+
+    write_series_csv("figure3_latency", "bytes", &[put_lat, get_lat]).unwrap();
+    write_series_csv(
+        "figure3_bandwidth",
+        "bytes",
+        &[put_bw, get_bw, paper_put],
+    )
+    .unwrap();
+
+    // --- Fitted communication model (paper §1) + shape checks.
+    let put_model = CostModel::fit(&samples.iter().map(|&(s, p, _)| (s, p)).collect::<Vec<_>>());
+    let get_model = CostModel::fit(&samples.iter().map(|&(s, _, g)| (s, g)).collect::<Vec<_>>());
+    println!("\nfitted: put {put_model}");
+    println!("fitted: get {get_model}");
+    assert!(put_model.r2 > 0.98, "put must follow T(n)=α+n/β (R² {})", put_model.r2);
+    assert!(get_model.r2 > 0.98, "get must follow T(n)=α+n/β (R² {})", get_model.r2);
+    // Figure-3 shape: monotone latency, bandwidth saturating at large sizes
+    // (final point within 3x of peak; small sizes latency-bound).
+    let last = samples.last().unwrap();
+    let last_bw = last.0 as f64 * 8.0 / last.1;
+    assert!(
+        last_bw > put_model.peak_gbps() / 3.0,
+        "bandwidth must approach the asymptote at 64 MiB"
+    );
+    let first = samples.first().unwrap();
+    let first_bw = first.0 as f64 * 8.0 / first.1;
+    assert!(first_bw < last_bw, "small messages are latency-bound");
+    println!("shape check OK; csv: bench_out/figure3_latency.csv, bench_out/figure3_bandwidth.csv");
+}

@@ -1,0 +1,412 @@
+//! The flat OpenSHMEM-1.0 C-style API (§4.3 "Datatype-specific routines").
+//!
+//! The paper's observation: SHMEM defines one function **per data type**
+//! (`shmem_short_g`, `shmem_int_g`, `shmem_long_g`, …) and a C++ template
+//! engine lets one write the body once — "that function is generated at
+//! compile-time, not at run-time: consequently, calling that function is
+//! just as fast as if it had been written manually."
+//!
+//! Rust generics are the same machinery; the macros below instantiate the
+//! typed entry points from the generic `Ctx` core exactly as the paper's
+//! `shmem_template_g<T>` does, C names and all.
+//!
+//! The implicit-context model of the C API (no handle arguments) is realised
+//! with a thread-local `Ctx` installed by [`start_pes`] (process mode picks
+//! it up from the `oshrun` environment; thread-mode tests install one with
+//! [`install_ctx`]).
+
+use crate::collectives::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+use std::cell::RefCell;
+
+thread_local! {
+    static CURRENT: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// Install the calling thread's implicit context (thread-mode worlds call
+/// this from inside `world.run`; `start_pes` does it in process mode).
+pub fn install_ctx(ctx: Ctx) {
+    CURRENT.with(|c| *c.borrow_mut() = Some(ctx));
+}
+
+/// Remove the implicit context (end of PE body).
+pub fn clear_ctx() {
+    CURRENT.with(|c| *c.borrow_mut() = None);
+}
+
+/// Fetch the implicit context; panics outside a PE body.
+pub fn ctx() -> Ctx {
+    CURRENT.with(|c| {
+        c.borrow()
+            .clone()
+            .expect("no SHMEM context on this thread: call start_pes()/install_ctx() first")
+    })
+}
+
+/// `start_pes(0)`: initialise the library from the `oshrun` environment
+/// (process mode) and install the implicit context. Returns the context for
+/// callers that also want the explicit API.
+pub fn start_pes(_npes_ignored: usize) -> crate::Result<Ctx> {
+    let world = crate::pe::World::from_env()?;
+    let c = world.my_ctx();
+    install_ctx(c.clone());
+    // Leak the world: the C API has no shutdown handle; process exit cleans
+    // up (the segment owner unlinks via the RTE's job teardown).
+    std::mem::forget(world);
+    Ok(c)
+}
+
+/// `shmem_my_pe` / `_my_pe`.
+pub fn shmem_my_pe() -> i32 {
+    ctx().my_pe() as i32
+}
+
+/// `shmem_n_pes` / `_num_pes`.
+pub fn shmem_n_pes() -> i32 {
+    ctx().n_pes() as i32
+}
+
+/// `shmalloc`: untyped symmetric allocation of `size` bytes.
+pub fn shmalloc(size: usize) -> crate::Result<SymPtr<u8>> {
+    let c = ctx();
+    let p = c.heap().alloc_bytes(size, 16)?;
+    c.barrier_all();
+    Ok(p)
+}
+
+/// `shmemalign`.
+pub fn shmemalign(align: usize, size: usize) -> crate::Result<SymPtr<u8>> {
+    let c = ctx();
+    let p = c.heap().alloc_bytes(size, align)?;
+    c.barrier_all();
+    Ok(p)
+}
+
+/// `shfree`.
+pub fn shfree<T>(ptr: SymPtr<T>) -> crate::Result<()> {
+    ctx().shfree(ptr)
+}
+
+/// `shmem_barrier_all`.
+pub fn shmem_barrier_all() {
+    ctx().barrier_all();
+}
+
+/// `shmem_barrier(PE_start, logPE_stride, PE_size, pSync)` — `pSync` is
+/// accepted for source compatibility and ignored (coordination runs over
+/// header cells; see module docs of [`crate::collectives`]).
+pub fn shmem_barrier(pe_start: usize, log_pe_stride: usize, pe_size: usize, _psync: &[i64]) {
+    let c = ctx();
+    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
+    c.barrier(&set);
+}
+
+/// `shmem_fence`.
+pub fn shmem_fence() {
+    ctx().fence();
+}
+
+/// `shmem_quiet`.
+pub fn shmem_quiet() {
+    ctx().quiet_nbi();
+}
+
+/// Generates `shmem_<ty>_{p,g,put,get,iput,iget}` — the §4.3 instantiation.
+macro_rules! typed_p2p {
+    ($($cname:ident : $t:ty),+ $(,)?) => {
+        paste_each! { $($cname : $t),+ }
+    };
+}
+
+// Minimal "paste" substitute: declare per-type modules with fixed fn names.
+macro_rules! paste_each {
+    ($($cname:ident : $t:ty),+ $(,)?) => {$(
+        /// Typed OpenSHMEM entry points for one C data type (§4.3).
+        pub mod $cname {
+            use super::*;
+
+            /// `shmem_<T>_p(addr, value, pe)`.
+            pub fn p(dest: SymPtr<$t>, value: $t, pe: usize) {
+                ctx().put_one(dest, value, pe)
+            }
+            /// `shmem_<T>_g(addr, pe)`.
+            pub fn g(src: SymPtr<$t>, pe: usize) -> $t {
+                ctx().get_one(src, pe)
+            }
+            /// `shmem_<T>_put(dest, src, nelems, pe)`.
+            pub fn put(dest: SymPtr<$t>, src: &[$t], pe: usize) {
+                ctx().put(dest, src, pe)
+            }
+            /// `shmem_<T>_get(dest, src, nelems, pe)`.
+            pub fn get(dest: &mut [$t], src: SymPtr<$t>, pe: usize) {
+                ctx().get(dest, src, pe)
+            }
+            /// `shmem_<T>_iput(dest, src, dst, sst, nelems, pe)`.
+            pub fn iput(dest: SymPtr<$t>, src: &[$t], dst: usize, sst: usize, n: usize, pe: usize) {
+                ctx().iput(dest, src, dst, sst, n, pe)
+            }
+            /// `shmem_<T>_iget(dest, src, dst, sst, nelems, pe)`.
+            pub fn iget(dest: &mut [$t], src: SymPtr<$t>, dst: usize, sst: usize, n: usize, pe: usize) {
+                ctx().iget(dest, src, dst, sst, n, pe)
+            }
+        }
+    )+};
+}
+
+typed_p2p!(
+    short: i16,
+    int: i32,
+    long: i64,
+    longlong: i64,
+    float: f32,
+    double: f64,
+);
+
+/// Generates `shmem_<ty>_{swap,cswap,fadd,finc,add,inc}` atomics (§4.6).
+macro_rules! typed_atomics {
+    ($($cname:ident : $t:ty),+ $(,)?) => {$(
+        /// Typed atomic entry points for one C data type.
+        pub mod $cname {
+            use super::super::*;
+
+            /// `shmem_<T>_swap`.
+            pub fn swap(target: SymPtr<$t>, value: $t, pe: usize) -> $t {
+                ctx().atomic_swap(target, value, pe)
+            }
+            /// `shmem_<T>_cswap`.
+            pub fn cswap(target: SymPtr<$t>, cond: $t, value: $t, pe: usize) -> $t {
+                ctx().atomic_cswap(target, cond, value, pe)
+            }
+            /// `shmem_<T>_fadd`.
+            pub fn fadd(target: SymPtr<$t>, value: $t, pe: usize) -> $t {
+                ctx().atomic_fadd(target, value, pe)
+            }
+            /// `shmem_<T>_finc`.
+            pub fn finc(target: SymPtr<$t>, pe: usize) -> $t {
+                ctx().atomic_finc(target, pe)
+            }
+            /// `shmem_<T>_add`.
+            pub fn add(target: SymPtr<$t>, value: $t, pe: usize) {
+                ctx().atomic_add(target, value, pe)
+            }
+            /// `shmem_<T>_inc`.
+            pub fn inc(target: SymPtr<$t>, pe: usize) {
+                ctx().atomic_inc(target, pe)
+            }
+        }
+    )+};
+}
+
+/// Atomic namespaces (`atomic::int::fadd` ≙ `shmem_int_fadd`).
+pub mod atomic {
+    typed_atomics!(int: i32, long: i64, longlong: i64);
+}
+
+/// `shmem_set_lock`.
+pub fn shmem_set_lock(lock: SymPtr<i64>) {
+    ctx().set_lock(lock)
+}
+
+/// `shmem_clear_lock`.
+pub fn shmem_clear_lock(lock: SymPtr<i64>) {
+    ctx().clear_lock(lock)
+}
+
+/// `shmem_test_lock` (returns 0 when acquired, like the C API).
+pub fn shmem_test_lock(lock: SymPtr<i64>) -> i32 {
+    if ctx().test_lock(lock) {
+        0
+    } else {
+        1
+    }
+}
+
+/// Generates `shmem_<ty>_<op>_to_all` reductions.
+macro_rules! typed_reductions {
+    ($($cname:ident : $t:ty => [$($opname:ident : $op:expr),+ $(,)?]),+ $(,)?) => {$(
+        /// Typed reduction entry points for one C data type.
+        pub mod $cname {
+            use super::super::*;
+            use crate::collectives::ReduceOp;
+            $(
+                /// `shmem_<T>_<op>_to_all`. `pWrk`/`pSync` omitted — see
+                /// module docs.
+                pub fn $opname(
+                    target: SymPtr<$t>,
+                    source: SymPtr<$t>,
+                    nreduce: usize,
+                    pe_start: usize,
+                    log_pe_stride: usize,
+                    pe_size: usize,
+                ) {
+                    let c = ctx();
+                    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
+                    let _ = ReduceOp::Sum; // anchor the import
+                    c.reduce_to_all(target, source, nreduce, $op, &set);
+                }
+            )+
+        }
+    )+};
+}
+
+/// Reduction namespaces (`reduce::int::sum_to_all` ≙ `shmem_int_sum_to_all`).
+pub mod reduce {
+    typed_reductions!(
+        short: i16 => [
+            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
+            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
+            and_to_all: ReduceOp::And, or_to_all: ReduceOp::Or,
+            xor_to_all: ReduceOp::Xor,
+        ],
+        int: i32 => [
+            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
+            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
+            and_to_all: ReduceOp::And, or_to_all: ReduceOp::Or,
+            xor_to_all: ReduceOp::Xor,
+        ],
+        long: i64 => [
+            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
+            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
+            and_to_all: ReduceOp::And, or_to_all: ReduceOp::Or,
+            xor_to_all: ReduceOp::Xor,
+        ],
+        float: f32 => [
+            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
+            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
+        ],
+        double: f64 => [
+            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
+            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
+        ],
+    );
+}
+
+/// `shmem_broadcast64`-style entry (element type via generic monomorphism).
+pub fn shmem_broadcast<T: Copy>(
+    target: SymPtr<T>,
+    source: SymPtr<T>,
+    nelems: usize,
+    pe_root: usize,
+    pe_start: usize,
+    log_pe_stride: usize,
+    pe_size: usize,
+) {
+    let c = ctx();
+    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
+    c.broadcast(target, source, nelems, pe_root, &set);
+}
+
+/// `shmem_fcollect`-style entry.
+pub fn shmem_fcollect<T: Copy>(
+    target: SymPtr<T>,
+    source: SymPtr<T>,
+    nelems: usize,
+    pe_start: usize,
+    log_pe_stride: usize,
+    pe_size: usize,
+) {
+    let c = ctx();
+    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
+    c.fcollect(target, source, nelems, &set);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+
+    /// Run a thread-mode world with the implicit API installed per PE.
+    fn with_api(n: usize, f: impl Fn() + Send + Sync) {
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        w.run(|c| {
+            install_ctx(c);
+            f();
+            clear_ctx();
+        });
+    }
+
+    #[test]
+    fn c_style_identity_and_p2p() {
+        with_api(2, || {
+            let me = shmem_my_pe() as usize;
+            assert_eq!(shmem_n_pes(), 2);
+            let c = ctx();
+            let cell = c.shmalloc_n::<i32>(1).unwrap();
+            int::p(cell, me as i32 * 11, (me + 1) % 2);
+            shmem_barrier_all();
+            // The peer's cell holds what *we* wrote into it.
+            let peer = (me + 1) % 2;
+            assert_eq!(int::g(cell, peer), me as i32 * 11);
+            shmem_barrier_all();
+        });
+    }
+
+    #[test]
+    fn c_style_put_get_arrays() {
+        with_api(2, || {
+            let c = ctx();
+            let buf = c.shmalloc_n::<f64>(8).unwrap();
+            if shmem_my_pe() == 0 {
+                double::put(buf, &[2.5; 8], 1);
+            }
+            shmem_barrier_all();
+            if shmem_my_pe() == 1 {
+                let mut out = [0f64; 8];
+                double::get(&mut out, buf, 1);
+                assert_eq!(out, [2.5; 8]);
+            }
+            shmem_barrier_all();
+        });
+    }
+
+    #[test]
+    fn c_style_atomics_and_locks() {
+        with_api(3, || {
+            let c = ctx();
+            let counter = c.shmalloc_n::<i64>(1).unwrap();
+            let lock = c.shmalloc_n::<i64>(1).unwrap();
+            for _ in 0..50 {
+                atomic::long::add(counter, 1, 0);
+            }
+            shmem_barrier_all();
+            if shmem_my_pe() == 0 {
+                assert_eq!(long::g(counter, 0), 150);
+            }
+            shmem_barrier_all();
+            shmem_set_lock(lock);
+            shmem_clear_lock(lock);
+            shmem_barrier_all();
+        });
+    }
+
+    #[test]
+    fn c_style_reduce_and_broadcast() {
+        with_api(4, || {
+            let c = ctx();
+            let src = c.shmalloc_n::<i32>(4).unwrap();
+            let dst = c.shmalloc_n::<i32>(4).unwrap();
+            unsafe {
+                for s in c.local_mut(src).iter_mut() {
+                    *s = shmem_my_pe() + 1;
+                }
+            }
+            shmem_barrier_all();
+            reduce::int::sum_to_all(dst, src, 4, 0, 0, 4);
+            assert_eq!(unsafe { c.local(dst) }, &[1 + 2 + 3 + 4; 4][..]);
+            shmem_barrier_all();
+            shmem_broadcast(dst, src, 4, 2, 0, 0, 4);
+            if shmem_my_pe() != 2 {
+                assert_eq!(unsafe { c.local(dst) }, &[3; 4][..]);
+            }
+            shmem_barrier_all();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "no SHMEM context")]
+    fn missing_ctx_panics() {
+        clear_ctx();
+        let _ = shmem_my_pe();
+    }
+}

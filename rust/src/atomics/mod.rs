@@ -1,0 +1,202 @@
+//! Remote atomic operations on symmetric objects (§4.6).
+//!
+//! The paper delegates atomicity to Boost's atomic-functor execution on the
+//! managed segment. POSH-RS maps each operation directly onto hardware
+//! atomics executed on the target's mapped memory — the origin core performs
+//! the RMW on the shared cache line, which is exactly what a shared-memory
+//! SHMEM implementation compiles down to. Works identically in thread and
+//! process mode (x86 atomics don't care which page table the line came
+//! through).
+//!
+//! Supported (OpenSHMEM 1.0 §8.3): `swap`, `cswap`, `fadd`, `finc`, `add`,
+//! `inc` on 32/64-bit integers; `swap` additionally on `f32`/`f64` (the spec
+//! allows float swap), implemented as bit-pattern exchange.
+
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+use std::sync::atomic::{AtomicI32, AtomicI64, AtomicU32, AtomicU64, Ordering};
+
+/// Integer types supporting the full remote-atomic set.
+pub trait AtomicInt: Copy + Eq + 'static {
+    /// Atomic fetch-add at `ptr`.
+    ///
+    /// # Safety
+    /// `ptr` valid, naturally aligned, and only accessed atomically by
+    /// concurrent PEs.
+    unsafe fn fetch_add_at(ptr: *mut Self, v: Self) -> Self;
+    /// Atomic swap at `ptr`.
+    ///
+    /// # Safety
+    /// As [`AtomicInt::fetch_add_at`].
+    unsafe fn swap_at(ptr: *mut Self, v: Self) -> Self;
+    /// Atomic compare-and-swap; returns the prior value.
+    ///
+    /// # Safety
+    /// As [`AtomicInt::fetch_add_at`].
+    unsafe fn cswap_at(ptr: *mut Self, expected: Self, desired: Self) -> Self;
+}
+
+macro_rules! impl_atomic_int {
+    ($($t:ty => $a:ty),+ $(,)?) => {$(
+        impl AtomicInt for $t {
+            #[inline]
+            unsafe fn fetch_add_at(ptr: *mut Self, v: Self) -> Self {
+                (&*(ptr as *const $a)).fetch_add(v, Ordering::AcqRel)
+            }
+            #[inline]
+            unsafe fn swap_at(ptr: *mut Self, v: Self) -> Self {
+                (&*(ptr as *const $a)).swap(v, Ordering::AcqRel)
+            }
+            #[inline]
+            unsafe fn cswap_at(ptr: *mut Self, expected: Self, desired: Self) -> Self {
+                match (&*(ptr as *const $a)).compare_exchange(
+                    expected, desired, Ordering::AcqRel, Ordering::Acquire,
+                ) {
+                    Ok(prev) => prev,
+                    Err(prev) => prev,
+                }
+            }
+        }
+    )+};
+}
+
+impl_atomic_int!(i32 => AtomicI32, u32 => AtomicU32, i64 => AtomicI64, u64 => AtomicU64);
+
+impl Ctx {
+    /// `shmem_<type>_fadd`: atomically add `value` to the symmetric variable
+    /// on PE `pe`, returning the prior value.
+    pub fn atomic_fadd<T: AtomicInt>(&self, target: SymPtr<T>, value: T, pe: usize) -> T {
+        debug_assert!(pe < self.n_pes());
+        // SAFETY: in-bounds symmetric cell, atomic access only.
+        unsafe { T::fetch_add_at(self.remote_addr(target, pe), value) }
+    }
+
+    /// `shmem_<type>_finc`: fetch-and-increment.
+    pub fn atomic_finc<T: AtomicInt + From<u8>>(&self, target: SymPtr<T>, pe: usize) -> T {
+        self.atomic_fadd(target, T::from(1u8), pe)
+    }
+
+    /// `shmem_<type>_add`: add without fetching.
+    pub fn atomic_add<T: AtomicInt>(&self, target: SymPtr<T>, value: T, pe: usize) {
+        let _ = self.atomic_fadd(target, value, pe);
+    }
+
+    /// `shmem_<type>_inc`: increment without fetching.
+    pub fn atomic_inc<T: AtomicInt + From<u8>>(&self, target: SymPtr<T>, pe: usize) {
+        let _ = self.atomic_finc(target, pe);
+    }
+
+    /// `shmem_<type>_swap`: unconditional atomic exchange.
+    pub fn atomic_swap<T: AtomicInt>(&self, target: SymPtr<T>, value: T, pe: usize) -> T {
+        debug_assert!(pe < self.n_pes());
+        // SAFETY: as fadd.
+        unsafe { T::swap_at(self.remote_addr(target, pe), value) }
+    }
+
+    /// `shmem_<type>_cswap`: compare-and-swap; returns the prior value
+    /// (equal to `expected` iff the swap happened).
+    pub fn atomic_cswap<T: AtomicInt>(
+        &self,
+        target: SymPtr<T>,
+        expected: T,
+        desired: T,
+        pe: usize,
+    ) -> T {
+        debug_assert!(pe < self.n_pes());
+        // SAFETY: as fadd.
+        unsafe { T::cswap_at(self.remote_addr(target, pe), expected, desired) }
+    }
+
+    /// `shmem_float_swap`: atomic exchange of an `f32` (bit-pattern swap).
+    pub fn atomic_swap_f32(&self, target: SymPtr<f32>, value: f32, pe: usize) -> f32 {
+        let bits: SymPtr<u32> = crate::symheap::SymPtr::from_raw(target.offset(), target.len());
+        f32::from_bits(self.atomic_swap(bits, value.to_bits(), pe))
+    }
+
+    /// `shmem_double_swap`: atomic exchange of an `f64` (bit-pattern swap).
+    pub fn atomic_swap_f64(&self, target: SymPtr<f64>, value: f64, pe: usize) -> f64 {
+        let bits: SymPtr<u64> = crate::symheap::SymPtr::from_raw(target.offset(), target.len());
+        f64::from_bits(self.atomic_swap(bits, value.to_bits(), pe))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn concurrent_fadd_sums_exactly() {
+        let n = 4;
+        let iters = 2_000i64;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let counter = ctx.shmalloc_n::<i64>(1).unwrap();
+            for _ in 0..iters {
+                ctx.atomic_add(counter, 1, 0); // everyone hammers PE 0
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 0 {
+                assert_eq!(ctx.get_one(counter, 0), n as i64 * iters);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn finc_returns_unique_tickets() {
+        let n = 4;
+        let per = 500usize;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        let all = w.run_collect(|ctx| {
+            let counter = ctx.shmalloc_n::<u64>(1).unwrap();
+            let mut mine = Vec::with_capacity(per);
+            for _ in 0..per {
+                mine.push(ctx.atomic_finc(counter, 0));
+            }
+            ctx.barrier_all();
+            mine
+        });
+        let mut tickets: Vec<u64> = all.into_iter().flatten().collect();
+        tickets.sort_unstable();
+        let expect: Vec<u64> = (0..(n * per) as u64).collect();
+        assert_eq!(tickets, expect, "tickets must be a permutation of 0..n*per");
+    }
+
+    #[test]
+    fn cswap_exactly_one_winner() {
+        let n = 4;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        let winners = w.run_collect(|ctx| {
+            let cell = ctx.shmalloc_n::<i32>(1).unwrap();
+            ctx.barrier_all();
+            let prev = ctx.atomic_cswap(cell, 0, ctx.my_pe() as i32 + 1, 0);
+            ctx.barrier_all();
+            prev == 0
+        });
+        assert_eq!(winners.iter().filter(|&&won| won).count(), 1);
+    }
+
+    #[test]
+    fn swap_chains() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let cell = ctx.shmalloc_n::<u64>(1).unwrap();
+            assert_eq!(ctx.atomic_swap(cell, 5, 0), 0);
+            assert_eq!(ctx.atomic_swap(cell, 9, 0), 5);
+            assert_eq!(ctx.get_one(cell, 0), 9);
+        });
+    }
+
+    #[test]
+    fn float_swaps() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let f = ctx.shmalloc_n::<f32>(1).unwrap();
+            assert_eq!(ctx.atomic_swap_f32(f, 1.5, 0), 0.0);
+            assert_eq!(ctx.atomic_swap_f32(f, -2.25, 0), 1.5);
+            let d = ctx.shmalloc_n::<f64>(1).unwrap();
+            assert_eq!(ctx.atomic_swap_f64(d, 3.75, 0), 0.0);
+            assert_eq!(ctx.get_one(d, 0), 3.75);
+        });
+    }
+}

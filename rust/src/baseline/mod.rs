@@ -1,0 +1,11 @@
+//! Baseline one-sided communication libraries for the paper's §5.3
+//! comparison (Table 3).
+//!
+//! The paper measures Berkeley UPC, whose shared-memory conduit (GASNet)
+//! "uses memcpy to move data". [`upc`] is an independent implementation of
+//! that programming model — UPC-style global pointers with per-access
+//! affinity resolution — over the same segments POSH uses, so the comparison
+//! isolates the *model* overhead (pointer arithmetic + conduit dispatch per
+//! access) from the substrate.
+
+pub mod upc;

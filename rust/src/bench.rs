@@ -1,0 +1,295 @@
+//! The paper's §5 measurement protocol, as a reusable harness.
+//!
+//! "Time measurements were done using `clock_gettime()` on the
+//! `CLOCK_REALTIME` to achieve nanosecond precision. … Each experiment was
+//! repeated 20 times after a warm-up round."
+//!
+//! `Instant::now()` reads `CLOCK_MONOTONIC` — same nanosecond source on
+//! Linux without the wall-clock-adjustment hazard. For operations too fast
+//! for a single clock read (an 8-byte copy is ~40 ns; the paper's own
+//! latency rows sit at the measurement floor, as it notes for the "fast"
+//! machines) each repetition times a *batch* and divides, which is the
+//! standard refinement.
+//!
+//! Output goes to stdout as paper-shaped tables and to `bench_out/*.csv`
+//! for regeneration of the figures.
+
+use crate::util::stats::Summary;
+use std::io::Write as _;
+use std::time::Instant;
+
+/// Repetitions per experiment (paper: 20, after warm-up).
+pub const PAPER_REPS: usize = 20;
+
+/// One measured quantity.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Per-repetition values, in nanoseconds per operation.
+    pub ns_per_op: Vec<f64>,
+    /// Bytes moved per operation (0 when not a data-movement op).
+    pub bytes: usize,
+}
+
+impl Measurement {
+    /// Summary statistics over the repetitions.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.ns_per_op)
+    }
+
+    /// Median latency in ns.
+    pub fn latency_ns(&self) -> f64 {
+        self.summary().median
+    }
+
+    /// Median bandwidth in **Gb/s** (the paper reports gigabits).
+    pub fn bandwidth_gbps(&self) -> f64 {
+        if self.bytes == 0 {
+            return 0.0;
+        }
+        let ns = self.latency_ns();
+        (self.bytes as f64 * 8.0) / ns // bytes*8 bits / ns == Gb/s
+    }
+}
+
+/// Measure `op` with the paper protocol: one warm-up round, then
+/// [`PAPER_REPS`] repetitions, each timing `batch` back-to-back executions.
+pub fn measure<F: FnMut()>(bytes: usize, batch: usize, mut op: F) -> Measurement {
+    assert!(batch >= 1);
+    // Warm-up round (paper) — also faults in pages and trains the caches.
+    for _ in 0..batch {
+        op();
+    }
+    let mut ns = Vec::with_capacity(PAPER_REPS);
+    for _ in 0..PAPER_REPS {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            op();
+        }
+        let dt = t0.elapsed();
+        ns.push(dt.as_nanos() as f64 / batch as f64);
+    }
+    Measurement { ns_per_op: ns, bytes }
+}
+
+/// Pick a batch size so one repetition takes ≥ ~200 µs (amortises the timer).
+pub fn auto_batch(approx_ns_per_op: f64) -> usize {
+    ((200_000.0 / approx_ns_per_op.max(1.0)).ceil() as usize).clamp(1, 1_000_000)
+}
+
+/// A paper-shaped results table: row labels × column labels.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<f64>)>,
+    unit: String,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(title: &str, unit: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            unit: unit.to_string(),
+        }
+    }
+
+    /// Append a row.
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+    }
+
+    /// Render to stdout in the paper's layout.
+    pub fn print(&self) {
+        let w0 = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain([8])
+            .max()
+            .unwrap();
+        println!("\n{} [{}]", self.title, self.unit);
+        print!("{:w0$}", "");
+        for c in &self.columns {
+            print!(" | {c:>12}");
+        }
+        println!();
+        println!("{}", "-".repeat(w0 + self.columns.len() * 15));
+        for (label, vals) in &self.rows {
+            print!("{label:w0$}");
+            for v in vals {
+                if *v == 0.0 {
+                    print!(" | {:>12}", "-");
+                } else if *v >= 1000.0 {
+                    print!(" | {v:>12.1}");
+                } else {
+                    print!(" | {v:>12.2}");
+                }
+            }
+            println!();
+        }
+    }
+
+    /// Write as CSV under `bench_out/`.
+    pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all("bench_out")?;
+        let path = std::path::PathBuf::from(format!("bench_out/{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        write!(f, "label")?;
+        for c in &self.columns {
+            write!(f, ",{c}")?;
+        }
+        writeln!(f)?;
+        for (label, vals) in &self.rows {
+            write!(f, "{label}")?;
+            for v in vals {
+                write!(f, ",{v}")?;
+            }
+            writeln!(f)?;
+        }
+        Ok(path)
+    }
+}
+
+/// A (size, value) series for figure regeneration, with CSV output and a
+/// crude ASCII log-log plot so the shape is visible in the terminal.
+pub struct Series {
+    name: String,
+    points: Vec<(usize, f64)>,
+}
+
+impl Series {
+    /// New named series.
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), points: Vec::new() }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, size: usize, value: f64) {
+        self.points.push((size, value));
+    }
+
+    /// The points.
+    pub fn points(&self) -> &[(usize, f64)] {
+        &self.points
+    }
+
+    /// Series name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Write several series (same x-axis) to one CSV and print an ASCII plot.
+pub fn write_series_csv(
+    name: &str,
+    xlabel: &str,
+    series: &[Series],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all("bench_out")?;
+    let path = std::path::PathBuf::from(format!("bench_out/{name}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    write!(f, "{xlabel}")?;
+    for s in series {
+        write!(f, ",{}", s.name)?;
+    }
+    writeln!(f)?;
+    if let Some(first) = series.first() {
+        for (i, &(x, _)) in first.points.iter().enumerate() {
+            write!(f, "{x}")?;
+            for s in series {
+                write!(f, ",{}", s.points[i].1)?;
+            }
+            writeln!(f)?;
+        }
+    }
+    Ok(path)
+}
+
+/// ASCII log-y plot of one series (figure shape check in the terminal).
+pub fn ascii_plot(s: &Series, height: usize) {
+    if s.points.is_empty() {
+        return;
+    }
+    let logs: Vec<f64> = s.points.iter().map(|&(_, v)| v.max(1e-12).log10()).collect();
+    let (lo, hi) = logs
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+    let span = (hi - lo).max(1e-9);
+    println!("  {} (log scale, {:.3e} .. {:.3e})", s.name, 10f64.powf(lo), 10f64.powf(hi));
+    for level in (0..height).rev() {
+        let thresh = lo + span * level as f64 / (height - 1) as f64;
+        let line: String = logs
+            .iter()
+            .map(|&v| if v >= thresh { '#' } else { ' ' })
+            .collect();
+        println!("  |{line}");
+    }
+    println!("  +{}", "-".repeat(s.points.len()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_reps() {
+        let m = measure(64, 10, || { std::hint::black_box(1 + 1); });
+        assert_eq!(m.ns_per_op.len(), PAPER_REPS);
+        assert!(m.latency_ns() >= 0.0);
+        assert_eq!(m.bytes, 64);
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        // 1 GiB moved in 1 s  ==  8.59 Gb/s.
+        let m = Measurement { ns_per_op: vec![1e9; 3], bytes: 1 << 30 };
+        let gbps = m.bandwidth_gbps();
+        assert!((gbps - 8.589934592).abs() < 1e-6, "{gbps}");
+    }
+
+    #[test]
+    fn auto_batch_scales() {
+        assert!(auto_batch(40.0) >= 1000);
+        assert_eq!(auto_batch(1e9), 1);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Test", "ns", &["a", "b"]);
+        t.row("row1", vec![1.0, 2.0]);
+        t.row("row2", vec![1000.5, 0.0]);
+        t.print();
+        let dir = std::env::temp_dir().join("posh_bench_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prev = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        let p = t.write_csv("t").unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        std::env::set_current_dir(prev).unwrap();
+        assert!(s.contains("label,a,b"));
+        assert!(s.contains("row1,1,2"));
+    }
+
+    #[test]
+    fn series_csv() {
+        let mut s1 = Series::new("put");
+        let mut s2 = Series::new("get");
+        for i in 0..4 {
+            s1.push(8 << i, i as f64);
+            s2.push(8 << i, i as f64 * 2.0);
+        }
+        ascii_plot(&s1, 4);
+        let dir = std::env::temp_dir().join("posh_bench_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let prev = std::env::current_dir().unwrap();
+        std::env::set_current_dir(&dir).unwrap();
+        let p = write_series_csv("fig", "bytes", &[s1, s2]).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        std::env::set_current_dir(prev).unwrap();
+        assert!(content.starts_with("bytes,put,get"));
+        assert_eq!(content.lines().count(), 5);
+    }
+}

@@ -1,0 +1,100 @@
+//! Collective algorithm selection (paper §4.5.4).
+//!
+//! "In order to reduce the number of conditional branches, collective
+//! communication algorithms are chosen at compile-time … A default choice is
+//! provided if no option is passed to the compiler."
+//!
+//! POSH-RS: cargo features `coll-linear` / `coll-tree` / `coll-recdbl` fix
+//! the compile-time default ([`AlgoKind::default_algo`]); `PoshConfig` or
+//! `POSH_COLL_ALGO` may override it once at start-up. The per-op dispatch is
+//! resolved before any data moves.
+
+/// Which algorithm family a collective uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgoKind {
+    /// Put-based linear: the root (or every writer) pushes; O(n) puts.
+    LinearPut,
+    /// Get-based linear: readers pull after the owner publishes its buffer
+    /// handle (§4.5.2 late-entry protocol).
+    LinearGet,
+    /// Binomial tree: log₂(n) rounds.
+    Tree,
+    /// Recursive doubling: log₂(n) rounds, all PEs finish with the result
+    /// (power-of-two set sizes; falls back to the linear variant otherwise).
+    RecursiveDoubling,
+}
+
+impl AlgoKind {
+    /// Compile-time default from cargo features; `LinearPut` if none set.
+    pub const fn default_algo() -> AlgoKind {
+        #[cfg(feature = "coll-recdbl")]
+        {
+            return AlgoKind::RecursiveDoubling;
+        }
+        #[cfg(all(feature = "coll-tree", not(feature = "coll-recdbl")))]
+        {
+            return AlgoKind::Tree;
+        }
+        #[allow(unreachable_code)]
+        AlgoKind::LinearPut
+    }
+
+    /// Parse CLI/env spellings.
+    pub fn parse(s: &str) -> Option<AlgoKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" | "linear-put" | "put" => Some(AlgoKind::LinearPut),
+            "linear-get" | "get" => Some(AlgoKind::LinearGet),
+            "tree" | "binomial" => Some(AlgoKind::Tree),
+            "recdbl" | "recursive-doubling" | "rd" => Some(AlgoKind::RecursiveDoubling),
+            _ => None,
+        }
+    }
+
+    /// Display name (bench tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoKind::LinearPut => "linear-put",
+            AlgoKind::LinearGet => "linear-get",
+            AlgoKind::Tree => "tree",
+            AlgoKind::RecursiveDoubling => "recdbl",
+        }
+    }
+
+    /// All variants (ablation sweeps).
+    pub fn all() -> [AlgoKind; 4] {
+        [
+            AlgoKind::LinearPut,
+            AlgoKind::LinearGet,
+            AlgoKind::Tree,
+            AlgoKind::RecursiveDoubling,
+        ]
+    }
+}
+
+impl crate::pe::Ctx {
+    /// The algorithm collectives on this context use: config override or the
+    /// compile-time default.
+    #[inline]
+    pub fn coll_algo(&self) -> AlgoKind {
+        self.config().coll_algo.unwrap_or(AlgoKind::default_algo())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for a in AlgoKind::all() {
+            assert_eq!(AlgoKind::parse(a.name()), Some(a));
+        }
+        assert_eq!(AlgoKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn default_is_linear_without_features() {
+        #[cfg(not(any(feature = "coll-tree", feature = "coll-recdbl")))]
+        assert_eq!(AlgoKind::default_algo(), AlgoKind::LinearPut);
+    }
+}

@@ -1,0 +1,132 @@
+//! All-to-all exchange (`shmem_alltoall` — an OpenSHMEM 1.3 collective,
+//! shipped here as an extension; the paper's conclusion lists collective
+//! algorithm work as a perspective).
+//!
+//! Member *i*'s `source` block *j* lands in member *j*'s `target` block *i*:
+//! pure one-sided puts, each member pushes `size` blocks and receives
+//! `size − 1` signals.
+
+use super::state::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::layout::CollOpTag;
+use crate::symheap::SymPtr;
+
+impl Ctx {
+    /// `shmem_alltoall`: exchange `nelems`-element blocks between all
+    /// members of the active set.
+    pub fn alltoall<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        set: &ActiveSet,
+    ) {
+        let bytes = nelems * std::mem::size_of::<T>();
+        let idx = self.coll_enter(set, CollOpTag::Alltoall, bytes);
+        if self.config().safe {
+            assert!(source.len() >= nelems * set.size, "alltoall source too small");
+            assert!(target.len() >= nelems * set.size, "alltoall target too small");
+        }
+        // Push block j to member j, into its block idx.
+        for j in 0..set.size {
+            let pe = set.rank_at(j);
+            // §4.5.2: never write a member's target before it enters.
+            self.coll_wait_entered(pe, CollOpTag::Alltoall);
+            self.coll_check_peer(pe, CollOpTag::Alltoall, bytes);
+            let src = source.slice(j * nelems, nelems);
+            let dst = target.slice(idx * nelems, nelems);
+            self.put_sym(dst, pe, src, self.my_pe(), nelems);
+        }
+        self.fence();
+        for j in 0..set.size {
+            let pe = set.rank_at(j);
+            if pe != self.my_pe() {
+                self.coll_signal(pe);
+            }
+        }
+        self.coll_wait_count((set.size - 1) as u64);
+        self.coll_exit(set);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn alltoall_transpose() {
+        let n = 4;
+        let nelems = 3;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(n);
+            let src = ctx.shmalloc_n::<u32>(n * nelems).unwrap();
+            let dst = ctx.shmalloc_n::<u32>(n * nelems).unwrap();
+            // src block j element k = me*10000 + j*100 + k
+            unsafe {
+                for (i, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    let (j, k) = (i / nelems, i % nelems);
+                    *s = (ctx.my_pe() * 10000 + j * 100 + k) as u32;
+                }
+            }
+            ctx.barrier_all();
+            ctx.alltoall(dst, src, nelems, &set);
+            // dst block i element k must be  i*10000 + me*100 + k
+            let local = unsafe { ctx.local(dst) };
+            for i in 0..n {
+                for k in 0..nelems {
+                    assert_eq!(
+                        local[i * nelems + k],
+                        (i * 10000 + ctx.my_pe() * 100 + k) as u32,
+                        "from {i} elem {k}"
+                    );
+                }
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn alltoall_two_pes_swap() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(2);
+            let src = ctx.shmalloc_n::<i64>(2).unwrap();
+            let dst = ctx.shmalloc_n::<i64>(2).unwrap();
+            unsafe {
+                ctx.local_mut(src)
+                    .copy_from_slice(&[ctx.my_pe() as i64 * 2, ctx.my_pe() as i64 * 2 + 1]);
+            }
+            ctx.barrier_all();
+            ctx.alltoall(dst, src, 1, &set);
+            let local = unsafe { ctx.local(dst) };
+            // dst[0] = PE0's block me, dst[1] = PE1's block me.
+            assert_eq!(local[0], ctx.my_pe() as i64);
+            assert_eq!(local[1], 2 + ctx.my_pe() as i64);
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn alltoall_repeated() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(3);
+            let src = ctx.shmalloc_n::<u64>(3).unwrap();
+            let dst = ctx.shmalloc_n::<u64>(3).unwrap();
+            for round in 0..60u64 {
+                unsafe {
+                    for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                        *s = round * 100 + (ctx.my_pe() * 10 + j) as u64;
+                    }
+                }
+                ctx.alltoall(dst, src, 1, &set);
+                let local = unsafe { ctx.local(dst) };
+                for i in 0..3 {
+                    assert_eq!(local[i], round * 100 + (i * 10 + ctx.my_pe()) as u64);
+                }
+            }
+        });
+    }
+}

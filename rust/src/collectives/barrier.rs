@@ -1,0 +1,63 @@
+//! `shmem_barrier` over an active set — the public face of the set barrier,
+//! with the §4.5.5 safe-mode bookkeeping wrapped around it.
+//!
+//! (`shmem_barrier_all` lives in [`crate::sync::barrier`] and uses the
+//! faster dissemination algorithm over the header mailboxes; the active-set
+//! variant must work for arbitrary subsets, so it fans in on the set root.)
+
+use super::state::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::layout::CollOpTag;
+
+impl Ctx {
+    /// `shmem_barrier(PE_start, logPE_stride, PE_size)`: synchronise the
+    /// active set and complete all outstanding memory updates.
+    pub fn barrier(&self, set: &ActiveSet) {
+        let _idx = self.coll_enter(set, CollOpTag::Barrier, 0);
+        // barrier_set() opens with a quiet, giving the spec's "complete all
+        // outstanding updates" guarantee; coll_exit runs it.
+        self.coll_exit(set);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn subset_barrier_synchronises_members_only() {
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        let hits = AtomicUsize::new(0);
+        w.run(|ctx| {
+            let set = ActiveSet::new(0, 0, 2, 4); // PEs 0 and 1
+            if set.contains(ctx.my_pe()) {
+                for round in 1..=40 {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                    ctx.barrier(&set);
+                    assert!(hits.load(Ordering::SeqCst) >= 2 * round);
+                    ctx.barrier(&set);
+                }
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn barrier_flushes_puts() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(3);
+            let cell = ctx.shmalloc_n::<u64>(3).unwrap();
+            for round in 1..30u64 {
+                let peer = (ctx.my_pe() + 1) % 3;
+                ctx.put_one(cell.at(ctx.my_pe()), round, peer);
+                ctx.barrier(&set);
+                let prev = (ctx.my_pe() + 2) % 3;
+                assert_eq!(unsafe { ctx.local(cell)[prev] }, round);
+                ctx.barrier(&set);
+            }
+        });
+    }
+}

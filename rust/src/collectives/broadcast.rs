@@ -1,0 +1,256 @@
+//! Broadcast (`shmem_broadcast32/64` semantics).
+//!
+//! OpenSHMEM quirk preserved: the **root's `target` is not written** — only
+//! the other members of the active set receive the data.
+//!
+//! Variants (§4.5 put- vs get-based, §4.5.4 switching):
+//! * `LinearPut` — root pushes into every member's target, then signals.
+//! * `LinearGet` — root publishes its source handle; members pull
+//!   (§4.5.2: the root may not have entered yet, so members spin on the
+//!   published handle).
+//! * `Tree` / `RecursiveDoubling` — binomial tree, log₂(size) rounds;
+//!   interior nodes forward from their own `target`.
+
+use super::state::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::layout::CollOpTag;
+use crate::symheap::SymPtr;
+
+impl Ctx {
+    /// Broadcast `nelems` elements from the member at set index `root_idx`'s
+    /// `source` to every other member's `target`.
+    pub fn broadcast<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        root_idx: usize,
+        set: &ActiveSet,
+    ) {
+        assert!(root_idx < set.size, "root index {root_idx} outside set");
+        let bytes = nelems * std::mem::size_of::<T>();
+        let idx = self.coll_enter(set, CollOpTag::Broadcast, bytes);
+        match self.coll_algo() {
+            super::AlgoKind::LinearPut => {
+                self.bcast_linear_put(target, source, nelems, root_idx, set, idx)
+            }
+            super::AlgoKind::LinearGet => {
+                self.bcast_linear_get(target, source, nelems, root_idx, set, idx)
+            }
+            super::AlgoKind::Tree | super::AlgoKind::RecursiveDoubling => {
+                self.bcast_tree(target, source, nelems, root_idx, set, idx)
+            }
+        }
+        self.coll_exit(set);
+    }
+
+    fn bcast_linear_put<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        root_idx: usize,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        if idx == root_idx {
+            for i in 0..set.size {
+                if i == root_idx {
+                    continue;
+                }
+                let pe = set.rank_at(i);
+                // §4.5.2: the member may not have entered yet — wait before
+                // touching its user buffer.
+                self.coll_wait_entered(pe, CollOpTag::Broadcast);
+                self.coll_check_peer(pe, CollOpTag::Broadcast, nelems * std::mem::size_of::<T>());
+                self.put_sym(target, pe, source, self.my_pe(), nelems);
+            }
+            self.fence();
+            for i in 0..set.size {
+                if i != root_idx {
+                    self.coll_signal(set.rank_at(i));
+                }
+            }
+        } else {
+            self.coll_wait_count(1);
+        }
+    }
+
+    fn bcast_linear_get<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        root_idx: usize,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        let root_pe = set.rank_at(root_idx);
+        if idx == root_idx {
+            // Publish the source; peers may already be spinning (§4.5.2).
+            self.coll_publish_buf(source);
+            // Wait until every member has pulled.
+            self.coll_wait_count((set.size - 1) as u64);
+        } else {
+            let src_off = self.coll_wait_buf(root_pe);
+            let remote_src: SymPtr<T> = SymPtr::from_raw(src_off, nelems);
+            self.put_sym(target, self.my_pe(), remote_src, root_pe, nelems);
+            self.quiet();
+            self.coll_signal(root_pe);
+        }
+    }
+
+    fn bcast_tree<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        root_idx: usize,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        let size = set.size;
+        // Work in root-relative indices.
+        let rel = (idx + size - root_idx) % size;
+        // Receive round: lowest set bit of rel.
+        let mut mask = 1usize;
+        while mask < size {
+            if rel & mask != 0 {
+                break;
+            }
+            mask <<= 1;
+        }
+        if rel != 0 {
+            // Exactly one parent signal is coming.
+            self.coll_wait_count(1);
+        }
+        // Forward to children: descending masks below our receive bit
+        // (for the root, below the first power of two ≥ size).
+        let mut m = mask >> 1;
+        // What we forward: the root sends `source`, everyone else `target`.
+        let from = if rel == 0 { source } else { target };
+        while m >= 1 {
+            let child_rel = rel + m;
+            if child_rel < size {
+                let child_idx = (child_rel + root_idx) % size;
+                let child_pe = set.rank_at(child_idx);
+                // §4.5.2: don't write the child's target before it enters.
+                self.coll_wait_entered(child_pe, CollOpTag::Broadcast);
+                self.coll_check_peer(child_pe, CollOpTag::Broadcast, nelems * std::mem::size_of::<T>());
+                self.put_sym(target, child_pe, from, self.my_pe(), nelems);
+                self.fence();
+                self.coll_signal(child_pe);
+            }
+            m >>= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::AlgoKind;
+    use crate::pe::{PoshConfig, World};
+
+    fn bcast_case(algo: AlgoKind, n: usize, root_idx: usize, nelems: usize) {
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n, cfg).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(n);
+            let src = ctx.shmalloc_n::<u64>(nelems.max(1)).unwrap();
+            let dst = ctx.shmalloc_n::<u64>(nelems.max(1)).unwrap();
+            // Root fills its source; everyone poisons target.
+            unsafe {
+                for (i, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = 1000 + i as u64;
+                }
+                for d in ctx.local_mut(dst).iter_mut() {
+                    *d = u64::MAX;
+                }
+            }
+            ctx.barrier_all();
+            ctx.broadcast(dst, src, nelems, root_idx, &set);
+            let me = ctx.my_pe();
+            let local = unsafe { ctx.local(dst) };
+            if set.index_of(me) == Some(root_idx) {
+                // Root's target untouched (spec quirk).
+                assert!(local[..nelems].iter().all(|&v| v == u64::MAX), "{algo:?}");
+            } else {
+                for (i, &v) in local[..nelems].iter().enumerate() {
+                    assert_eq!(v, 1000 + i as u64, "{algo:?} n={n} root={root_idx} i={i}");
+                }
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn broadcast_all_algos_various_sizes() {
+        for algo in AlgoKind::all() {
+            for &n in &[2usize, 3, 4, 5, 8] {
+                bcast_case(algo, n, 0, 33);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_nonzero_root() {
+        for algo in AlgoKind::all() {
+            bcast_case(algo, 5, 3, 17);
+            bcast_case(algo, 4, 1, 64);
+        }
+    }
+
+    #[test]
+    fn broadcast_single_element() {
+        for algo in AlgoKind::all() {
+            bcast_case(algo, 3, 0, 1);
+        }
+    }
+
+    #[test]
+    fn broadcast_on_subset() {
+        // Set = ranks {1, 3, 5} of 6; outsiders do unrelated barriers.
+        let w = World::threads(6, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::new(1, 1, 3, 6);
+            let src = ctx.shmalloc_n::<u32>(8).unwrap();
+            let dst = ctx.shmalloc_n::<u32>(8).unwrap();
+            unsafe {
+                ctx.local_mut(src).copy_from_slice(&[7; 8]);
+            }
+            ctx.barrier_all();
+            if set.contains(ctx.my_pe()) {
+                ctx.broadcast(dst, src, 8, 0, &set);
+                if set.index_of(ctx.my_pe()) != Some(0) {
+                    assert_eq!(unsafe { ctx.local(dst) }, &[7u32; 8][..]);
+                }
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn broadcast_repeated_back_to_back() {
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(AlgoKind::Tree);
+        let w = World::threads(4, cfg).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(4);
+            let src = ctx.shmalloc_n::<u64>(4).unwrap();
+            let dst = ctx.shmalloc_n::<u64>(4).unwrap();
+            for round in 0..100u64 {
+                unsafe {
+                    for s in ctx.local_mut(src).iter_mut() {
+                        *s = round;
+                    }
+                }
+                ctx.broadcast(dst, src, 4, (round % 4) as usize, &set);
+                if set.index_of(ctx.my_pe()) != Some((round % 4) as usize) {
+                    assert_eq!(unsafe { ctx.local(dst) }, &[round; 4][..]);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,279 @@
+//! Concatenation collectives: `shmem_fcollect` (fixed contribution size) and
+//! `shmem_collect` (variable contribution size).
+//!
+//! Every member ends with the concatenation, in set-index order, of all
+//! members' `source` arrays in its `target`.
+//!
+//! * `fcollect` put-based: each member pushes its block to every member at
+//!   `index · nelems` — one-sided, no staging.
+//! * `fcollect` get-based: each member publishes its source; everyone pulls.
+//! * `collect`: contribution sizes differ per member, so offsets require an
+//!   exclusive prefix sum of the sizes. Sizes travel through the §4.5.1
+//!   `data_size` field: each member publishes its element count and reads
+//!   every peer's — the size exchange is itself a tiny get-based collective.
+
+use super::state::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::layout::CollOpTag;
+use crate::symheap::SymPtr;
+use std::sync::atomic::Ordering;
+
+impl Ctx {
+    /// `shmem_fcollect`: gather `nelems` elements from every member into
+    /// every member's `target`, ordered by set index.
+    pub fn fcollect<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        set: &ActiveSet,
+    ) {
+        let bytes = nelems * std::mem::size_of::<T>();
+        let idx = self.coll_enter(set, CollOpTag::Fcollect, bytes);
+        if self.config().safe {
+            assert!(
+                target.len() >= nelems * set.size,
+                "fcollect target holds {} elems, needs {}",
+                target.len(),
+                nelems * set.size
+            );
+        }
+        match self.coll_algo() {
+            super::AlgoKind::LinearGet => {
+                // Publish, then pull every peer's block.
+                self.coll_publish_buf(source);
+                for i in 0..set.size {
+                    let pe = set.rank_at(i);
+                    let dst = target.slice(i * nelems, nelems);
+                    if i == idx {
+                        self.put_sym(dst, self.my_pe(), source, self.my_pe(), nelems);
+                    } else {
+                        let off = self.coll_wait_buf(pe);
+                        let remote: SymPtr<T> = SymPtr::from_raw(off, nelems);
+                        self.put_sym(dst, self.my_pe(), remote, pe, nelems);
+                        self.coll_signal(pe);
+                    }
+                }
+                // Keep our source pinned until everyone has read it.
+                self.coll_wait_count((set.size - 1) as u64);
+            }
+            _ => {
+                // Put-based (default for every other algo kind): push our
+                // block into each member's target, then signal.
+                for i in 0..set.size {
+                    let pe = set.rank_at(i);
+                    // §4.5.2: never write a member's target before it enters.
+                    self.coll_wait_entered(pe, CollOpTag::Fcollect);
+                    self.coll_check_peer(pe, CollOpTag::Fcollect, bytes);
+                    let dst = target.slice(idx * nelems, nelems);
+                    self.put_sym(dst, pe, source, self.my_pe(), nelems);
+                }
+                self.fence();
+                for i in 0..set.size {
+                    let pe = set.rank_at(i);
+                    if pe != self.my_pe() {
+                        self.coll_signal(pe);
+                    }
+                }
+                // Everyone else has written their block into us.
+                self.coll_wait_count((set.size - 1) as u64);
+            }
+        }
+        self.coll_exit(set);
+    }
+
+    /// `shmem_collect`: variable-size gather. `nelems` is **this member's**
+    /// contribution; target offsets are the exclusive prefix sum of the
+    /// members' sizes. Returns the total element count gathered.
+    pub fn collect<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        set: &ActiveSet,
+    ) -> usize {
+        let idx = self.coll_enter(set, CollOpTag::Collect, 0);
+        // Size exchange through the §4.5.1 data_size field (+1 so that a
+        // legitimate 0-element contribution is distinguishable from "not
+        // entered yet").
+        let st = &self.header_of(self.my_pe()).coll;
+        st.data_size.store(nelems as u64 + 1, Ordering::Release);
+        let mut sizes = vec![0usize; set.size];
+        for i in 0..set.size {
+            let pe = set.rank_at(i);
+            if i == idx {
+                sizes[i] = nelems;
+            } else {
+                let cell = &self.header_of(pe).coll.data_size;
+                let mut v = 0u64;
+                self.spin_wait(|| {
+                    v = cell.load(Ordering::Acquire);
+                    v != 0
+                });
+                sizes[i] = (v - 1) as usize;
+            }
+        }
+        let my_off: usize = sizes[..idx].iter().sum();
+        let total: usize = sizes.iter().sum();
+        if self.config().safe {
+            assert!(
+                target.len() >= total,
+                "collect target holds {} elems, needs {total}",
+                target.len()
+            );
+        }
+        // Push our block to every member at our prefix offset. The size
+        // exchange above already proved every member entered (data_size is
+        // only published post-entry), so no further entry wait is needed.
+        for i in 0..set.size {
+            let pe = set.rank_at(i);
+            if nelems > 0 {
+                let dst = target.slice(my_off, nelems);
+                self.put_sym(dst, pe, source, self.my_pe(), nelems);
+            }
+        }
+        self.fence();
+        for i in 0..set.size {
+            let pe = set.rank_at(i);
+            if pe != self.my_pe() {
+                self.coll_signal(pe);
+            }
+        }
+        self.coll_wait_count((set.size - 1) as u64);
+        self.coll_exit(set);
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::AlgoKind;
+    use crate::pe::{PoshConfig, World};
+
+    fn fcollect_case(algo: AlgoKind, n: usize, nelems: usize) {
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n, cfg).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(n);
+            let src = ctx.shmalloc_n::<u32>(nelems).unwrap();
+            let dst = ctx.shmalloc_n::<u32>(nelems * n).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 1000 + j) as u32;
+                }
+            }
+            ctx.barrier_all();
+            ctx.fcollect(dst, src, nelems, &set);
+            let local = unsafe { ctx.local(dst) };
+            for pe in 0..n {
+                for j in 0..nelems {
+                    assert_eq!(
+                        local[pe * nelems + j],
+                        (pe * 1000 + j) as u32,
+                        "{algo:?} n={n} block {pe} elem {j}"
+                    );
+                }
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn fcollect_put_based() {
+        for &n in &[2usize, 3, 5, 8] {
+            fcollect_case(AlgoKind::LinearPut, n, 7);
+        }
+    }
+
+    #[test]
+    fn fcollect_get_based() {
+        for &n in &[2usize, 4, 6] {
+            fcollect_case(AlgoKind::LinearGet, n, 5);
+        }
+    }
+
+    #[test]
+    fn fcollect_single_elem_blocks() {
+        fcollect_case(AlgoKind::LinearPut, 4, 1);
+        fcollect_case(AlgoKind::LinearGet, 4, 1);
+    }
+
+    #[test]
+    fn collect_variable_sizes() {
+        let n = 4;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(n);
+            // PE i contributes i+1 elements: total = 10, offsets 0,1,3,6.
+            let mine = ctx.my_pe() + 1;
+            let src = ctx.shmalloc_n::<i64>(n).unwrap(); // oversized, symmetric
+            let dst = ctx.shmalloc_n::<i64>(16).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 100 + j) as i64;
+                }
+            }
+            ctx.barrier_all();
+            let total = ctx.collect(dst, src.slice(0, mine), mine, &set);
+            assert_eq!(total, 10);
+            let local = unsafe { ctx.local(dst) };
+            let mut off = 0usize;
+            for pe in 0..n {
+                for j in 0..pe + 1 {
+                    assert_eq!(local[off], (pe * 100 + j) as i64, "pe {pe} j {j}");
+                    off += 1;
+                }
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn collect_with_empty_contribution() {
+        let n = 3;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(n);
+            // PE 1 contributes nothing.
+            let mine = if ctx.my_pe() == 1 { 0 } else { 2 };
+            let src = ctx.shmalloc_n::<u16>(2).unwrap();
+            let dst = ctx.shmalloc_n::<u16>(8).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 10 + j) as u16;
+                }
+            }
+            ctx.barrier_all();
+            let total = ctx.collect(dst, src.slice(0, mine), mine, &set);
+            assert_eq!(total, 4);
+            let local = unsafe { ctx.local(dst) };
+            assert_eq!(&local[..4], &[0, 1, 20, 21]);
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn fcollect_repeated() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(3);
+            let src = ctx.shmalloc_n::<u64>(2).unwrap();
+            let dst = ctx.shmalloc_n::<u64>(6).unwrap();
+            for round in 0..50u64 {
+                unsafe {
+                    for s in ctx.local_mut(src).iter_mut() {
+                        *s = round * 10 + ctx.my_pe() as u64;
+                    }
+                }
+                ctx.fcollect(dst, src, 2, &set);
+                let local = unsafe { ctx.local(dst) };
+                for pe in 0..3 {
+                    assert_eq!(local[pe * 2], round * 10 + pe as u64);
+                    assert_eq!(local[pe * 2 + 1], round * 10 + pe as u64);
+                }
+            }
+        });
+    }
+}

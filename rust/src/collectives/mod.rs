@@ -1,0 +1,44 @@
+//! Collective communications (paper §4.5).
+//!
+//! Everything here is built from one-sided put/get plus the per-PE
+//! *collective data structure* of §4.5.1 (the `coll` field of every heap
+//! header): a buffer handle, a remote-access counter, an operation tag, an
+//! in-progress flag, and (safe mode) the buffer size.
+//!
+//! Design points carried over from the paper:
+//!
+//! * **Put-based vs get-based variants** (§4.5): both are implemented; the
+//!   algorithm is chosen at compile time via cargo features (§4.5.4) with a
+//!   runtime override for the ablation benches.
+//! * **Late-entry handling** (§4.5.2): a PE can be drafted into a collective
+//!   before it enters the call — get-based ops publish their buffer handle
+//!   and peers spin on it; put-based reductions publish the root's temporary
+//!   buffer the same way.
+//! * **Temporary non-symmetric allocations** (§4.5.3, Lemma 1): reductions
+//!   allocate scratch space in the *root's* heap only, and free it before
+//!   leaving the collective — the property tests in `rust/tests/` verify the
+//!   heaps are byte-symmetric again afterwards.
+//! * **State reset** (§4.5.1): every PE zeroes its collective structure on
+//!   exit, after the closing active-set barrier, "to make sure the place is
+//!   clean for the next collective communication".
+//! * **Run-time error checking** (§4.5.5): safe mode validates operation
+//!   tags and buffer sizes across participants and detects a PE entering
+//!   two collectives at once.
+//!
+//! Active sets follow OpenSHMEM 1.0: a triple `(PE_start, logPE_stride,
+//! PE_size)` selecting `PE_start + i·2^logPE_stride`. The `pSync`/`pWrk`
+//! arrays of the C API are accepted by the [`crate::api`] shims but not
+//! needed — coordination runs over the header cells and Lemma-1 temporaries,
+//! which is exactly the latitude the spec grants implementations.
+
+pub mod algorithm;
+pub mod alltoall;
+pub mod barrier;
+pub mod broadcast;
+pub mod collect;
+pub mod reduce;
+pub mod state;
+
+pub use algorithm::AlgoKind;
+pub use reduce::ReduceOp;
+pub use state::ActiveSet;

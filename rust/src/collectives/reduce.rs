@@ -1,0 +1,536 @@
+//! Reductions (`shmem_<type>_<op>_to_all`): every member of the active set
+//! ends with the element-wise reduction of all members' `source` arrays in
+//! its `target` array.
+//!
+//! Algorithm variants:
+//! * `LinearPut` — members push their contribution into a **temporary
+//!   buffer in the root's heap** (a §4.5.3 / Lemma-1 non-symmetric
+//!   allocation: it exists only inside the collective and is freed before
+//!   exit); the root combines and pushes the result back to everyone.
+//! * `LinearGet` — "all-read-all": every member publishes its source and
+//!   reduces every peer's contribution locally. No temporaries at all.
+//! * `Tree` — binomial fan-in to the root over per-node temporaries, then a
+//!   linear fan-out of the result.
+//! * `RecursiveDoubling` — ⌈log₂ n⌉ pairwise exchange rounds; every PE holds
+//!   the full result with no separate broadcast. Falls back to `LinearPut`
+//!   for non-power-of-two set sizes.
+
+use super::state::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::layout::CollOpTag;
+use crate::symheap::SymPtr;
+
+/// Reduction operators of OpenSHMEM 1.0 §8.5.2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceOp {
+    /// Element-wise sum.
+    Sum,
+    /// Element-wise product.
+    Prod,
+    /// Element-wise minimum.
+    Min,
+    /// Element-wise maximum.
+    Max,
+    /// Bitwise AND (integers only).
+    And,
+    /// Bitwise OR (integers only).
+    Or,
+    /// Bitwise XOR (integers only).
+    Xor,
+}
+
+impl ReduceOp {
+    /// All operators (test sweeps).
+    pub fn all() -> [ReduceOp; 7] {
+        [
+            ReduceOp::Sum,
+            ReduceOp::Prod,
+            ReduceOp::Min,
+            ReduceOp::Max,
+            ReduceOp::And,
+            ReduceOp::Or,
+            ReduceOp::Xor,
+        ]
+    }
+
+    /// Operators valid for floating-point element types.
+    pub fn float_ops() -> [ReduceOp; 4] {
+        [ReduceOp::Sum, ReduceOp::Prod, ReduceOp::Min, ReduceOp::Max]
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Prod => "prod",
+            ReduceOp::Min => "min",
+            ReduceOp::Max => "max",
+            ReduceOp::And => "and",
+            ReduceOp::Or => "or",
+            ReduceOp::Xor => "xor",
+        }
+    }
+}
+
+/// Element types reducible with [`Ctx::reduce_to_all`] — the §4.3 "template"
+/// trick: one generic implementation, monomorphised per type.
+pub trait ReduceElem: Copy + Send + 'static {
+    /// Apply `op` to a pair of elements.
+    fn combine(op: ReduceOp, a: Self, b: Self) -> Self;
+}
+
+macro_rules! impl_reduce_int {
+    ($($t:ty),+ $(,)?) => {$(
+        impl ReduceElem for $t {
+            #[inline]
+            fn combine(op: ReduceOp, a: Self, b: Self) -> Self {
+                match op {
+                    ReduceOp::Sum => a.wrapping_add(b),
+                    ReduceOp::Prod => a.wrapping_mul(b),
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                    ReduceOp::And => a & b,
+                    ReduceOp::Or => a | b,
+                    ReduceOp::Xor => a ^ b,
+                }
+            }
+        }
+    )+};
+}
+
+macro_rules! impl_reduce_float {
+    ($($t:ty),+ $(,)?) => {$(
+        impl ReduceElem for $t {
+            #[inline]
+            fn combine(op: ReduceOp, a: Self, b: Self) -> Self {
+                match op {
+                    ReduceOp::Sum => a + b,
+                    ReduceOp::Prod => a * b,
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                    ReduceOp::And | ReduceOp::Or | ReduceOp::Xor => {
+                        panic!("bitwise reduction on floating-point type")
+                    }
+                }
+            }
+        }
+    )+};
+}
+
+impl_reduce_int!(i16, i32, i64, u16, u32, u64);
+impl_reduce_float!(f32, f64);
+
+fn combine_into<T: ReduceElem>(op: ReduceOp, acc: &mut [T], contrib: &[T]) {
+    debug_assert_eq!(acc.len(), contrib.len());
+    for (a, &c) in acc.iter_mut().zip(contrib) {
+        *a = T::combine(op, *a, c);
+    }
+}
+
+impl Ctx {
+    /// `shmem_<type>_<op>_to_all` over the active set.
+    pub fn reduce_to_all<T: ReduceElem>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nreduce: usize,
+        op: ReduceOp,
+        set: &ActiveSet,
+    ) {
+        let bytes = nreduce * std::mem::size_of::<T>();
+        let idx = self.coll_enter(set, CollOpTag::Reduce, bytes);
+        if set.size == 1 {
+            // Degenerate set: result = own source.
+            self.put_sym(target, self.my_pe(), source, self.my_pe(), nreduce);
+            self.coll_exit(set);
+            return;
+        }
+        match self.coll_algo() {
+            super::AlgoKind::LinearPut => {
+                self.reduce_linear_put(target, source, nreduce, op, set, idx)
+            }
+            super::AlgoKind::LinearGet => {
+                self.reduce_linear_get(target, source, nreduce, op, set, idx)
+            }
+            super::AlgoKind::Tree => self.reduce_tree(target, source, nreduce, op, set, idx),
+            super::AlgoKind::RecursiveDoubling => {
+                if set.size.is_power_of_two() {
+                    self.reduce_recdbl(target, source, nreduce, op, set, idx)
+                } else {
+                    self.reduce_linear_put(target, source, nreduce, op, set, idx)
+                }
+            }
+        }
+        self.coll_exit(set);
+    }
+
+    /// Root-staged put-based reduction (Lemma-1 temporary in the root heap).
+    fn reduce_linear_put<T: ReduceElem>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nreduce: usize,
+        op: ReduceOp,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        let root_pe = set.root();
+        if idx == 0 {
+            // Lemma-1 temporary: non-symmetric, root-only, freed before exit.
+            let tmp = self
+                .heap()
+                .alloc_n::<T>((set.size - 1) * nreduce)
+                .expect("root scratch allocation for reduction");
+            self.coll_publish_buf(tmp);
+            // Everyone has deposited?
+            self.coll_wait_count((set.size - 1) as u64);
+            // Combine: acc = source ⊕ every contribution.
+            self.put_sym(target, self.my_pe(), source, self.my_pe(), nreduce);
+            // SAFETY: contributions are complete (counter) and no one writes
+            // tmp or target anymore.
+            unsafe {
+                let acc = self.local_mut(target);
+                let stage = self.local(tmp);
+                for k in 0..set.size - 1 {
+                    combine_into(op, &mut acc[..nreduce], &stage[k * nreduce..(k + 1) * nreduce]);
+                }
+            }
+            self.heap().free(tmp).expect("freeing reduction scratch");
+            // Fan the result out.
+            for i in 1..set.size {
+                let pe = set.rank_at(i);
+                self.put_sym(target, pe, target, self.my_pe(), nreduce);
+            }
+            self.fence();
+            for i in 1..set.size {
+                self.coll_signal(set.rank_at(i));
+            }
+        } else {
+            self.coll_check_peer(root_pe, CollOpTag::Reduce, nreduce * std::mem::size_of::<T>());
+            let tmp_off = self.coll_wait_buf(root_pe);
+            let slot: SymPtr<T> =
+                SymPtr::from_raw(tmp_off + (idx - 1) * nreduce * std::mem::size_of::<T>(), nreduce);
+            self.put_sym(slot, root_pe, source, self.my_pe(), nreduce);
+            self.quiet();
+            self.coll_signal(root_pe);
+            // Result arrives as one signal from the root.
+            self.coll_wait_count(1);
+        }
+    }
+
+    /// All-read-all get-based reduction.
+    fn reduce_linear_get<T: ReduceElem>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nreduce: usize,
+        op: ReduceOp,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        self.coll_publish_buf(source);
+        // Local contribution first.
+        self.put_sym(target, self.my_pe(), source, self.my_pe(), nreduce);
+        let me = self.my_pe();
+        for i in 0..set.size {
+            if i == idx {
+                continue;
+            }
+            let pe = set.rank_at(i);
+            let src_off = self.coll_wait_buf(pe);
+            let remote: SymPtr<T> = SymPtr::from_raw(src_off, nreduce);
+            // Pull the peer's source and fold it in. Order is by set index,
+            // identical on every PE, so float results agree across PEs.
+            // SAFETY: peer keeps its source immutable until all "done
+            // reading" signals (counter) arrive; we signal below.
+            unsafe {
+                let acc = self.local_mut(target);
+                let base = self.remote_addr(remote, pe) as *const T;
+                let contrib = std::slice::from_raw_parts(base, nreduce);
+                combine_into(op, &mut acc[..nreduce], contrib);
+            }
+            self.coll_signal(pe);
+        }
+        let _ = me;
+        // Hold our source in place until everyone is done reading it.
+        self.coll_wait_count((set.size - 1) as u64);
+    }
+
+    /// Binomial fan-in to the root, then linear fan-out.
+    fn reduce_tree<T: ReduceElem>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nreduce: usize,
+        op: ReduceOp,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        let size = set.size;
+        // Children of node `idx` in the binomial tree rooted at 0:
+        // idx + m for each mask m where m > lowest_set_bit-run of idx.
+        let lowbit = if idx == 0 { usize::MAX } else { idx & idx.wrapping_neg() };
+        let mut children = Vec::new();
+        let mut m = 1usize;
+        while m < size && m < lowbit {
+            if idx + m < size {
+                children.push(idx + m);
+            }
+            m <<= 1;
+        }
+        // Accumulator = target (starts as our source).
+        self.put_sym(target, self.my_pe(), source, self.my_pe(), nreduce);
+        let n_children = children.len();
+        if n_children > 0 {
+            // Lemma-1 temporary staging for the children's partial results.
+            let tmp = self
+                .heap()
+                .alloc_n::<T>(n_children * nreduce)
+                .expect("tree-node scratch allocation");
+            self.coll_publish_buf(tmp);
+            self.coll_wait_count(n_children as u64);
+            // SAFETY: children signalled completion; buffers quiescent.
+            unsafe {
+                let acc = self.local_mut(target);
+                let stage = self.local(tmp);
+                for k in 0..n_children {
+                    combine_into(op, &mut acc[..nreduce], &stage[k * nreduce..(k + 1) * nreduce]);
+                }
+            }
+            self.heap().free(tmp).expect("freeing tree-node scratch");
+        }
+        if idx != 0 {
+            // Deposit our partial result in the parent's staging buffer.
+            let parent = idx - lowbit;
+            let parent_pe = set.rank_at(parent);
+            // Which slot are we in the parent's child list? Children are
+            // parent + 1, parent + 2, parent + 4, … ⇒ slot = log2(idx - parent).
+            let slot_idx = (idx - parent).trailing_zeros() as usize;
+            let tmp_off = self.coll_wait_buf(parent_pe);
+            let slot: SymPtr<T> = SymPtr::from_raw(
+                tmp_off + slot_idx * nreduce * std::mem::size_of::<T>(),
+                nreduce,
+            );
+            self.put_sym(slot, parent_pe, target, self.my_pe(), nreduce);
+            self.quiet();
+            self.coll_signal(parent_pe);
+            // Wait for the final result (root's fan-out signal). Our counter
+            // already absorbed `n_children` child signals.
+            self.coll_wait_count(n_children as u64 + 1);
+        } else {
+            // Root: fan the result out linearly.
+            for i in 1..size {
+                let pe = set.rank_at(i);
+                self.put_sym(target, pe, target, self.my_pe(), nreduce);
+            }
+            self.fence();
+            for i in 1..size {
+                self.coll_signal(set.rank_at(i));
+            }
+        }
+    }
+
+    /// Recursive doubling (power-of-two sets): everyone finishes with the
+    /// result after log₂(n) pairwise exchanges.
+    ///
+    /// Completion cannot ride on the single §4.5.1 counter: round partners
+    /// differ per round, and a fast partner of round *r+1* would be
+    /// indistinguishable from the awaited partner of round *r*. Each inbox
+    /// slot therefore carries its own ready flag, written (with release
+    /// ordering via the preceding quiet) after the slot's data.
+    fn reduce_recdbl<T: ReduceElem>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nreduce: usize,
+        op: ReduceOp,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        let size = set.size;
+        let rounds = size.trailing_zeros() as usize;
+        let chunk = crate::util::align_up(nreduce * std::mem::size_of::<T>(), 16);
+        // Per-round inbox + per-round flags, one Lemma-1 temporary per PE,
+        // published through the §4.5.1 structure (§4.5.2-safe: partners spin
+        // on the published handle, so a late entrant is handled).
+        let tmp = self
+            .heap()
+            .alloc_bytes(rounds * chunk + rounds * 8, 16)
+            .expect("recdbl inbox allocation");
+        let my_flags: SymPtr<u64> = SymPtr::from_raw(tmp.offset() + rounds * chunk, rounds);
+        // The allocator reuses space: zero our flags *before* publishing.
+        unsafe {
+            for f in self.local_mut(my_flags) {
+                *f = 0;
+            }
+        }
+        self.coll_publish_buf(tmp);
+        self.put_sym(target, self.my_pe(), source, self.my_pe(), nreduce);
+        for r in 0..rounds {
+            let partner_idx = idx ^ (1 << r);
+            let partner_pe = set.rank_at(partner_idx);
+            self.coll_check_peer(partner_pe, CollOpTag::Reduce, nreduce * std::mem::size_of::<T>());
+            let partner_tmp = self.coll_wait_buf(partner_pe);
+            let slot: SymPtr<T> = SymPtr::from_raw(partner_tmp + r * chunk, nreduce);
+            let flag: SymPtr<u64> = SymPtr::from_raw(partner_tmp + rounds * chunk + r * 8, 1);
+            // Send current accumulator to the partner's round-r inbox, then
+            // raise the slot's flag.
+            self.put_sym(slot, partner_pe, target, self.my_pe(), nreduce);
+            self.quiet();
+            self.put_one(flag, 1, partner_pe);
+            // Receive the partner's round-r contribution.
+            self.wait_until(my_flags.at(r), crate::sync::CmpOp::Eq, 1);
+            std::sync::atomic::fence(std::sync::atomic::Ordering::Acquire);
+            // SAFETY: flag ordering guarantees slot r is complete; the
+            // combine order (acc ⊕ inbox) is identical on both partners.
+            unsafe {
+                let acc = self.local_mut(target);
+                let inbox: SymPtr<T> = SymPtr::from_raw(tmp.offset() + r * chunk, nreduce);
+                let inbox = self.local(inbox);
+                combine_into(op, &mut acc[..nreduce], inbox);
+            }
+        }
+        self.heap().free(tmp).expect("freeing recdbl inbox");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::AlgoKind;
+    use crate::pe::{PoshConfig, World};
+
+    fn expected_i64(op: ReduceOp, contributions: &[i64]) -> i64 {
+        contributions[1..]
+            .iter()
+            .fold(contributions[0], |a, &b| i64::combine(op, a, b))
+    }
+
+    fn reduce_case(algo: AlgoKind, n: usize, op: ReduceOp, nreduce: usize) {
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n, cfg).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(n);
+            let src = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            let dst = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() as i64 + 2) * (j as i64 + 1) % 13 + 1;
+                }
+            }
+            ctx.barrier_all();
+            ctx.reduce_to_all(dst, src, nreduce, op, &set);
+            // Independent oracle.
+            for j in 0..nreduce {
+                let contribs: Vec<i64> =
+                    (0..n).map(|pe| (pe as i64 + 2) * (j as i64 + 1) % 13 + 1).collect();
+                let want = expected_i64(op, &contribs);
+                let got = unsafe { ctx.local(dst)[j] };
+                assert_eq!(got, want, "{algo:?} {op:?} n={n} elem {j}");
+            }
+            // Lemma 1: scratch space fully reclaimed — heap symmetric again.
+            ctx.barrier_all();
+            assert_eq!(ctx.heap().live_allocations(), 2, "{algo:?}: temp leaked");
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn reduce_all_ops_linear_put() {
+        for op in ReduceOp::all() {
+            reduce_case(AlgoKind::LinearPut, 4, op, 16);
+        }
+    }
+
+    #[test]
+    fn reduce_all_ops_linear_get() {
+        for op in ReduceOp::all() {
+            reduce_case(AlgoKind::LinearGet, 3, op, 9);
+        }
+    }
+
+    #[test]
+    fn reduce_all_ops_tree() {
+        for op in ReduceOp::all() {
+            reduce_case(AlgoKind::Tree, 5, op, 8);
+        }
+    }
+
+    #[test]
+    fn reduce_all_ops_recdbl_pow2() {
+        for op in ReduceOp::all() {
+            reduce_case(AlgoKind::RecursiveDoubling, 4, op, 12);
+        }
+    }
+
+    #[test]
+    fn reduce_recdbl_fallback_non_pow2() {
+        reduce_case(AlgoKind::RecursiveDoubling, 6, ReduceOp::Sum, 10);
+    }
+
+    #[test]
+    fn reduce_various_pe_counts() {
+        for &n in &[2usize, 3, 7, 8] {
+            for algo in AlgoKind::all() {
+                reduce_case(algo, n, ReduceOp::Sum, 5);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_single_pe_set() {
+        reduce_case(AlgoKind::LinearPut, 1, ReduceOp::Sum, 4);
+    }
+
+    #[test]
+    fn reduce_floats_sum_exact() {
+        // Small integers in f64 are exact under any combine order.
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::world(4);
+            let src = ctx.shmalloc_n::<f64>(8).unwrap();
+            let dst = ctx.shmalloc_n::<f64>(8).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 10 + j) as f64;
+                }
+            }
+            ctx.barrier_all();
+            ctx.reduce_to_all(dst, src, 8, ReduceOp::Sum, &set);
+            for j in 0..8 {
+                let want: f64 = (0..4).map(|pe| (pe * 10 + j) as f64).sum();
+                assert_eq!(unsafe { ctx.local(dst)[j] }, want);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn reduce_on_subset_strided() {
+        // Reduce over ranks {0, 2, 4}; odd ranks stay out.
+        let w = World::threads(5, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let set = ActiveSet::new(0, 1, 3, 5);
+            let src = ctx.shmalloc_n::<i32>(4).unwrap();
+            let dst = ctx.shmalloc_n::<i32>(4).unwrap();
+            unsafe {
+                for s in ctx.local_mut(src).iter_mut() {
+                    *s = ctx.my_pe() as i32;
+                }
+            }
+            ctx.barrier_all();
+            if set.contains(ctx.my_pe()) {
+                ctx.reduce_to_all(dst, src, 4, ReduceOp::Sum, &set);
+                assert_eq!(unsafe { ctx.local(dst) }, &[0 + 2 + 4; 4][..]);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "bitwise reduction on floating-point")]
+    fn float_bitwise_rejected() {
+        let _ = f32::combine(ReduceOp::And, 1.0, 2.0);
+    }
+}

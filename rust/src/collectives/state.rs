@@ -1,0 +1,295 @@
+//! Active sets, the §4.5.1 state protocol, and the set-scoped barrier that
+//! closes every collective.
+
+use crate::pe::Ctx;
+use crate::symheap::layout::CollOpTag;
+use crate::symheap::SymPtr;
+use std::sync::atomic::Ordering;
+
+/// An OpenSHMEM active set: PEs `start + i·2^logstride` for `i in 0..size`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ActiveSet {
+    /// First world rank of the set (`PE_start`).
+    pub start: usize,
+    /// log₂ of the stride between consecutive members (`logPE_stride`).
+    pub logstride: usize,
+    /// Number of members (`PE_size`).
+    pub size: usize,
+}
+
+impl ActiveSet {
+    /// The whole world of `n` PEs.
+    pub fn world(n: usize) -> ActiveSet {
+        ActiveSet { start: 0, logstride: 0, size: n }
+    }
+
+    /// Construct and validate against a world size.
+    pub fn new(start: usize, logstride: usize, size: usize, n_pes: usize) -> ActiveSet {
+        assert!(size >= 1, "active set must have at least one member");
+        assert!(logstride < usize::BITS as usize, "logstride too large");
+        let last = start + (size - 1) * (1usize << logstride);
+        assert!(last < n_pes, "active set [{start}..={last}] exceeds world of {n_pes}");
+        ActiveSet { start, logstride, size }
+    }
+
+    /// Stride in ranks.
+    #[inline]
+    pub fn stride(&self) -> usize {
+        1usize << self.logstride
+    }
+
+    /// World rank of set index `i`.
+    #[inline]
+    pub fn rank_at(&self, i: usize) -> usize {
+        debug_assert!(i < self.size);
+        self.start + i * self.stride()
+    }
+
+    /// Set index of a world rank, if the rank is a member.
+    pub fn index_of(&self, rank: usize) -> Option<usize> {
+        if rank < self.start {
+            return None;
+        }
+        let d = rank - self.start;
+        if d % self.stride() != 0 {
+            return None;
+        }
+        let i = d / self.stride();
+        (i < self.size).then_some(i)
+    }
+
+    /// Membership test.
+    pub fn contains(&self, rank: usize) -> bool {
+        self.index_of(rank).is_some()
+    }
+
+    /// Iterate the member world ranks.
+    pub fn ranks(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.size).map(move |i| self.rank_at(i))
+    }
+
+    /// The set's root (lowest rank — index 0).
+    pub fn root(&self) -> usize {
+        self.start
+    }
+}
+
+impl Ctx {
+    /// Enter a collective: §4.5.5 checks, then stamp our own state.
+    /// Returns this PE's index within the set.
+    pub(crate) fn coll_enter(&self, set: &ActiveSet, tag: CollOpTag, bytes: usize) -> usize {
+        let me = self.my_pe();
+        let idx = set
+            .index_of(me)
+            .unwrap_or_else(|| panic!("PE {me} called a collective of set {set:?} it is not in"));
+        let st = &self.header_of(me).coll;
+        if self.config().safe {
+            // "the safe mode checks that when a process wants to run a
+            // collective communication, it is not already participating to
+            // another collective communication" (§4.7) — except that a peer
+            // may have legitimately pre-initialised us (§4.5.2), which is
+            // encoded as in_progress=1 with *our* op tag unset locally.
+            let cur = CollOpTag::from_u32(st.op_type.load(Ordering::Acquire));
+            assert!(
+                cur == CollOpTag::None || cur == tag,
+                "PE {me} entering {tag:?} while a {cur:?} is underway (§4.5.5 check)"
+            );
+        }
+        st.op_type.store(tag as u32, Ordering::Release);
+        st.in_progress.store(1, Ordering::Release);
+        st.data_size.store(bytes as u64, Ordering::Release);
+        idx
+    }
+
+    /// Safe-mode §4.5.5 cross-check against a peer we are about to exchange
+    /// with: same operation, compatible buffer size. Peers that have not
+    /// entered yet (tag None) are skipped — that is the legal §4.5.2 state.
+    pub(crate) fn coll_check_peer(&self, pe: usize, tag: CollOpTag, bytes: usize) {
+        if !self.config().safe {
+            return;
+        }
+        let st = &self.header_of(pe).coll;
+        let peer_tag = CollOpTag::from_u32(st.op_type.load(Ordering::Acquire));
+        if peer_tag == CollOpTag::None {
+            return; // not entered yet — §4.5.2 allows us to proceed
+        }
+        assert_eq!(
+            peer_tag, tag,
+            "collective type mismatch with PE {pe}: we run {tag:?}, peer runs {peer_tag:?}"
+        );
+        let peer_bytes = st.data_size.load(Ordering::Acquire) as usize;
+        if peer_bytes != 0 && bytes != 0 {
+            assert_eq!(
+                peer_bytes, bytes,
+                "collective buffer size mismatch with PE {pe}: {bytes} vs {peer_bytes}"
+            );
+        }
+    }
+
+    /// Leave a collective: reset our state, then close with the set barrier.
+    ///
+    /// Reset-first is sound by the paper's own §4.5.2 argument: every
+    /// algorithm's internal waits guarantee that, by the time its body
+    /// returns, all signals and reads directed at this PE have landed —
+    /// "a process exits the collective as soon as its participation is
+    /// over; hence, no other process will access its collective data
+    /// structure. It can therefore be reset." The closing set barrier then
+    /// guarantees *peers*' state is also reset before anyone starts the next
+    /// collective, so no PE can ever observe a stale `buf_offset`/`counter`
+    /// from the previous operation.
+    pub(crate) fn coll_exit(&self, set: &ActiveSet) {
+        let st = &self.header_of(self.my_pe()).coll;
+        st.op_type.store(CollOpTag::None as u32, Ordering::Release);
+        st.in_progress.store(0, Ordering::Release);
+        st.buf_offset.store(0, Ordering::Release);
+        st.counter.store(0, Ordering::Release);
+        st.data_size.store(0, Ordering::Release);
+        st.seq.fetch_add(1, Ordering::AcqRel);
+        self.barrier_set(set);
+    }
+
+    /// Wait until PE `pe` has entered the current collective instance
+    /// (§4.5.2 late-entry handling, simplified: where POSH remotely
+    /// initialises the late PE's structure and defers the data movement,
+    /// POSH-RS has the writer wait for the `in_progress` flag — equivalent
+    /// observable behaviour, no remote initialisation to undo).
+    ///
+    /// Sound because collectives on one active set are totally ordered by
+    /// the exit barrier: a peer's `in_progress` can only be 1 for *this*
+    /// instance (the previous instance cleared it before its exit barrier,
+    /// and the next cannot start until we ourselves finish).
+    pub(crate) fn coll_wait_entered(&self, pe: usize, tag: CollOpTag) {
+        let st = &self.header_of(pe).coll;
+        self.spin_wait(|| {
+            st.in_progress.load(Ordering::Acquire) == 1
+                && CollOpTag::from_u32(st.op_type.load(Ordering::Acquire)) == tag
+        });
+    }
+
+    /// Publish a buffer handle in our collective state (get-based ops and
+    /// Lemma-1 temporaries). Encoded as offset+1 so 0 stays "null".
+    pub(crate) fn coll_publish_buf<T>(&self, ptr: SymPtr<T>) {
+        self.header_of(self.my_pe())
+            .coll
+            .buf_offset
+            .store(ptr.offset() as u64 + 1, Ordering::Release);
+    }
+
+    /// Wait for PE `pe` to publish a buffer handle; returns its offset.
+    pub(crate) fn coll_wait_buf(&self, pe: usize) -> usize {
+        let cell = &self.header_of(pe).coll.buf_offset;
+        let mut v = 0u64;
+        self.spin_wait(|| {
+            v = cell.load(Ordering::Acquire);
+            v != 0
+        });
+        (v - 1) as usize
+    }
+
+    /// Signal PE `pe`'s collective counter (one unit of our participation).
+    pub(crate) fn coll_signal(&self, pe: usize) {
+        self.header_of(pe).coll.counter.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Wait until our own counter reaches `target`.
+    pub(crate) fn coll_wait_count(&self, target: u64) {
+        let cell = &self.header_of(self.my_pe()).coll.counter;
+        self.spin_wait(|| cell.load(Ordering::Acquire) >= target);
+        std::sync::atomic::fence(Ordering::Acquire);
+    }
+
+    /// Barrier over an active set (also the public `shmem_barrier`).
+    ///
+    /// Linear fan-in/fan-out on the set root using the dedicated
+    /// `set_count`/`set_sense` cells. Monotone release word, count reset by
+    /// the root *before* releasing, so back-to-back set barriers are safe.
+    pub fn barrier_set(&self, set: &ActiveSet) {
+        self.quiet();
+        if set.size == 1 {
+            return;
+        }
+        let me = self.my_pe();
+        debug_assert!(set.contains(me));
+        let root = set.root();
+        if me == root {
+            let h = self.header_of(root);
+            let want = (set.size - 1) as u64;
+            self.spin_wait(|| h.barrier.set_count.load(Ordering::Acquire) >= want);
+            h.barrier.set_count.store(0, Ordering::Relaxed);
+            for r in set.ranks() {
+                if r != root {
+                    self.header_of(r).barrier.set_sense.fetch_add(1, Ordering::AcqRel);
+                }
+            }
+        } else {
+            let mine = &self.header_of(me).barrier.set_sense;
+            let before = mine.load(Ordering::Acquire);
+            self.header_of(root).barrier.set_count.fetch_add(1, Ordering::AcqRel);
+            self.spin_wait(|| mine.load(Ordering::Acquire) > before);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn active_set_indexing() {
+        let s = ActiveSet::new(2, 1, 3, 8); // ranks 2, 4, 6
+        assert_eq!(s.rank_at(0), 2);
+        assert_eq!(s.rank_at(2), 6);
+        assert_eq!(s.index_of(4), Some(1));
+        assert_eq!(s.index_of(3), None);
+        assert_eq!(s.index_of(8), None);
+        assert!(s.contains(6));
+        assert!(!s.contains(0));
+        assert_eq!(s.ranks().collect::<Vec<_>>(), vec![2, 4, 6]);
+        assert_eq!(s.root(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds world")]
+    fn active_set_overflow_panics() {
+        let _ = ActiveSet::new(4, 1, 3, 8); // 4, 6, 8 — 8 is out
+    }
+
+    #[test]
+    fn world_set_covers_all() {
+        let s = ActiveSet::world(5);
+        assert_eq!(s.ranks().collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn set_barrier_subset_and_repeat() {
+        // Two disjoint sets barrier independently and repeatedly while the
+        // complement set is also active — no cross-talk.
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let evens = ActiveSet::new(0, 1, 2, 4); // 0, 2
+            let odds = ActiveSet::new(1, 1, 2, 4); // 1, 3
+            let mine = if ctx.my_pe() % 2 == 0 { evens } else { odds };
+            for _ in 0..200 {
+                ctx.barrier_set(&mine);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn set_barrier_world_equivalent() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        let set = ActiveSet::world(3);
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c = AtomicUsize::new(0);
+        w.run(|ctx| {
+            for round in 1..50 {
+                c.fetch_add(1, Ordering::SeqCst);
+                ctx.barrier_set(&set);
+                assert!(c.load(Ordering::SeqCst) >= 3 * round);
+                ctx.barrier_set(&set);
+            }
+        });
+    }
+}

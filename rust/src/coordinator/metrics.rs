@@ -1,0 +1,113 @@
+//! Training metrics: loss curve and compute/communication split.
+
+use std::io::Write as _;
+use std::time::Duration;
+
+/// Per-step record.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetric {
+    /// Step index.
+    pub step: usize,
+    /// Mean loss across PEs (nats).
+    pub loss: f64,
+    /// Wall time of the PJRT executions this step (compute).
+    pub compute: Duration,
+    /// Wall time of the POSH collectives this step (communication).
+    pub comm: Duration,
+}
+
+/// The full training log.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    /// Steps in order.
+    pub steps: Vec<StepMetric>,
+}
+
+impl MetricsLog {
+    /// Append a step.
+    pub fn push(&mut self, m: StepMetric) {
+        self.steps.push(m);
+    }
+
+    /// First recorded loss.
+    pub fn first_loss(&self) -> Option<f64> {
+        self.steps.first().map(|m| m.loss)
+    }
+
+    /// Mean loss over the last `k` steps (robust "final loss").
+    pub fn final_loss(&self, k: usize) -> Option<f64> {
+        if self.steps.is_empty() {
+            return None;
+        }
+        let tail = &self.steps[self.steps.len().saturating_sub(k)..];
+        Some(tail.iter().map(|m| m.loss).sum::<f64>() / tail.len() as f64)
+    }
+
+    /// Total compute / comm time.
+    pub fn totals(&self) -> (Duration, Duration) {
+        self.steps.iter().fold(
+            (Duration::ZERO, Duration::ZERO),
+            |(c, m), s| (c + s.compute, m + s.comm),
+        )
+    }
+
+    /// Write `step,loss,compute_us,comm_us` CSV.
+    pub fn write_csv(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,compute_us,comm_us")?;
+        for m in &self.steps {
+            writeln!(
+                f,
+                "{},{:.6},{},{}",
+                m.step,
+                m.loss,
+                m.compute.as_micros(),
+                m.comm.as_micros()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_accumulates_and_summarises() {
+        let mut log = MetricsLog::default();
+        for i in 0..10 {
+            log.push(StepMetric {
+                step: i,
+                loss: 5.0 - i as f64 * 0.3,
+                compute: Duration::from_millis(2),
+                comm: Duration::from_millis(1),
+            });
+        }
+        assert_eq!(log.first_loss(), Some(5.0));
+        let fl = log.final_loss(3).unwrap();
+        assert!(fl < 3.0);
+        let (c, m) = log.totals();
+        assert_eq!(c, Duration::from_millis(20));
+        assert_eq!(m, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut log = MetricsLog::default();
+        log.push(StepMetric {
+            step: 0,
+            loss: 1.25,
+            compute: Duration::from_micros(10),
+            comm: Duration::from_micros(5),
+        });
+        let p = std::env::temp_dir().join("posh_metrics_test.csv");
+        log.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("step,loss,compute_us,comm_us"));
+        assert!(s.contains("0,1.250000,10,5"));
+    }
+}

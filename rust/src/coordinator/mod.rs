@@ -1,0 +1,14 @@
+//! The coordinator: SHMEM-data-parallel training (the end-to-end workload
+//! mandated by DESIGN.md §3 "E2E").
+//!
+//! Each PE runs the AOT-compiled `train_step` (Layer 2/1: JAX + Pallas,
+//! compiled once by `make artifacts`) on its shard of a synthetic corpus;
+//! gradients cross PEs through the **POSH symmetric heap** via
+//! `reduce_to_all(Sum)` — the paper's system is the interconnect, the
+//! transformer is the payload. Python never runs here.
+
+pub mod dataset;
+pub mod metrics;
+pub mod trainer;
+
+pub use trainer::{TrainReport, Trainer, TrainerConfig};

@@ -1,0 +1,204 @@
+//! The data-parallel trainer: PJRT compute + POSH gradient exchange.
+
+use super::dataset::CorpusSpec;
+use super::metrics::{MetricsLog, StepMetric};
+use crate::collectives::{ActiveSet, ReduceOp};
+use crate::pe::Ctx;
+use crate::runtime::{artifact::cached, Manifest};
+use crate::Result;
+use anyhow::Context as _;
+use std::time::Instant;
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    /// Artifacts directory (`make artifacts` output).
+    pub artifacts_dir: String,
+    /// Training steps.
+    pub steps: usize,
+    /// Learning rate (overrides the manifest default if `Some`).
+    pub lr: Option<f64>,
+    /// Corpus noise rate.
+    pub noise: f64,
+    /// Corpus seed.
+    pub seed: u64,
+    /// Log every `k` steps to stdout (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".into(),
+            steps: 200,
+            lr: None,
+            noise: 0.05,
+            seed: 0xBEEF,
+            log_every: 20,
+        }
+    }
+}
+
+/// What the run produced (returned by every PE; PE 0's carries the log).
+#[derive(Debug)]
+pub struct TrainReport {
+    /// Per-step metrics (only populated on PE 0 to avoid duplication).
+    pub log: MetricsLog,
+    /// Parameter count.
+    pub param_count: usize,
+    /// Loss at start / end (all PEs).
+    pub first_loss: f64,
+    /// Mean loss of the final 10 steps.
+    pub final_loss: f64,
+}
+
+/// The trainer. One instance per PE (cheap); call [`Trainer::run`] inside a
+/// world body.
+pub struct Trainer {
+    cfg: TrainerConfig,
+}
+
+impl Trainer {
+    /// New trainer with the given config.
+    pub fn new(cfg: TrainerConfig) -> Trainer {
+        Trainer { cfg }
+    }
+
+    /// Run data-parallel training on this PE. Collective-symmetric: every
+    /// PE of the world must call it with the same config.
+    pub fn run(&self, ctx: &Ctx) -> Result<TrainReport> {
+        let m = Manifest::load(&self.cfg.artifacts_dir)?;
+        let param_count = m.int("param_count")? as usize;
+        let batch = m.int("batch")? as usize;
+        let seq = m.int("seq")? as usize;
+        let vocab = m.int("vocab")? as usize;
+        let lr = self.cfg.lr.unwrap_or(m.float("lr")?);
+
+        let train_step = cached(m.artifact_path("train_step")?)?;
+        let sgd_update = cached(m.artifact_path("sgd_update")?)?;
+
+        // --- Parameter initialisation: PE 0 reads the AOT-produced image,
+        // broadcasts it through the symmetric heap (exercising the paper's
+        // broadcast on a real payload).
+        let params_sym = ctx.shmalloc_n::<f32>(param_count)?;
+        if ctx.my_pe() == 0 {
+            let path = m.artifact_path("params_init")?;
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading initial parameters {path:?}"))?;
+            anyhow::ensure!(
+                bytes.len() == param_count * 4,
+                "params_init size {} != {param_count} f32s",
+                bytes.len()
+            );
+            let dst = unsafe { ctx.local_mut(params_sym) };
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                dst[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+        ctx.barrier_all();
+        let world = ActiveSet::world(ctx.n_pes());
+        // Root keeps its copy (broadcast skips the root target — put locally).
+        if ctx.my_pe() != 0 {
+            unsafe {
+                ctx.local_mut(params_sym).fill(0.0);
+            }
+        }
+        ctx.broadcast(params_sym, params_sym, param_count, 0, &world);
+        let mut params_host: Vec<f32> = unsafe { ctx.local(params_sym).to_vec() };
+
+        // --- Gradient + loss exchange buffers in the symmetric heap.
+        let grad_src = ctx.shmalloc_n::<f32>(param_count)?;
+        let grad_dst = ctx.shmalloc_n::<f32>(param_count)?;
+        let loss_src = ctx.shmalloc_n::<f32>(1)?;
+        let loss_dst = ctx.shmalloc_n::<f32>(1)?;
+
+        let corpus = CorpusSpec {
+            vocab,
+            batch,
+            seq,
+            noise: self.cfg.noise,
+            seed: self.cfg.seed,
+        };
+        // Per-PE LR scale folds the 1/n_pes gradient average into the
+        // update: update = params - lr * (sum_grads / n).
+        let scale = (lr / ctx.n_pes() as f64) as f32;
+
+        let mut log = MetricsLog::default();
+        let mut first_loss = f64::NAN;
+        let mut recent: Vec<f64> = Vec::with_capacity(10);
+        for step in 0..self.cfg.steps {
+            // ---- Compute (Layer 1/2 via PJRT) -------------------------
+            let t0 = Instant::now();
+            let tokens = corpus.batch_tokens(ctx.my_pe(), step);
+            let tokens_lit = xla::Literal::vec1(&tokens[..])
+                .reshape(&[batch as i64, seq as i64])?;
+            let params_lit = xla::Literal::vec1(&params_host[..]);
+            let out = train_step.run(&[params_lit, tokens_lit])?;
+            anyhow::ensure!(out.len() == 2, "train_step must return (loss, grads)");
+            let loss: f32 = out[0].to_vec::<f32>()?[0];
+            let grads: Vec<f32> = out[1].to_vec::<f32>()?;
+            let compute_a = t0.elapsed();
+
+            // ---- Communicate (Layer 3: POSH) --------------------------
+            let t1 = Instant::now();
+            unsafe {
+                ctx.local_mut(grad_src).copy_from_slice(&grads);
+                ctx.local_mut(loss_src)[0] = loss;
+            }
+            ctx.reduce_to_all(grad_dst, grad_src, param_count, ReduceOp::Sum, &world);
+            ctx.reduce_to_all(loss_dst, loss_src, 1, ReduceOp::Sum, &world);
+            let comm = t1.elapsed();
+
+            // ---- Update (Layer 2 via PJRT) ----------------------------
+            let t2 = Instant::now();
+            let gsum = unsafe { ctx.local(grad_dst) };
+            let upd = sgd_update.run(&[
+                xla::Literal::vec1(&params_host[..]),
+                xla::Literal::vec1(gsum),
+                xla::Literal::scalar(scale),
+            ])?;
+            params_host = upd[0].to_vec::<f32>()?;
+            let compute_b = t2.elapsed();
+
+            let mean_loss = unsafe { ctx.local(loss_dst)[0] } as f64 / ctx.n_pes() as f64;
+            if step == 0 {
+                first_loss = mean_loss;
+            }
+            if recent.len() == 10 {
+                recent.remove(0);
+            }
+            recent.push(mean_loss);
+            if ctx.my_pe() == 0 {
+                log.push(StepMetric {
+                    step,
+                    loss: mean_loss,
+                    compute: compute_a + compute_b,
+                    comm,
+                });
+                if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                    println!(
+                        "step {step:4}  loss {mean_loss:.4}  compute {:?}  comm {comm:?}",
+                        compute_a + compute_b
+                    );
+                }
+            }
+        }
+        let final_loss = if recent.is_empty() {
+            first_loss
+        } else {
+            recent.iter().sum::<f64>() / recent.len() as f64
+        };
+        // Everyone agrees on the final loss via the reductions; only PE 0
+        // carries the full log.
+        ctx.barrier_all();
+        ctx.shfree(loss_dst)?;
+        ctx.shfree(loss_src)?;
+        ctx.shfree(grad_dst)?;
+        ctx.shfree(grad_src)?;
+        ctx.shfree(params_sym)?;
+        Ok(TrainReport { log, param_count, first_loss, final_loss })
+    }
+}
+
+// Integration coverage lives in rust/tests/integration_runtime.rs and the
+// e2e_training example (needs `make artifacts`).

@@ -1,0 +1,257 @@
+//! `oshrun` — the POSH run-time environment CLI (paper §4.7).
+//!
+//! ```text
+//! oshrun -np N [options] -- program [args...]   launch a parallel job
+//! oshrun preparse FILE.c [-o OUT.c]             run the §4.2 pre-parser
+//! oshrun clean                                  sweep stale /dev/shm segments
+//! oshrun info                                   platform + config report
+//! ```
+//!
+//! (No `clap` in the vendored registry; argument parsing is by hand.)
+
+use posh::preparser;
+use posh::rte::gateway::Gateway;
+use posh::rte::launcher::{JobSpec, Launcher};
+use posh::rte::monitor;
+
+fn usage() -> ! {
+    eprintln!(
+        "oshrun — POSH-RS run-time environment
+
+USAGE:
+  oshrun -np N [options] -- PROGRAM [ARGS...]
+  oshrun preparse FILE.c [-o OUT.c] [--manifest OUT.manifest]
+  oshrun clean
+  oshrun info
+
+OPTIONS (launch):
+  -np N               number of PEs (required)
+  --heap SIZE         symmetric heap per PE (e.g. 64M, 1G)
+  --copy IMPL         memcpy|unrolled64|sse2|avx2|nontemporal
+  --coll ALGO         linear-put|linear-get|tree|recdbl
+  --barrier KIND      dissemination|central
+  --safe              enable run-time checking (paper _SAFE mode)
+  --debug-wait        each PE waits for a debugger at start-up (§4.7)
+"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    match args[0].as_str() {
+        "clean" => {
+            let removed = monitor::sweep_stale_segments();
+            println!("removed {} stale segment(s)", removed.len());
+            for r in &removed {
+                println!("  {r}");
+            }
+        }
+        "info" => info(),
+        "preparse" => preparse(&args[1..]),
+        _ => launch(&args),
+    }
+}
+
+fn info() {
+    println!("POSH-RS {} — Paris OpenSHMEM in Rust", env!("CARGO_PKG_VERSION"));
+    println!("compile-time copy default : {}", posh::mem::copy::CopyImpl::default_impl().name());
+    println!(
+        "available copy impls      : {}",
+        posh::mem::copy::CopyImpl::available()
+            .iter()
+            .map(|i| i.name())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    println!(
+        "collective algo default   : {}",
+        posh::collectives::AlgoKind::default_algo().name()
+    );
+    println!("safe mode (compile)       : {}", cfg!(feature = "safe-mode"));
+    println!("page size                 : {}", posh::shm::inproc::page_size());
+    match posh::runtime::client::platform_info() {
+        Ok(info) => println!("PJRT                      : {info}"),
+        Err(e) => println!("PJRT                      : unavailable ({e})"),
+    }
+}
+
+fn preparse(args: &[String]) {
+    let mut input = None;
+    let mut output = None;
+    let mut manifest_out = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "-o" => {
+                output = args.get(i + 1).cloned();
+                i += 2;
+            }
+            "--manifest" => {
+                manifest_out = args.get(i + 1).cloned();
+                i += 2;
+            }
+            f if !f.starts_with('-') => {
+                input = Some(f.to_string());
+                i += 1;
+            }
+            _ => usage(),
+        }
+    }
+    let Some(input) = input else { usage() };
+    let src = match std::fs::read_to_string(&input) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("oshrun preparse: cannot read {input}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let (transformed, manifest) = preparser::transform_source(&src);
+    eprintln!(
+        "pre-parser: {} static object(s), {} byte(s) of symmetric statics",
+        manifest.decls.len(),
+        manifest.total_bytes()
+    );
+    for d in &manifest.decls {
+        eprintln!(
+            "  {:24} {:12} x{:<6} {:6}B  {}",
+            d.name,
+            d.ty.c_name(),
+            d.count,
+            d.byte_size(),
+            if d.initialized { "data" } else { "bss" }
+        );
+    }
+    match output {
+        Some(o) => std::fs::write(&o, transformed).expect("writing output"),
+        None => print!("{transformed}"),
+    }
+    if let Some(m) = manifest_out {
+        std::fs::write(&m, manifest.to_text()).expect("writing manifest");
+    }
+}
+
+fn launch(args: &[String]) {
+    let mut n_pes = None;
+    let mut env: Vec<(String, String)> = Vec::new();
+    let mut debug_wait = false;
+    let mut program = None;
+    let mut prog_args = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "-np" | "-n" => {
+                n_pes = args.get(i + 1).and_then(|s| s.parse::<usize>().ok());
+                i += 2;
+            }
+            "--heap" => {
+                env.push(("POSH_HEAP_SIZE".into(), args.get(i + 1).cloned().unwrap_or_default()));
+                i += 2;
+            }
+            "--copy" => {
+                env.push(("POSH_COPY".into(), args.get(i + 1).cloned().unwrap_or_default()));
+                i += 2;
+            }
+            "--coll" => {
+                env.push(("POSH_COLL_ALGO".into(), args.get(i + 1).cloned().unwrap_or_default()));
+                i += 2;
+            }
+            "--barrier" => {
+                env.push(("POSH_BARRIER".into(), args.get(i + 1).cloned().unwrap_or_default()));
+                i += 2;
+            }
+            "--safe" => {
+                env.push(("POSH_SAFE".into(), "1".into()));
+                i += 1;
+            }
+            "--debug-wait" => {
+                debug_wait = true;
+                i += 1;
+            }
+            "--" => {
+                program = args.get(i + 1).cloned();
+                prog_args = args[i + 2..].to_vec();
+                break;
+            }
+            other if program.is_none() && !other.starts_with('-') => {
+                program = Some(other.to_string());
+                prog_args = args[i + 1..].to_vec();
+                break;
+            }
+            _ => usage(),
+        }
+    }
+    let (Some(n), Some(program)) = (n_pes, program) else { usage() };
+
+    let mut spec = JobSpec::new(n, &program);
+    spec.args = prog_args;
+    spec.env = env;
+    spec.debug_wait = debug_wait;
+    let launcher = Launcher::new(spec);
+    let job_id = launcher.job_id;
+    eprintln!("oshrun: job {job_id:x}, {n} PE(s), program {program}");
+    let mut pes = match launcher.spawn_all() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("oshrun: spawn failed: {e:#}");
+            monitor::cleanup_job_segments(job_id, n);
+            std::process::exit(1);
+        }
+    };
+
+    // Gateway: forward IO with rank prefixes (§4.7).
+    let mut gw = Gateway::new();
+    let pids: Vec<u32> = pes.iter().map(|p| p.child.id()).collect();
+    for pe in pes.iter_mut() {
+        if let Some(out) = pe.child.stdout.take() {
+            gw.attach(pe.rank, false, out);
+        }
+        if let Some(err) = pe.child.stderr.take() {
+            gw.attach(pe.rank, true, err);
+        }
+    }
+    // Signal forwarding: SIGINT/SIGTERM to the gateway fan out to the job.
+    install_signal_forwarder(pids);
+
+    let io_thread = std::thread::spawn(move || {
+        let mut stdout = std::io::stdout();
+        let _ = gw.pump_to(&mut stdout);
+    });
+    let outcome = monitor::wait_all(pes);
+    let _ = io_thread.join();
+    monitor::cleanup_job_segments(job_id, n);
+    if let Some(r) = outcome.first_failure {
+        eprintln!("oshrun: PE {r} failed; job terminated");
+    }
+    std::process::exit(outcome.job_exit_code());
+}
+
+/// Forward SIGINT/SIGTERM to all children (§4.7 signal contract).
+fn install_signal_forwarder(pids: Vec<u32>) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static PIDS: std::sync::Mutex<Vec<u32>> = std::sync::Mutex::new(Vec::new());
+    static INSTALLED: AtomicUsize = AtomicUsize::new(0);
+    *PIDS.lock().unwrap() = pids;
+    if INSTALLED.swap(1, Ordering::SeqCst) == 1 {
+        return;
+    }
+    extern "C" fn handler(sig: libc::c_int) {
+        if let Ok(pids) = PIDS.try_lock() {
+            for &pid in pids.iter() {
+                // SAFETY: async-signal-safe kill(2); negative pid targets
+                // the PE's whole process group (§4.7 signal forwarding).
+                unsafe {
+                    libc::kill(-(pid as libc::pid_t), sig);
+                }
+            }
+        }
+    }
+    // SAFETY: installing a handler that only calls async-signal-safe kill.
+    unsafe {
+        libc::signal(libc::SIGINT, handler as usize);
+        libc::signal(libc::SIGTERM, handler as usize);
+    }
+}

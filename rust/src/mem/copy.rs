@@ -1,0 +1,440 @@
+//! The copy implementations themselves. See module docs in [`crate::mem`].
+//!
+//! All variants have the same contract as `memcpy`: `dst` and `src` must not
+//! overlap and both must be valid for `len` bytes. Every vector variant
+//! handles unaligned heads/tails by falling back to byte copies at the edges
+//! and runs its vector body on the aligned middle, exactly like the paper's
+//! hand-written loops.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which copy implementation to use. Mirrors the paper's
+/// `-D_MEMCPY_{MMX,MMX2,SSE}` compile switches; see [`CopyImpl::default_impl`]
+/// for the feature wiring.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum CopyImpl {
+    /// libc/compiler `memcpy` — the paper's "stock" row.
+    Stock = 0,
+    /// 8×-unrolled 64-bit scalar loop — the MMX-era 64-bit path.
+    Unrolled64 = 1,
+    /// 128-bit SSE2 loads/stores — the paper's SSE row.
+    Sse2 = 2,
+    /// 256-bit AVX2 loads/stores — the modern continuation of the sweep.
+    Avx2 = 3,
+    /// 128-bit non-temporal (streaming) stores — the MMX2 `movnt` trick.
+    NonTemporal = 4,
+}
+
+impl CopyImpl {
+    /// All variants that can run on the current CPU, in table order.
+    pub fn available() -> Vec<CopyImpl> {
+        let mut v = vec![CopyImpl::Stock, CopyImpl::Unrolled64];
+        #[cfg(target_arch = "x86_64")]
+        {
+            // SSE2 is baseline on x86_64.
+            v.push(CopyImpl::Sse2);
+            if std::arch::is_x86_feature_detected!("avx2") {
+                v.push(CopyImpl::Avx2);
+            }
+            v.push(CopyImpl::NonTemporal);
+        }
+        v
+    }
+
+    /// The compile-time default (paper §4.4: one impl is activated by a
+    /// compiler directive; default = stock with a note in the build log).
+    pub const fn default_impl() -> CopyImpl {
+        #[cfg(feature = "copy-avx2")]
+        {
+            return CopyImpl::Avx2;
+        }
+        #[cfg(all(feature = "copy-sse2", not(feature = "copy-avx2")))]
+        {
+            return CopyImpl::Sse2;
+        }
+        #[cfg(all(
+            feature = "copy-unrolled",
+            not(any(feature = "copy-sse2", feature = "copy-avx2"))
+        ))]
+        {
+            return CopyImpl::Unrolled64;
+        }
+        #[cfg(all(
+            feature = "copy-nontemporal",
+            not(any(
+                feature = "copy-sse2",
+                feature = "copy-avx2",
+                feature = "copy-unrolled"
+            ))
+        ))]
+        {
+            return CopyImpl::NonTemporal;
+        }
+        #[allow(unreachable_code)]
+        CopyImpl::Stock
+    }
+
+    /// Human-readable name matching the paper's table headers.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CopyImpl::Stock => "memcpy",
+            CopyImpl::Unrolled64 => "unrolled64",
+            CopyImpl::Sse2 => "sse2",
+            CopyImpl::Avx2 => "avx2",
+            CopyImpl::NonTemporal => "nontemporal",
+        }
+    }
+
+    /// Parse from CLI / env spellings.
+    pub fn parse(s: &str) -> Option<CopyImpl> {
+        match s.to_ascii_lowercase().as_str() {
+            "stock" | "memcpy" => Some(CopyImpl::Stock),
+            "unrolled" | "unrolled64" | "mmx" => Some(CopyImpl::Unrolled64),
+            "sse" | "sse2" => Some(CopyImpl::Sse2),
+            "avx" | "avx2" => Some(CopyImpl::Avx2),
+            "nt" | "nontemporal" | "mmx2" => Some(CopyImpl::NonTemporal),
+            _ => None,
+        }
+    }
+}
+
+/// Process-wide selected implementation (runtime dispatch). Initialised to
+/// the compile-time default; `set_global_impl` may override it once at
+/// start-up (e.g. from `POSH_COPY=sse2`), after which the hot path reads it
+/// with a relaxed load — one predictable branch-free indirect call, matching
+/// the paper's "no conditional branches on the data path" goal.
+static GLOBAL_IMPL: AtomicU8 = AtomicU8::new(CopyImpl::default_impl() as u8);
+
+/// Install the process-wide copy implementation.
+pub fn set_global_impl(imp: CopyImpl) {
+    GLOBAL_IMPL.store(imp as u8, Ordering::Relaxed);
+}
+
+/// Read the process-wide copy implementation.
+#[inline]
+pub fn global_impl() -> CopyImpl {
+    match GLOBAL_IMPL.load(Ordering::Relaxed) {
+        0 => CopyImpl::Stock,
+        1 => CopyImpl::Unrolled64,
+        2 => CopyImpl::Sse2,
+        3 => CopyImpl::Avx2,
+        _ => CopyImpl::NonTemporal,
+    }
+}
+
+/// Copy `len` bytes with the process-wide implementation.
+///
+/// # Safety
+/// Same contract as `memcpy`: non-overlapping, both valid for `len`.
+#[inline]
+pub unsafe fn copy_bytes(dst: *mut u8, src: *const u8, len: usize) {
+    copy_bytes_with(global_impl(), dst, src, len)
+}
+
+/// Copy `len` bytes with an explicit implementation (bench sweeps).
+///
+/// # Safety
+/// Same contract as `memcpy`.
+#[inline]
+pub unsafe fn copy_bytes_with(imp: CopyImpl, dst: *mut u8, src: *const u8, len: usize) {
+    match imp {
+        CopyImpl::Stock => std::ptr::copy_nonoverlapping(src, dst, len),
+        CopyImpl::Unrolled64 => copy_unrolled64(dst, src, len),
+        #[cfg(target_arch = "x86_64")]
+        CopyImpl::Sse2 => copy_sse2(dst, src, len),
+        #[cfg(target_arch = "x86_64")]
+        CopyImpl::Avx2 => copy_avx2(dst, src, len),
+        #[cfg(target_arch = "x86_64")]
+        CopyImpl::NonTemporal => copy_nontemporal(dst, src, len),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => std::ptr::copy_nonoverlapping(src, dst, len),
+    }
+}
+
+/// 8×-unrolled 64-bit word loop with byte head/tail.
+///
+/// # Safety
+/// `memcpy` contract.
+pub unsafe fn copy_unrolled64(mut dst: *mut u8, mut src: *const u8, mut len: usize) {
+    // Align the *destination* to 8 bytes (stores are the expensive side).
+    while len > 0 && (dst as usize) & 7 != 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+    let mut d = dst as *mut u64;
+    let mut s = src as *const u64;
+    while len >= 64 {
+        // Unaligned reads are fine on x86; the stores are aligned.
+        let v0 = (s as *const u64).read_unaligned();
+        let v1 = (s.add(1) as *const u64).read_unaligned();
+        let v2 = (s.add(2) as *const u64).read_unaligned();
+        let v3 = (s.add(3) as *const u64).read_unaligned();
+        let v4 = (s.add(4) as *const u64).read_unaligned();
+        let v5 = (s.add(5) as *const u64).read_unaligned();
+        let v6 = (s.add(6) as *const u64).read_unaligned();
+        let v7 = (s.add(7) as *const u64).read_unaligned();
+        d.write(v0);
+        d.add(1).write(v1);
+        d.add(2).write(v2);
+        d.add(3).write(v3);
+        d.add(4).write(v4);
+        d.add(5).write(v5);
+        d.add(6).write(v6);
+        d.add(7).write(v7);
+        d = d.add(8);
+        s = s.add(8);
+        len -= 64;
+    }
+    while len >= 8 {
+        d.write((s as *const u64).read_unaligned());
+        d = d.add(1);
+        s = s.add(1);
+        len -= 8;
+    }
+    let mut db = d as *mut u8;
+    let mut sb = s as *const u8;
+    while len > 0 {
+        *db = *sb;
+        db = db.add(1);
+        sb = sb.add(1);
+        len -= 1;
+    }
+}
+
+/// 128-bit SSE2 loop (paper's SSE implementation).
+///
+/// # Safety
+/// `memcpy` contract; x86_64 only (SSE2 is baseline there).
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn copy_sse2(mut dst: *mut u8, mut src: *const u8, mut len: usize) {
+    use std::arch::x86_64::*;
+    while len > 0 && (dst as usize) & 15 != 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+    while len >= 64 {
+        let v0 = _mm_loadu_si128(src as *const __m128i);
+        let v1 = _mm_loadu_si128(src.add(16) as *const __m128i);
+        let v2 = _mm_loadu_si128(src.add(32) as *const __m128i);
+        let v3 = _mm_loadu_si128(src.add(48) as *const __m128i);
+        _mm_store_si128(dst as *mut __m128i, v0);
+        _mm_store_si128(dst.add(16) as *mut __m128i, v1);
+        _mm_store_si128(dst.add(32) as *mut __m128i, v2);
+        _mm_store_si128(dst.add(48) as *mut __m128i, v3);
+        dst = dst.add(64);
+        src = src.add(64);
+        len -= 64;
+    }
+    while len >= 16 {
+        let v = _mm_loadu_si128(src as *const __m128i);
+        _mm_store_si128(dst as *mut __m128i, v);
+        dst = dst.add(16);
+        src = src.add(16);
+        len -= 16;
+    }
+    while len > 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+}
+
+/// 256-bit AVX2 loop. Falls back to SSE2 when AVX2 is absent.
+///
+/// # Safety
+/// `memcpy` contract.
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn copy_avx2(dst: *mut u8, src: *const u8, len: usize) {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        copy_avx2_inner(dst, src, len);
+    } else {
+        copy_sse2(dst, src, len);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn copy_avx2_inner(mut dst: *mut u8, mut src: *const u8, mut len: usize) {
+    use std::arch::x86_64::*;
+    while len > 0 && (dst as usize) & 31 != 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+    while len >= 128 {
+        let v0 = _mm256_loadu_si256(src as *const __m256i);
+        let v1 = _mm256_loadu_si256(src.add(32) as *const __m256i);
+        let v2 = _mm256_loadu_si256(src.add(64) as *const __m256i);
+        let v3 = _mm256_loadu_si256(src.add(96) as *const __m256i);
+        _mm256_store_si256(dst as *mut __m256i, v0);
+        _mm256_store_si256(dst.add(32) as *mut __m256i, v1);
+        _mm256_store_si256(dst.add(64) as *mut __m256i, v2);
+        _mm256_store_si256(dst.add(96) as *mut __m256i, v3);
+        dst = dst.add(128);
+        src = src.add(128);
+        len -= 128;
+    }
+    while len >= 32 {
+        let v = _mm256_loadu_si256(src as *const __m256i);
+        _mm256_store_si256(dst as *mut __m256i, v);
+        dst = dst.add(32);
+        src = src.add(32);
+        len -= 32;
+    }
+    while len > 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+}
+
+/// 128-bit streaming (non-temporal) stores + trailing sfence — the MMX2
+/// `movntq` idea: don't pollute the cache with data the producer will not
+/// re-read. Only profitable for large copies; the put/get engine never picks
+/// it for small messages.
+///
+/// # Safety
+/// `memcpy` contract.
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn copy_nontemporal(mut dst: *mut u8, mut src: *const u8, mut len: usize) {
+    use std::arch::x86_64::*;
+    while len > 0 && (dst as usize) & 15 != 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+    while len >= 64 {
+        let v0 = _mm_loadu_si128(src as *const __m128i);
+        let v1 = _mm_loadu_si128(src.add(16) as *const __m128i);
+        let v2 = _mm_loadu_si128(src.add(32) as *const __m128i);
+        let v3 = _mm_loadu_si128(src.add(48) as *const __m128i);
+        _mm_stream_si128(dst as *mut __m128i, v0);
+        _mm_stream_si128(dst.add(16) as *mut __m128i, v1);
+        _mm_stream_si128(dst.add(32) as *mut __m128i, v2);
+        _mm_stream_si128(dst.add(48) as *mut __m128i, v3);
+        dst = dst.add(64);
+        src = src.add(64);
+        len -= 64;
+    }
+    while len >= 16 {
+        let v = _mm_loadu_si128(src as *const __m128i);
+        _mm_stream_si128(dst as *mut __m128i, v);
+        dst = dst.add(16);
+        src = src.add(16);
+        len -= 16;
+    }
+    // Streaming stores are weakly ordered; fence before anyone reads them.
+    _mm_sfence();
+    while len > 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+}
+
+/// Safe wrapper: copy between slices (must be same length, non-overlapping by
+/// construction).
+pub fn copy_slice_with(imp: CopyImpl, dst: &mut [u8], src: &[u8]) {
+    assert_eq!(dst.len(), src.len(), "copy_slice_with length mismatch");
+    unsafe { copy_bytes_with(imp, dst.as_mut_ptr(), src.as_ptr(), src.len()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn check_impl(imp: CopyImpl) {
+        let mut rng = Rng::new(0xDEAD ^ imp as u64);
+        // Cover: 0, tiny, word-size, odd sizes, vector sizes, unaligned offsets.
+        for &len in &[0usize, 1, 3, 7, 8, 15, 16, 17, 31, 32, 63, 64, 65, 100, 127, 128, 1000, 4096, 10_000] {
+            for &(doff, soff) in &[(0usize, 0usize), (1, 0), (0, 1), (3, 5), (7, 9)] {
+                let mut src = vec![0u8; len + soff];
+                rng.fill_bytes(&mut src);
+                let mut dst = vec![0xAAu8; len + doff + 1]; // +1 canary
+                let canary_idx = len + doff;
+                dst[canary_idx] = 0x5C;
+                unsafe {
+                    copy_bytes_with(imp, dst.as_mut_ptr().add(doff), src.as_ptr().add(soff), len);
+                }
+                assert_eq!(&dst[doff..doff + len], &src[soff..soff + len],
+                    "{:?} len={} doff={} soff={}", imp, len, doff, soff);
+                assert_eq!(dst[canary_idx], 0x5C, "{:?} overwrote past end (len={})", imp, len);
+                // head must be untouched
+                assert!(dst[..doff].iter().all(|&b| b == 0xAA), "{:?} underwrote (len={})", imp, len);
+            }
+        }
+    }
+
+    #[test]
+    fn stock_correct() {
+        check_impl(CopyImpl::Stock);
+    }
+
+    #[test]
+    fn unrolled64_correct() {
+        check_impl(CopyImpl::Unrolled64);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse2_correct() {
+        check_impl(CopyImpl::Sse2);
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_correct() {
+        check_impl(CopyImpl::Avx2); // falls back to sse2 when unavailable
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn nontemporal_correct() {
+        check_impl(CopyImpl::NonTemporal);
+    }
+
+    #[test]
+    fn available_contains_baselines() {
+        let avail = CopyImpl::available();
+        assert!(avail.contains(&CopyImpl::Stock));
+        assert!(avail.contains(&CopyImpl::Unrolled64));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for imp in CopyImpl::available() {
+            assert_eq!(CopyImpl::parse(imp.name()), Some(imp));
+        }
+        assert_eq!(CopyImpl::parse("mmx"), Some(CopyImpl::Unrolled64));
+        assert_eq!(CopyImpl::parse("bogus"), None);
+    }
+
+    #[test]
+    fn global_impl_roundtrip() {
+        let before = global_impl();
+        set_global_impl(CopyImpl::Unrolled64);
+        assert_eq!(global_impl(), CopyImpl::Unrolled64);
+        set_global_impl(before);
+    }
+
+    #[test]
+    fn copy_slice_matches() {
+        let src: Vec<u8> = (0..=255u8).cycle().take(777).collect();
+        for imp in CopyImpl::available() {
+            let mut dst = vec![0u8; 777];
+            copy_slice_with(imp, &mut dst, &src);
+            assert_eq!(dst, src);
+        }
+    }
+}

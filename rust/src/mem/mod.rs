@@ -1,0 +1,25 @@
+//! Memory-movement engine (paper §4.4).
+//!
+//! "Peer-to-peer communications are using memory copies between local and
+//! shared buffers. As a consequence, memory copy is a highly critical matter
+//! of POSH." The paper ships several `memcpy` implementations (stock, MMX,
+//! MMX2, SSE) selected at *compile time* to avoid conditional branches.
+//!
+//! This module reproduces that design with today's ISAs:
+//!
+//! * [`copy::CopyImpl::Stock`] — `core::ptr::copy_nonoverlapping`, i.e. the
+//!   compiler/libc `memcpy` (the paper's "stock memcpy");
+//! * [`copy::CopyImpl::Unrolled64`] — 8×-unrolled 64-bit word loop (the
+//!   spiritual successor of the paper's MMX 64-bit path);
+//! * [`copy::CopyImpl::Sse2`] — 128-bit vector loop (the paper's SSE path);
+//! * [`copy::CopyImpl::Avx2`] — 256-bit vector loop (what SSE grew into);
+//! * [`copy::CopyImpl::NonTemporal`] — 128-bit streaming stores (the paper's
+//!   MMX2 `movntq` trick: bypass the cache for large one-shot copies).
+//!
+//! The compile-time default is chosen by cargo feature (`copy-sse2`, …) as in
+//! the paper; on top of that a *runtime* dispatcher — a function pointer
+//! resolved once — lets a single binary run the Table-1 sweep.
+
+pub mod copy;
+
+pub use copy::{copy_bytes, copy_bytes_with, CopyImpl};

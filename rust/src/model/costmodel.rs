@@ -1,0 +1,144 @@
+//! Hockney cost model `T(n) = α + n/β` and its least-squares fit.
+
+use crate::util::stats::linear_fit;
+
+/// A fitted (or postulated) communication cost model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// Latency α in nanoseconds (time of a zero-byte operation).
+    pub alpha_ns: f64,
+    /// Bandwidth β in bytes/ns (i.e. GB/s).
+    pub beta_bytes_per_ns: f64,
+    /// Goodness of fit (R² of the linear regression), 1.0 for postulated
+    /// models.
+    pub r2: f64,
+}
+
+impl CostModel {
+    /// Construct from explicit α (ns) and bandwidth in **Gb/s** (the paper's
+    /// unit).
+    pub fn from_alpha_gbps(alpha_ns: f64, gbps: f64) -> CostModel {
+        CostModel {
+            alpha_ns,
+            beta_bytes_per_ns: gbps / 8.0,
+            r2: 1.0,
+        }
+    }
+
+    /// Fit from `(size_bytes, time_ns)` samples by least squares on
+    /// `t = α + s·(1/β)`.
+    pub fn fit(samples: &[(usize, f64)]) -> CostModel {
+        assert!(samples.len() >= 2, "need >=2 samples to fit");
+        let xs: Vec<f64> = samples.iter().map(|&(s, _)| s as f64).collect();
+        let ys: Vec<f64> = samples.iter().map(|&(_, t)| t).collect();
+        let (a, b, r2) = linear_fit(&xs, &ys);
+        CostModel {
+            alpha_ns: a.max(0.0),
+            beta_bytes_per_ns: if b > 0.0 { 1.0 / b } else { f64::INFINITY },
+            r2,
+        }
+    }
+
+    /// Predicted time for an `n`-byte operation, in ns.
+    pub fn predict_ns(&self, n: usize) -> f64 {
+        self.alpha_ns + n as f64 / self.beta_bytes_per_ns
+    }
+
+    /// Predicted bandwidth at size `n`, in Gb/s (paper unit).
+    pub fn predict_gbps(&self, n: usize) -> f64 {
+        let t = self.predict_ns(n);
+        if t <= 0.0 {
+            return 0.0;
+        }
+        n as f64 * 8.0 / t
+    }
+
+    /// Asymptotic bandwidth in Gb/s.
+    pub fn peak_gbps(&self) -> f64 {
+        self.beta_bytes_per_ns * 8.0
+    }
+
+    /// Half-performance message size n₁/₂ (bytes at which achieved bandwidth
+    /// is half the asymptote) — `n₁/₂ = α·β`.
+    pub fn n_half(&self) -> f64 {
+        self.alpha_ns * self.beta_bytes_per_ns
+    }
+
+    /// Message size at which `self` becomes faster than `other` (the
+    /// crossover the paper's Table 1 vs 3 comparisons imply), or `None` if
+    /// one dominates everywhere.
+    pub fn crossover_bytes(&self, other: &CostModel) -> Option<f64> {
+        // α1 + n/β1 = α2 + n/β2  ⇒  n = (α2-α1) / (1/β1 - 1/β2)
+        let da = other.alpha_ns - self.alpha_ns;
+        let dinv = 1.0 / self.beta_bytes_per_ns - 1.0 / other.beta_bytes_per_ns;
+        if dinv.abs() < 1e-15 {
+            return None;
+        }
+        let n = da / dinv;
+        (n > 0.0).then_some(n)
+    }
+}
+
+impl std::fmt::Display for CostModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "T(n) = {:.1} ns + n/{:.2} GB/s  (peak {:.2} Gb/s, n1/2 {:.0} B, R²={:.4})",
+            self.alpha_ns,
+            self.beta_bytes_per_ns,
+            self.peak_gbps(),
+            self.n_half(),
+            self.r2
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_synthetic_model() {
+        let truth = CostModel::from_alpha_gbps(100.0, 80.0); // 100ns, 80 Gb/s
+        let samples: Vec<(usize, f64)> = (3..25)
+            .map(|i| {
+                let n = 1usize << i;
+                (n, truth.predict_ns(n))
+            })
+            .collect();
+        let fit = CostModel::fit(&samples);
+        assert!((fit.alpha_ns - 100.0).abs() < 1.0, "{fit}");
+        assert!((fit.peak_gbps() - 80.0).abs() < 0.5, "{fit}");
+        assert!(fit.r2 > 0.9999);
+    }
+
+    #[test]
+    fn predictions_monotone() {
+        let m = CostModel::from_alpha_gbps(40.0, 70.0);
+        assert!(m.predict_ns(8) < m.predict_ns(1 << 20));
+        assert!(m.predict_gbps(8) < m.predict_gbps(1 << 20));
+        assert!(m.predict_gbps(1 << 26) <= m.peak_gbps() + 1e-9);
+    }
+
+    #[test]
+    fn n_half_formula() {
+        let m = CostModel::from_alpha_gbps(100.0, 80.0); // β = 10 B/ns
+        assert!((m.n_half() - 1000.0).abs() < 1e-9);
+        // At n1/2 the achieved bandwidth is half the peak.
+        let bw = m.predict_gbps(1000);
+        assert!((bw - m.peak_gbps() / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn crossover() {
+        // A: slow start, fast pipe. B: quick start, slow pipe.
+        let a = CostModel::from_alpha_gbps(1000.0, 80.0);
+        let b = CostModel::from_alpha_gbps(100.0, 10.0);
+        let x = a.crossover_bytes(&b).expect("must cross");
+        // Below x, B wins; above, A wins.
+        assert!(a.predict_ns((x * 0.5) as usize) > b.predict_ns((x * 0.5) as usize));
+        assert!(a.predict_ns((x * 2.0) as usize) < b.predict_ns((x * 2.0) as usize));
+        // Same-shape models never cross.
+        assert!(a.crossover_bytes(&a).is_none());
+    }
+}

@@ -1,0 +1,18 @@
+//! The communication model (paper §1: "We present a model for its
+//! communications").
+//!
+//! * [`costmodel`] — the postal/Hockney model `T(n) = α + n/β` (latency +
+//!   size/bandwidth), fitted from measurements by least squares; used to
+//!   summarise benches, predict crossovers, and check the paper's shape
+//!   claims quantitatively.
+//! * [`machines`] — the five evaluation machines of §5 as α/β profiles
+//!   extracted from the paper's own tables, so the benches can print
+//!   "paper-predicted" columns next to measured ones (we cannot fabricate a
+//!   2006 Opteron, but we can replay its fitted model — the DESIGN.md §1
+//!   substitution).
+
+pub mod costmodel;
+pub mod machines;
+
+pub use costmodel::CostModel;
+pub use machines::MachineProfile;

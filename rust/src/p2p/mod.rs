@@ -1,0 +1,250 @@
+//! One-sided point-to-point communication (§3.2, §4.4): `put` and `get`.
+//!
+//! Both are memory copies between the caller's private memory and the
+//! target's public (symmetric) memory, routed through the tunable copy
+//! engine of [`crate::mem`]. The destination address on the remote PE is
+//! computed with Corollary 1 (base-of-remote + handle offset) via the cached
+//! remote-heap table — no handshake with the target, ever.
+//!
+//! Safe-mode (§4.5.5 analog) validates PE range and buffer bounds on every
+//! call; release builds compile those checks down to debug asserts.
+
+pub mod nbi;
+pub mod ptr;
+pub mod strided;
+
+use crate::mem::copy::{copy_bytes_with, global_impl, CopyImpl};
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+
+impl Ctx {
+    #[inline]
+    fn check_p2p<T>(&self, dest: SymPtr<T>, nelems: usize, pe: usize) {
+        if self.config().safe {
+            assert!(pe < self.n_pes(), "target PE {pe} out of range");
+            assert!(
+                nelems <= dest.len(),
+                "buffer overflow: {} elems into a {}-elem symmetric object",
+                nelems,
+                dest.len()
+            );
+        } else {
+            debug_assert!(pe < self.n_pes());
+            debug_assert!(nelems <= dest.len());
+        }
+    }
+
+    /// `shmem_put`: copy `src` into the symmetric object `dest` on PE `pe`.
+    #[inline]
+    pub fn put<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
+        self.put_with(global_impl(), dest, src, pe)
+    }
+
+    /// `put` with an explicit copy implementation (bench sweeps, Table 2).
+    #[inline]
+    pub fn put_with<T: Copy>(&self, imp: CopyImpl, dest: SymPtr<T>, src: &[T], pe: usize) {
+        self.check_p2p(dest, src.len(), pe);
+        // SAFETY: handle in-bounds (checked), src is a live slice, regions
+        // cannot overlap (private stack/heap vs mapped segment).
+        unsafe {
+            copy_bytes_with(
+                imp,
+                self.remote_addr(dest, pe) as *mut u8,
+                src.as_ptr() as *const u8,
+                std::mem::size_of_val(src),
+            );
+        }
+    }
+
+    /// `shmem_get`: copy the symmetric object `src` on PE `pe` into `dest`.
+    #[inline]
+    pub fn get<T: Copy>(&self, dest: &mut [T], src: SymPtr<T>, pe: usize) {
+        self.get_with(global_impl(), dest, src, pe)
+    }
+
+    /// `get` with an explicit copy implementation.
+    #[inline]
+    pub fn get_with<T: Copy>(&self, imp: CopyImpl, dest: &mut [T], src: SymPtr<T>, pe: usize) {
+        self.check_p2p(src, dest.len(), pe);
+        // SAFETY: as `put_with`, directions reversed.
+        unsafe {
+            copy_bytes_with(
+                imp,
+                dest.as_mut_ptr() as *mut u8,
+                self.remote_addr(src, pe) as *const u8,
+                std::mem::size_of_val(dest),
+            );
+        }
+    }
+
+    /// `shmem_<type>_p`: write a single element (§4.3's `shmem_template_p`).
+    #[inline]
+    pub fn put_one<T: Copy>(&self, dest: SymPtr<T>, value: T, pe: usize) {
+        self.check_p2p(dest, 1, pe);
+        // SAFETY: single in-bounds element; volatile so the store is not
+        // elided or torn apart by the optimiser (remote PEs observe it).
+        unsafe {
+            (self.remote_addr(dest, pe)).write_volatile(value);
+        }
+    }
+
+    /// `shmem_<type>_g`: read a single element (§4.3's `shmem_template_g`).
+    #[inline]
+    pub fn get_one<T: Copy>(&self, src: SymPtr<T>, pe: usize) -> T {
+        self.check_p2p(src, 1, pe);
+        // SAFETY: as put_one.
+        unsafe { (self.remote_addr(src, pe) as *const T).read_volatile() }
+    }
+
+    /// Copy between two symmetric objects without staging through private
+    /// memory (used by collectives: remote-to-remote via local mapping).
+    #[inline]
+    pub fn put_sym<T: Copy>(
+        &self,
+        dest: SymPtr<T>,
+        dest_pe: usize,
+        src: SymPtr<T>,
+        src_pe: usize,
+        nelems: usize,
+    ) {
+        self.check_p2p(dest, nelems, dest_pe);
+        self.check_p2p(src, nelems, src_pe);
+        // SAFETY: both sides resolved in-bounds; overlap only possible when
+        // dest_pe == src_pe and handles overlap, which the SHMEM model
+        // forbids for concurrent access; use memmove-safe stock copy if the
+        // handles alias.
+        unsafe {
+            let d = self.remote_addr(dest, dest_pe) as *mut u8;
+            let s = self.remote_addr(src, src_pe) as *const u8;
+            let bytes = nelems * std::mem::size_of::<T>();
+            if dest_pe == src_pe {
+                std::ptr::copy(s, d, bytes); // memmove semantics
+            } else {
+                crate::mem::copy::copy_bytes(d, s, bytes);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn put_then_get_roundtrip() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let buf = ctx.shmalloc_n::<u32>(128).unwrap();
+            if ctx.my_pe() == 0 {
+                let data: Vec<u32> = (0..128).map(|i| i * 7).collect();
+                ctx.put(buf, &data, 1);
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 1 {
+                let local = unsafe { ctx.local(buf) };
+                assert!(local.iter().enumerate().all(|(i, &v)| v == i as u32 * 7));
+            }
+            // And get it back from PE 1 on PE 0.
+            if ctx.my_pe() == 0 {
+                let mut back = vec![0u32; 128];
+                ctx.get(&mut back, buf, 1);
+                assert!(back.iter().enumerate().all(|(i, &v)| v == i as u32 * 7));
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn put_one_get_one_all_pairs() {
+        let n = 4;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let cell = ctx.shmalloc_n::<i64>(n).unwrap();
+            // Every PE writes its rank into its slot on every PE.
+            for pe in 0..n {
+                ctx.put_one(cell.at(ctx.my_pe()), ctx.my_pe() as i64 + 100, pe);
+            }
+            ctx.barrier_all();
+            // Every PE reads every slot from every PE.
+            for pe in 0..n {
+                for slot in 0..n {
+                    assert_eq!(ctx.get_one(cell.at(slot), pe), slot as i64 + 100);
+                }
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn put_with_every_impl() {
+        use crate::mem::copy::CopyImpl;
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let buf = ctx.shmalloc_n::<u8>(4097).unwrap();
+            for (k, imp) in CopyImpl::available().into_iter().enumerate() {
+                if ctx.my_pe() == 0 {
+                    let data: Vec<u8> = (0..4097u32).map(|i| (i as u8) ^ (k as u8)).collect();
+                    ctx.put_with(imp, buf, &data, 1);
+                }
+                ctx.barrier_all();
+                if ctx.my_pe() == 1 {
+                    let local = unsafe { ctx.local(buf) };
+                    assert!(
+                        local
+                            .iter()
+                            .enumerate()
+                            .all(|(i, &v)| v == (i as u8) ^ (k as u8)),
+                        "{imp:?}"
+                    );
+                }
+                ctx.barrier_all();
+            }
+        });
+    }
+
+    #[test]
+    fn put_sym_remote_to_remote() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let a = ctx.shmalloc_n::<u64>(16).unwrap();
+            let b = ctx.shmalloc_n::<u64>(16).unwrap();
+            if ctx.my_pe() == 1 {
+                let vals = vec![0xABCDu64; 16];
+                unsafe { ctx.local_mut(a).copy_from_slice(&vals) };
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 0 {
+                // Move PE1's `a` into PE2's `b` without touching PE0 memory.
+                ctx.put_sym(b, 2, a, 1, 16);
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 2 {
+                assert_eq!(unsafe { ctx.local(b) }, &[0xABCDu64; 16][..]);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn self_put_is_local_copy() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let buf = ctx.shmalloc_n::<f64>(8).unwrap();
+            ctx.put(buf, &[1.5; 8], 0);
+            assert_eq!(unsafe { ctx.local(buf) }, &[1.5; 8][..]);
+        });
+    }
+
+    #[cfg(feature = "safe-mode")]
+    #[test]
+    fn safe_mode_catches_overflow() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            w.run(|ctx| {
+                let buf = ctx.shmalloc_n::<u8>(4).unwrap();
+                ctx.put(buf, &[0u8; 64], 0); // 64 into 4
+            });
+        }));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Non-blocking-implicit transfers: `shmem_put_nbi` / `shmem_get_nbi`.
+//!
+//! **Extension** (OpenSHMEM 1.3; not in the 1.0 spec the paper implements —
+//! listed under "future works" in its conclusion). On a shared-memory node
+//! the origin core performs the copy either way, so the useful freedom NBI
+//! grants an implementation is *deferral*: batch small transfers and issue
+//! them at the next `quiet`, amortising per-call overhead.
+//!
+//! POSH-RS issues NBI transfers eagerly (measurements in EXPERIMENTS.md
+//! show deferral buys nothing when the transport is a local memcpy — there
+//! is no NIC to overlap with) but keeps the full accounting contract:
+//! `pending_nbi()` counts issued-but-unretired operations and `quiet()`
+//! retires them, so programs written against the 1.3 semantics run
+//! unmodified and the completion discipline is testable.
+
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+use std::cell::Cell;
+
+thread_local! {
+    /// Issued-but-unretired NBI operations of the calling PE thread.
+    static PENDING: Cell<u64> = const { Cell::new(0) };
+}
+
+impl Ctx {
+    /// `shmem_put_nbi`: start a put; completion only at the next `quiet`
+    /// (or barrier, which includes one).
+    pub fn put_nbi<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
+        self.put(dest, src, pe);
+        PENDING.with(|p| p.set(p.get() + 1));
+    }
+
+    /// `shmem_get_nbi`: start a get; the value is only guaranteed after the
+    /// next `quiet`.
+    pub fn get_nbi<T: Copy>(&self, dest: &mut [T], src: SymPtr<T>, pe: usize) {
+        self.get(dest, src, pe);
+        PENDING.with(|p| p.set(p.get() + 1));
+    }
+
+    /// Number of NBI operations issued by this PE and not yet retired by a
+    /// `quiet`/barrier.
+    pub fn pending_nbi(&self) -> u64 {
+        PENDING.with(|p| p.get())
+    }
+
+    /// Retire NBI operations (called from `quiet`).
+    pub(crate) fn retire_nbi(&self) {
+        PENDING.with(|p| p.set(0));
+    }
+
+    /// `shmem_quiet` variant that also retires NBI accounting. (The plain
+    /// `quiet` in `sync::order` is the fence; this is the bookkeeping face
+    /// used by programs that check `pending_nbi`.)
+    pub fn quiet_nbi(&self) {
+        self.quiet();
+        self.retire_nbi();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn nbi_accounting() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let buf = ctx.shmalloc_n::<u32>(8).unwrap();
+            assert_eq!(ctx.pending_nbi(), 0);
+            ctx.put_nbi(buf, &[1; 8], (ctx.my_pe() + 1) % 2);
+            let mut tmp = [0u32; 8];
+            ctx.get_nbi(&mut tmp, buf, ctx.my_pe());
+            assert_eq!(ctx.pending_nbi(), 2);
+            ctx.quiet_nbi();
+            assert_eq!(ctx.pending_nbi(), 0);
+            ctx.barrier_all();
+            // Data actually arrived.
+            assert_eq!(unsafe { ctx.local(buf) }, &[1u32; 8][..]);
+            ctx.barrier_all();
+        });
+    }
+}

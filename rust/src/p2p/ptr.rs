@@ -1,0 +1,156 @@
+//! `shmem_ptr` and the accessibility queries (OpenSHMEM 1.0 §8.1).
+//!
+//! `shmem_ptr` is the API that only shared-memory implementations like POSH
+//! can honour: a *direct load/store pointer* to another PE's symmetric
+//! object. On clusters it returns NULL; here it is the whole point — once
+//! you hold the pointer, communication is ordinary memory access with no
+//! library call at all (the paper's §2 "registers of shared memory" model
+//! in its purest form).
+//!
+//! `shmem_pe_accessible` / `shmem_addr_accessible` report what `shmem_ptr`
+//! will succeed on; within one POSH node everything is accessible.
+
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+
+impl Ctx {
+    /// `shmem_ptr`: a raw pointer to `target` **on PE `pe`**, valid in this
+    /// address space for the lifetime of the world. Returns `None` for an
+    /// out-of-range PE (the spec's NULL).
+    ///
+    /// Loads/stores through the pointer bypass every POSH code path; the
+    /// caller owns all memory-model obligations (use `fence`/`quiet`/
+    /// barriers, or atomics for concurrent cells).
+    pub fn shmem_ptr<T>(&self, target: SymPtr<T>, pe: usize) -> Option<*mut T> {
+        if pe >= self.n_pes() {
+            return None;
+        }
+        // SAFETY: in-range PE; handle resolution is bounds-debug-checked.
+        Some(unsafe { self.remote_addr(target, pe) })
+    }
+
+    /// `shmem_pe_accessible`: can `pe` be reached by SHMEM operations?
+    pub fn pe_accessible(&self, pe: usize) -> bool {
+        pe < self.n_pes()
+    }
+
+    /// `shmem_addr_accessible`: is `addr` a symmetric address reachable on
+    /// PE `pe`? True iff the PE exists and the address falls inside the
+    /// statics area or the dynamic heap (the two remotely-accessible regions
+    /// of fig. 1 — the header is implementation-private).
+    pub fn addr_accessible<T>(&self, target: SymPtr<T>, pe: usize) -> bool {
+        if pe >= self.n_pes() {
+            return false;
+        }
+        let layout = self.heap().layout();
+        let start = target.offset();
+        let end = start + target.byte_len();
+        start >= layout.statics_off && end <= layout.total
+    }
+}
+
+/// OpenSHMEM 1.0 §8.8 cache-control operations. Deprecated in the spec and
+/// no-ops on cache-coherent hardware (all of POSH's targets) — shipped for
+/// source compatibility, exactly as POSH itself must.
+pub mod cache {
+    /// `shmem_set_cache_inv` — no-op on coherent hardware.
+    pub fn shmem_set_cache_inv() {}
+    /// `shmem_set_cache_line_inv` — no-op.
+    pub fn shmem_set_cache_line_inv<T>(_target: *mut T) {}
+    /// `shmem_clear_cache_inv` — no-op.
+    pub fn shmem_clear_cache_inv() {}
+    /// `shmem_clear_cache_line_inv` — no-op.
+    pub fn shmem_clear_cache_line_inv<T>(_target: *mut T) {}
+    /// `shmem_udcflush` — no-op.
+    pub fn shmem_udcflush() {}
+    /// `shmem_udcflush_line` — no-op.
+    pub fn shmem_udcflush_line<T>(_target: *mut T) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{PoshConfig, World};
+    use std::sync::atomic::{AtomicI64, Ordering};
+
+    #[test]
+    fn shmem_ptr_direct_store_visible() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let cell = ctx.shmalloc_n::<i64>(4).unwrap();
+            if ctx.my_pe() == 0 {
+                // Write PE 1's copy through a raw pointer — no put().
+                let p = ctx.shmem_ptr(cell, 1).unwrap();
+                unsafe {
+                    p.write_volatile(42);
+                    p.add(3).write_volatile(99);
+                }
+                ctx.quiet();
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 1 {
+                let local = unsafe { ctx.local(cell) };
+                assert_eq!(local[0], 42);
+                assert_eq!(local[3], 99);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn shmem_ptr_enables_lockfree_sharing() {
+        // The §2 "shared registers" model: both PEs hammer one cell through
+        // raw pointers + hardware atomics.
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let cell = ctx.shmalloc_n::<i64>(1).unwrap();
+            let p = ctx.shmem_ptr(cell, 0).unwrap();
+            let a = unsafe { &*(p as *const AtomicI64) };
+            for _ in 0..10_000 {
+                a.fetch_add(1, Ordering::Relaxed);
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 0 {
+                assert_eq!(a.load(Ordering::Relaxed), 20_000);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn out_of_range_pe_is_null() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let cell = ctx.shmalloc_n::<u8>(1).unwrap();
+            assert!(ctx.shmem_ptr(cell, 5).is_none());
+            assert!(!ctx.pe_accessible(5));
+            assert!(ctx.pe_accessible(0));
+        });
+    }
+
+    #[test]
+    fn addr_accessible_classifies_regions() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let heap_obj = ctx.shmalloc_n::<u64>(8).unwrap();
+            assert!(ctx.addr_accessible(heap_obj, 0));
+            assert!(!ctx.addr_accessible(heap_obj, 9));
+            let static_obj = ctx.heap().place_static(64, 8).unwrap();
+            assert!(ctx.addr_accessible(static_obj, 0));
+            // Header region (offset 0) is implementation-private.
+            let header: crate::symheap::SymPtr<u8> =
+                crate::symheap::SymPtr::from_raw(0, 8);
+            assert!(!ctx.addr_accessible(header, 0));
+        });
+    }
+
+    #[test]
+    fn cache_ops_are_callable_noops() {
+        super::cache::shmem_set_cache_inv();
+        super::cache::shmem_clear_cache_inv();
+        super::cache::shmem_udcflush();
+        let mut x = 0u32;
+        super::cache::shmem_set_cache_line_inv(&mut x);
+        super::cache::shmem_clear_cache_line_inv(&mut x);
+        super::cache::shmem_udcflush_line(&mut x);
+    }
+}

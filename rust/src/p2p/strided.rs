@@ -1,0 +1,153 @@
+//! Strided one-sided transfers: `shmem_iput` / `shmem_iget`.
+//!
+//! OpenSHMEM 1.0 §8.4: copy `nelems` elements, reading every `sst`-th
+//! element of the source and writing every `dst`-th slot of the target.
+//! Strides are in *elements* and must be ≥ 1. Strided transfers are
+//! element-at-a-time by nature; no copy-engine dispatch (the engine's sweet
+//! spot is contiguous runs).
+
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+
+impl Ctx {
+    /// `shmem_iput`: strided write to PE `pe`.
+    ///
+    /// `dest` slot `i*dst` receives `src[i*sst]` for `i in 0..nelems`.
+    pub fn iput<T: Copy>(
+        &self,
+        dest: SymPtr<T>,
+        src: &[T],
+        dst: usize,
+        sst: usize,
+        nelems: usize,
+        pe: usize,
+    ) {
+        assert!(dst >= 1 && sst >= 1, "strides must be >= 1");
+        if nelems == 0 {
+            return;
+        }
+        let need_dest = (nelems - 1) * dst + 1;
+        let need_src = (nelems - 1) * sst + 1;
+        assert!(need_src <= src.len(), "iput reads past src");
+        if self.config().safe {
+            assert!(need_dest <= dest.len(), "iput writes past dest");
+            assert!(pe < self.n_pes());
+        } else {
+            debug_assert!(need_dest <= dest.len());
+        }
+        // SAFETY: bounds checked above; volatile writes so remote readers
+        // eventually observe each element.
+        unsafe {
+            let base = self.remote_addr(dest, pe);
+            for i in 0..nelems {
+                base.add(i * dst).write_volatile(src[i * sst]);
+            }
+        }
+    }
+
+    /// `shmem_iget`: strided read from PE `pe`.
+    ///
+    /// `dest[i*dst]` receives source slot `i*sst` for `i in 0..nelems`.
+    pub fn iget<T: Copy>(
+        &self,
+        dest: &mut [T],
+        src: SymPtr<T>,
+        dst: usize,
+        sst: usize,
+        nelems: usize,
+        pe: usize,
+    ) {
+        assert!(dst >= 1 && sst >= 1, "strides must be >= 1");
+        if nelems == 0 {
+            return;
+        }
+        let need_dest = (nelems - 1) * dst + 1;
+        let need_src = (nelems - 1) * sst + 1;
+        assert!(need_dest <= dest.len(), "iget writes past dest");
+        if self.config().safe {
+            assert!(need_src <= src.len(), "iget reads past src");
+            assert!(pe < self.n_pes());
+        } else {
+            debug_assert!(need_src <= src.len());
+        }
+        // SAFETY: bounds checked above.
+        unsafe {
+            let base = self.remote_addr(src, pe) as *const T;
+            for i in 0..nelems {
+                dest[i * dst] = base.add(i * sst).read_volatile();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn iput_scatters_columns() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            // A 4x4 row-major matrix on PE 1; PE 0 writes its column 2.
+            let mat = ctx.shmalloc_n::<i32>(16).unwrap();
+            if ctx.my_pe() == 0 {
+                let col = [10, 20, 30, 40];
+                ctx.iput(mat.slice(2, 14), &col, 4, 1, 4, 1);
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 1 {
+                let m = unsafe { ctx.local(mat) };
+                assert_eq!(m[2], 10);
+                assert_eq!(m[6], 20);
+                assert_eq!(m[10], 30);
+                assert_eq!(m[14], 40);
+                // untouched cells stay zero
+                assert_eq!(m[0], 0);
+                assert_eq!(m[3], 0);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn iget_gathers_every_other() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let src = ctx.shmalloc_n::<u64>(10).unwrap();
+            if ctx.my_pe() == 1 {
+                unsafe {
+                    ctx.local_mut(src)
+                        .copy_from_slice(&[0, 1, 2, 3, 4, 5, 6, 7, 8, 9]);
+                }
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 0 {
+                let mut dst = [0u64; 5];
+                ctx.iget(&mut dst, src, 1, 2, 5, 1);
+                assert_eq!(dst, [0, 2, 4, 6, 8]);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn zero_elems_is_noop() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let buf = ctx.shmalloc_n::<i32>(4).unwrap();
+            ctx.iput(buf, &[], 1, 1, 0, 0);
+            let mut d: [i32; 0] = [];
+            ctx.iget(&mut d, buf, 1, 1, 0, 0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "strides must be >= 1")]
+    fn zero_stride_panics() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let buf = ctx.shmalloc_n::<i32>(4).unwrap();
+            ctx.iput(buf, &[1], 0, 1, 1, 0);
+        });
+    }
+}

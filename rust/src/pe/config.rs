@@ -1,0 +1,138 @@
+//! Job configuration. The paper fixes most of these at compile time
+//! (§4.4 memcpy impl, §4.5.4 collective algorithm, §4.7 `_SAFE`/`_DEBUG`);
+//! POSH-RS keeps the compile-time defaults (cargo features) and lets the
+//! config/env override them once at start-up — resolved before the data
+//! path, so the hot loop still sees a single indirect call, not a branch.
+
+use crate::collectives::AlgoKind;
+use crate::mem::copy::CopyImpl;
+
+/// How PEs are realised.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    /// PEs are threads of one process; segments are private mappings.
+    Threads,
+    /// PEs are processes; segments are named POSIX shm objects.
+    Processes,
+}
+
+/// Which barrier algorithm `barrier_all` uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BarrierKind {
+    /// Dissemination barrier: log2(n) rounds of header-mailbox signals.
+    Dissemination,
+    /// Central counter + sense reversal (ablation baseline).
+    Central,
+}
+
+/// Job-wide configuration.
+#[derive(Clone, Debug)]
+pub struct PoshConfig {
+    /// Dynamic symmetric-heap size per PE, in bytes.
+    pub heap_size: usize,
+    /// Statics area size per PE (§4.2 pre-parser placements).
+    pub statics_size: usize,
+    /// Copy implementation; `None` keeps the compile-time default.
+    pub copy_impl: Option<CopyImpl>,
+    /// Default collective algorithm; `None` keeps the compile-time default.
+    pub coll_algo: Option<AlgoKind>,
+    /// Barrier algorithm.
+    pub barrier: BarrierKind,
+    /// Run-time safe mode (§4.5.5 checks). The `safe-mode` cargo feature
+    /// forces this on.
+    pub safe: bool,
+}
+
+impl Default for PoshConfig {
+    fn default() -> Self {
+        Self {
+            heap_size: 64 << 20,
+            statics_size: crate::symheap::layout::DEFAULT_STATICS_SIZE,
+            copy_impl: None,
+            coll_algo: None,
+            barrier: BarrierKind::Dissemination,
+            safe: cfg!(feature = "safe-mode"),
+        }
+    }
+}
+
+impl PoshConfig {
+    /// A small-heap config for tests (fast to map and zero).
+    pub fn small() -> Self {
+        Self {
+            heap_size: 4 << 20,
+            statics_size: 64 << 10,
+            ..Default::default()
+        }
+    }
+
+    /// Apply `POSH_*` environment overrides (used by `oshrun` children):
+    /// `POSH_HEAP_SIZE`, `POSH_STATICS_SIZE`, `POSH_COPY`, `POSH_COLL_ALGO`,
+    /// `POSH_BARRIER`, `POSH_SAFE`.
+    pub fn from_env(mut self) -> Self {
+        if let Ok(v) = std::env::var("POSH_HEAP_SIZE") {
+            if let Some(n) = parse_size(&v) {
+                self.heap_size = n;
+            }
+        }
+        if let Ok(v) = std::env::var("POSH_STATICS_SIZE") {
+            if let Some(n) = parse_size(&v) {
+                self.statics_size = n;
+            }
+        }
+        if let Ok(v) = std::env::var("POSH_COPY") {
+            self.copy_impl = CopyImpl::parse(&v);
+        }
+        if let Ok(v) = std::env::var("POSH_COLL_ALGO") {
+            self.coll_algo = AlgoKind::parse(&v);
+        }
+        if let Ok(v) = std::env::var("POSH_BARRIER") {
+            self.barrier = match v.to_ascii_lowercase().as_str() {
+                "central" => BarrierKind::Central,
+                _ => BarrierKind::Dissemination,
+            };
+        }
+        if let Ok(v) = std::env::var("POSH_SAFE") {
+            self.safe = v == "1" || v.eq_ignore_ascii_case("true");
+        }
+        self
+    }
+}
+
+/// Parse "64M", "1G", "4096", "16k" style sizes.
+pub fn parse_size(s: &str) -> Option<usize> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.as_bytes()[s.len() - 1].to_ascii_lowercase() {
+        b'k' => (&s[..s.len() - 1], 1usize << 10),
+        b'm' => (&s[..s.len() - 1], 1 << 20),
+        b'g' => (&s[..s.len() - 1], 1 << 30),
+        _ => (s, 1),
+    };
+    num.trim().parse::<usize>().ok().map(|n| n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_size_units() {
+        assert_eq!(parse_size("4096"), Some(4096));
+        assert_eq!(parse_size("16k"), Some(16 << 10));
+        assert_eq!(parse_size("64M"), Some(64 << 20));
+        assert_eq!(parse_size("2G"), Some(2 << 30));
+        assert_eq!(parse_size(""), None);
+        assert_eq!(parse_size("x"), None);
+    }
+
+    #[test]
+    fn default_config_sane() {
+        let c = PoshConfig::default();
+        assert!(c.heap_size >= 1 << 20);
+        assert!(c.statics_size >= 1 << 12);
+        assert_eq!(c.barrier, BarrierKind::Dissemination);
+    }
+}

@@ -1,0 +1,268 @@
+//! Per-PE context: identity, heap access, address translation, allocation.
+//!
+//! `Ctx` is the receiver of the whole POSH-RS API; sibling modules
+//! (`p2p`, `atomics`, `locks`, `collectives`, `sync`) extend it with further
+//! `impl Ctx` blocks. It is cheap to clone (an `Arc` and two integers).
+
+use super::world::WorldShared;
+use crate::symheap::layout::HeapHeader;
+use crate::symheap::{SymHeap, SymPtr};
+use crate::Result;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// The context of one processing element.
+#[derive(Clone)]
+pub struct Ctx {
+    pe: usize,
+    shared: Arc<WorldShared>,
+}
+
+impl Ctx {
+    pub(crate) fn new(pe: usize, shared: Arc<WorldShared>) -> Self {
+        Self { pe, shared }
+    }
+
+    /// This PE's rank (`shmem_my_pe` / `_my_pe`).
+    #[inline]
+    pub fn my_pe(&self) -> usize {
+        self.pe
+    }
+
+    /// Number of PEs in the job (`shmem_n_pes` / `_num_pes`).
+    #[inline]
+    pub fn n_pes(&self) -> usize {
+        self.shared.n_pes
+    }
+
+    /// Job configuration.
+    pub fn config(&self) -> &super::config::PoshConfig {
+        &self.shared.cfg
+    }
+
+    /// Execution mode.
+    pub fn mode(&self) -> super::config::Mode {
+        self.shared.mode
+    }
+
+    /// Job id.
+    pub fn job_id(&self) -> u64 {
+        self.shared.job_id
+    }
+
+    #[allow(dead_code)]
+    pub(crate) fn shared(&self) -> &WorldShared {
+        &self.shared
+    }
+
+    /// This PE's own symmetric heap.
+    #[inline]
+    pub fn heap(&self) -> &SymHeap {
+        match self.shared.my_pe_fixed {
+            Some(_) => &self.shared.local_heaps[0],
+            None => &self.shared.local_heaps[self.pe],
+        }
+    }
+
+    /// Base address of PE `pe`'s heap **in this address space** — the cached
+    /// remote-table lookup of §4.1.1.
+    #[inline]
+    pub fn base_of(&self, pe: usize) -> *mut u8 {
+        debug_assert!(pe < self.shared.n_pes);
+        self.shared.bases[pe].0
+    }
+
+    /// Header of PE `pe`'s heap.
+    #[inline]
+    pub fn header_of(&self, pe: usize) -> &HeapHeader {
+        // SAFETY: every base points at an initialised segment of the common
+        // layout; headers are all-atomic.
+        unsafe { HeapHeader::at(self.base_of(pe)) }
+    }
+
+    /// Resolve a symmetric handle on PE `pe` (Corollary 1: base + offset).
+    ///
+    /// # Safety
+    /// The handle must denote a live symmetric object; access must respect
+    /// the SHMEM race rules.
+    #[inline]
+    pub unsafe fn remote_addr<T>(&self, ptr: SymPtr<T>, pe: usize) -> *mut T {
+        debug_assert!(
+            ptr.offset() + ptr.byte_len() <= self.shared.layout.total,
+            "handle outside segment"
+        );
+        ptr.resolve(self.base_of(pe))
+    }
+
+    /// Local view of a symmetric object as a mutable slice.
+    ///
+    /// # Safety
+    /// No concurrent conflicting remote access (SHMEM memory model).
+    pub unsafe fn local_mut<T>(&self, ptr: SymPtr<T>) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.remote_addr(ptr, self.pe), ptr.len())
+    }
+
+    /// Local view of a symmetric object as a shared slice.
+    ///
+    /// # Safety
+    /// As [`Ctx::local_mut`].
+    pub unsafe fn local<T>(&self, ptr: SymPtr<T>) -> &[T] {
+        std::slice::from_raw_parts(self.remote_addr(ptr, self.pe), ptr.len())
+    }
+
+    // ---------------------------------------------------------------------
+    // Symmetric allocation (§4.1.1): every entry point ends with the global
+    // barrier the OpenSHMEM standard mandates, which is precisely what makes
+    // Fact 1 enforceable.
+    // ---------------------------------------------------------------------
+
+    /// `shmalloc`: allocate `count` elements of `T`; collective.
+    pub fn shmalloc_n<T>(&self, count: usize) -> Result<SymPtr<T>> {
+        let p = self.heap().alloc_n::<T>(count)?;
+        self.alloc_barrier();
+        Ok(p)
+    }
+
+    /// `shmemalign`: aligned symmetric allocation; collective.
+    pub fn shmemalign_n<T>(&self, align: usize, count: usize) -> Result<SymPtr<T>> {
+        let p = self.heap().alloc_aligned_n::<T>(align, count)?;
+        self.alloc_barrier();
+        Ok(p)
+    }
+
+    /// `shfree`: free a symmetric allocation; collective.
+    pub fn shfree<T>(&self, ptr: SymPtr<T>) -> Result<()> {
+        self.heap().free(ptr)?;
+        self.alloc_barrier();
+        Ok(())
+    }
+
+    /// `shrealloc`: resize a symmetric allocation; collective.
+    pub fn shrealloc<T>(&self, ptr: SymPtr<T>, new_count: usize) -> Result<SymPtr<T>> {
+        let p = self.heap().realloc(ptr, new_count)?;
+        self.alloc_barrier();
+        Ok(p)
+    }
+
+    /// The barrier that terminates every symmetric allocation. In safe mode
+    /// it additionally publishes the allocation-journal hash and verifies
+    /// all PEs agree — turning a §6.4 "undefined behavior" programmer
+    /// mistake into a loud error (Fact 1 checking).
+    fn alloc_barrier(&self) {
+        if self.config().safe {
+            let h = self.heap().journal_hash();
+            self.header_of(self.pe).journal_hash.store(h, Ordering::Release);
+            self.barrier_all();
+            for pe in 0..self.n_pes() {
+                let other = self.header_of(pe).journal_hash.load(Ordering::Acquire);
+                assert_eq!(
+                    other, h,
+                    "asymmetric allocation detected: PE {pe} journal {other:#x} != \
+                     PE {} journal {h:#x} (OpenSHMEM §6.4 violation)",
+                    self.pe
+                );
+            }
+            self.barrier_all();
+        } else {
+            self.barrier_all();
+        }
+    }
+
+    /// Spin until `cond` is true; polls the job abort flag so a dead peer
+    /// fails the wait instead of hanging forever.
+    #[inline]
+    pub(crate) fn spin_wait(&self, mut cond: impl FnMut() -> bool) {
+        let mut spins = 0u32;
+        while !cond() {
+            std::hint::spin_loop();
+            spins = spins.wrapping_add(1);
+            if spins & 0x3FF == 0 {
+                if self.shared.abort.load(Ordering::Acquire) {
+                    panic!("POSH job aborted (a peer PE failed)");
+                }
+                // Single-core friendliness: let the peer run.
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Ctx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Ctx{{pe={}/{}}}", self.pe, self.shared.n_pes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn identity() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            assert!(ctx.my_pe() < 3);
+            assert_eq!(ctx.n_pes(), 3);
+        });
+    }
+
+    #[test]
+    fn symmetric_alloc_same_handle_everywhere() {
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        let handles = w.run_collect(|ctx| {
+            let p = ctx.shmalloc_n::<u64>(32).unwrap();
+            (p.offset(), p.len())
+        });
+        assert!(handles.windows(2).all(|w| w[0] == w[1]), "{handles:?}");
+    }
+
+    #[test]
+    fn remote_addr_translation_consistent() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let p = ctx.shmalloc_n::<u32>(8).unwrap();
+            unsafe {
+                // My local address, translated via Corollary 1's formula,
+                // equals the direct resolution on the peer's base.
+                let peer = (ctx.my_pe() + 1) % 2;
+                let local = ctx.remote_addr(p, ctx.my_pe()) as *const u8;
+                let formula = crate::symheap::handle::translate(
+                    local,
+                    ctx.base_of(ctx.my_pe()),
+                    ctx.base_of(peer),
+                );
+                assert_eq!(formula as *mut u32, ctx.remote_addr(p, peer));
+            }
+            ctx.barrier_all();
+            ctx.shfree(p).unwrap();
+        });
+    }
+
+    #[test]
+    fn local_mut_reads_back() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let p = ctx.shmalloc_n::<i32>(4).unwrap();
+            unsafe {
+                ctx.local_mut(p).copy_from_slice(&[1, -2, 3, -4]);
+                assert_eq!(ctx.local(p), &[1, -2, 3, -4]);
+            }
+        });
+    }
+
+    #[cfg(feature = "safe-mode")]
+    #[test]
+    fn asymmetric_alloc_detected_in_safe_mode() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            w.run(|ctx| {
+                if ctx.my_pe() == 0 {
+                    let _ = ctx.shmalloc_n::<u8>(100).unwrap();
+                } else {
+                    let _ = ctx.shmalloc_n::<u8>(200).unwrap();
+                }
+            });
+        }));
+        assert!(r.is_err());
+    }
+}

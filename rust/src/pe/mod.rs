@@ -1,0 +1,17 @@
+//! Processing elements: the world (all PEs of a job), per-PE contexts, and
+//! configuration.
+//!
+//! POSH runs PEs as OS processes spawned by its run-time environment (§4.7).
+//! POSH-RS supports that mode (`oshrun`, [`World::attach_process`]) *and* a
+//! thread mode ([`World::threads`]) where PEs are threads of one process and
+//! heaps are private mappings — same code paths above the segment layer,
+//! much friendlier for unit tests and benches.
+
+pub mod config;
+pub mod ctx;
+pub mod remote_table;
+pub mod world;
+
+pub use config::{BarrierKind, Mode, PoshConfig};
+pub use ctx::Ctx;
+pub use world::World;

@@ -1,0 +1,127 @@
+//! The remote-heap table (paper §4.1.1).
+//!
+//! "Building the remote heap's name and the corresponding shared object is
+//! quite expensive […] As a consequence, they are all created at
+//! startup-time and cached in a local structure (a table)."
+//!
+//! In process mode every PE maps every peer's segment once at start-up and
+//! keeps the mapping here; the data path then costs one vector index. In
+//! thread mode the "table" is just the world's heap vector — same shape.
+
+use crate::shm::naming::heap_segment_name;
+use crate::shm::posix::PosixShmSegment;
+use crate::shm::Segment;
+use crate::Result;
+use std::time::Duration;
+
+/// A `*mut u8` that may cross threads. The pointee is a shared segment whose
+/// access discipline is the SHMEM memory model's responsibility.
+#[derive(Clone, Copy, Debug)]
+pub struct SendPtr(pub *mut u8);
+// SAFETY: see type docs.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Start-up-time cache of peer segment mappings (process mode).
+pub struct RemoteTable {
+    /// `segs[pe]` is `None` for my own rank (the local heap owns that
+    /// mapping) and `Some(mapping)` for every peer.
+    segs: Vec<Option<PosixShmSegment>>,
+    /// Resolved base addresses, one per PE, including my own.
+    bases: Vec<SendPtr>,
+}
+
+impl RemoteTable {
+    /// Map every peer's heap segment. `my_base` is the local heap's base;
+    /// `seg_len` must match the common segment layout. Retries while peers
+    /// are still starting up (the paper's "wait a little bit and try again").
+    pub fn build(
+        job_id: u64,
+        my_pe: usize,
+        n_pes: usize,
+        my_base: *mut u8,
+        seg_len: usize,
+        timeout: Duration,
+    ) -> Result<Self> {
+        let mut segs = Vec::with_capacity(n_pes);
+        let mut bases = Vec::with_capacity(n_pes);
+        for pe in 0..n_pes {
+            if pe == my_pe {
+                segs.push(None);
+                bases.push(SendPtr(my_base));
+            } else {
+                let name = heap_segment_name(job_id, pe);
+                let seg = PosixShmSegment::open_existing(&name, seg_len, timeout)?;
+                bases.push(SendPtr(seg.base()));
+                segs.push(Some(seg));
+            }
+        }
+        Ok(Self { segs, bases })
+    }
+
+    /// Base address of PE `pe`'s heap in this address space (O(1) — the
+    /// cached-table lookup of §4.1.1).
+    #[inline]
+    pub fn base_of(&self, pe: usize) -> *mut u8 {
+        self.bases[pe].0
+    }
+
+    /// All bases (used to build the world's flat view).
+    pub fn bases(&self) -> Vec<SendPtr> {
+        self.bases.clone()
+    }
+
+    /// Number of PEs covered.
+    pub fn len(&self) -> usize {
+        self.bases.len()
+    }
+
+    /// True if the table is empty.
+    pub fn is_empty(&self) -> bool {
+        self.bases.is_empty()
+    }
+
+    /// Drop all remote mappings explicitly (also happens on drop).
+    pub fn clear(&mut self) {
+        for s in self.segs.iter_mut() {
+            *s = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shm::naming::fresh_job_id;
+
+    #[test]
+    fn build_maps_peers_created_in_same_process() {
+        // Simulate two PEs' segments existing, then build rank 0's table.
+        let job = fresh_job_id();
+        let len = 64 << 10;
+        let seg0 = PosixShmSegment::create(&heap_segment_name(job, 0), len).unwrap();
+        let seg1 = PosixShmSegment::create(&heap_segment_name(job, 1), len).unwrap();
+        unsafe {
+            *seg1.base().add(100) = 77;
+        }
+        let table =
+            RemoteTable::build(job, 0, 2, seg0.base(), len, Duration::from_millis(200)).unwrap();
+        assert_eq!(table.len(), 2);
+        assert_eq!(table.base_of(0), seg0.base());
+        // The table's mapping of PE1 is a *different* mapping of the same
+        // object: different address, same bytes.
+        unsafe {
+            assert_eq!(*table.base_of(1).add(100), 77);
+        }
+        assert_ne!(table.base_of(1), seg1.base());
+    }
+
+    #[test]
+    fn build_times_out_on_missing_peer() {
+        let job = fresh_job_id();
+        let len = 16 << 10;
+        let seg0 = PosixShmSegment::create(&heap_segment_name(job, 0), len).unwrap();
+        let r = RemoteTable::build(job, 0, 3, seg0.base(), len, Duration::from_millis(50));
+        assert!(r.is_err());
+    }
+}

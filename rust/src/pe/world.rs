@@ -1,0 +1,297 @@
+//! The world: all PEs of one job.
+
+use super::config::{Mode, PoshConfig};
+use super::ctx::Ctx;
+use super::remote_table::{RemoteTable, SendPtr};
+use crate::shm::naming::{fresh_job_id, heap_segment_name};
+use crate::shm::posix::PosixShmSegment;
+use crate::symheap::layout::Layout;
+use crate::symheap::SymHeap;
+use crate::Result;
+use anyhow::{bail, Context as _};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Shared, immutable-after-init state of a job, viewed from one process.
+pub struct WorldShared {
+    pub(crate) cfg: PoshConfig,
+    pub(crate) job_id: u64,
+    pub(crate) n_pes: usize,
+    pub(crate) mode: Mode,
+    pub(crate) layout: Layout,
+    /// Thread mode: one heap per PE. Process mode: exactly my heap.
+    pub(crate) local_heaps: Vec<SymHeap>,
+    /// Segment base of every PE's heap in this address space.
+    pub(crate) bases: Vec<SendPtr>,
+    /// Process mode: which PE this process is.
+    pub(crate) my_pe_fixed: Option<usize>,
+    /// Keeps remote mappings alive in process mode.
+    #[allow(dead_code)]
+    pub(crate) remote: Option<RemoteTable>,
+    /// Raised when any PE panics (thread mode); spin loops poll it so one
+    /// failing PE aborts the job instead of hanging the barrier.
+    pub(crate) abort: AtomicBool,
+}
+
+/// A POSH job handle.
+pub struct World {
+    pub(crate) shared: Arc<WorldShared>,
+}
+
+impl World {
+    /// Thread-mode world: `n` PEs as threads, heaps as private mappings.
+    pub fn threads(n: usize, cfg: PoshConfig) -> Result<World> {
+        if n == 0 {
+            bail!("world needs at least one PE");
+        }
+        let layout = Layout::compute(cfg.heap_size, cfg.statics_size);
+        if let Some(imp) = cfg.copy_impl {
+            crate::mem::copy::set_global_impl(imp);
+        }
+        let mut heaps = Vec::with_capacity(n);
+        for rank in 0..n {
+            let seg = crate::shm::create_inproc(layout.total)
+                .with_context(|| format!("creating heap segment for PE {rank}"))?;
+            heaps.push(SymHeap::new(seg, layout, rank)?);
+        }
+        let bases = heaps.iter().map(|h| SendPtr(h.base())).collect();
+        Ok(World {
+            shared: Arc::new(WorldShared {
+                cfg,
+                job_id: fresh_job_id(),
+                n_pes: n,
+                mode: Mode::Threads,
+                layout,
+                local_heaps: heaps,
+                bases,
+                my_pe_fixed: None,
+                remote: None,
+                abort: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// Process-mode world: create this rank's POSIX segment, then map every
+    /// peer's (retrying while they start up — §4.1.1), then wait for their
+    /// headers to become ready.
+    pub fn attach_process(
+        job_id: u64,
+        rank: usize,
+        n_pes: usize,
+        cfg: PoshConfig,
+    ) -> Result<World> {
+        if rank >= n_pes {
+            bail!("rank {rank} out of range for {n_pes} PEs");
+        }
+        let layout = Layout::compute(cfg.heap_size, cfg.statics_size);
+        if let Some(imp) = cfg.copy_impl {
+            crate::mem::copy::set_global_impl(imp);
+        }
+        let seg = PosixShmSegment::create(&heap_segment_name(job_id, rank), layout.total)?;
+        let heap = SymHeap::new(Box::new(seg), layout, rank)?;
+        let timeout = Duration::from_secs(
+            std::env::var("POSH_ATTACH_TIMEOUT_S")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(30),
+        );
+        let table = RemoteTable::build(job_id, rank, n_pes, heap.base(), layout.total, timeout)?;
+        // Wait for each peer's header to be initialised (ready flag).
+        for pe in 0..n_pes {
+            let hdr = unsafe { crate::symheap::layout::HeapHeader::at(table.base_of(pe)) };
+            let deadline = std::time::Instant::now() + timeout;
+            while hdr.ready.load(Ordering::Acquire) == 0 {
+                if std::time::Instant::now() > deadline {
+                    bail!("PE {pe} header not ready within {timeout:?}");
+                }
+                std::hint::spin_loop();
+                std::thread::yield_now();
+            }
+        }
+        let bases = table.bases();
+        Ok(World {
+            shared: Arc::new(WorldShared {
+                cfg,
+                job_id,
+                n_pes,
+                mode: Mode::Processes,
+                layout,
+                local_heaps: vec![heap],
+                bases,
+                my_pe_fixed: Some(rank),
+                remote: Some(table),
+                abort: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    /// Process-mode attach from the environment `oshrun` provides
+    /// (`POSH_JOB`, `POSH_RANK`, `POSH_NPES`, plus config overrides).
+    pub fn from_env() -> Result<World> {
+        let job = std::env::var("POSH_JOB")
+            .context("POSH_JOB not set (run under oshrun)")?
+            .parse::<u64>()
+            .context("POSH_JOB must be a u64")?;
+        let rank = std::env::var("POSH_RANK")
+            .context("POSH_RANK not set")?
+            .parse::<usize>()?;
+        let n = std::env::var("POSH_NPES")
+            .context("POSH_NPES not set")?
+            .parse::<usize>()?;
+        let cfg = PoshConfig::default().from_env();
+        Self::attach_process(job, rank, n, cfg)
+    }
+
+    /// `true` if the `oshrun` environment is present.
+    pub fn env_present() -> bool {
+        std::env::var("POSH_JOB").is_ok()
+    }
+
+    /// Number of PEs in the job.
+    pub fn n_pes(&self) -> usize {
+        self.shared.n_pes
+    }
+
+    /// Execution mode.
+    pub fn mode(&self) -> Mode {
+        self.shared.mode
+    }
+
+    /// Job id.
+    pub fn job_id(&self) -> u64 {
+        self.shared.job_id
+    }
+
+    /// Build the context for PE `pe`. In process mode only this process's
+    /// own rank is valid.
+    pub fn ctx(&self, pe: usize) -> Ctx {
+        assert!(pe < self.shared.n_pes, "PE {pe} out of range");
+        if let Some(me) = self.shared.my_pe_fixed {
+            assert_eq!(pe, me, "process-mode world can only build its own ctx");
+        }
+        Ctx::new(pe, Arc::clone(&self.shared))
+    }
+
+    /// Process mode: this process's context.
+    pub fn my_ctx(&self) -> Ctx {
+        let me = self
+            .shared
+            .my_pe_fixed
+            .expect("my_ctx() is process-mode only; use ctx(pe)/run(f) in thread mode");
+        Ctx::new(me, Arc::clone(&self.shared))
+    }
+
+    /// Thread mode: run `f` once per PE on its own thread; returns when all
+    /// PEs finish. A panicking PE raises the job abort flag so peers blocked
+    /// in barriers fail fast instead of hanging.
+    pub fn run<F>(&self, f: F)
+    where
+        F: Fn(Ctx) + Send + Sync,
+    {
+        self.run_collect(|ctx| f(ctx));
+    }
+
+    /// Like [`World::run`] but collects each PE's return value, indexed by
+    /// rank.
+    pub fn run_collect<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(Ctx) -> R + Send + Sync,
+    {
+        assert_eq!(
+            self.shared.mode,
+            Mode::Threads,
+            "run()/run_collect() are thread-mode entry points"
+        );
+        let shared = &self.shared;
+        let f = &f;
+        let mut out: Vec<Option<R>> = (0..shared.n_pes).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..shared.n_pes)
+                .map(|pe| {
+                    let ctx = Ctx::new(pe, Arc::clone(shared));
+                    let abort = Arc::clone(shared);
+                    s.spawn(move || {
+                        // Abort the whole job if this PE panics, so peers
+                        // spinning in barriers bail out.
+                        struct Guard(Arc<WorldShared>);
+                        impl Drop for Guard {
+                            fn drop(&mut self) {
+                                if std::thread::panicking() {
+                                    self.0.abort.store(true, Ordering::Release);
+                                }
+                            }
+                        }
+                        let _g = Guard(abort);
+                        f(ctx)
+                    })
+                })
+                .collect();
+            for (pe, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(r) => out[pe] = Some(r),
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_world_basics() {
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        assert_eq!(w.n_pes(), 4);
+        assert_eq!(w.mode(), Mode::Threads);
+        let ranks = w.run_collect(|ctx| ctx.my_pe());
+        assert_eq!(ranks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_pes_rejected() {
+        assert!(World::threads(0, PoshConfig::small()).is_err());
+    }
+
+    #[test]
+    fn bases_are_distinct() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        let b: Vec<usize> = (0..3).map(|i| w.shared.bases[i].0 as usize).collect();
+        assert_ne!(b[0], b[1]);
+        assert_ne!(b[1], b[2]);
+    }
+
+    #[test]
+    fn pe_panic_propagates() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            w.run(|ctx| {
+                if ctx.my_pe() == 1 {
+                    panic!("boom");
+                }
+                // PE 0 blocks on a barrier that PE 1 never reaches; the
+                // abort flag must rescue it.
+                ctx.barrier_all();
+            });
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn process_mode_single_rank() {
+        // A 1-PE process-mode world inside this test process.
+        let job = crate::shm::naming::fresh_job_id();
+        let w = World::attach_process(job, 0, 1, PoshConfig::small()).unwrap();
+        let ctx = w.my_ctx();
+        assert_eq!(ctx.my_pe(), 0);
+        assert_eq!(ctx.n_pes(), 1);
+        ctx.barrier_all();
+        let p = ctx.shmalloc_n::<u64>(4).unwrap();
+        ctx.put(p, &[9, 9, 9, 9], 0);
+        assert_eq!(ctx.get_one(p, 0), 9);
+    }
+}

@@ -1,0 +1,311 @@
+//! Code generation half of the pre-parser (§4.2): allocation/deallocation
+//! lines, the transformed source, and the statics manifest.
+//!
+//! "When the OpenSHMEM library is initialized (i.e., when the `start_pes`
+//! routine is called), it dumps the allocation code into the source code.
+//! When the program exits (i.e., when the keyword `return` is found in the
+//! main function), the deallocation code lines are inserted before each
+//! `return` keyword."
+
+use super::decl::{parse_declarations, StaticDecl};
+use crate::symheap::SymHeap;
+use crate::Result;
+
+/// A machine-readable statics manifest: what `start_pes` must reserve.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    /// The declarations, in source order (placement order matters: the
+    /// statics area is a bump allocator, so order ⇒ offsets).
+    pub decls: Vec<StaticDecl>,
+}
+
+impl Manifest {
+    /// Build from a C source.
+    pub fn from_source(src: &str) -> Manifest {
+        Manifest { decls: parse_declarations(src) }
+    }
+
+    /// Total bytes of the statics area this manifest needs (with per-object
+    /// natural alignment, bump-allocated in order).
+    pub fn total_bytes(&self) -> usize {
+        let mut cursor = 0usize;
+        for d in &self.decls {
+            cursor = crate::util::align_up(cursor, d.align());
+            cursor += d.byte_size();
+        }
+        cursor
+    }
+
+    /// Apply to a heap: place every object in the statics area, in order.
+    /// Returns `(name, offset, size)` triples. This is the run-time half of
+    /// the §4.2 trick — what the generated `start_pes` code does in C.
+    pub fn place(&self, heap: &SymHeap) -> Result<Vec<(String, usize, usize)>> {
+        let mut out = Vec::with_capacity(self.decls.len());
+        for d in &self.decls {
+            let p = heap.place_static(d.byte_size(), d.align())?;
+            out.push((d.name.clone(), p.offset(), d.byte_size()));
+        }
+        Ok(out)
+    }
+
+    /// Serialise as the `posh.statics` text format (one line per object:
+    /// `name type count bytes align init`).
+    pub fn to_text(&self) -> String {
+        let mut s = String::from("# posh statics manifest v1\n");
+        for d in &self.decls {
+            s.push_str(&format!(
+                "{} {} {} {} {} {}\n",
+                d.name,
+                d.ty.c_name().replace(' ', "_"),
+                d.count,
+                d.byte_size(),
+                d.align(),
+                if d.initialized { "data" } else { "bss" },
+            ));
+        }
+        s
+    }
+
+    /// The C allocation lines the paper's tool dumps into `start_pes`.
+    pub fn alloc_code(&self) -> String {
+        let mut s = String::new();
+        s.push_str("/* POSH pre-parser: symmetric placements of global statics (auto-generated) */\n");
+        for d in &self.decls {
+            s.push_str(&format!(
+                "__posh_static_{name} = shmemalign({align}, {size}); /* {ty} {name}[{n}] ({seg}) */\n",
+                name = d.name,
+                align = d.align(),
+                size = d.byte_size(),
+                ty = d.ty.c_name(),
+                n = d.count,
+                seg = if d.initialized { "data" } else { "bss" },
+            ));
+            if d.initialized {
+                s.push_str(&format!(
+                    "memcpy(__posh_static_{name}, &{name}, {size}); /* copy data-segment image */\n",
+                    name = d.name,
+                    size = d.byte_size(),
+                ));
+            }
+        }
+        s
+    }
+
+    /// The C deallocation lines inserted before each `return` of `main`.
+    pub fn dealloc_code(&self) -> String {
+        let mut s = String::new();
+        s.push_str("/* POSH pre-parser: release symmetric statics (auto-generated) */\n");
+        for d in self.decls.iter().rev() {
+            s.push_str(&format!("shfree(__posh_static_{});\n", d.name));
+        }
+        s
+    }
+}
+
+/// Transform a C source the way the paper describes: inject allocation code
+/// right after the `start_pes(…)` call and deallocation code before every
+/// `return` inside `main`.
+pub fn transform_source(src: &str) -> (String, Manifest) {
+    let manifest = Manifest::from_source(src);
+    if manifest.decls.is_empty() {
+        return (src.to_string(), manifest);
+    }
+    let alloc = manifest.alloc_code();
+    let dealloc = manifest.dealloc_code();
+
+    // Pass 1: inside main's body, prefix each `return` with the dealloc
+    // code (done first, on the whole source, so `main` is still findable).
+    let with_dealloc = inject_before_main_returns(src, &dealloc);
+    // Pass 2: inject the allocation block after the ';' terminating the
+    // start_pes(...) call.
+    let out = if let Some(pos) = with_dealloc.find("start_pes") {
+        if let Some(semi) = with_dealloc[pos..].find(';') {
+            let cut = pos + semi + 1;
+            format!("{}\n{}{}", &with_dealloc[..cut], alloc, &with_dealloc[cut..])
+        } else {
+            format!("/* POSH: no start_pes() found; alloc code follows */\n{alloc}{with_dealloc}")
+        }
+    } else {
+        // No start_pes call found: emit the alloc block as a comment header
+        // so the developer sees what would be injected.
+        format!("/* POSH: no start_pes() found; alloc code follows */\n{alloc}{with_dealloc}")
+    };
+    (out, manifest)
+}
+
+/// Find `main`'s body and splice `code` before each of its `return`s.
+fn inject_before_main_returns(src: &str, code: &str) -> String {
+    let Some(main_pos) = find_main(src) else {
+        return src.to_string();
+    };
+    let Some(body_open) = src[main_pos..].find('{').map(|p| p + main_pos) else {
+        return src.to_string();
+    };
+    // Walk the body tracking brace depth; a `return` at any depth inside
+    // main gets the epilogue (the paper: "before each return keyword").
+    let bytes = src.as_bytes();
+    let mut depth = 0usize;
+    let mut i = body_open;
+    let mut out = String::with_capacity(src.len() + code.len());
+    out.push_str(&src[..body_open]);
+    let mut last_emit = body_open;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    i += 1;
+                    break;
+                }
+            }
+            b'r' if src[i..].starts_with("return")
+                && !src[..i].ends_with(|c: char| c.is_ascii_alphanumeric() || c == '_')
+                && !src[i + 6..].starts_with(|c: char| c.is_ascii_alphanumeric() || c == '_') =>
+            {
+                out.push_str(&src[last_emit..i]);
+                out.push_str(code);
+                last_emit = i;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out.push_str(&src[last_emit..]);
+    out
+}
+
+/// Locate the definition of `main` (crudely: the identifier `main` followed
+/// by `(` at file scope).
+fn find_main(src: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = src[from..].find("main") {
+        let pos = from + rel;
+        let before_ok = pos == 0
+            || !src[..pos].ends_with(|c: char| c.is_ascii_alphanumeric() || c == '_');
+        let after = &src[pos + 4..];
+        let after_ok = after.trim_start().starts_with('(');
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+        from = pos + 4;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shm::create_inproc;
+    use crate::symheap::layout::Layout;
+
+    const SAMPLE: &str = r#"
+#include <shmem.h>
+static int hits;
+static double grid[64];
+static long total = 7;
+
+int main(int argc, char** argv) {
+    start_pes(0);
+    if (argc > 1) { return 1; }
+    for (int i = 0; i < 64; i++) grid[i] = 0.0;
+    return 0;
+}
+"#;
+
+    #[test]
+    fn manifest_extraction() {
+        let m = Manifest::from_source(SAMPLE);
+        assert_eq!(m.decls.len(), 3);
+        assert_eq!(m.decls[0].name, "hits");
+        assert_eq!(m.decls[1].byte_size(), 512);
+        assert!(m.decls[2].initialized);
+        // 4 (hits) -> pad to 8 -> 512 (grid) -> 8 (total) = 528
+        assert_eq!(m.total_bytes(), 8 + 512 + 8);
+    }
+
+    #[test]
+    fn placement_on_real_heap() {
+        let layout = Layout::compute(1 << 16, 8192);
+        let heap = SymHeap::new(create_inproc(layout.total).unwrap(), layout, 0).unwrap();
+        let m = Manifest::from_source(SAMPLE);
+        let placed = m.place(&heap).unwrap();
+        assert_eq!(placed.len(), 3);
+        // Offsets ordered and aligned.
+        assert!(placed[0].1 < placed[1].1 && placed[1].1 < placed[2].1);
+        assert_eq!(placed[1].1 % 8, 0);
+        // Two heaps, same manifest ⇒ same offsets (Fact 1 for statics).
+        let heap2 = SymHeap::new(create_inproc(layout.total).unwrap(), layout, 1).unwrap();
+        let placed2 = m.place(&heap2).unwrap();
+        assert_eq!(placed, placed2);
+    }
+
+    #[test]
+    fn transform_injects_alloc_after_start_pes() {
+        let (out, m) = transform_source(SAMPLE);
+        assert_eq!(m.decls.len(), 3);
+        let sp = out.find("start_pes(0);").unwrap();
+        let alloc = out.find("__posh_static_hits = shmemalign").unwrap();
+        assert!(alloc > sp, "alloc code must follow start_pes");
+        // Initialised object gets its data-segment image copied.
+        assert!(out.contains("memcpy(__posh_static_total, &total, 8);"));
+    }
+
+    #[test]
+    fn transform_injects_dealloc_before_each_return() {
+        let (out, _) = transform_source(SAMPLE);
+        let frees = out.matches("shfree(__posh_static_hits);").count();
+        assert_eq!(frees, 2, "two returns in main ⇒ two epilogues:\n{out}");
+        // Epilogue precedes the final `return 0;`.
+        let last_free = out.rfind("shfree(__posh_static_hits);").unwrap();
+        let ret0 = out.rfind("return 0;").unwrap();
+        assert!(last_free < ret0);
+    }
+
+    #[test]
+    fn returns_outside_main_untouched() {
+        let src = r#"
+static int x;
+int helper(void) { return 3; }
+int main(void) { start_pes(0); return 0; }
+"#;
+        let (out, _) = transform_source(src);
+        // helper's return must not get an epilogue.
+        let helper_pos = out.find("helper").unwrap();
+        let main_pos = out.find("main").unwrap();
+        let first_free = out.find("shfree").unwrap();
+        assert!(first_free > main_pos || first_free < helper_pos);
+        assert_eq!(out.matches("shfree(__posh_static_x);").count(), 1);
+    }
+
+    #[test]
+    fn source_without_statics_unchanged() {
+        let src = "int main(void){ start_pes(0); return 0; }";
+        let (out, m) = transform_source(src);
+        assert!(m.decls.is_empty());
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn manifest_text_format() {
+        let m = Manifest::from_source("static int a[3] = {1,2,3};");
+        let t = m.to_text();
+        assert!(t.contains("a int 3 12 4 data"));
+    }
+
+    #[test]
+    fn identifier_containing_return_not_confused() {
+        let src = r#"
+static int x;
+int main(void) {
+    int return_code = 0;
+    start_pes(0);
+    return return_code;
+}
+"#;
+        let (out, _) = transform_source(src);
+        // Only the real `return` statement gets the epilogue.
+        assert_eq!(out.matches("shfree(__posh_static_x);").count(), 1);
+        assert!(!out.contains("shfree(__posh_static_x);\nreturn_code"));
+    }
+}

@@ -1,0 +1,443 @@
+//! Declaration recognition for the pre-parser: find file-scope objects,
+//! compute size/alignment from the C type, detect initialisers (data vs BSS
+//! segment, §4.2 / fig. 1).
+
+use super::lexer::{strip_comments_and_strings, tokenize, Tok};
+
+/// The subset of C object types the pre-parser sizes (LP64 model, matching
+/// the paper's x86-64 Linux platforms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CType {
+    /// `char` / `signed char` / `unsigned char`
+    Char,
+    /// `short`
+    Short,
+    /// `int` / `unsigned`
+    Int,
+    /// `long` / `unsigned long` / `size_t`-ish
+    Long,
+    /// `long long`
+    LongLong,
+    /// `float`
+    Float,
+    /// `double`
+    Double,
+    /// `long double` (x86-64 SysV: 16 bytes)
+    LongDouble,
+    /// Any pointer (`T*`)
+    Pointer,
+}
+
+impl CType {
+    /// Size in bytes (LP64).
+    pub fn size(&self) -> usize {
+        match self {
+            CType::Char => 1,
+            CType::Short => 2,
+            CType::Int | CType::Float => 4,
+            CType::Long | CType::LongLong | CType::Double | CType::Pointer => 8,
+            CType::LongDouble => 16,
+        }
+    }
+
+    /// Natural alignment (LP64: == size).
+    pub fn align(&self) -> usize {
+        self.size()
+    }
+
+    /// C spelling (for generated code).
+    pub fn c_name(&self) -> &'static str {
+        match self {
+            CType::Char => "char",
+            CType::Short => "short",
+            CType::Int => "int",
+            CType::Long => "long",
+            CType::LongLong => "long long",
+            CType::Float => "float",
+            CType::Double => "double",
+            CType::LongDouble => "long double",
+            CType::Pointer => "void*",
+        }
+    }
+}
+
+/// One recognised file-scope static/global object.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StaticDecl {
+    /// Variable name.
+    pub name: String,
+    /// Element type.
+    pub ty: CType,
+    /// Array element count (1 for scalars; product for multi-dim).
+    pub count: usize,
+    /// Had an initialiser ⇒ lives in the data segment, else BSS (§4.2).
+    pub initialized: bool,
+    /// Declared `static` (the paper's primary target) vs plain global.
+    pub is_static: bool,
+}
+
+impl StaticDecl {
+    /// Total byte size.
+    pub fn byte_size(&self) -> usize {
+        self.ty.size() * self.count
+    }
+
+    /// Required alignment.
+    pub fn align(&self) -> usize {
+        self.ty.align()
+    }
+}
+
+/// Extract the file-scope object declarations from a C source.
+///
+/// Function bodies (and any other `{…}` block) are skipped wholesale, so
+/// local statics stay local — the paper's tool targets *global* statics; and
+/// function definitions/prototypes are rejected by the `(`-lookahead.
+pub fn parse_declarations(src: &str) -> Vec<StaticDecl> {
+    let stripped = strip_comments_and_strings(src);
+    let toks = tokenize(&stripped);
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut depth = 0usize;
+    while i < toks.len() {
+        match &toks[i] {
+            Tok::Punct('{') => {
+                depth += 1;
+                i += 1;
+            }
+            Tok::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                i += 1;
+            }
+            _ if depth > 0 => {
+                i += 1;
+            }
+            _ => {
+                // At file scope: try to parse one declaration statement,
+                // ending at ';' (or skip to next ';'/'{' on no-match).
+                let (consumed, decls) = parse_one(&toks[i..]);
+                out.extend(decls);
+                i += consumed;
+            }
+        }
+    }
+    out
+}
+
+/// Parse one file-scope statement starting at `toks[0]`.
+/// Returns (tokens consumed, declarations found).
+fn parse_one(toks: &[Tok]) -> (usize, Vec<StaticDecl>) {
+    let mut i = 0;
+    let mut is_static = false;
+    let mut is_extern = false;
+    let mut is_typedef = false;
+    let mut base: Option<CType> = None;
+    let mut longs = 0usize;
+    let mut unsigned_or_signed = false;
+
+    // Qualifier/type-specifier run.
+    while i < toks.len() {
+        let Tok::Ident(w) = &toks[i] else { break };
+        match w.as_str() {
+            "static" => is_static = true,
+            "extern" => is_extern = true,
+            "typedef" => is_typedef = true,
+            "const" | "volatile" | "register" | "inline" => {}
+            "unsigned" | "signed" => unsigned_or_signed = true,
+            "char" => base = Some(CType::Char),
+            "short" => base = Some(CType::Short),
+            "int" => {
+                if base.is_none() {
+                    base = Some(CType::Int)
+                }
+            }
+            "long" => longs += 1,
+            "float" => base = Some(CType::Float),
+            "double" => base = Some(CType::Double),
+            "struct" | "union" | "enum" => {
+                // Unsupported aggregate: skip this statement entirely.
+                return (skip_statement(toks), Vec::new());
+            }
+            _ => break, // declarator name (or unknown type — handled below)
+        }
+        i += 1;
+    }
+    // Resolve long/double combinations.
+    let ty = match (base, longs) {
+        (Some(CType::Double), l) if l >= 1 => Some(CType::LongDouble),
+        (Some(t), 0) => Some(t),
+        (Some(CType::Int), 1) | (None, 1) => Some(CType::Long),
+        (Some(CType::Int), l) | (None, l) if l >= 2 => Some(CType::LongLong),
+        (None, 0) if unsigned_or_signed => Some(CType::Int),
+        _ => base,
+    };
+    let Some(mut ty) = ty else {
+        return (skip_statement(toks), Vec::new());
+    };
+    if is_typedef || is_extern {
+        return (skip_statement(toks), Vec::new());
+    }
+
+    // Declarator list: [*…] name [\[N\]…] [= init] {, …} ;
+    let mut decls = Vec::new();
+    loop {
+        // Pointer stars.
+        let mut is_ptr = false;
+        while matches!(toks.get(i), Some(Tok::Punct('*'))) {
+            is_ptr = true;
+            i += 1;
+        }
+        let Some(Tok::Ident(name)) = toks.get(i) else {
+            return (skip_statement(toks), decls);
+        };
+        let name = name.clone();
+        i += 1;
+        // Function definition/prototype? Not an object — skip statement
+        // (and its body if any).
+        if matches!(toks.get(i), Some(Tok::Punct('('))) {
+            return (skip_statement(toks), decls);
+        }
+        // Array dimensions.
+        let mut count = 1usize;
+        let mut dims = 0;
+        while matches!(toks.get(i), Some(Tok::Punct('['))) {
+            i += 1;
+            let mut dim = 0usize;
+            if let Some(Tok::Int(v)) = toks.get(i) {
+                dim = *v as usize;
+                i += 1;
+            }
+            // Constant-expression dims (e.g. [N*2]) are skipped to ']'.
+            while !matches!(toks.get(i), Some(Tok::Punct(']')) | None) {
+                i += 1;
+            }
+            i += 1; // ']'
+            dims += 1;
+            count = count.saturating_mul(dim.max(if dims == 1 { 0 } else { 1 }));
+        }
+        // Initialiser?
+        let mut initialized = false;
+        let mut init_items = 0usize;
+        if matches!(toks.get(i), Some(Tok::Punct('='))) {
+            initialized = true;
+            i += 1;
+            if matches!(toks.get(i), Some(Tok::Punct('{'))) {
+                // Count top-level items in the brace initialiser.
+                let mut d = 0usize;
+                loop {
+                    match toks.get(i) {
+                        Some(Tok::Punct('{')) => {
+                            d += 1;
+                            if d == 1 {
+                                init_items = 1;
+                            }
+                            i += 1;
+                        }
+                        Some(Tok::Punct('}')) => {
+                            d -= 1;
+                            i += 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        Some(Tok::Punct(',')) => {
+                            if d == 1 {
+                                init_items += 1;
+                            }
+                            i += 1;
+                        }
+                        None => break,
+                        _ => i += 1,
+                    }
+                }
+            } else {
+                // Scalar initialiser: skip to ',' or ';'.
+                while !matches!(toks.get(i), Some(Tok::Punct(',')) | Some(Tok::Punct(';')) | None)
+                {
+                    i += 1;
+                }
+            }
+        }
+        // `int a[] = {1,2,3}` — derive the dimension from the initialiser.
+        if dims > 0 && count == 0 && init_items > 0 {
+            count = init_items;
+        }
+        if dims == 0 {
+            count = 1;
+        }
+        if is_ptr {
+            ty = CType::Pointer;
+        }
+        if count > 0 {
+            decls.push(StaticDecl { name, ty: ty.clone(), count, initialized, is_static });
+        }
+        match toks.get(i) {
+            Some(Tok::Punct(',')) => {
+                i += 1;
+                continue;
+            }
+            Some(Tok::Punct(';')) => {
+                i += 1;
+                break;
+            }
+            _ => {
+                return (skip_statement(toks), decls);
+            }
+        }
+    }
+    (i, decls)
+}
+
+/// Skip to just past the next top-level `;`, or past a brace block (function
+/// body) if one opens first.
+fn skip_statement(toks: &[Tok]) -> usize {
+    let mut i = 0;
+    let mut depth = 0usize;
+    while i < toks.len() {
+        match toks[i] {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return i + 1;
+                }
+            }
+            Tok::Punct(';') if depth == 0 => return i + 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    i.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_static() {
+        let d = parse_declarations("static int counter;");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].name, "counter");
+        assert_eq!(d[0].ty, CType::Int);
+        assert_eq!(d[0].count, 1);
+        assert!(!d[0].initialized);
+        assert!(d[0].is_static);
+        assert_eq!(d[0].byte_size(), 4);
+    }
+
+    #[test]
+    fn array_with_size() {
+        let d = parse_declarations("static double table[100];");
+        assert_eq!(d[0].byte_size(), 800);
+        assert_eq!(d[0].align(), 8);
+    }
+
+    #[test]
+    fn multidim_array() {
+        let d = parse_declarations("static float m[4][8];");
+        assert_eq!(d[0].count, 32);
+        assert_eq!(d[0].byte_size(), 128);
+    }
+
+    #[test]
+    fn initialized_goes_to_data_segment() {
+        let d = parse_declarations("static long x = 42;");
+        assert!(d[0].initialized);
+    }
+
+    #[test]
+    fn array_size_from_initializer() {
+        let d = parse_declarations("static int a[] = {1, 2, 3, 4, 5};");
+        assert_eq!(d[0].count, 5);
+        assert!(d[0].initialized);
+    }
+
+    #[test]
+    fn multiple_declarators() {
+        let d = parse_declarations("static int a, b = 2, c[3];");
+        assert_eq!(d.len(), 3);
+        assert_eq!(d[0].name, "a");
+        assert!(!d[0].initialized);
+        assert!(d[1].initialized);
+        assert_eq!(d[2].count, 3);
+    }
+
+    #[test]
+    fn long_variants() {
+        let d = parse_declarations(
+            "static long a; static long long b; static unsigned long c; static long double e;",
+        );
+        assert_eq!(d[0].ty, CType::Long);
+        assert_eq!(d[1].ty, CType::LongLong);
+        assert_eq!(d[2].ty, CType::Long);
+        assert_eq!(d[3].ty, CType::LongDouble);
+        assert_eq!(d[3].byte_size(), 16);
+    }
+
+    #[test]
+    fn pointers() {
+        let d = parse_declarations("static char *msg; static int **pp;");
+        assert_eq!(d[0].ty, CType::Pointer);
+        assert_eq!(d[1].ty, CType::Pointer);
+        assert_eq!(d[0].byte_size(), 8);
+    }
+
+    #[test]
+    fn functions_and_locals_ignored() {
+        let src = r#"
+            static int global_hits;
+            int main(void) {
+                static int local_counter = 0;
+                int x = 1;
+                return x;
+            }
+            static void helper(int a) { static double inner[4]; }
+            static long after_fn;
+        "#;
+        let d = parse_declarations(src);
+        let names: Vec<&str> = d.iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, vec!["global_hits", "after_fn"]);
+    }
+
+    #[test]
+    fn extern_and_typedef_ignored() {
+        let d = parse_declarations("extern int shared_x; typedef long mytime_t; static int y;");
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].name, "y");
+    }
+
+    #[test]
+    fn structs_skipped_cleanly() {
+        let d =
+            parse_declarations("struct point { int x; int y; }; static struct point p; static int q;");
+        // `p` is unsupported (aggregate) but `q` must still be found.
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].name, "q");
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_confuse() {
+        let src = r#"
+            // static int fake1;
+            /* static int fake2[10]; */
+            const char* s = "static int fake3;";
+            static int real;
+        "#;
+        let d = parse_declarations(src);
+        // `s` is a real file-scope global pointer; only the commented/string
+        // "declarations" must be ignored.
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].name, "s");
+        assert_eq!(d[0].ty, CType::Pointer);
+        assert_eq!(d[1].name, "real");
+    }
+
+    #[test]
+    fn plain_globals_also_found() {
+        let d = parse_declarations("int world_visible[8];");
+        assert_eq!(d.len(), 1);
+        assert!(!d[0].is_static);
+        assert_eq!(d[0].count, 8);
+    }
+}

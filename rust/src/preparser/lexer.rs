@@ -1,0 +1,202 @@
+//! Lexing support for the pre-parser: comment/string stripping and a
+//! C-enough tokeniser. The §4.2 tool only needs to recognise file-scope
+//! declarations, so the token set is small but the *stripping* must be
+//! exact — a `static int x;` inside a comment, string, or function body must
+//! not be lifted into the symmetric heap.
+
+/// A lexical token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Integer literal (decimal/hex/octal), value kept when it fits.
+    Int(i64),
+    /// Any other single significant character (`;`, `{`, `[`, `=`, `,`, …).
+    Punct(char),
+    /// String literal (contents dropped; only presence matters).
+    Str,
+    /// Character literal.
+    Char,
+}
+
+/// Replace comments with spaces and blank out string/char literal contents,
+/// preserving byte offsets and newlines (so line numbers survive).
+pub fn strip_comments_and_strings(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                out.push(b' ');
+                out.push(b' ');
+                i += 2;
+                while i + 1 < b.len() && !(b[i] == b'*' && b[i + 1] == b'/') {
+                    out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                    i += 1;
+                }
+                if i + 1 < b.len() {
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else {
+                    i = b.len();
+                }
+            }
+            q @ (b'"' | b'\'') => {
+                out.push(q);
+                i += 1;
+                while i < b.len() && b[i] != q {
+                    if b[i] == b'\\' && i + 1 < b.len() {
+                        out.push(b' ');
+                        out.push(b' ');
+                        i += 2;
+                    } else {
+                        out.push(if b[i] == b'\n' { b'\n' } else { b' ' });
+                        i += 1;
+                    }
+                }
+                if i < b.len() {
+                    out.push(q);
+                    i += 1;
+                }
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Tokenise pre-stripped source. Preprocessor lines (`#…`) are skipped.
+pub fn tokenize(stripped: &str) -> Vec<Tok> {
+    let b = stripped.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'#' {
+            // Skip the preprocessor line including continuations.
+            while i < b.len() && b[i] != b'\n' {
+                if b[i] == b'\\' && i + 1 < b.len() && b[i + 1] == b'\n' {
+                    i += 1;
+                }
+                i += 1;
+            }
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            toks.push(Tok::Ident(stripped[start..i].to_string()));
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len()
+                && (b[i].is_ascii_alphanumeric() || b[i] == b'.' || b[i] == b'x' || b[i] == b'X')
+            {
+                i += 1;
+            }
+            let text = &stripped[start..i];
+            let v = if let Some(hex) = text.strip_prefix("0x").or(text.strip_prefix("0X")) {
+                i64::from_str_radix(hex.trim_end_matches(['u', 'U', 'l', 'L']), 16).unwrap_or(0)
+            } else {
+                text.trim_end_matches(['u', 'U', 'l', 'L'])
+                    .parse()
+                    .unwrap_or(0)
+            };
+            toks.push(Tok::Int(v));
+        } else if c == b'"' {
+            toks.push(Tok::Str);
+            i += 1;
+            while i < b.len() && b[i] != b'"' {
+                i += 1;
+            }
+            i += 1;
+        } else if c == b'\'' {
+            toks.push(Tok::Char);
+            i += 1;
+            while i < b.len() && b[i] != b'\'' {
+                i += 1;
+            }
+            i += 1;
+        } else {
+            toks.push(Tok::Punct(c as char));
+            i += 1;
+        }
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_line_comments() {
+        let s = strip_comments_and_strings("int x; // static int y;\nint z;");
+        assert!(s.contains("int x;"));
+        assert!(!s.contains("static"));
+        assert!(s.contains("int z;"));
+    }
+
+    #[test]
+    fn strips_block_comments_preserving_lines() {
+        let src = "a /* line1\nline2 */ b";
+        let s = strip_comments_and_strings(src);
+        assert_eq!(s.matches('\n').count(), 1);
+        assert!(s.contains('a') && s.contains('b'));
+        assert!(!s.contains("line1"));
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let s = strip_comments_and_strings(r#"char* s = "static int x;";"#);
+        assert!(!s.contains("static int x"));
+        assert!(s.starts_with("char* s = \""));
+    }
+
+    #[test]
+    fn handles_escaped_quotes() {
+        let s = strip_comments_and_strings(r#"char* s = "a\"b"; int y;"#);
+        assert!(s.contains("int y;"));
+    }
+
+    #[test]
+    fn tokenizes_declaration() {
+        let toks = tokenize("static int foo[10];");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("static".into()),
+                Tok::Ident("int".into()),
+                Tok::Ident("foo".into()),
+                Tok::Punct('['),
+                Tok::Int(10),
+                Tok::Punct(']'),
+                Tok::Punct(';'),
+            ]
+        );
+    }
+
+    #[test]
+    fn skips_preprocessor() {
+        let toks = tokenize("#include <stdio.h>\nint x;");
+        assert_eq!(toks[0], Tok::Ident("int".into()));
+    }
+
+    #[test]
+    fn hex_and_suffixed_ints() {
+        assert_eq!(tokenize("0x10"), vec![Tok::Int(16)]);
+        assert_eq!(tokenize("10UL"), vec![Tok::Int(10)]);
+    }
+}

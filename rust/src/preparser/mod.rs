@@ -1,0 +1,27 @@
+//! The pre-parser (paper §4.2 "Symmetric static data").
+//!
+//! "POSH uses a small trick: we put [global static variables] into the
+//! symmetric heap at the very beginning of the execution of the program …
+//! A specific program, called the *pre-parser*, parses the source code and
+//! searches for global variables that are declared as static. It finds out
+//! how they must be allocated (size, etc) and generates the appropriate
+//! allocation/deallocation code lines" — injected at `start_pes` and before
+//! each `return` of `main`.
+//!
+//! POSH-RS ships the same tool for C sources (`oshrun preparse file.c`):
+//!
+//! * [`lexer`] strips comments/strings and tokenises;
+//! * [`decl`] recognises file-scope object declarations, computes each
+//!   object's size/alignment from the C type (incl. arrays and initialiser
+//!   counts), and classifies BSS vs data segment;
+//! * [`codegen`] emits (a) the allocation/deallocation C lines the paper
+//!   describes, (b) the transformed source with those lines spliced in, and
+//!   (c) a machine-readable manifest that [`crate::symheap::SymHeap::place_static`]
+//!   consumes to reserve the statics area at `start_pes` time.
+
+pub mod codegen;
+pub mod decl;
+pub mod lexer;
+
+pub use codegen::{transform_source, Manifest};
+pub use decl::{parse_declarations, CType, StaticDecl};

@@ -1,0 +1,148 @@
+//! The gateway process's IO forwarding (§4.7 "Inputs and outputs").
+//!
+//! "The parallel application is made of several processes, whereas the user
+//! is in contact with only one process: the master process, which is used as
+//! a gateway between the user and the application." Child stdout/stderr are
+//! piped to the master and re-emitted line-by-line with a rank prefix
+//! (`[PE k] …`), each stream on its own forwarder thread so interleaving is
+//! line-granular, never byte-granular.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// One forwarded line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IoLine {
+    /// Which PE produced it.
+    pub rank: usize,
+    /// `false` = stdout, `true` = stderr.
+    pub is_err: bool,
+    /// The text, without the trailing newline.
+    pub line: String,
+}
+
+impl IoLine {
+    /// The gateway's display format.
+    pub fn render(&self) -> String {
+        if self.is_err {
+            format!("[PE {}!] {}", self.rank, self.line)
+        } else {
+            format!("[PE {}] {}", self.rank, self.line)
+        }
+    }
+}
+
+/// Collects forwarder threads and the line channel.
+pub struct Gateway {
+    tx: Sender<IoLine>,
+    rx: Receiver<IoLine>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Default for Gateway {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Gateway {
+    /// New, with no streams attached yet.
+    pub fn new() -> Gateway {
+        let (tx, rx) = channel();
+        Gateway { tx, rx, threads: Vec::new() }
+    }
+
+    /// Attach one child stream; a forwarder thread pumps it until EOF.
+    pub fn attach<R: Read + Send + 'static>(&mut self, rank: usize, is_err: bool, stream: R) {
+        let tx = self.tx.clone();
+        self.threads.push(std::thread::spawn(move || {
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if tx.send(IoLine { rank, is_err, line }).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+
+    /// Pump every pending and future line to the given sink until all
+    /// attached streams hit EOF; returns the forwarded lines.
+    pub fn pump_to<W: Write>(mut self, sink: &mut W) -> std::io::Result<Vec<IoLine>> {
+        drop(self.tx); // close our clone so rx terminates at last-EOF
+        let mut all = Vec::new();
+        for line in self.rx.iter() {
+            writeln!(sink, "{}", line.render())?;
+            all.push(line);
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        Ok(all)
+    }
+}
+
+/// Fan a signal out to every child (the §4.7 signal-forwarding contract:
+/// "if the user sends a signal to the gateway process, this signal is sent
+/// to all the processes of the parallel application").
+pub fn forward_signal(pids: &[u32], signal: i32) {
+    for &pid in pids {
+        // SAFETY: plain kill(2); failure (ESRCH on exited child) is fine.
+        unsafe {
+            libc::kill(pid as libc::pid_t, signal);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_are_rank_prefixed_and_complete() {
+        let mut gw = Gateway::new();
+        gw.attach(0, false, std::io::Cursor::new("alpha\nbeta\n"));
+        gw.attach(1, false, std::io::Cursor::new("gamma\n"));
+        gw.attach(1, true, std::io::Cursor::new("oops\n"));
+        let mut out = Vec::new();
+        let lines = gw.pump_to(&mut out).unwrap();
+        assert_eq!(lines.len(), 4);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("[PE 0] alpha"));
+        assert!(text.contains("[PE 0] beta"));
+        assert!(text.contains("[PE 1] gamma"));
+        assert!(text.contains("[PE 1!] oops"));
+    }
+
+    #[test]
+    fn empty_streams_terminate() {
+        let mut gw = Gateway::new();
+        gw.attach(0, false, std::io::Cursor::new(""));
+        let mut out = Vec::new();
+        let lines = gw.pump_to(&mut out).unwrap();
+        assert!(lines.is_empty());
+    }
+
+    #[test]
+    fn forwarding_from_real_children() {
+        use crate::rte::launcher::{JobSpec, Launcher};
+        let mut spec = JobSpec::new(2, "/bin/sh");
+        spec.args = vec!["-c".into(), "echo hello-from-$POSH_RANK".into()];
+        let l = Launcher::new(spec);
+        let mut pes = l.spawn_all().unwrap();
+        let mut gw = Gateway::new();
+        for pe in pes.iter_mut() {
+            gw.attach(pe.rank, false, pe.child.stdout.take().unwrap());
+            gw.attach(pe.rank, true, pe.child.stderr.take().unwrap());
+        }
+        let mut out = Vec::new();
+        let lines = gw.pump_to(&mut out).unwrap();
+        for pe in pes.iter_mut() {
+            assert!(pe.child.wait().unwrap().success());
+        }
+        let mut stdouts: Vec<String> =
+            lines.iter().filter(|l| !l.is_err).map(|l| l.render()).collect();
+        stdouts.sort();
+        assert_eq!(stdouts, vec!["[PE 0] hello-from-0", "[PE 1] hello-from-1"]);
+    }
+}

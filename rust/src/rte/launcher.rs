@@ -1,0 +1,187 @@
+//! Process spawning and contact information (§4.7).
+
+use crate::shm::naming::fresh_job_id;
+use crate::Result;
+use anyhow::Context as _;
+use std::os::unix::process::CommandExt as _;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+
+/// Description of a parallel job to launch.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Number of PEs.
+    pub n_pes: usize,
+    /// Program (binary path) each PE runs.
+    pub program: String,
+    /// Arguments passed to every PE.
+    pub args: Vec<String>,
+    /// Extra environment (`POSH_HEAP_SIZE`, `POSH_COPY`, …).
+    pub env: Vec<(String, String)>,
+    /// Attach gdb-style stop at start-up (§4.7 "Run-time debugging": the
+    /// child spins until a debugger clears the flag — exported as
+    /// `POSH_DEBUG_WAIT=1`).
+    pub debug_wait: bool,
+}
+
+impl JobSpec {
+    /// A spec with defaults.
+    pub fn new(n_pes: usize, program: &str) -> JobSpec {
+        JobSpec {
+            n_pes,
+            program: program.to_string(),
+            args: Vec::new(),
+            env: Vec::new(),
+            debug_wait: false,
+        }
+    }
+}
+
+/// One spawned PE.
+pub struct PeProc {
+    /// Rank of this PE.
+    pub rank: usize,
+    /// The OS child process.
+    pub child: Child,
+}
+
+/// The launcher: spawns, then hands the children to gateway + monitor.
+pub struct Launcher {
+    /// Job id all children share (segment naming).
+    pub job_id: u64,
+    spec: JobSpec,
+}
+
+impl Launcher {
+    /// Prepare a launch with a fresh job id.
+    pub fn new(spec: JobSpec) -> Launcher {
+        Launcher { job_id: fresh_job_id(), spec }
+    }
+
+    /// Spawn all PEs. Mirrors the paper's structure: "At first, a pool of
+    /// threads is created: the workers thread group. Then each thread forks
+    /// a process … the master thread then yields its slice of time and
+    /// waits … eventually, the threads are joined."
+    pub fn spawn_all(&self) -> Result<Vec<PeProc>> {
+        let results: Arc<Mutex<Vec<Option<Result<PeProc>>>>> =
+            Arc::new(Mutex::new((0..self.spec.n_pes).map(|_| None).collect()));
+        std::thread::scope(|s| {
+            // Workers thread group: one spawner thread per PE.
+            for rank in 0..self.spec.n_pes {
+                let results = Arc::clone(&results);
+                let spec = &self.spec;
+                let job_id = self.job_id;
+                s.spawn(move || {
+                    let r = spawn_one(spec, job_id, rank);
+                    results.lock().unwrap()[rank] = Some(r);
+                });
+            }
+            // Master yields while workers fork (sched_yield in the paper).
+            std::thread::yield_now();
+        }); // threads joined here
+        let collected = Arc::try_unwrap(results)
+            .map_err(|_| anyhow::anyhow!("spawner results still shared"))?
+            .into_inner()
+            .unwrap();
+        let mut pes = Vec::with_capacity(self.spec.n_pes);
+        for (rank, slot) in collected.into_iter().enumerate() {
+            let proc = slot
+                .with_context(|| format!("spawner thread for PE {rank} produced no result"))??;
+            pes.push(proc);
+        }
+        Ok(pes)
+    }
+}
+
+fn spawn_one(spec: &JobSpec, job_id: u64, rank: usize) -> Result<PeProc> {
+    let mut cmd = Command::new(&spec.program);
+    cmd.args(&spec.args)
+        // Contact information (§4.7): job id + rank + world size determine
+        // every segment name a PE needs.
+        .env("POSH_JOB", job_id.to_string())
+        .env("POSH_RANK", rank.to_string())
+        .env("POSH_NPES", spec.n_pes.to_string())
+        // IO forwarding: pipes back to the gateway; "the parallel processes
+        // are offsprings of the gateway process: hence, their IOs are
+        // forwarded by default" — we add rank-prefixing on top.
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .stdin(if rank == 0 { Stdio::inherit() } else { Stdio::null() });
+    // Each PE leads its own process group so the monitor can terminate the
+    // PE *and everything it spawned* (otherwise an orphaned grandchild keeps
+    // the gateway's IO pipes open and the job lingers).
+    cmd.process_group(0);
+    if spec.debug_wait {
+        cmd.env("POSH_DEBUG_WAIT", "1");
+    }
+    for (k, v) in &spec.env {
+        cmd.env(k, v);
+    }
+    let child = cmd
+        .spawn()
+        .with_context(|| format!("spawning PE {rank}: {}", spec.program))?;
+    Ok(PeProc { rank, child })
+}
+
+/// Child-side hook for §4.7 interactive debugging: "the parallel process is
+/// stuck in an infinite loop at the beginning of its initialization" until a
+/// debugger (or a signal) flips the flag. Call early in PE main.
+pub fn debug_wait_if_requested() {
+    if std::env::var("POSH_DEBUG_WAIT").as_deref() == Ok("1") {
+        eprintln!(
+            "POSH: PE {} (pid {}) waiting for debugger; `gdb -p {}` then `set var __posh_go=1`",
+            std::env::var("POSH_RANK").unwrap_or_default(),
+            std::process::id(),
+            std::process::id(),
+        );
+        // Volatile so the debugger's write is observed.
+        static mut GO: u32 = 0;
+        loop {
+            // SAFETY: single writer (debugger), volatile read.
+            if unsafe { std::ptr::read_volatile(std::ptr::addr_of!(GO)) } != 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spawn_echo_children() {
+        // Use /bin/sh to emit rank info; verifies env plumbing end-to-end.
+        let mut spec = JobSpec::new(3, "/bin/sh");
+        spec.args = vec!["-c".into(), "echo rank=$POSH_RANK npes=$POSH_NPES".into()];
+        let l = Launcher::new(spec);
+        let pes = l.spawn_all().unwrap();
+        assert_eq!(pes.len(), 3);
+        let mut seen = Vec::new();
+        for mut pe in pes {
+            let out = pe.child.wait_with_output().unwrap();
+            assert!(out.status.success());
+            let text = String::from_utf8_lossy(&out.stdout).trim().to_string();
+            assert!(text.contains("npes=3"), "{text}");
+            seen.push(text);
+        }
+        seen.sort();
+        assert_eq!(seen[0], "rank=0 npes=3");
+        assert_eq!(seen[2], "rank=2 npes=3");
+    }
+
+    #[test]
+    fn spawn_failure_reported() {
+        let spec = JobSpec::new(2, "/nonexistent/binary/posh");
+        let l = Launcher::new(spec);
+        assert!(l.spawn_all().is_err());
+    }
+
+    #[test]
+    fn job_ids_fresh() {
+        let a = Launcher::new(JobSpec::new(1, "/bin/true"));
+        let b = Launcher::new(JobSpec::new(1, "/bin/true"));
+        assert_ne!(a.job_id, b.job_id);
+    }
+}

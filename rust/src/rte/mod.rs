@@ -1,0 +1,27 @@
+//! The run-time environment (paper §4.7).
+//!
+//! "As with any parallel program, the run-time environment of OpenSHMEM is
+//! here to: spawn the parallel processes; make sure they know how to
+//! communicate with each other; monitor them, and take the appropriate
+//! actions if one of them dies; terminate the execution when necessary;
+//! forward the IOs and signals through the gateway process."
+//!
+//! POSH-RS's RTE is the `oshrun` binary (see `rust/src/main.rs`), built on:
+//!
+//! * [`launcher`] — spawns one child process per PE ("processes are spawned
+//!   individually by separate threads" — a worker-thread pool forks the
+//!   children, the master waits, the threads are joined), passing contact
+//!   information through `POSH_*` environment variables (the segment names
+//!   derive from job id + rank, §4.7 "Contact information").
+//! * [`gateway`] — the IO-forwarding gateway: each child's stdout/stderr is
+//!   piped back and re-emitted by the master, rank-prefixed; stdin can be
+//!   fanned to rank 0.
+//! * [`monitor`] — watches children; if one dies abnormally, the rest are
+//!   terminated (the §4.7 monitoring contract), and stale segments are
+//!   unlinked.
+
+pub mod gateway;
+pub mod launcher;
+pub mod monitor;
+
+pub use launcher::{JobSpec, Launcher};

@@ -1,0 +1,170 @@
+//! Child monitoring and job teardown (§4.7: "Monitor them, and take the
+//! appropriate actions if one of them dies; terminate the execution when
+//! necessary").
+
+use super::launcher::PeProc;
+use crate::shm::naming::heap_segment_name;
+use crate::shm::posix::PosixShmSegment;
+
+/// Outcome of a monitored job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobOutcome {
+    /// Exit code per rank (`None` = killed by signal).
+    pub exit_codes: Vec<Option<i32>>,
+    /// First rank that failed, if any.
+    pub first_failure: Option<usize>,
+}
+
+impl JobOutcome {
+    /// Whole-job success.
+    pub fn success(&self) -> bool {
+        self.first_failure.is_none()
+    }
+
+    /// Exit code `oshrun` should return: rank 0's, or the first failure's.
+    pub fn job_exit_code(&self) -> i32 {
+        match self.first_failure {
+            None => 0,
+            Some(r) => self.exit_codes[r].unwrap_or(128 + libc::SIGTERM),
+        }
+    }
+}
+
+/// Wait for all PEs; if any exits abnormally, terminate the rest (SIGTERM)
+/// — the paper's "take the appropriate actions if one of them dies".
+pub fn wait_all(mut pes: Vec<PeProc>) -> JobOutcome {
+    let n = pes.len();
+    let pgids: Vec<i32> = pes.iter().map(|p| p.child.id() as i32).collect();
+    let mut exit_codes: Vec<Option<i32>> = vec![None; n];
+    let mut done = vec![false; n];
+    let mut first_failure = None;
+    let mut remaining = n;
+    while remaining > 0 {
+        let mut progressed = false;
+        for i in 0..n {
+            if done[i] {
+                continue;
+            }
+            match pes[i].child.try_wait() {
+                Ok(Some(status)) => {
+                    done[i] = true;
+                    remaining -= 1;
+                    progressed = true;
+                    exit_codes[i] = status.code();
+                    let failed = !status.success();
+                    if failed && first_failure.is_none() {
+                        first_failure = Some(pes[i].rank);
+                        // Kill the rest of the job.
+                        for (j, pe) in pes.iter().enumerate() {
+                            if !done[j] {
+                                // Negative pid ⇒ the whole process group
+                                // (the PE and all its descendants).
+                                let _ = unsafe {
+                                    libc::kill(-(pe.child.id() as libc::pid_t), libc::SIGTERM)
+                                };
+                            }
+                        }
+                    }
+                }
+                Ok(None) => {}
+                Err(_) => {
+                    done[i] = true;
+                    remaining -= 1;
+                    progressed = true;
+                }
+            }
+        }
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+    if first_failure.is_some() {
+        // Sweep any surviving descendants of already-reaped PEs too.
+        for pgid in pgids {
+            // SAFETY: plain kill(2); ESRCH for gone groups is fine.
+            unsafe {
+                libc::kill(-pgid, libc::SIGTERM);
+            }
+        }
+    }
+    JobOutcome { exit_codes, first_failure }
+}
+
+/// Unlink any segments the job may have left behind (crash cleanup). Safe
+/// to call unconditionally: names are derived, unlink of absent names is a
+/// no-op.
+pub fn cleanup_job_segments(job_id: u64, n_pes: usize) {
+    for rank in 0..n_pes {
+        PosixShmSegment::unlink(&heap_segment_name(job_id, rank));
+    }
+}
+
+/// Sweep `/dev/shm` for stale POSH segments (any job) — `oshrun --clean`.
+/// Returns the names removed.
+pub fn sweep_stale_segments() -> Vec<String> {
+    let mut removed = Vec::new();
+    let Ok(dir) = std::fs::read_dir("/dev/shm") else {
+        return removed;
+    };
+    for entry in dir.flatten() {
+        let name = format!("/{}", entry.file_name().to_string_lossy());
+        if crate::shm::naming::parse_heap_name(&name).is_some() {
+            PosixShmSegment::unlink(&name);
+            removed.push(name);
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rte::launcher::{JobSpec, Launcher};
+
+    #[test]
+    fn all_success() {
+        let mut spec = JobSpec::new(3, "/bin/sh");
+        spec.args = vec!["-c".into(), "exit 0".into()];
+        let pes = Launcher::new(spec).spawn_all().unwrap();
+        let outcome = wait_all(pes);
+        assert!(outcome.success());
+        assert_eq!(outcome.job_exit_code(), 0);
+        assert_eq!(outcome.exit_codes, vec![Some(0); 3]);
+    }
+
+    #[test]
+    fn one_failure_kills_job() {
+        // Rank 1 exits 3 immediately; others would sleep for 100 s if the
+        // monitor did not terminate them.
+        let mut spec = JobSpec::new(3, "/bin/sh");
+        spec.args = vec![
+            "-c".into(),
+            "if [ \"$POSH_RANK\" = 1 ]; then exit 3; else sleep 100; fi".into(),
+        ];
+        let t0 = std::time::Instant::now();
+        let pes = Launcher::new(spec).spawn_all().unwrap();
+        let outcome = wait_all(pes);
+        assert!(!outcome.success());
+        assert_eq!(outcome.first_failure, Some(1));
+        assert_eq!(outcome.job_exit_code(), 3);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(30),
+            "monitor must kill the sleepers"
+        );
+    }
+
+    #[test]
+    fn cleanup_unlinks_segments() {
+        let job = crate::shm::naming::fresh_job_id();
+        let name = heap_segment_name(job, 0);
+        {
+            // Create without dropping the owner flag: simulate a crash by
+            // forgetting the segment (drop would unlink it).
+            let seg = PosixShmSegment::create(&name, 4096).unwrap();
+            std::mem::forget(seg);
+        }
+        assert!(std::path::Path::new(&format!("/dev/shm{name}")).exists());
+        cleanup_job_segments(job, 1);
+        assert!(!std::path::Path::new(&format!("/dev/shm{name}")).exists());
+    }
+}

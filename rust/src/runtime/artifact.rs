@@ -1,0 +1,149 @@
+//! One loaded artifact: HLO text → compiled PJRT executable.
+//!
+//! Artifacts are **thread-local** (the `xla` crate's executables are
+//! `Rc`-based): each PE thread — or PE process — compiles its own copy at
+//! start-up, mirroring process mode where that is the only option. The
+//! request path never compiles.
+
+use super::client::with_client;
+use crate::Result;
+use anyhow::Context;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+/// A compiled computation ready to execute. Not `Send` — keep it on the
+/// thread that loaded it.
+pub struct Artifact {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling (a one-time start-up cost, reported by the
+    /// examples; never on the request path).
+    pub compile_time: std::time::Duration,
+}
+
+impl Artifact {
+    /// Load an `.hlo.txt` file and compile it on this thread's client.
+    pub fn load(path: impl AsRef<Path>) -> Result<Artifact> {
+        let path = path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| Ok(c.compile(&comp)?))
+            .with_context(|| format!("compiling {path:?}"))?;
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "artifact".into());
+        Ok(Artifact { name, exe, compile_time: t0.elapsed() })
+    }
+
+    /// Artifact name (file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with the given inputs. The AOT pipeline lowers every function
+    /// with `return_tuple=True`, so the single output literal is a tuple;
+    /// this returns its elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let first = out
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .context("executable returned no output")?;
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and pull every output as `Vec<f32>` (convenience).
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        self.run(inputs)?
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect()
+    }
+}
+
+thread_local! {
+    static CACHE: RefCell<HashMap<PathBuf, Rc<Artifact>>> = RefCell::new(HashMap::new());
+}
+
+/// Get-or-load from this thread's artifact cache: one compile per path per
+/// thread, exactly like the paper's start-up-time remote-heap table.
+pub fn cached(path: impl AsRef<Path>) -> Result<Rc<Artifact>> {
+    let path = path.as_ref().to_path_buf();
+    CACHE.with(|c| {
+        let mut g = c.borrow_mut();
+        if let Some(a) = g.get(&path) {
+            return Ok(Rc::clone(a));
+        }
+        let a = Rc::new(Artifact::load(&path)?);
+        g.insert(path, Rc::clone(&a));
+        Ok(a)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// HLO text for f(x, y) = (x + y,) over f32[4] — hand-written, so the
+    /// runtime tests run without `make artifacts`.
+    const ADD_HLO: &str = r#"
+HloModule add4, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+
+    fn write_add_hlo() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("posh_art_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("add4.hlo.txt");
+        std::fs::write(&p, ADD_HLO).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_run_roundtrip() {
+        let p = write_add_hlo();
+        let art = Artifact::load(&p).unwrap();
+        assert_eq!(art.name(), "add4.hlo");
+        let x = xla::Literal::vec1(&[1f32, 2., 3., 4.]);
+        let y = xla::Literal::vec1(&[10f32, 20., 30., 40.]);
+        let out = art.run_f32(&[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![11f32, 22., 33., 44.]);
+    }
+
+    #[test]
+    fn cache_compiles_once_per_thread() {
+        let p = write_add_hlo();
+        let a1 = cached(&p).unwrap();
+        let a2 = cached(&p).unwrap();
+        assert!(Rc::ptr_eq(&a1, &a2));
+    }
+
+    #[test]
+    fn missing_artifact_helpful_error() {
+        let e = match Artifact::load("/no/such/file.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("must fail"),
+        };
+        assert!(e.to_string().contains("parsing HLO text"));
+    }
+}

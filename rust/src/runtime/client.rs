@@ -1,0 +1,46 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor `Sync`),
+//! so each PE thread owns its own client and compiles its own executables —
+//! the same situation as process mode, where each PE process naturally has
+//! one. Compilation is a start-up cost; the request path only executes.
+
+use crate::Result;
+use std::cell::RefCell;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's PJRT CPU client (created on first use).
+pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> Result<R>) -> Result<R> {
+    CLIENT.with(|c| {
+        let mut slot = c.borrow_mut();
+        if slot.is_none() {
+            let client = xla::PjRtClient::cpu()?;
+            log::info!(
+                "PJRT client up: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            );
+            *slot = Some(client);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// Platform info string (for `oshrun info`).
+pub fn platform_info() -> Result<String> {
+    with_client(|c| Ok(format!("{} ({} device(s))", c.platform_name(), c.device_count())))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn client_available_and_reused() {
+        let a = super::with_client(|c| Ok(c.platform_name())).unwrap();
+        let b = super::with_client(|c| Ok(c.platform_name())).unwrap();
+        assert_eq!(a, b);
+        assert!(super::platform_info().unwrap().contains("device"));
+    }
+}

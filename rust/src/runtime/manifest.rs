@@ -1,0 +1,245 @@
+//! The artifacts manifest: a flat JSON object written by `aot.py` mapping
+//! model hyper-parameters and artifact file names.
+//!
+//! The vendored registry has no `serde`, so a ~100-line parser for the flat
+//! subset we emit (string keys; string / integer / float values) lives here.
+//! `aot.py` guarantees flatness.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A flat JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    /// String.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+}
+
+impl JsonValue {
+    /// As integer (floats with zero fraction coerce).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            JsonValue::Int(v) => Some(*v),
+            JsonValue::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// As float.
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            JsonValue::Int(v) => Some(*v as f64),
+            JsonValue::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a flat JSON object.
+pub fn parse_flat_json(src: &str) -> Result<BTreeMap<String, JsonValue>> {
+    let mut out = BTreeMap::new();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let skip_ws = |b: &Vec<char>, i: &mut usize| {
+        while *i < b.len() && b[*i].is_whitespace() {
+            *i += 1;
+        }
+    };
+    let parse_string = |b: &Vec<char>, i: &mut usize| -> Result<String> {
+        if b.get(*i) != Some(&'"') {
+            bail!("expected '\"' at char {}", i);
+        }
+        *i += 1;
+        let mut s = String::new();
+        while *i < b.len() && b[*i] != '"' {
+            if b[*i] == '\\' && *i + 1 < b.len() {
+                *i += 1;
+                s.push(match b[*i] {
+                    'n' => '\n',
+                    't' => '\t',
+                    c => c,
+                });
+            } else {
+                s.push(b[*i]);
+            }
+            *i += 1;
+        }
+        if *i >= b.len() {
+            bail!("unterminated string");
+        }
+        *i += 1;
+        Ok(s)
+    };
+    skip_ws(&b, &mut i);
+    if b.get(i) != Some(&'{') {
+        bail!("manifest must be a JSON object");
+    }
+    i += 1;
+    loop {
+        skip_ws(&b, &mut i);
+        if b.get(i) == Some(&'}') {
+            break;
+        }
+        let key = parse_string(&b, &mut i)?;
+        skip_ws(&b, &mut i);
+        if b.get(i) != Some(&':') {
+            bail!("expected ':' after key {key:?}");
+        }
+        i += 1;
+        skip_ws(&b, &mut i);
+        let val = match b.get(i) {
+            Some(&'"') => JsonValue::Str(parse_string(&b, &mut i)?),
+            Some(c) if c.is_ascii_digit() || *c == '-' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || b[i] == '-'
+                        || b[i] == '+'
+                        || b[i] == '.'
+                        || b[i] == 'e'
+                        || b[i] == 'E')
+                {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                if text.contains(['.', 'e', 'E']) {
+                    JsonValue::Float(text.parse().context("bad float")?)
+                } else {
+                    JsonValue::Int(text.parse().context("bad int")?)
+                }
+            }
+            other => bail!("unsupported JSON value starting with {other:?} (manifest is flat)"),
+        };
+        out.insert(key, val);
+        skip_ws(&b, &mut i);
+        match b.get(i) {
+            Some(&',') => i += 1,
+            Some(&'}') => break,
+            other => bail!("expected ',' or '}}', got {other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// The parsed artifacts manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    dir: PathBuf,
+    fields: BTreeMap<String, JsonValue>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Ok(Manifest { dir, fields: parse_flat_json(&text)? })
+    }
+
+    /// Construct from already-parsed fields (tests).
+    pub fn from_fields(dir: PathBuf, fields: BTreeMap<String, JsonValue>) -> Manifest {
+        Manifest { dir, fields }
+    }
+
+    /// The artifacts directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Integer field.
+    pub fn int(&self, key: &str) -> Result<i64> {
+        self.fields
+            .get(key)
+            .and_then(|v| v.as_int())
+            .with_context(|| format!("manifest missing integer field {key:?}"))
+    }
+
+    /// Float field.
+    pub fn float(&self, key: &str) -> Result<f64> {
+        self.fields
+            .get(key)
+            .and_then(|v| v.as_float())
+            .with_context(|| format!("manifest missing float field {key:?}"))
+    }
+
+    /// String field.
+    pub fn str(&self, key: &str) -> Result<&str> {
+        self.fields
+            .get(key)
+            .and_then(|v| v.as_str())
+            .with_context(|| format!("manifest missing string field {key:?}"))
+    }
+
+    /// Resolve an artifact path field relative to the manifest directory.
+    pub fn artifact_path(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(self.str(key)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_object() {
+        let m = parse_flat_json(
+            r#"{ "a": 1, "b": -2.5, "c": "hello", "d": "x.hlo.txt", "e": 1e3 }"#,
+        )
+        .unwrap();
+        assert_eq!(m["a"], JsonValue::Int(1));
+        assert_eq!(m["b"], JsonValue::Float(-2.5));
+        assert_eq!(m["c"].as_str(), Some("hello"));
+        assert_eq!(m["e"].as_float(), Some(1000.0));
+    }
+
+    #[test]
+    fn rejects_nested() {
+        assert!(parse_flat_json(r#"{"a": {"b": 1}}"#).is_err());
+        assert!(parse_flat_json(r#"{"a": [1,2]}"#).is_err());
+        assert!(parse_flat_json(r#"not json"#).is_err());
+    }
+
+    #[test]
+    fn escaped_strings() {
+        let m = parse_flat_json(r#"{"k": "a\"b\nc"}"#).unwrap();
+        assert_eq!(m["k"].as_str(), Some("a\"b\nc"));
+    }
+
+    #[test]
+    fn manifest_accessors() {
+        let mut f = BTreeMap::new();
+        f.insert("n".into(), JsonValue::Int(42));
+        f.insert("lr".into(), JsonValue::Float(0.1));
+        f.insert("train_step".into(), JsonValue::Str("ts.hlo.txt".into()));
+        let m = Manifest::from_fields("/tmp/arts".into(), f);
+        assert_eq!(m.int("n").unwrap(), 42);
+        assert!((m.float("lr").unwrap() - 0.1).abs() < 1e-12);
+        assert_eq!(
+            m.artifact_path("train_step").unwrap(),
+            PathBuf::from("/tmp/arts/ts.hlo.txt")
+        );
+        assert!(m.int("missing").is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_errors_helpfully() {
+        let e = Manifest::load("/nonexistent/arts").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

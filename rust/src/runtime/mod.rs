@@ -1,0 +1,15 @@
+//! The PJRT runtime: load AOT-compiled HLO artifacts produced by the
+//! build-time Python layer (`python/compile/aot.py`) and execute them from
+//! Rust. Python never runs at job time — the `.hlo.txt` files and the
+//! manifest are the entire interface between the layers.
+//!
+//! Interchange is **HLO text**, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that the image's xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
+
+pub mod artifact;
+pub mod client;
+pub mod manifest;
+
+pub use artifact::Artifact;
+pub use manifest::Manifest;

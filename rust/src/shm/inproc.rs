@@ -1,0 +1,136 @@
+//! Anonymous in-process segments (thread-mode worlds, tests, benches).
+
+use super::Segment;
+use crate::Result;
+use anyhow::bail;
+
+/// A private anonymous `mmap` region. Page-aligned like the POSIX variant so
+/// both modes see identical alignment behaviour (Fact 1 depends on heap bases
+/// being equally aligned everywhere).
+pub struct InProcSegment {
+    base: *mut u8,
+    len: usize,
+}
+
+// SAFETY: the mapping is plain memory; cross-thread access discipline is the
+// SHMEM memory model's job (explicit sync via barrier/fence/atomics).
+unsafe impl Send for InProcSegment {}
+unsafe impl Sync for InProcSegment {}
+
+impl InProcSegment {
+    /// Map `len` bytes (rounded up to a page) of zeroed anonymous memory.
+    pub fn new(len: usize) -> Result<Self> {
+        if len == 0 {
+            bail!("segment length must be > 0");
+        }
+        let page = page_size();
+        let len = crate::util::align_up(len, page);
+        // SAFETY: standard anonymous mapping.
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!(
+                "mmap({} bytes) failed: {}",
+                len,
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(Self {
+            base: ptr as *mut u8,
+            len,
+        })
+    }
+}
+
+impl Segment for InProcSegment {
+    fn base(&self) -> *mut u8 {
+        self.base
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+impl Drop for InProcSegment {
+    fn drop(&mut self) {
+        // SAFETY: we own the mapping.
+        unsafe {
+            libc::munmap(self.base as *mut libc::c_void, self.len);
+        }
+    }
+}
+
+/// System page size (cached).
+pub fn page_size() -> usize {
+    use std::sync::OnceLock;
+    static PAGE: OnceLock<usize> = OnceLock::new();
+    *PAGE.get_or_init(|| {
+        // SAFETY: sysconf is always safe to call.
+        let v = unsafe { libc::sysconf(libc::_SC_PAGESIZE) };
+        if v <= 0 {
+            4096
+        } else {
+            v as usize
+        }
+    })
+}
+
+/// Check that `ptr` lies within the segment.
+pub fn contains(seg: &dyn Segment, ptr: *const u8) -> bool {
+    let b = seg.base() as usize;
+    let p = ptr as usize;
+    p >= b && p < b + seg.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_and_zeroes() {
+        let seg = InProcSegment::new(10_000).unwrap();
+        assert!(seg.len() >= 10_000);
+        assert_eq!(seg.len() % page_size(), 0);
+        // zero-initialised
+        let bytes = unsafe { seg.bytes() };
+        assert!(bytes.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn writable() {
+        let seg = InProcSegment::new(4096).unwrap();
+        unsafe {
+            *seg.base() = 0xAB;
+            *seg.base().add(seg.len() - 1) = 0xCD;
+            assert_eq!(*seg.base(), 0xAB);
+            assert_eq!(*seg.base().add(seg.len() - 1), 0xCD);
+        }
+    }
+
+    #[test]
+    fn zero_len_rejected() {
+        assert!(InProcSegment::new(0).is_err());
+    }
+
+    #[test]
+    fn page_aligned_base() {
+        let seg = InProcSegment::new(1).unwrap();
+        assert_eq!(seg.base() as usize % page_size(), 0);
+    }
+
+    #[test]
+    fn contains_checks_bounds() {
+        let seg = InProcSegment::new(4096).unwrap();
+        assert!(contains(&seg, seg.base()));
+        assert!(contains(&seg, unsafe { seg.base().add(seg.len() - 1) }));
+        assert!(!contains(&seg, unsafe { seg.base().add(seg.len()) }));
+    }
+}

@@ -1,0 +1,70 @@
+//! Shared-memory segments (paper §4.1).
+//!
+//! POSH builds each PE's symmetric heap on a Boost.Interprocess
+//! `managed_shared_memory`, which is itself a wrapper over POSIX `shm`.
+//! Here the same substrate is written directly over `libc`:
+//!
+//! * [`posix::PosixShmSegment`] — a `/dev/shm` object created with
+//!   `shm_open` + `ftruncate` + `mmap(MAP_SHARED)`. This is what the
+//!   multi-process mode (`oshrun`) uses; any process that knows the segment
+//!   *name* can map it, which is exactly the paper's "contact information"
+//!   mechanism (§4.7: names are `constant basis + rank`).
+//! * [`inproc::InProcSegment`] — an anonymous private mapping. Thread-mode
+//!   worlds use it; unit tests and benches run on it without touching
+//!   `/dev/shm`.
+//!
+//! Both implement [`Segment`]; everything above this module (allocator,
+//! p2p engine, collectives) is generic over it.
+
+pub mod inproc;
+pub mod naming;
+pub mod posix;
+
+use crate::Result;
+
+/// A mapped region of memory that other PEs may also have mapped.
+///
+/// # Safety-relevant contract
+/// `base()..base()+len()` stays valid and constant for the lifetime of the
+/// object; the memory is plain bytes with no destructor.
+pub trait Segment: Send + Sync {
+    /// Base address of the mapping *in this address space*.
+    fn base(&self) -> *mut u8;
+    /// Mapping length in bytes.
+    fn len(&self) -> usize;
+    /// The segment's global name, if it has one (POSIX segments do; private
+    /// in-process segments do not).
+    fn name(&self) -> Option<&str> {
+        None
+    }
+    /// Byte slice view. Unsafe because aliasing across PEs is the caller's
+    /// (i.e. the SHMEM memory model's) responsibility.
+    ///
+    /// # Safety
+    /// Caller must uphold the OpenSHMEM data-race rules: no concurrent
+    /// conflicting access without an intervening synchronisation.
+    unsafe fn bytes(&self) -> &[u8] {
+        std::slice::from_raw_parts(self.base(), self.len())
+    }
+}
+
+/// Boxed segment used by the world structures.
+pub type BoxedSegment = Box<dyn Segment>;
+
+/// Create the segment kind appropriate for an execution mode.
+pub fn create_inproc(len: usize) -> Result<BoxedSegment> {
+    Ok(Box::new(inproc::InProcSegment::new(len)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boxed_segment_trait_object() {
+        let seg = create_inproc(4096).unwrap();
+        assert_eq!(seg.len(), 4096);
+        assert!(!seg.base().is_null());
+        assert!(seg.name().is_none());
+    }
+}

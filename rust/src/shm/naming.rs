@@ -1,0 +1,93 @@
+//! Segment naming (paper §4.7 "Contact information").
+//!
+//! "The name of this shared memory segment is built using a constant basis
+//! and the rank of the target process. Hence, processes can communicate with
+//! each other as soon as they know their rank." The job id keeps concurrent
+//! POSH jobs on one machine from colliding.
+
+/// Constant basis of every POSH segment name.
+pub const BASIS: &str = "posh";
+
+/// Name of the symmetric-heap segment of PE `rank` in job `job_id`.
+///
+/// POSIX requires the name to start with `/` and contain no further slashes.
+pub fn heap_segment_name(job_id: u64, rank: usize) -> String {
+    format!("/{BASIS}.{job_id:x}.heap.{rank}")
+}
+
+/// Name of the job-wide control segment (barrier flags, collective state
+/// mirrors for process mode).
+pub fn control_segment_name(job_id: u64) -> String {
+    format!("/{BASIS}.{job_id:x}.ctl")
+}
+
+/// Parse a heap-segment name back into `(job_id, rank)`; `None` if it is not
+/// a POSH heap name. Used by cleanup tooling (`oshrun --clean`).
+pub fn parse_heap_name(name: &str) -> Option<(u64, usize)> {
+    let stripped = name.strip_prefix('/').unwrap_or(name);
+    let mut parts = stripped.split('.');
+    if parts.next()? != BASIS {
+        return None;
+    }
+    let job = u64::from_str_radix(parts.next()?, 16).ok()?;
+    if parts.next()? != "heap" {
+        return None;
+    }
+    let rank = parts.next()?.parse().ok()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((job, rank))
+}
+
+/// A fresh job id: time-seeded plus pid so two jobs launched in the same
+/// nanosecond by different shells still diverge.
+pub fn fresh_job_id() -> u64 {
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let pid = std::process::id() as u64;
+    t ^ (pid << 48) ^ pid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_posix_valid() {
+        let n = heap_segment_name(0xabc, 3);
+        assert!(n.starts_with('/'));
+        assert_eq!(n.matches('/').count(), 1);
+        assert!(n.len() < 255);
+    }
+
+    #[test]
+    fn roundtrip() {
+        for job in [0u64, 1, 0xdeadbeef, u64::MAX] {
+            for rank in [0usize, 1, 127, 100_000] {
+                let n = heap_segment_name(job, rank);
+                assert_eq!(parse_heap_name(&n), Some((job, rank)));
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_foreign_names() {
+        assert_eq!(parse_heap_name("/other.1.heap.0"), None);
+        assert_eq!(parse_heap_name("/posh.zz.heap.0"), None);
+        assert_eq!(parse_heap_name("/posh.1.ctl"), None);
+        assert_eq!(parse_heap_name("/posh.1.heap.0.extra"), None);
+    }
+
+    #[test]
+    fn job_ids_differ() {
+        // Weak check: two calls in a row shouldn't collide (time advances or
+        // xor with pid differs).
+        let a = fresh_job_id();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = fresh_job_id();
+        assert_ne!(a, b);
+    }
+}

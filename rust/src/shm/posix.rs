@@ -1,0 +1,246 @@
+//! POSIX `shm_open` segments — the paper's actual substrate (via Boost).
+//!
+//! Lifecycle protocol (paper §4.1.1):
+//! * each PE *creates* its own heap segment at start-up;
+//! * to reach PE *k*, a process builds the name from *k*'s rank, then maps
+//!   the segment, **retrying with a short sleep if it does not exist yet**
+//!   ("we wait a little bit and try again");
+//! * mappings of remote heaps are cached in a per-PE table
+//!   ([`crate::pe::remote_table`]) — creating them is expensive, looking
+//!   them up is not.
+
+use super::Segment;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::ffi::CString;
+use std::time::{Duration, Instant};
+
+/// A named shared-memory segment backed by `/dev/shm`.
+pub struct PosixShmSegment {
+    base: *mut u8,
+    len: usize,
+    name: String,
+    /// Only the creator unlinks the name on drop.
+    owner: bool,
+}
+
+// SAFETY: plain shared bytes; the SHMEM memory model governs access.
+unsafe impl Send for PosixShmSegment {}
+unsafe impl Sync for PosixShmSegment {}
+
+impl PosixShmSegment {
+    /// Create (or replace) a segment of `len` bytes under `name`.
+    pub fn create(name: &str, len: usize) -> Result<Self> {
+        if len == 0 {
+            bail!("segment length must be > 0");
+        }
+        let len = crate::util::align_up(len, super::inproc::page_size());
+        let cname = CString::new(name).context("segment name contains NUL")?;
+        // Replace any stale object from a crashed previous job.
+        // SAFETY: FFI call with a valid C string.
+        unsafe {
+            libc::shm_unlink(cname.as_ptr());
+        }
+        // SAFETY: FFI; flags request creation with rw permissions.
+        let fd = unsafe {
+            libc::shm_open(
+                cname.as_ptr(),
+                libc::O_CREAT | libc::O_EXCL | libc::O_RDWR,
+                0o600,
+            )
+        };
+        if fd < 0 {
+            bail!(
+                "shm_open(create {name}) failed: {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        // SAFETY: valid fd.
+        let rc = unsafe { libc::ftruncate(fd, len as libc::off_t) };
+        if rc != 0 {
+            let e = std::io::Error::last_os_error();
+            unsafe {
+                libc::close(fd);
+                libc::shm_unlink(cname.as_ptr());
+            }
+            bail!("ftruncate({name}, {len}) failed: {e}");
+        }
+        let base = map_fd(fd, len)?;
+        // SAFETY: fd no longer needed after mmap.
+        unsafe {
+            libc::close(fd);
+        }
+        Ok(Self {
+            base,
+            len,
+            name: name.to_string(),
+            owner: true,
+        })
+    }
+
+    /// Map an existing segment, retrying until `timeout` elapses — the
+    /// paper's "wait a little bit and try again" handshake with a peer that
+    /// has not created its heap yet.
+    pub fn open_existing(name: &str, len: usize, timeout: Duration) -> Result<Self> {
+        let len = crate::util::align_up(len, super::inproc::page_size());
+        let cname = CString::new(name).context("segment name contains NUL")?;
+        let deadline = Instant::now() + timeout;
+        let mut backoff = Duration::from_micros(50);
+        loop {
+            // SAFETY: FFI with valid C string.
+            let fd = unsafe { libc::shm_open(cname.as_ptr(), libc::O_RDWR, 0o600) };
+            if fd >= 0 {
+                // Wait until the creator has ftruncate'd it to full size.
+                let mut st: libc::stat = unsafe { std::mem::zeroed() };
+                // SAFETY: valid fd and out-pointer.
+                let rc = unsafe { libc::fstat(fd, &mut st) };
+                if rc == 0 && (st.st_size as usize) >= len {
+                    let base = map_fd(fd, len)?;
+                    unsafe {
+                        libc::close(fd);
+                    }
+                    return Ok(Self {
+                        base,
+                        len,
+                        name: name.to_string(),
+                        owner: false,
+                    });
+                }
+                unsafe {
+                    libc::close(fd);
+                }
+            }
+            if Instant::now() >= deadline {
+                bail!("segment {name} did not appear within {timeout:?}");
+            }
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_millis(10));
+        }
+    }
+
+    /// Explicitly unlink the name (normally done by the owner's drop).
+    pub fn unlink(name: &str) {
+        if let Ok(cname) = CString::new(name) {
+            // SAFETY: FFI with valid C string; failure is fine (already gone).
+            unsafe {
+                libc::shm_unlink(cname.as_ptr());
+            }
+        }
+    }
+}
+
+fn map_fd(fd: libc::c_int, len: usize) -> Result<*mut u8> {
+    // SAFETY: mapping a valid fd MAP_SHARED.
+    let ptr = unsafe {
+        libc::mmap(
+            std::ptr::null_mut(),
+            len,
+            libc::PROT_READ | libc::PROT_WRITE,
+            libc::MAP_SHARED,
+            fd,
+            0,
+        )
+    };
+    if ptr == libc::MAP_FAILED {
+        bail!("mmap failed: {}", std::io::Error::last_os_error());
+    }
+    Ok(ptr as *mut u8)
+}
+
+impl Segment for PosixShmSegment {
+    fn base(&self) -> *mut u8 {
+        self.base
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn name(&self) -> Option<&str> {
+        Some(&self.name)
+    }
+}
+
+impl Drop for PosixShmSegment {
+    fn drop(&mut self) {
+        // SAFETY: we own this mapping.
+        unsafe {
+            libc::munmap(self.base as *mut libc::c_void, self.len);
+        }
+        if self.owner {
+            Self::unlink(&self.name);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniq(tag: &str) -> String {
+        format!("/posh.test.{}.{}", std::process::id(), tag)
+    }
+
+    #[test]
+    fn create_map_write_reopen() {
+        let name = uniq("cmwr");
+        let seg = PosixShmSegment::create(&name, 8192).unwrap();
+        unsafe {
+            *seg.base() = 42;
+            *seg.base().add(100) = 43;
+        }
+        // Second mapping of the same object sees the data.
+        let seg2 =
+            PosixShmSegment::open_existing(&name, 8192, Duration::from_millis(100)).unwrap();
+        unsafe {
+            assert_eq!(*seg2.base(), 42);
+            assert_eq!(*seg2.base().add(100), 43);
+        }
+        // Writes propagate both ways.
+        unsafe {
+            *seg2.base().add(7) = 9;
+            assert_eq!(*seg.base().add(7), 9);
+        }
+    }
+
+    #[test]
+    fn open_missing_times_out() {
+        let name = uniq("missing");
+        let t0 = Instant::now();
+        let r = PosixShmSegment::open_existing(&name, 4096, Duration::from_millis(50));
+        assert!(r.is_err());
+        assert!(t0.elapsed() >= Duration::from_millis(50));
+    }
+
+    #[test]
+    fn owner_unlinks_on_drop() {
+        let name = uniq("unlink");
+        {
+            let _seg = PosixShmSegment::create(&name, 4096).unwrap();
+            assert!(std::path::Path::new(&format!("/dev/shm{name}")).exists());
+        }
+        assert!(!std::path::Path::new(&format!("/dev/shm{name}")).exists());
+    }
+
+    #[test]
+    fn non_owner_does_not_unlink() {
+        let name = uniq("keep");
+        let seg = PosixShmSegment::create(&name, 4096).unwrap();
+        {
+            let _view =
+                PosixShmSegment::open_existing(&name, 4096, Duration::from_millis(100)).unwrap();
+        }
+        assert!(std::path::Path::new(&format!("/dev/shm{name}")).exists());
+        drop(seg);
+    }
+
+    #[test]
+    fn create_replaces_stale() {
+        let name = uniq("stale");
+        let a = PosixShmSegment::create(&name, 4096).unwrap();
+        unsafe { *a.base() = 1 };
+        // Simulates a crashed job leaving the object behind: create again.
+        let b = PosixShmSegment::create(&name, 4096).unwrap();
+        unsafe { assert_eq!(*b.base(), 0, "fresh object must be zeroed") };
+        drop(b);
+        drop(a);
+    }
+}

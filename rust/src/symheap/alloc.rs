@@ -1,0 +1,375 @@
+//! Deterministic first-fit free-list allocator for the symmetric heap.
+//!
+//! Determinism is the point: Fact 1 (same offsets on every PE) holds iff the
+//! allocator is a pure function of the call sequence. Boost's
+//! `managed_shared_memory` allocator has this property when calls are
+//! symmetric; ours has it unconditionally:
+//!
+//! * free blocks live in a `BTreeMap<offset, size>` — iteration order is the
+//!   address order, so "first fit" is well-defined and stable;
+//! * splits always return the *low* part and keep the high remainder free;
+//! * frees coalesce with both neighbours immediately.
+//!
+//! Metadata lives in private memory (not in the shared segment), which keeps
+//! the data area byte-exact symmetric and makes corruption-by-remote-write
+//! impossible (a deliberate hardening over the paper, recorded in DESIGN.md).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Minimum allocation granularity (bytes). Also the minimum alignment
+/// returned by `alloc`. 16 matches `max_align_t` on x86_64 so any C type can
+/// live at any allocation start.
+pub const MIN_ALIGN: usize = 16;
+
+/// One entry of the allocation journal (safe mode / Fact-1 checking).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JournalOp {
+    /// `alloc(size, align) -> offset`
+    Alloc { size: usize, align: usize, offset: usize },
+    /// `free(offset)`
+    Free { offset: usize },
+}
+
+/// First-fit free list over a `[0, capacity)` offset space.
+#[derive(Debug)]
+pub struct FreeList {
+    capacity: usize,
+    /// offset -> size of each free block, keyed by offset (address order).
+    free: BTreeMap<usize, usize>,
+    /// offset -> size of each live allocation.
+    live: BTreeMap<usize, usize>,
+    /// FNV-1a running hash of the journal (cheap cross-PE symmetry check).
+    journal_hash: u64,
+    /// Full journal (kept only when `record_journal` is set).
+    journal: Vec<JournalOp>,
+    record_journal: bool,
+    /// Total bytes currently allocated.
+    pub allocated: usize,
+    /// High-water mark.
+    pub peak: usize,
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+fn fnv_step(mut h: u64, v: u64) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl FreeList {
+    /// A fresh allocator over `capacity` bytes (offsets `0..capacity`).
+    pub fn new(capacity: usize) -> Self {
+        let mut free = BTreeMap::new();
+        if capacity > 0 {
+            free.insert(0, capacity);
+        }
+        Self {
+            capacity,
+            free,
+            live: BTreeMap::new(),
+            journal_hash: FNV_OFFSET,
+            journal: Vec::new(),
+            record_journal: cfg!(any(feature = "safe-mode", test)),
+            allocated: 0,
+            peak: 0,
+        }
+    }
+
+    /// Total capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of live allocations.
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Size of the live allocation at `offset`, if any.
+    pub fn size_of(&self, offset: usize) -> Option<usize> {
+        self.live.get(&offset).copied()
+    }
+
+    /// Running journal hash — equal across PEs iff the call sequences were
+    /// identical (the Fact-1 precondition the OpenSHMEM spec §6.4 demands).
+    pub fn journal_hash(&self) -> u64 {
+        self.journal_hash
+    }
+
+    /// The recorded journal (empty unless safe mode or tests).
+    pub fn journal(&self) -> &[JournalOp] {
+        &self.journal
+    }
+
+    /// Allocate `size` bytes at alignment `align` (power of two ≥ 1).
+    /// Returns the offset. First fit in address order; deterministic.
+    pub fn alloc(&mut self, size: usize, align: usize) -> Result<usize> {
+        if size == 0 {
+            bail!("alloc of size 0");
+        }
+        if !align.is_power_of_two() {
+            bail!("alignment {align} is not a power of two");
+        }
+        let align = align.max(MIN_ALIGN);
+        let size = crate::util::align_up(size, MIN_ALIGN);
+        // First fit: lowest-offset free block that can hold an aligned start.
+        let mut found: Option<(usize, usize, usize)> = None; // (blk_off, blk_sz, start)
+        for (&boff, &bsz) in &self.free {
+            let start = crate::util::align_up(boff, align);
+            if start + size <= boff + bsz {
+                found = Some((boff, bsz, start));
+                break;
+            }
+        }
+        let Some((boff, bsz, start)) = found else {
+            bail!(
+                "symmetric heap exhausted: need {size}B (align {align}), \
+                 {} live allocations, {}B allocated of {}B",
+                self.live.len(),
+                self.allocated,
+                self.capacity
+            );
+        };
+        self.free.remove(&boff);
+        // Low remainder (alignment gap) stays free.
+        if start > boff {
+            self.free.insert(boff, start - boff);
+        }
+        // High remainder stays free.
+        let end = start + size;
+        let bend = boff + bsz;
+        if bend > end {
+            self.free.insert(end, bend - end);
+        }
+        self.live.insert(start, size);
+        self.allocated += size;
+        self.peak = self.peak.max(self.allocated);
+        self.journal_hash = fnv_step(self.journal_hash, 0x11);
+        self.journal_hash = fnv_step(self.journal_hash, size as u64);
+        self.journal_hash = fnv_step(self.journal_hash, align as u64);
+        self.journal_hash = fnv_step(self.journal_hash, start as u64);
+        if self.record_journal {
+            self.journal.push(JournalOp::Alloc { size, align, offset: start });
+        }
+        Ok(start)
+    }
+
+    /// Free the allocation starting at `offset`; coalesces with neighbours.
+    pub fn free(&mut self, offset: usize) -> Result<()> {
+        let Some(size) = self.live.remove(&offset) else {
+            bail!("free of unallocated offset {offset}");
+        };
+        self.allocated -= size;
+        let mut off = offset;
+        let mut sz = size;
+        // Coalesce with the block immediately before…
+        if let Some((&poff, &psz)) = self.free.range(..off).next_back() {
+            if poff + psz == off {
+                self.free.remove(&poff);
+                off = poff;
+                sz += psz;
+            }
+        }
+        // …and immediately after.
+        if let Some(&nsz) = self.free.get(&(off + sz)) {
+            self.free.remove(&(off + sz));
+            sz += nsz;
+        }
+        self.free.insert(off, sz);
+        self.journal_hash = fnv_step(self.journal_hash, 0x22);
+        self.journal_hash = fnv_step(self.journal_hash, offset as u64);
+        if self.record_journal {
+            self.journal.push(JournalOp::Free { offset });
+        }
+        Ok(())
+    }
+
+    /// Internal consistency check used by tests: free + live blocks tile the
+    /// space exactly, with no overlap and no gaps.
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut regions: Vec<(usize, usize, bool)> = Vec::new();
+        for (&o, &s) in &self.free {
+            regions.push((o, s, true));
+        }
+        for (&o, &s) in &self.live {
+            regions.push((o, s, false));
+        }
+        regions.sort();
+        let mut cursor = 0usize;
+        let mut prev_free = false;
+        for (o, s, is_free) in regions {
+            if o != cursor {
+                bail!("gap or overlap at offset {cursor} (next region at {o})");
+            }
+            if is_free && prev_free {
+                bail!("adjacent free blocks not coalesced at {o}");
+            }
+            if s == 0 {
+                bail!("zero-size region at {o}");
+            }
+            cursor = o + s;
+            prev_free = is_free;
+        }
+        if cursor != self.capacity {
+            bail!("regions end at {cursor}, capacity {}", self.capacity);
+        }
+        let live_sum: usize = self.live.values().sum();
+        if live_sum != self.allocated {
+            bail!("allocated counter {} != live sum {live_sum}", self.allocated);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{forall, Gen};
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut fl = FreeList::new(1 << 16);
+        let a = fl.alloc(100, 1).unwrap();
+        let b = fl.alloc(200, 1).unwrap();
+        assert_ne!(a, b);
+        fl.check_invariants().unwrap();
+        fl.free(a).unwrap();
+        fl.free(b).unwrap();
+        fl.check_invariants().unwrap();
+        assert_eq!(fl.allocated, 0);
+        // After freeing everything the space must be one coalesced block.
+        assert_eq!(fl.free.len(), 1);
+    }
+
+    #[test]
+    fn alignment_respected() {
+        let mut fl = FreeList::new(1 << 20);
+        let _pad = fl.alloc(24, 1).unwrap();
+        for align in [16usize, 32, 64, 128, 4096] {
+            let o = fl.alloc(10, align).unwrap();
+            assert_eq!(o % align, 0, "align {align}");
+        }
+        fl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let mut fl = FreeList::new(1024);
+        let _a = fl.alloc(1000, 1).unwrap();
+        assert!(fl.alloc(1000, 1).is_err());
+    }
+
+    #[test]
+    fn double_free_errors() {
+        let mut fl = FreeList::new(4096);
+        let a = fl.alloc(64, 1).unwrap();
+        fl.free(a).unwrap();
+        assert!(fl.free(a).is_err());
+    }
+
+    #[test]
+    fn free_of_garbage_errors() {
+        let mut fl = FreeList::new(4096);
+        assert!(fl.free(12345).is_err());
+    }
+
+    #[test]
+    fn zero_size_rejected() {
+        let mut fl = FreeList::new(4096);
+        assert!(fl.alloc(0, 1).is_err());
+    }
+
+    #[test]
+    fn determinism_identical_sequences() {
+        // Fact 1's engine-room: two allocators fed the same sequence produce
+        // identical offsets and journal hashes.
+        forall("allocator determinism", 100, |g: &mut Gen| {
+            let mut a = FreeList::new(1 << 18);
+            let mut b = FreeList::new(1 << 18);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..g.usize_in(1..80) {
+                if !live.is_empty() && g.bool(0.4) {
+                    let idx = g.usize_in(0..live.len());
+                    let off = live.swap_remove(idx);
+                    a.free(off).map_err(|e| e.to_string())?;
+                    b.free(off).map_err(|e| e.to_string())?;
+                } else {
+                    let size = g.usize_in(1..5000);
+                    let align = 1usize << g.usize_in(0..8);
+                    let oa = a.alloc(size, align);
+                    let ob = b.alloc(size, align);
+                    match (oa, ob) {
+                        (Ok(x), Ok(y)) => {
+                            if x != y {
+                                return Err(format!("offsets diverged: {x} vs {y}"));
+                            }
+                            live.push(x);
+                        }
+                        (Err(_), Err(_)) => {}
+                        _ => return Err("one failed, one succeeded".into()),
+                    }
+                }
+            }
+            if a.journal_hash() != b.journal_hash() {
+                return Err("journal hashes diverged".into());
+            }
+            a.check_invariants().map_err(|e| e.to_string())?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invariants_hold_under_random_workload() {
+        forall("freelist invariants", 100, |g: &mut Gen| {
+            let mut fl = FreeList::new(1 << 18);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..g.usize_in(1..120) {
+                if !live.is_empty() && g.bool(0.45) {
+                    let idx = g.usize_in(0..live.len());
+                    fl.free(live.swap_remove(idx)).map_err(|e| e.to_string())?;
+                } else if let Ok(off) = fl.alloc(g.usize_in(1..8000), 1 << g.usize_in(0..7)) {
+                    live.push(off);
+                }
+                fl.check_invariants().map_err(|e| e.to_string())?;
+            }
+            // Drain everything; space must fully coalesce.
+            for off in live {
+                fl.free(off).map_err(|e| e.to_string())?;
+            }
+            fl.check_invariants().map_err(|e| e.to_string())?;
+            if fl.allocated != 0 {
+                return Err("leak".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn journal_hash_detects_divergence() {
+        let mut a = FreeList::new(1 << 16);
+        let mut b = FreeList::new(1 << 16);
+        a.alloc(100, 16).unwrap();
+        b.alloc(104, 16).unwrap(); // rounds to same 112? 100->112? No: 100 aligns to 112, 104->112 too
+        // sizes differ pre-rounding but journal records the rounded size, so
+        // force a real divergence:
+        a.alloc(300, 16).unwrap();
+        b.alloc(400, 16).unwrap();
+        assert_ne!(a.journal_hash(), b.journal_hash());
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut fl = FreeList::new(1 << 16);
+        let a = fl.alloc(1024, 1).unwrap();
+        let b = fl.alloc(2048, 1).unwrap();
+        fl.free(a).unwrap();
+        fl.free(b).unwrap();
+        assert_eq!(fl.allocated, 0);
+        assert!(fl.peak >= 3072);
+    }
+}

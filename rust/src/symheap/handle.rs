@@ -1,0 +1,200 @@
+//! Symmetric pointers — Boost handles + Corollary 1.
+//!
+//! The paper's trick (§4.1.1): a Boost *handle* is an offset relative to a
+//! shared-memory segment; by symmetry (Fact 1) the handle obtained for an
+//! object in the *local* heap designates the "same" object in any *remote*
+//! heap. [`SymPtr`] is that handle, made typed: a segment offset plus an
+//! element count, `Copy`, and valid on every PE.
+//!
+//! [`translate`] is Corollary 1 verbatim:
+//! `addr_remote = heap_remote + (addr_local − heap_local)`.
+
+use std::marker::PhantomData;
+
+/// A typed symmetric pointer: `offset` bytes from a segment base, `len`
+/// elements of `T`. Valid on all PEs by Fact 1.
+pub struct SymPtr<T> {
+    offset: usize,
+    len: usize,
+    _t: PhantomData<*const T>,
+}
+
+// Handles are plain data; the pointee's cross-PE discipline is the memory
+// model's concern, the handle itself is freely shareable.
+unsafe impl<T> Send for SymPtr<T> {}
+unsafe impl<T> Sync for SymPtr<T> {}
+
+impl<T> Clone for SymPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SymPtr<T> {}
+
+impl<T> std::fmt::Debug for SymPtr<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "SymPtr<{}>{{off={:#x}, len={}}}",
+            std::any::type_name::<T>(),
+            self.offset,
+            self.len
+        )
+    }
+}
+
+impl<T> PartialEq for SymPtr<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.offset == other.offset && self.len == other.len
+    }
+}
+impl<T> Eq for SymPtr<T> {}
+
+impl<T> SymPtr<T> {
+    /// Construct from a raw segment offset (normally done by the heap).
+    pub fn from_raw(offset: usize, len: usize) -> Self {
+        debug_assert_eq!(
+            offset % std::mem::align_of::<T>().max(1),
+            0,
+            "misaligned SymPtr for {}",
+            std::any::type_name::<T>()
+        );
+        Self { offset, len, _t: PhantomData }
+    }
+
+    /// Segment offset in bytes (the Boost handle).
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// `true` if this handle covers zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Byte size of the pointee.
+    pub fn byte_len(&self) -> usize {
+        self.len * std::mem::size_of::<T>()
+    }
+
+    /// A sub-range `[start, start+len)` of this allocation.
+    pub fn slice(&self, start: usize, len: usize) -> SymPtr<T> {
+        assert!(
+            start + len <= self.len,
+            "slice [{start}, {}) out of bounds (len {})",
+            start + len,
+            self.len
+        );
+        SymPtr {
+            offset: self.offset + start * std::mem::size_of::<T>(),
+            len,
+            _t: PhantomData,
+        }
+    }
+
+    /// Single-element handle at `index`.
+    pub fn at(&self, index: usize) -> SymPtr<T> {
+        self.slice(index, 1)
+    }
+
+    /// Reinterpret as a handle to raw bytes.
+    pub fn as_bytes(&self) -> SymPtr<u8> {
+        SymPtr { offset: self.offset, len: self.byte_len(), _t: PhantomData }
+    }
+
+    /// Resolve to a concrete address inside a mapped segment base.
+    ///
+    /// # Safety
+    /// `base` must be the base of a segment at least `offset + byte_len`
+    /// long.
+    pub unsafe fn resolve(&self, base: *mut u8) -> *mut T {
+        base.add(self.offset) as *mut T
+    }
+}
+
+/// Corollary 1: translate a local address into the corresponding remote
+/// address, given both heap bases *as mapped in the local address space*.
+///
+/// `addr_remote = heap_remote + (addr_local − heap_local)`
+#[inline]
+pub fn translate(addr_local: *const u8, heap_local: *const u8, heap_remote: *mut u8) -> *mut u8 {
+    debug_assert!(addr_local as usize >= heap_local as usize);
+    let delta = addr_local as usize - heap_local as usize;
+    // SAFETY of the arithmetic: delta is within the segment by the caller's
+    // contract; wrapping is impossible for valid mappings.
+    unsafe { heap_remote.add(delta) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corollary1_formula() {
+        let heap_local = 0x1000 as *const u8;
+        let heap_remote = 0x9000 as *mut u8;
+        let addr_local = 0x1230 as *const u8;
+        let r = translate(addr_local, heap_local, heap_remote);
+        assert_eq!(r as usize, 0x9230);
+    }
+
+    #[test]
+    fn symptr_slice_offsets() {
+        let p: SymPtr<u64> = SymPtr::from_raw(0x100, 10);
+        let s = p.slice(3, 4);
+        assert_eq!(s.offset(), 0x100 + 3 * 8);
+        assert_eq!(s.len(), 4);
+        let one = p.at(9);
+        assert_eq!(one.offset(), 0x100 + 9 * 8);
+        assert_eq!(one.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn symptr_slice_oob_panics() {
+        let p: SymPtr<u32> = SymPtr::from_raw(0, 4);
+        let _ = p.slice(2, 3);
+    }
+
+    #[test]
+    fn as_bytes_len() {
+        let p: SymPtr<f64> = SymPtr::from_raw(64, 5);
+        let b = p.as_bytes();
+        assert_eq!(b.len(), 40);
+        assert_eq!(b.offset(), 64);
+    }
+
+    #[test]
+    fn resolve_on_real_segment() {
+        use crate::shm::Segment;
+        let seg = crate::shm::inproc::InProcSegment::new(4096).unwrap();
+        let p: SymPtr<u32> = SymPtr::from_raw(128, 4);
+        unsafe {
+            let addr = p.resolve(seg.base());
+            *addr = 0xDEAD_BEEF;
+            assert_eq!(*(seg.base().add(128) as *const u32), 0xDEAD_BEEF);
+        }
+    }
+
+    #[test]
+    fn translate_matches_resolve_across_segments() {
+        use crate::shm::Segment;
+        // Two "PEs": identical offsets, different bases — the in-process
+        // picture of Fig. 1. translate() from a local pointer must land on
+        // the same offset in the remote segment that resolve() computes.
+        let a = crate::shm::inproc::InProcSegment::new(8192).unwrap();
+        let b = crate::shm::inproc::InProcSegment::new(8192).unwrap();
+        let p: SymPtr<u16> = SymPtr::from_raw(0x700, 3);
+        unsafe {
+            let la = p.resolve(a.base()) as *const u8;
+            let via_translate = translate(la, a.base(), b.base());
+            let direct = p.resolve(b.base()) as *mut u8;
+            assert_eq!(via_translate, direct);
+        }
+    }
+}

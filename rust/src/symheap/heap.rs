@@ -1,0 +1,296 @@
+//! The symmetric heap object: one segment + the deterministic allocator +
+//! the statics bump area.
+//!
+//! `SymHeap` is PE-local state (each PE owns exactly one); the *data* it
+//! manages is what remote PEs read and write. The OpenSHMEM-facing
+//! `shmalloc`-family entry points live on [`crate::pe::Ctx`], which wraps
+//! these methods with the mandatory global barrier (§4.1.1: "memory
+//! allocations which are performed in the symmetric heaps end by a call to a
+//! global synchronization barrier").
+
+use super::alloc::FreeList;
+use super::handle::SymPtr;
+use super::layout::{HeapHeader, Layout, MAGIC};
+use crate::shm::BoxedSegment;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+/// One PE's symmetric heap.
+pub struct SymHeap {
+    seg: BoxedSegment,
+    layout: Layout,
+    /// Dynamic-area allocator (offsets relative to `layout.heap_off`).
+    alloc: Mutex<FreeList>,
+    /// Bump cursor for the statics area (§4.2 pre-parser placements).
+    statics_cursor: Mutex<usize>,
+}
+
+impl SymHeap {
+    /// Initialise a heap over a fresh segment. `rank` is stamped into the
+    /// header; `ready` is raised last (peers spin on it).
+    pub fn new(seg: BoxedSegment, layout: Layout, rank: usize) -> Result<Self> {
+        if seg.len() < layout.total {
+            bail!(
+                "segment too small: {} < layout total {}",
+                seg.len(),
+                layout.total
+            );
+        }
+        let heap_capacity = layout.total - layout.heap_off;
+        let h = Self {
+            seg,
+            layout,
+            alloc: Mutex::new(FreeList::new(heap_capacity)),
+            statics_cursor: Mutex::new(0),
+        };
+        let hdr = h.header();
+        hdr.rank.store(rank as u64, Ordering::Relaxed);
+        hdr.magic.store(MAGIC, Ordering::Release);
+        hdr.ready.store(1, Ordering::Release);
+        Ok(h)
+    }
+
+    /// The segment layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Base address of the segment in this address space.
+    pub fn base(&self) -> *mut u8 {
+        self.seg.base()
+    }
+
+    /// The heap header (all-atomic, shared with remote PEs).
+    pub fn header(&self) -> &HeapHeader {
+        // SAFETY: segment is at least `layout.total` ≥ header region.
+        unsafe { HeapHeader::at(self.seg.base()) }
+    }
+
+    /// The underlying segment.
+    pub fn segment(&self) -> &BoxedSegment {
+        &self.seg
+    }
+
+    /// Allocate `count` elements of `T` in the dynamic area (no barrier —
+    /// see `Ctx::shmalloc_n` for the spec-compliant wrapper).
+    pub fn alloc_n<T>(&self, count: usize) -> Result<SymPtr<T>> {
+        self.alloc_aligned_n(std::mem::align_of::<T>(), count)
+    }
+
+    /// `shmemalign` core: allocate `count` elements of `T` at byte alignment
+    /// `align`.
+    pub fn alloc_aligned_n<T>(&self, align: usize, count: usize) -> Result<SymPtr<T>> {
+        let size = count
+            .checked_mul(std::mem::size_of::<T>())
+            .context("allocation size overflow")?;
+        let rel = self
+            .alloc
+            .lock()
+            .unwrap()
+            .alloc(size.max(1), align.max(std::mem::align_of::<T>()))?;
+        Ok(SymPtr::from_raw(self.layout.heap_off + rel, count))
+    }
+
+    /// Raw byte allocation (used by collectives' temporary buffers).
+    pub fn alloc_bytes(&self, size: usize, align: usize) -> Result<SymPtr<u8>> {
+        let rel = self.alloc.lock().unwrap().alloc(size, align)?;
+        Ok(SymPtr::from_raw(self.layout.heap_off + rel, size))
+    }
+
+    /// Free an allocation made by any of the `alloc_*` methods.
+    pub fn free<T>(&self, ptr: SymPtr<T>) -> Result<()> {
+        let off = ptr
+            .offset()
+            .checked_sub(self.layout.heap_off)
+            .context("free of pointer outside the dynamic heap")?;
+        self.alloc.lock().unwrap().free(off)
+    }
+
+    /// `shrealloc` core: allocate new, copy `min(old,new)`, free old.
+    /// Returns the new handle. (OpenSHMEM 1.0 `shrealloc` semantics.)
+    pub fn realloc<T>(&self, ptr: SymPtr<T>, new_count: usize) -> Result<SymPtr<T>> {
+        let new_ptr = self.alloc_n::<T>(new_count)?;
+        let copy_elems = ptr.len().min(new_count);
+        // SAFETY: both handles are in-bounds allocations of this segment;
+        // they cannot overlap because `alloc_n` returned fresh space.
+        unsafe {
+            crate::mem::copy_bytes(
+                new_ptr.resolve(self.base()) as *mut u8,
+                ptr.resolve(self.base()) as *const u8,
+                copy_elems * std::mem::size_of::<T>(),
+            );
+        }
+        self.free(ptr)?;
+        Ok(new_ptr)
+    }
+
+    /// Place a static object in the statics area (pre-parser, §4.2). Bump
+    /// allocation — statics are never freed, matching C global lifetime.
+    pub fn place_static(&self, size: usize, align: usize) -> Result<SymPtr<u8>> {
+        let mut cur = self.statics_cursor.lock().unwrap();
+        let start = crate::util::align_up(*cur, align.max(1));
+        if start + size > self.layout.statics_size {
+            bail!(
+                "statics area exhausted: need {size}B at {start}, area is {}B",
+                self.layout.statics_size
+            );
+        }
+        *cur = start + size;
+        Ok(SymPtr::from_raw(self.layout.statics_off + start, size))
+    }
+
+    /// Local address of a handle (the *local* half of Corollary 1).
+    ///
+    /// # Safety
+    /// The handle must be a live allocation of a heap with this layout.
+    pub unsafe fn addr<T>(&self, ptr: SymPtr<T>) -> *mut T {
+        debug_assert!(ptr.offset() + ptr.byte_len() <= self.layout.total);
+        ptr.resolve(self.base())
+    }
+
+    /// View a handle as a local mutable slice.
+    ///
+    /// # Safety
+    /// Caller must guarantee no concurrent conflicting remote access (the
+    /// SHMEM memory model's race rules).
+    pub unsafe fn slice_mut<T>(&self, ptr: SymPtr<T>) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.addr(ptr), ptr.len())
+    }
+
+    /// View a handle as a local shared slice.
+    ///
+    /// # Safety
+    /// As [`Self::slice_mut`].
+    pub unsafe fn slice<T>(&self, ptr: SymPtr<T>) -> &[T] {
+        std::slice::from_raw_parts(self.addr(ptr), ptr.len())
+    }
+
+    /// Current allocation-journal hash (Fact-1 cross-check).
+    pub fn journal_hash(&self) -> u64 {
+        self.alloc.lock().unwrap().journal_hash()
+    }
+
+    /// Bytes currently allocated in the dynamic area.
+    pub fn allocated_bytes(&self) -> usize {
+        self.alloc.lock().unwrap().allocated
+    }
+
+    /// Number of live dynamic allocations.
+    pub fn live_allocations(&self) -> usize {
+        self.alloc.lock().unwrap().live_count()
+    }
+
+    /// Run the allocator's internal invariant check (tests / safe mode).
+    pub fn check_allocator(&self) -> Result<()> {
+        self.alloc.lock().unwrap().check_invariants()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shm::create_inproc;
+    use crate::symheap::layout::DEFAULT_STATICS_SIZE;
+
+    fn mkheap(rank: usize) -> SymHeap {
+        let layout = Layout::compute(1 << 20, DEFAULT_STATICS_SIZE);
+        let seg = create_inproc(layout.total).unwrap();
+        SymHeap::new(seg, layout, rank).unwrap()
+    }
+
+    #[test]
+    fn header_initialised() {
+        let h = mkheap(5);
+        assert_eq!(h.header().magic.load(Ordering::Acquire), MAGIC);
+        assert_eq!(h.header().rank.load(Ordering::Relaxed), 5);
+        assert_eq!(h.header().ready.load(Ordering::Acquire), 1);
+    }
+
+    #[test]
+    fn alloc_write_read() {
+        let h = mkheap(0);
+        let p = h.alloc_n::<u64>(16).unwrap();
+        unsafe {
+            let s = h.slice_mut(p);
+            for (i, x) in s.iter_mut().enumerate() {
+                *x = i as u64 * 3;
+            }
+            let r = h.slice(p);
+            assert_eq!(r[15], 45);
+        }
+        h.free(p).unwrap();
+        h.check_allocator().unwrap();
+    }
+
+    #[test]
+    fn fact1_two_heaps_same_offsets() {
+        // The heart of Fact 1: identical call sequences on two heaps yield
+        // identical handles.
+        let a = mkheap(0);
+        let b = mkheap(1);
+        let pa1 = a.alloc_n::<i32>(100).unwrap();
+        let pb1 = b.alloc_n::<i32>(100).unwrap();
+        assert_eq!(pa1, pb1);
+        let pa2 = a.alloc_aligned_n::<f64>(256, 7).unwrap();
+        let pb2 = b.alloc_aligned_n::<f64>(256, 7).unwrap();
+        assert_eq!(pa2, pb2);
+        a.free(pa1).unwrap();
+        b.free(pb1).unwrap();
+        let pa3 = a.alloc_n::<u8>(10).unwrap();
+        let pb3 = b.alloc_n::<u8>(10).unwrap();
+        assert_eq!(pa3, pb3);
+        assert_eq!(a.journal_hash(), b.journal_hash());
+    }
+
+    #[test]
+    fn realloc_preserves_prefix() {
+        let h = mkheap(0);
+        let p = h.alloc_n::<u32>(8).unwrap();
+        unsafe {
+            h.slice_mut(p).copy_from_slice(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        }
+        let q = h.realloc(p, 16).unwrap();
+        unsafe {
+            assert_eq!(&h.slice(q)[..8], &[1, 2, 3, 4, 5, 6, 7, 8]);
+        }
+        let r = h.realloc(q, 4).unwrap();
+        unsafe {
+            assert_eq!(h.slice(r), &[1, 2, 3, 4]);
+        }
+        h.free(r).unwrap();
+        assert_eq!(h.allocated_bytes(), 0);
+    }
+
+    #[test]
+    fn statics_bump_and_exhaustion() {
+        let layout = Layout::compute(1 << 16, 8192);
+        let seg = create_inproc(layout.total).unwrap();
+        let h = SymHeap::new(seg, layout, 0).unwrap();
+        let a = h.place_static(100, 8).unwrap();
+        let b = h.place_static(100, 8).unwrap();
+        assert!(b.offset() >= a.offset() + 100);
+        assert_eq!(a.offset() % 8, 0);
+        // statics never land in the dynamic heap
+        assert!(b.offset() + 100 <= layout.heap_off);
+        assert!(h.place_static(1 << 20, 8).is_err());
+    }
+
+    #[test]
+    fn statics_and_heap_disjoint() {
+        let h = mkheap(0);
+        let s = h.place_static(64, 16).unwrap();
+        let d = h.alloc_n::<u8>(64).unwrap();
+        let (s0, s1) = (s.offset(), s.offset() + 64);
+        let (d0, d1) = (d.offset(), d.offset() + 64);
+        assert!(s1 <= d0 || d1 <= s0, "statics {s0}..{s1} overlaps heap {d0}..{d1}");
+    }
+
+    #[test]
+    fn free_foreign_pointer_errors() {
+        let h = mkheap(0);
+        let bogus: SymPtr<u8> = SymPtr::from_raw(0, 16); // header region
+        assert!(h.free(bogus).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Segment layout: the heap header (synchronisation cells + the paper's
+//! §4.5.1 collective data structure), the statics area (§4.2), and the
+//! dynamic heap.
+//!
+//! The header is all atomics — it is concurrently written by *remote* PEs
+//! (that is the whole point of one-sided communication), so every field is
+//! an `Atomic*` accessed through shared references.
+
+use std::sync::atomic::{AtomicU32, AtomicU64};
+
+/// Segment magic ("POSHHEAP" little-endian-ish).
+pub const MAGIC: u64 = 0x504F_5348_4845_4150;
+
+/// log2 of the maximum PE count supported by the dissemination barrier.
+pub const MAX_BARRIER_ROUNDS: usize = 20; // up to 2^20 PEs
+
+/// Number of named-lock slots in each header (§4.6 named mutexes).
+pub const NAMED_LOCK_SLOTS: usize = 64;
+
+/// Default size of the statics area (pre-parser output target, §4.2).
+pub const DEFAULT_STATICS_SIZE: usize = 1 << 20;
+
+/// Collective operation tags stored in [`CollectiveState::op_type`].
+/// (Paper §4.5.1: "a type, that keeps what collective operation is
+/// underway".)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum CollOpTag {
+    /// No collective in progress.
+    None = 0,
+    /// Barrier.
+    Barrier = 1,
+    /// Broadcast.
+    Broadcast = 2,
+    /// Reduction.
+    Reduce = 3,
+    /// Fixed-size collect (fcollect).
+    Fcollect = 4,
+    /// Variable-size collect.
+    Collect = 5,
+    /// All-to-all (extension).
+    Alltoall = 6,
+}
+
+impl CollOpTag {
+    /// Decode from the stored u32 (unknown values map to `None`).
+    pub fn from_u32(v: u32) -> CollOpTag {
+        match v {
+            1 => CollOpTag::Barrier,
+            2 => CollOpTag::Broadcast,
+            3 => CollOpTag::Reduce,
+            4 => CollOpTag::Fcollect,
+            5 => CollOpTag::Collect,
+            6 => CollOpTag::Alltoall,
+            _ => CollOpTag::None,
+        }
+    }
+}
+
+/// The per-PE collective data structure (paper §4.5.1), one cache line.
+///
+/// * `buf_offset` — segment offset + 1 of the buffer the collective moves
+///   ("a pointer to the buffer"); 0 means null. Offsets, not addresses,
+///   cross PE boundaries (Corollary 1 / Boost handles).
+/// * `counter` — "counts how many remote processes have accessed the local
+///   data".
+/// * `op_type` — which collective is underway ([`CollOpTag`]).
+/// * `in_progress` — "whether the collective communication is already in
+///   progress"; set remotely when a peer initialises our structure before we
+///   enter the call (§4.5.2).
+/// * `data_size` — "in debug and in safe mode we keep the size of the data
+///   buffer" (§4.5.1, §4.5.5). Always present; only *checked* in safe mode.
+/// * `seq` — collective epoch, distinguishes successive collectives so a
+///   fast PE's next operation cannot be confused with the current one.
+#[repr(C, align(128))]
+pub struct CollectiveState {
+    /// Offset+1 of the data buffer in the owner's segment; 0 = null.
+    pub buf_offset: AtomicU64,
+    /// Remote-access counter.
+    pub counter: AtomicU64,
+    /// Current operation tag.
+    pub op_type: AtomicU32,
+    /// 1 while a collective is underway on this PE (possibly set remotely).
+    pub in_progress: AtomicU32,
+    /// Byte size of the buffer (safe-mode check).
+    pub data_size: AtomicU64,
+    /// Collective sequence number.
+    pub seq: AtomicU64,
+}
+
+/// Dissemination-barrier mailboxes: `flags[r]` holds the highest epoch
+/// signalled to this PE at round `r`.
+#[repr(C, align(128))]
+pub struct BarrierCells {
+    /// Per-round epoch mailboxes.
+    pub flags: [AtomicU64; MAX_BARRIER_ROUNDS],
+    /// This PE's completed-barrier epoch (monotone).
+    pub epoch: AtomicU64,
+    /// Central-counter barrier (ablation baseline): arrivals this round.
+    pub central_count: AtomicU64,
+    /// Central barrier sense word.
+    pub central_sense: AtomicU64,
+    /// Active-set barrier arrivals (root's cell counts its set's members).
+    pub set_count: AtomicU64,
+    /// Active-set barrier release word (monotone, bumped by the set root).
+    pub set_sense: AtomicU64,
+}
+
+/// The header at offset 0 of every symmetric-heap segment.
+#[repr(C)]
+pub struct HeapHeader {
+    /// [`MAGIC`] once the owner has initialised the segment.
+    pub magic: AtomicU64,
+    /// Owner's rank (debugging / sanity checks).
+    pub rank: AtomicU64,
+    /// Set to 1 when the owner finished initialising its heap; peers spin on
+    /// this before first access (the paper's "wait a little bit and try
+    /// again" applies to segment *existence*; this flag covers content).
+    pub ready: AtomicU32,
+    /// Set to 1 when the owner has left the job (clean shutdown signal).
+    pub finished: AtomicU32,
+    /// Fact-1 cross-check: the owner's allocation-journal hash, refreshed at
+    /// every barrier in safe mode.
+    pub journal_hash: AtomicU64,
+    /// Barrier cells.
+    pub barrier: BarrierCells,
+    /// The §4.5.1 collective structure.
+    pub coll: CollectiveState,
+    /// Named-lock words (§4.6): 0 = unlocked, else holder's `rank+1`
+    /// in the low 32 bits and a ticket in the high bits.
+    pub named_locks: [AtomicU64; NAMED_LOCK_SLOTS],
+    /// Per-PE "signal" mailbox used by wait/wait_until tests and the RTE.
+    pub mailbox: AtomicU64,
+}
+
+impl HeapHeader {
+    /// Size of the header region, rounded to a page so the statics area and
+    /// the heap start page-aligned (Fact 1 requires identical bases).
+    pub fn region_size() -> usize {
+        crate::util::align_up(
+            std::mem::size_of::<HeapHeader>(),
+            crate::shm::inproc::page_size(),
+        )
+    }
+
+    /// Reinterpret the start of a segment as the header.
+    ///
+    /// # Safety
+    /// `base` must point at a segment of at least [`Self::region_size`]
+    /// bytes, zero-initialised or previously initialised as a header.
+    /// All fields are atomics, so concurrent access is sound.
+    pub unsafe fn at(base: *mut u8) -> &'static HeapHeader {
+        &*(base as *const HeapHeader)
+    }
+}
+
+/// Computed byte offsets of the three regions of a segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Layout {
+    /// Start of the statics area.
+    pub statics_off: usize,
+    /// Size of the statics area.
+    pub statics_size: usize,
+    /// Start of the dynamic heap.
+    pub heap_off: usize,
+    /// Total segment size.
+    pub total: usize,
+}
+
+impl Layout {
+    /// Compute the layout for a heap of `heap_size` data bytes and a statics
+    /// area of `statics_size` bytes.
+    pub fn compute(heap_size: usize, statics_size: usize) -> Layout {
+        let page = crate::shm::inproc::page_size();
+        let statics_off = HeapHeader::region_size();
+        let statics_size = crate::util::align_up(statics_size, page);
+        let heap_off = statics_off + statics_size;
+        let total = heap_off + crate::util::align_up(heap_size, page);
+        Layout { statics_off, statics_size, heap_off, total }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn header_fits_one_page_region() {
+        // Keep the header compact; if this grows past 2 pages something is
+        // wrong (the named-lock table dominates: 64 * 8B).
+        assert!(std::mem::size_of::<HeapHeader>() < 8192);
+        assert_eq!(HeapHeader::region_size() % crate::shm::inproc::page_size(), 0);
+    }
+
+    #[test]
+    fn coll_state_is_cacheline_isolated() {
+        assert_eq!(std::mem::align_of::<CollectiveState>(), 128);
+        assert_eq!(std::mem::align_of::<BarrierCells>(), 128);
+    }
+
+    #[test]
+    fn header_view_over_zeroed_memory() {
+        let seg = crate::shm::inproc::InProcSegment::new(HeapHeader::region_size()).unwrap();
+        let hdr = unsafe { HeapHeader::at(seg.base()) };
+        assert_eq!(hdr.magic.load(Ordering::Relaxed), 0);
+        hdr.magic.store(MAGIC, Ordering::Release);
+        assert_eq!(hdr.magic.load(Ordering::Acquire), MAGIC);
+        hdr.barrier.flags[3].fetch_add(7, Ordering::AcqRel);
+        assert_eq!(hdr.barrier.flags[3].load(Ordering::Relaxed), 7);
+        use crate::shm::Segment;
+    }
+
+    #[test]
+    fn layout_regions_ordered_and_aligned() {
+        let l = Layout::compute(1 << 20, 1 << 16);
+        let page = crate::shm::inproc::page_size();
+        assert!(l.statics_off >= std::mem::size_of::<HeapHeader>());
+        assert_eq!(l.statics_off % page, 0);
+        assert_eq!(l.heap_off % page, 0);
+        assert!(l.heap_off >= l.statics_off + (1 << 16));
+        assert!(l.total >= l.heap_off + (1 << 20));
+    }
+
+    #[test]
+    fn coll_tag_roundtrip() {
+        for t in [
+            CollOpTag::None,
+            CollOpTag::Barrier,
+            CollOpTag::Broadcast,
+            CollOpTag::Reduce,
+            CollOpTag::Fcollect,
+            CollOpTag::Collect,
+            CollOpTag::Alltoall,
+        ] {
+            assert_eq!(CollOpTag::from_u32(t as u32), t);
+        }
+        assert_eq!(CollOpTag::from_u32(999), CollOpTag::None);
+    }
+}

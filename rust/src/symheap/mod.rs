@@ -1,0 +1,31 @@
+//! The symmetric heap (paper §3.1, §4.1.1).
+//!
+//! Every PE owns one segment laid out as:
+//!
+//! ```text
+//! ┌────────────────┬──────────────────────┬───────────────────────────┐
+//! │ HeapHeader     │ statics area         │ dynamic symmetric heap    │
+//! │ (sync cells,   │ (pre-parser output,  │ (shmalloc / shmemalign /  │
+//! │  §4.5.1 state) │  §4.2)               │  shfree / shrealloc)      │
+//! └────────────────┴──────────────────────┴───────────────────────────┘
+//! ```
+//!
+//! The paper's two foundational properties are implemented — and *checked* —
+//! here:
+//!
+//! * **Fact 1** — with a deterministic allocator and symmetric call
+//!   sequences, the offset of an object from its heap base is identical on
+//!   every PE. Our allocator ([`alloc::FreeList`]) is deterministic by
+//!   construction; safe-mode builds additionally maintain an allocation
+//!   journal hash that PEs cross-check at barriers.
+//! * **Corollary 1** — `addr_remote = heap_remote + (addr_local −
+//!   heap_local)`: see [`handle::SymPtr`] (an offset, i.e. exactly the Boost
+//!   `handle` trick of §4.1.1) and [`handle::translate`].
+
+pub mod alloc;
+pub mod handle;
+pub mod heap;
+pub mod layout;
+
+pub use handle::SymPtr;
+pub use heap::SymHeap;

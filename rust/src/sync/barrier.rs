@@ -1,0 +1,161 @@
+//! Job-wide barriers.
+//!
+//! Two algorithms, selectable via [`crate::pe::BarrierKind`] (ablation B in
+//! DESIGN.md):
+//!
+//! * **Dissemination** — ⌈log₂ n⌉ rounds; in round *r* PE *i* signals PE
+//!   *(i+2ʳ) mod n* and waits for the matching signal. Mailboxes are the
+//!   per-round epoch cells in each PE's heap header, so the algorithm is
+//!   identical in thread and process mode. O(log n) latency, no hot spot.
+//! * **Central** — one counter + sense-reversal epoch on PE 0. O(n) fan-in
+//!   on a single cache line; the classic baseline the dissemination barrier
+//!   is measured against.
+//!
+//! Epochs are monotone, so cells never need resetting and back-to-back
+//! barriers cannot interfere (a peer one epoch ahead simply stores a larger
+//! value, which `>=` absorbs).
+
+use crate::pe::{BarrierKind, Ctx};
+use std::sync::atomic::Ordering;
+
+/// ⌈log₂ n⌉ for n ≥ 1.
+pub fn ceil_log2(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    (usize::BITS - (n - 1).leading_zeros()) as usize
+}
+
+impl Ctx {
+    /// `shmem_barrier_all`: synchronise every PE **and** complete all
+    /// outstanding memory updates (the spec folds a quiet into the barrier).
+    pub fn barrier_all(&self) {
+        self.quiet();
+        match self.config().barrier {
+            BarrierKind::Dissemination => self.barrier_dissemination(),
+            BarrierKind::Central => self.barrier_central(),
+        }
+    }
+
+    /// Dissemination barrier over all PEs.
+    pub(crate) fn barrier_dissemination(&self) {
+        let n = self.n_pes();
+        if n == 1 {
+            return;
+        }
+        let me = self.my_pe();
+        let my_hdr = self.header_of(me);
+        let epoch = my_hdr.barrier.epoch.load(Ordering::Relaxed) + 1;
+        let rounds = ceil_log2(n);
+        for r in 0..rounds {
+            let dist = 1usize << r;
+            let to = (me + dist) % n;
+            self.header_of(to).barrier.flags[r].store(epoch, Ordering::Release);
+            self.spin_wait(|| my_hdr.barrier.flags[r].load(Ordering::Acquire) >= epoch);
+        }
+        my_hdr.barrier.epoch.store(epoch, Ordering::Release);
+    }
+
+    /// Central-counter barrier (ablation baseline).
+    pub(crate) fn barrier_central(&self) {
+        let n = self.n_pes();
+        if n == 1 {
+            return;
+        }
+        let me = self.my_pe();
+        let my_hdr = self.header_of(me);
+        let epoch = my_hdr.barrier.epoch.load(Ordering::Relaxed) + 1;
+        let h0 = self.header_of(0);
+        let arrived = h0.barrier.central_count.fetch_add(1, Ordering::AcqRel) + 1;
+        if arrived == n as u64 {
+            h0.barrier.central_count.store(0, Ordering::Relaxed);
+            h0.barrier.central_sense.store(epoch, Ordering::Release);
+        } else {
+            self.spin_wait(|| h0.barrier.central_sense.load(Ordering::Acquire) >= epoch);
+        }
+        my_hdr.barrier.epoch.store(epoch, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{BarrierKind, PoshConfig, World};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ceil_log2_values() {
+        use super::ceil_log2;
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    fn barrier_separates_phases(kind: BarrierKind, n: usize) {
+        let mut cfg = PoshConfig::small();
+        cfg.barrier = kind;
+        let w = World::threads(n, cfg).unwrap();
+        let phase = AtomicUsize::new(0);
+        let pre = AtomicUsize::new(0);
+        w.run(|ctx| {
+            for round in 0..50 {
+                pre.fetch_add(1, Ordering::SeqCst);
+                ctx.barrier_all();
+                // After the barrier, *everyone* must have done `pre` for
+                // this round: pre == n*(round+1).
+                let seen = pre.load(Ordering::SeqCst);
+                assert!(
+                    seen >= n * (round + 1),
+                    "PE {} saw {} pre-increments in round {}",
+                    ctx.my_pe(),
+                    seen,
+                    round
+                );
+                ctx.barrier_all();
+            }
+            phase.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(phase.load(Ordering::SeqCst), n);
+    }
+
+    #[test]
+    fn dissemination_2() {
+        barrier_separates_phases(BarrierKind::Dissemination, 2);
+    }
+
+    #[test]
+    fn dissemination_3() {
+        barrier_separates_phases(BarrierKind::Dissemination, 3);
+    }
+
+    #[test]
+    fn dissemination_7() {
+        barrier_separates_phases(BarrierKind::Dissemination, 7);
+    }
+
+    #[test]
+    fn dissemination_8() {
+        barrier_separates_phases(BarrierKind::Dissemination, 8);
+    }
+
+    #[test]
+    fn central_2() {
+        barrier_separates_phases(BarrierKind::Central, 2);
+    }
+
+    #[test]
+    fn central_5() {
+        barrier_separates_phases(BarrierKind::Central, 5);
+    }
+
+    #[test]
+    fn single_pe_barrier_is_noop() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            for _ in 0..1000 {
+                ctx.barrier_all();
+            }
+        });
+    }
+}

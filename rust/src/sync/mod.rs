@@ -1,0 +1,8 @@
+//! Synchronisation: barriers, ordering (fence/quiet), and point-to-point
+//! waits — the glue of the one-sided model (§3.2).
+
+pub mod barrier;
+pub mod order;
+pub mod wait;
+
+pub use wait::CmpOp;

@@ -1,0 +1,95 @@
+//! Memory-ordering primitives: `shmem_fence` and `shmem_quiet`.
+//!
+//! On a shared-memory node every put is a synchronous memory copy performed
+//! by the origin core, so by the time `put` returns the stores have been
+//! *issued*. What fence/quiet must still guarantee is **ordering as observed
+//! by other PEs**:
+//!
+//! * `fence` — puts to the *same* PE are delivered in order. x86-TSO already
+//!   orders normal stores; a compiler fence prevents reordering by the
+//!   optimiser, and a `Release` fence covers the weakly-ordered case.
+//! * `quiet` — all outstanding puts (to *all* PEs) are complete and visible.
+//!   Our non-temporal copy variant uses weakly-ordered streaming stores, so
+//!   quiet must issue a full `SeqCst` fence (which lowers to `mfence` on
+//!   x86, ordering streaming stores too — `sfence` semantics included).
+
+use crate::pe::Ctx;
+use std::sync::atomic::{fence, Ordering};
+
+impl Ctx {
+    /// `shmem_fence`: order puts to each PE.
+    #[inline]
+    pub fn fence(&self) {
+        fence(Ordering::Release);
+    }
+
+    /// `shmem_quiet`: complete all outstanding puts; afterwards any PE that
+    /// observes a subsequent store of ours also observes all prior puts.
+    #[inline]
+    pub fn quiet(&self) {
+        fence(Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::pe::{PoshConfig, World};
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn fence_and_quiet_are_callable() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            ctx.fence();
+            ctx.quiet();
+            ctx.barrier_all();
+        });
+    }
+
+    /// Message-passing litmus: PE0 puts data then (after fence) raises a
+    /// flag on PE1; PE1 spins on the flag and must observe the data.
+    #[test]
+    fn fence_orders_put_then_flag() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let data = ctx.shmalloc_n::<u64>(64).unwrap();
+            let flag = ctx.shmalloc_n::<u64>(1).unwrap();
+            for round in 1..200u64 {
+                if ctx.my_pe() == 0 {
+                    let payload = vec![round; 64];
+                    ctx.put(data, &payload, 1);
+                    ctx.fence();
+                    ctx.put_one(flag, round, 1);
+                } else {
+                    ctx.wait_until(flag, crate::sync::CmpOp::Ge, round);
+                    let seen = unsafe { ctx.local(data).to_vec() };
+                    assert!(seen.iter().all(|&x| x == round), "round {round}: {seen:?}");
+                }
+                ctx.barrier_all();
+            }
+        });
+    }
+
+    /// The barrier itself must include quiet semantics: data put before the
+    /// barrier is visible to everyone after it, with no explicit flag.
+    #[test]
+    fn barrier_includes_quiet() {
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let slot = ctx.shmalloc_n::<u64>(3).unwrap();
+            for round in 1..100u64 {
+                // Everyone writes its own slot on every PE.
+                for pe in 0..3 {
+                    ctx.put(slot.slice(ctx.my_pe(), 1), &[round * 10 + ctx.my_pe() as u64], pe);
+                }
+                ctx.barrier_all();
+                let local = unsafe { ctx.local(slot) };
+                for (i, &v) in local.iter().enumerate() {
+                    assert_eq!(v, round * 10 + i as u64, "round {round}");
+                }
+                ctx.barrier_all();
+            }
+            let _ = Ordering::SeqCst;
+        });
+    }
+}

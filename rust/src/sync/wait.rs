@@ -1,0 +1,133 @@
+//! `shmem_wait` / `shmem_wait_until`: block until a *local* symmetric
+//! variable satisfies a condition — the receiver half of the flag-passing
+//! idiom one-sided programs use instead of receives.
+
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+use std::sync::atomic::Ordering;
+
+/// Comparison operators of `shmem_*_wait_until` (SHMEM_CMP_*).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CmpOp {
+    /// Equal.
+    Eq,
+    /// Not equal.
+    Ne,
+    /// Greater than.
+    Gt,
+    /// Greater or equal.
+    Ge,
+    /// Less than.
+    Lt,
+    /// Less or equal.
+    Le,
+}
+
+impl CmpOp {
+    /// Evaluate the comparison.
+    #[inline]
+    pub fn eval<T: PartialOrd>(&self, lhs: T, rhs: T) -> bool {
+        match self {
+            CmpOp::Eq => lhs == rhs,
+            CmpOp::Ne => lhs != rhs,
+            CmpOp::Gt => lhs > rhs,
+            CmpOp::Ge => lhs >= rhs,
+            CmpOp::Lt => lhs < rhs,
+            CmpOp::Le => lhs <= rhs,
+        }
+    }
+}
+
+/// Integer types on which remote PEs may signal and local PEs may wait.
+/// The load must be atomic because the writer is another PE.
+pub trait WaitableInt: Copy + PartialOrd + 'static {
+    /// Atomically load the value at `ptr`.
+    ///
+    /// # Safety
+    /// `ptr` must be valid and naturally aligned.
+    unsafe fn atomic_load(ptr: *const Self) -> Self;
+}
+
+macro_rules! impl_waitable {
+    ($($t:ty => $a:ty),+ $(,)?) => {$(
+        impl WaitableInt for $t {
+            #[inline]
+            unsafe fn atomic_load(ptr: *const Self) -> Self {
+                (&*(ptr as *const $a)).load(Ordering::Acquire) as $t
+            }
+        }
+    )+};
+}
+
+impl_waitable!(
+    i32 => std::sync::atomic::AtomicI32,
+    u32 => std::sync::atomic::AtomicU32,
+    i64 => std::sync::atomic::AtomicI64,
+    u64 => std::sync::atomic::AtomicU64,
+    isize => std::sync::atomic::AtomicIsize,
+    usize => std::sync::atomic::AtomicUsize,
+);
+
+impl Ctx {
+    /// `shmem_wait_until`: spin until `*ptr OP value` on the **local** copy
+    /// of the symmetric variable.
+    pub fn wait_until<T: WaitableInt>(&self, ptr: SymPtr<T>, op: CmpOp, value: T) {
+        // SAFETY: handle is in-bounds; loads are atomic.
+        let addr = unsafe { self.remote_addr(ptr, self.my_pe()) } as *const T;
+        self.spin_wait(|| op.eval(unsafe { T::atomic_load(addr) }, value));
+    }
+
+    /// `shmem_wait`: spin until the variable *changes from* `value`.
+    pub fn wait<T: WaitableInt>(&self, ptr: SymPtr<T>, value: T) {
+        self.wait_until(ptr, CmpOp::Ne, value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn cmp_ops() {
+        assert!(CmpOp::Eq.eval(3, 3));
+        assert!(CmpOp::Ne.eval(3, 4));
+        assert!(CmpOp::Gt.eval(5, 4));
+        assert!(CmpOp::Ge.eval(4, 4));
+        assert!(CmpOp::Lt.eval(3, 4));
+        assert!(CmpOp::Le.eval(4, 4));
+        assert!(!CmpOp::Gt.eval(4, 4));
+    }
+
+    #[test]
+    fn wait_until_released_by_remote_put() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let flag = ctx.shmalloc_n::<i64>(1).unwrap();
+            if ctx.my_pe() == 0 {
+                // Let PE1 get into the wait first (best effort), then signal.
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                ctx.put_one(flag, 42, 1);
+            } else {
+                ctx.wait_until(flag, CmpOp::Eq, 42);
+                assert_eq!(ctx.get_one(flag, 1), 42);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn wait_is_change_from() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let flag = ctx.shmalloc_n::<u64>(1).unwrap();
+            if ctx.my_pe() == 0 {
+                ctx.put_one(flag, 7, 1);
+            } else {
+                ctx.wait(flag, 0); // waits for "!= 0"
+                assert_eq!(ctx.get_one(flag, 1), 7);
+            }
+            ctx.barrier_all();
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! Small self-contained utilities: PRNG, statistics, a property-testing
+//! harness, and timing helpers.
+//!
+//! This image has no network access and the vendored registry carries neither
+//! `rand` nor `proptest` nor `criterion`, so the pieces of those crates the
+//! rest of the repository needs are implemented here (deterministic xorshift
+//! PRNG, percentile/fit statistics, a shrinking property harness, and the
+//! paper's §5 measurement protocol in [`crate::bench`]).
+
+pub mod prng;
+pub mod quickcheck;
+pub mod stats;
+
+/// Round `n` up to the next multiple of `align` (`align` must be a power of
+/// two). Used throughout the symmetric-heap allocator and the copy engine.
+#[inline(always)]
+pub const fn align_up(n: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    (n + align - 1) & !(align - 1)
+}
+
+/// Round `n` down to a multiple of `align` (power of two).
+#[inline(always)]
+pub const fn align_down(n: usize, align: usize) -> usize {
+    debug_assert!(align.is_power_of_two());
+    n & !(align - 1)
+}
+
+/// `true` if `ptr` is aligned to `align` bytes.
+#[inline(always)]
+pub fn is_aligned(ptr: *const u8, align: usize) -> bool {
+    (ptr as usize) & (align - 1) == 0
+}
+
+/// Format a byte count the way the paper's tables do (powers of two).
+pub fn fmt_bytes(n: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if v.fract() == 0.0 {
+        format!("{}{}", v as u64, UNITS[u])
+    } else {
+        format!("{:.1}{}", v, UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_basic() {
+        assert_eq!(align_up(0, 8), 0);
+        assert_eq!(align_up(1, 8), 8);
+        assert_eq!(align_up(8, 8), 8);
+        assert_eq!(align_up(9, 8), 16);
+        assert_eq!(align_up(4095, 4096), 4096);
+        assert_eq!(align_up(4097, 4096), 8192);
+    }
+
+    #[test]
+    fn align_down_basic() {
+        assert_eq!(align_down(0, 8), 0);
+        assert_eq!(align_down(7, 8), 0);
+        assert_eq!(align_down(8, 8), 8);
+        assert_eq!(align_down(4097, 4096), 4096);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(8), "8B");
+        assert_eq!(fmt_bytes(1024), "1KiB");
+        assert_eq!(fmt_bytes(1536), "1.5KiB");
+        assert_eq!(fmt_bytes(64 << 20), "64MiB");
+    }
+}

@@ -1,0 +1,279 @@
+//! A minimal shrinking property-testing harness (the vendored registry on
+//! this image carries no `proptest`/`quickcheck`).
+//!
+//! Model: a property is a function from a deterministically-generated input
+//! to `Result<(), String>`. The harness runs `cases` random inputs; on the
+//! first failure it greedily shrinks the input via the `Shrink`
+//! implementation and reports the minimal counterexample together with the
+//! seed needed to replay it.
+//!
+//! ```no_run
+//! use posh::util::quickcheck::{forall, Gen};
+//! forall("sort is idempotent", 200, |g| {
+//!     let mut v = g.vec_i64(0..64, -100..100);
+//!     v.sort();
+//!     let w = { let mut w = v.clone(); w.sort(); w };
+//!     if v == w { Ok(()) } else { Err(format!("{v:?} != {w:?}")) }
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+use std::ops::Range;
+
+/// Input generator handed to properties; wraps a deterministic RNG and
+/// records sizes so failures replay exactly.
+pub struct Gen {
+    rng: Rng,
+    /// The seed of this case (for the failure report).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Build a generator for one case.
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), seed }
+    }
+
+    /// Uniform `usize` in `range`.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        self.rng.usize_in(range.start, range.end)
+    }
+
+    /// Uniform `i64` in `range`.
+    pub fn i64_in(&mut self, range: Range<i64>) -> i64 {
+        range.start + self.rng.next_below((range.end - range.start) as u64) as i64
+    }
+
+    /// Uniform `f64` in `[0,1)`.
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// A vector of `i64` with random length in `len` and elements in `elems`.
+    pub fn vec_i64(&mut self, len: Range<usize>, elems: Range<i64>) -> Vec<i64> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.i64_in(elems.clone())).collect()
+    }
+
+    /// A vector of `usize`.
+    pub fn vec_usize(&mut self, len: Range<usize>, elems: Range<usize>) -> Vec<usize> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.usize_in(elems.clone())).collect()
+    }
+
+    /// Random bytes of length in `len`.
+    pub fn bytes(&mut self, len: Range<usize>) -> Vec<u8> {
+        let n = self.usize_in(len);
+        let mut v = vec![0u8; n];
+        self.rng.fill_bytes(&mut v);
+        v
+    }
+
+    /// Pick one of the given items (cloned).
+    pub fn pick<T: Clone>(&mut self, xs: &[T]) -> T {
+        self.rng.choose(xs).clone()
+    }
+
+    /// Access the raw RNG (e.g. to derive nested structures).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` on `cases` deterministic random inputs; panic with the seed and
+/// message of the first failure. Base seed is fixed so CI is reproducible;
+/// override with env `POSH_QC_SEED` to explore a different region, or
+/// `POSH_QC_CASES` to scale the number of cases.
+pub fn forall<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base = std::env::var("POSH_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    let cases = std::env::var("POSH_QC_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {i} (replay: POSH_QC_SEED={seed} \
+                 POSH_QC_CASES=1):\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Values that know how to propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate simpler values, in decreasing order of aggressiveness.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for i64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self < 0 {
+                out.push(-self);
+            }
+            out.push(self - self.signum());
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // drop one element
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+            let mut v = self.clone();
+            v.remove(0);
+            out.push(v);
+        }
+        // shrink one element
+        for (i, x) in self.iter().enumerate().take(8) {
+            for sx in x.shrink() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Property over an explicit `Shrink` input: generate with `gen_fn`, test
+/// with `prop`, shrink the first counterexample to a local minimum.
+pub fn forall_shrink<T, G, F>(name: &str, cases: u64, mut gen_fn: G, mut prop: F)
+where
+    T: Shrink + std::fmt::Debug,
+    G: FnMut(&mut Gen) -> T,
+    F: FnMut(&T) -> Result<(), String>,
+{
+    let base = std::env::var("POSH_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut g = Gen::new(seed);
+        let input = gen_fn(&mut g);
+        if let Err(first_msg) = prop(&input) {
+            // Greedy shrink loop.
+            let mut cur = input;
+            let mut msg = first_msg;
+            let mut budget = 1000usize;
+            'outer: while budget > 0 {
+                for cand in cur.shrink() {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                }
+                break; // local minimum
+            }
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed});\n  minimal \
+                 counterexample: {cur:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("reverse twice", 100, |g| {
+            let v = g.vec_i64(0..32, -10..10);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            if v == w { Ok(()) } else { Err("reverse^2 != id".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        forall("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_finds_small_counterexample() {
+        // Property: no vector contains an element >= 50. The shrinker should
+        // reduce a random failing vector to something tiny.
+        let result = std::panic::catch_unwind(|| {
+            forall_shrink(
+                "no big elems",
+                50,
+                |g| g.vec_i64(0..64, 0..100),
+                |v: &Vec<i64>| {
+                    if v.iter().all(|&x| x < 50) {
+                        Ok(())
+                    } else {
+                        Err("has big elem".into())
+                    }
+                },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("minimal counterexample"), "{msg}");
+        // The minimal failing vector should be short (shrinker did work).
+        // Extract the debug-printed vec and check its length crudely.
+        let inner = msg.split("counterexample: ").nth(1).unwrap();
+        let vec_str = inner.split('\n').next().unwrap();
+        assert!(vec_str.matches(',').count() <= 2, "not shrunk: {vec_str}");
+    }
+
+    #[test]
+    fn i64_shrink_moves_toward_zero() {
+        let c = 100i64.shrink();
+        assert!(c.contains(&0));
+        assert!(c.contains(&50));
+    }
+}

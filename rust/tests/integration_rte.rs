@@ -1,0 +1,149 @@
+//! Integration tests of the `oshrun` binary itself (§4.7): launching real
+//! jobs, IO forwarding, failure handling, the pre-parser CLI, and segment
+//! cleanup. Uses `CARGO_BIN_EXE_oshrun`, which cargo builds for us.
+
+use std::process::Command;
+
+fn oshrun() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_oshrun"))
+}
+
+#[test]
+fn info_reports_platform() {
+    let out = oshrun().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("POSH-RS"));
+    assert!(text.contains("available copy impls"));
+    assert!(text.contains("memcpy"));
+}
+
+#[test]
+fn launches_shell_job_with_rank_prefixed_io() {
+    let out = oshrun()
+        .args(["-np", "3", "--", "/bin/sh", "-c", "echo hello from $POSH_RANK"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for pe in 0..3 {
+        assert!(
+            text.contains(&format!("[PE {pe}] hello from {pe}")),
+            "missing PE {pe} line in:\n{text}"
+        );
+    }
+}
+
+#[test]
+fn propagates_failure_exit_code_and_kills_job() {
+    let t0 = std::time::Instant::now();
+    let out = oshrun()
+        .args([
+            "-np",
+            "3",
+            "--",
+            "/bin/sh",
+            "-c",
+            "if [ \"$POSH_RANK\" = 2 ]; then exit 7; else sleep 60; fi",
+        ])
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(7));
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(30),
+        "monitor must kill the sleepers promptly"
+    );
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("PE 2 failed"), "{err}");
+}
+
+#[test]
+fn env_knobs_are_forwarded() {
+    let out = oshrun()
+        .args([
+            "-np", "1", "--heap", "16M", "--copy", "sse2", "--coll", "tree", "--safe", "--",
+            "/bin/sh", "-c",
+            "echo heap=$POSH_HEAP_SIZE copy=$POSH_COPY coll=$POSH_COLL_ALGO safe=$POSH_SAFE",
+        ])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("heap=16M"));
+    assert!(text.contains("copy=sse2"));
+    assert!(text.contains("coll=tree"));
+    assert!(text.contains("safe=1"));
+}
+
+#[test]
+fn preparse_cli_transforms_the_demo_program() {
+    let src = concat!(env!("CARGO_MANIFEST_DIR"), "/examples/c/ring.c");
+    let out_c = std::env::temp_dir().join(format!("posh_ring_{}.c", std::process::id()));
+    let out_m = std::env::temp_dir().join(format!("posh_ring_{}.manifest", std::process::id()));
+    let out = oshrun()
+        .args([
+            "preparse",
+            src,
+            "-o",
+            out_c.to_str().unwrap(),
+            "--manifest",
+            out_m.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = String::from_utf8_lossy(&out.stderr);
+    // The five file-scope objects, and only those.
+    for name in ["ring_value", "hops", "trace", "tag", "world_visible_flag"] {
+        assert!(report.contains(name), "missing {name} in report:\n{report}");
+    }
+    assert!(!report.contains("calls"), "function-local static must not be lifted");
+
+    let transformed = std::fs::read_to_string(&out_c).unwrap();
+    // Alloc block follows start_pes; both returns get epilogues.
+    let sp = transformed.find("start_pes(0);").unwrap();
+    assert!(transformed[sp..].contains("__posh_static_ring_value = shmemalign(8, 8);"));
+    assert!(transformed.contains("memcpy(__posh_static_hops, &hops, 4);"));
+    assert_eq!(transformed.matches("shfree(__posh_static_trace);").count(), 2);
+
+    let manifest = std::fs::read_to_string(&out_m).unwrap();
+    assert!(manifest.contains("trace double 64 512 8 bss"));
+    assert!(manifest.contains("hops int 1 4 4 data"));
+}
+
+#[test]
+fn clean_subcommand_sweeps_stale_segments() {
+    use posh::shm::naming::heap_segment_name;
+    use posh::shm::posix::PosixShmSegment;
+    // Fabricate a stale segment as if a job had crashed.
+    let job = posh::shm::naming::fresh_job_id();
+    let name = heap_segment_name(job, 0);
+    let seg = PosixShmSegment::create(&name, 4096).unwrap();
+    std::mem::forget(seg); // crash simulation: owner never unlinks
+    assert!(std::path::Path::new(&format!("/dev/shm{name}")).exists());
+
+    let out = oshrun().arg("clean").output().unwrap();
+    assert!(out.status.success());
+    assert!(!std::path::Path::new(&format!("/dev/shm{name}")).exists());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("removed"), "{text}");
+}
+
+#[test]
+fn quickstart_example_runs_under_oshrun_if_built() {
+    // Examples aren't guaranteed to be built before tests; skip when absent.
+    let exe = std::path::Path::new(env!("CARGO_BIN_EXE_oshrun"))
+        .parent()
+        .unwrap()
+        .join("examples/quickstart");
+    if !exe.exists() {
+        eprintln!("skipping: {exe:?} not built (cargo build --examples)");
+        return;
+    }
+    let out = oshrun()
+        .args(["-np", "3", "--heap", "16M", "--", exe.to_str().unwrap()])
+        .output()
+        .unwrap();
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(text.contains("quickstart OK"), "{text}");
+}

@@ -1,0 +1,139 @@
+//! End-to-end multi-PROCESS integration test (`harness = false`).
+//!
+//! The test binary plays both roles: invoked plain it acts as the launcher
+//! (spawning itself N times under the RTE, §4.7); invoked with the `POSH_*`
+//! environment it acts as a PE, attaches to the job's POSIX segments, and
+//! runs a full SHMEM workout — put/get, atomics, locks, barrier, reduce,
+//! broadcast, fcollect — over *real* `/dev/shm` segments across processes.
+
+use posh::collectives::{ActiveSet, ReduceOp};
+use posh::pe::World;
+use posh::rte::gateway::Gateway;
+use posh::rte::launcher::{JobSpec, Launcher};
+use posh::rte::monitor;
+
+const N_PES: usize = 3;
+
+fn pe_body() {
+    let world = World::from_env().expect("attach from oshrun env");
+    let ctx = world.my_ctx();
+    let me = ctx.my_pe();
+    let n = ctx.n_pes();
+    assert_eq!(n, N_PES);
+
+    // p2p ring.
+    let cell = ctx.shmalloc_n::<i64>(1).unwrap();
+    ctx.put_one(cell, me as i64 + 1, (me + 1) % n);
+    ctx.barrier_all();
+    let got = ctx.get_one(cell, me);
+    assert_eq!(got, ((me + n - 1) % n) as i64 + 1, "ring value on PE {me}");
+
+    // bulk put/get across processes.
+    let buf = ctx.shmalloc_n::<u64>(4096).unwrap();
+    if me == 0 {
+        let data: Vec<u64> = (0..4096u64).map(|i| i * 3 + 1).collect();
+        for pe in 1..n {
+            ctx.put(buf, &data, pe);
+        }
+    }
+    ctx.barrier_all();
+    if me != 0 {
+        let local = unsafe { ctx.local(buf) };
+        assert!(local.iter().enumerate().all(|(i, &v)| v == i as u64 * 3 + 1));
+    }
+
+    // atomics across processes.
+    let counter = ctx.shmalloc_n::<i64>(1).unwrap();
+    for _ in 0..500 {
+        ctx.atomic_add(counter, 1, 0);
+    }
+    ctx.barrier_all();
+    if me == 0 {
+        assert_eq!(ctx.get_one(counter, 0), (n as i64) * 500);
+    }
+
+    // lock across processes.
+    let lock = ctx.shmalloc_n::<i64>(1).unwrap();
+    let shared = ctx.shmalloc_n::<i64>(1).unwrap();
+    for _ in 0..100 {
+        ctx.with_lock(lock, || {
+            let v = ctx.get_one(shared, 0);
+            ctx.put_one(shared, v + 1, 0);
+        });
+    }
+    ctx.barrier_all();
+    if me == 0 {
+        assert_eq!(ctx.get_one(shared, 0), (n as i64) * 100);
+    }
+
+    // collectives across processes.
+    let set = ActiveSet::world(n);
+    let src = ctx.shmalloc_n::<i64>(32).unwrap();
+    let dst = ctx.shmalloc_n::<i64>(32).unwrap();
+    unsafe {
+        for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+            *s = (me * 10 + j) as i64;
+        }
+    }
+    ctx.barrier_all();
+    ctx.reduce_to_all(dst, src, 32, ReduceOp::Sum, &set);
+    for j in 0..32 {
+        let want: i64 = (0..n).map(|pe| (pe * 10 + j) as i64).sum();
+        assert_eq!(unsafe { ctx.local(dst)[j] }, want);
+    }
+    ctx.broadcast(dst, src, 32, 1, &set);
+    if me != 1 {
+        assert_eq!(unsafe { ctx.local(dst)[5] }, 15);
+    }
+    let gat = ctx.shmalloc_n::<i64>(32 * n).unwrap();
+    ctx.fcollect(gat, src, 32, &set);
+    for pe in 0..n {
+        assert_eq!(unsafe { ctx.local(gat)[pe * 32 + 7] }, (pe * 10 + 7) as i64);
+    }
+
+    ctx.barrier_all();
+    println!("PE {me}: process-mode workout OK");
+}
+
+fn launcher_role() {
+    let exe = std::env::current_exe().unwrap();
+    let mut spec = JobSpec::new(N_PES, exe.to_str().unwrap());
+    // libtest arg so a stray harness doesn't eat the run; ignored by us.
+    spec.args = vec!["--posh-child".into()];
+    spec.env = vec![("POSH_HEAP_SIZE".into(), "8M".into())];
+    let launcher = Launcher::new(spec);
+    let job = launcher.job_id;
+    let mut pes = launcher.spawn_all().expect("spawn PEs");
+    let mut gw = Gateway::new();
+    for pe in pes.iter_mut() {
+        gw.attach(pe.rank, false, pe.child.stdout.take().unwrap());
+        gw.attach(pe.rank, true, pe.child.stderr.take().unwrap());
+    }
+    let io = std::thread::spawn(move || {
+        let mut sink = Vec::new();
+        gw.pump_to(&mut sink).unwrap()
+    });
+    let outcome = monitor::wait_all(pes);
+    let lines = io.join().unwrap();
+    monitor::cleanup_job_segments(job, N_PES);
+    assert!(
+        outcome.success(),
+        "job failed: {:?}\nIO:\n{}",
+        outcome.exit_codes,
+        lines.iter().map(|l| l.render()).collect::<Vec<_>>().join("\n")
+    );
+    let ok_lines = lines
+        .iter()
+        .filter(|l| l.line.contains("process-mode workout OK"))
+        .count();
+    assert_eq!(ok_lines, N_PES, "every PE must report success");
+    println!("proc_mode integration: {N_PES} processes OK");
+}
+
+fn main() {
+    if World::env_present() {
+        pe_body();
+    } else {
+        launcher_role();
+    }
+}

@@ -1,0 +1,239 @@
+//! Property tests over the collective layer: random active sets, random
+//! payloads, every algorithm — results must match a serial oracle, and
+//! repeated collectives must not interfere (the §4.5.1 reset discipline).
+
+use posh::collectives::{ActiveSet, AlgoKind, ReduceOp};
+use posh::pe::{PoshConfig, World};
+use posh::util::quickcheck::{forall, Gen};
+
+fn algos(g: &mut Gen) -> AlgoKind {
+    g.pick(&[
+        AlgoKind::LinearPut,
+        AlgoKind::LinearGet,
+        AlgoKind::Tree,
+        AlgoKind::RecursiveDoubling,
+    ])
+}
+
+/// Random active set within a random world.
+fn random_set(g: &mut Gen, n_pes: usize) -> ActiveSet {
+    let logstride = g.usize_in(0..3);
+    let stride = 1usize << logstride;
+    let max_size = (n_pes + stride - 1) / stride;
+    let size = g.usize_in(1..max_size + 1);
+    let max_start = n_pes - (size - 1) * stride;
+    let start = g.usize_in(0..max_start);
+    ActiveSet::new(start, logstride, size, n_pes)
+}
+
+#[test]
+fn reduce_matches_oracle_random_sets() {
+    forall("reduce oracle", 25, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let set = random_set(g, n_pes);
+        let nreduce = g.usize_in(1..200);
+        let algo = algos(g);
+        let op = g.pick(&ReduceOp::all());
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n_pes, cfg).unwrap();
+        let results = w.run_collect(move |ctx| {
+            let src = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            let dst = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = contrib(ctx.my_pe(), j);
+                }
+                ctx.local_mut(dst).fill(i64::MIN);
+            }
+            ctx.barrier_all();
+            if set.contains(ctx.my_pe()) {
+                ctx.reduce_to_all(dst, src, nreduce, op, &set);
+                Some(unsafe { ctx.local(dst).to_vec() })
+            } else {
+                None
+            }
+        });
+        // Oracle.
+        let members: Vec<usize> = set.ranks().collect();
+        for j in 0..nreduce {
+            let mut acc = contrib(members[0], j);
+            for &m in &members[1..] {
+                acc = combine(op, acc, contrib(m, j));
+            }
+            for &m in &members {
+                let got = results[m].as_ref().unwrap()[j];
+                if got != acc {
+                    return Err(format!(
+                        "{algo:?} {op:?} set {set:?} elem {j}: PE {m} got {got}, want {acc}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn contrib(pe: usize, j: usize) -> i64 {
+    ((pe as i64 + 3) * (j as i64 + 7)) % 41 + 1
+}
+
+fn combine(op: ReduceOp, a: i64, b: i64) -> i64 {
+    use posh::collectives::reduce::ReduceElem;
+    i64::combine(op, a, b)
+}
+
+#[test]
+fn broadcast_matches_oracle_random_roots() {
+    forall("broadcast oracle", 25, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let set = random_set(g, n_pes);
+        let nelems = g.usize_in(1..300);
+        let root_idx = g.usize_in(0..set.size);
+        let algo = algos(g);
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n_pes, cfg).unwrap();
+        let results = w.run_collect(move |ctx| {
+            let src = ctx.shmalloc_n::<u64>(nelems).unwrap();
+            let dst = ctx.shmalloc_n::<u64>(nelems).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 1_000 + j) as u64;
+                }
+                ctx.local_mut(dst).fill(u64::MAX);
+            }
+            ctx.barrier_all();
+            if set.contains(ctx.my_pe()) {
+                ctx.broadcast(dst, src, nelems, root_idx, &set);
+                Some(unsafe { ctx.local(dst).to_vec() })
+            } else {
+                None
+            }
+        });
+        let root_pe = set.rank_at(root_idx);
+        for m in set.ranks() {
+            let got = results[m].as_ref().unwrap();
+            if m == root_pe {
+                if got.iter().any(|&v| v != u64::MAX) {
+                    return Err(format!("{algo:?}: root target written"));
+                }
+            } else {
+                for (j, &v) in got.iter().enumerate() {
+                    let want = (root_pe * 1_000 + j) as u64;
+                    if v != want {
+                        return Err(format!(
+                            "{algo:?} set {set:?} root {root_idx}: PE {m} elem {j} = {v}, want {want}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fcollect_matches_oracle() {
+    forall("fcollect oracle", 20, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..6);
+        let set = random_set(g, n_pes);
+        let nelems = g.usize_in(1..120);
+        let algo = algos(g);
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n_pes, cfg).unwrap();
+        let results = w.run_collect(move |ctx| {
+            let src = ctx.shmalloc_n::<u32>(nelems).unwrap();
+            let dst = ctx.shmalloc_n::<u32>(nelems * set.size).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 10_000 + j) as u32;
+                }
+            }
+            ctx.barrier_all();
+            if set.contains(ctx.my_pe()) {
+                ctx.fcollect(dst, src, nelems, &set);
+                Some(unsafe { ctx.local(dst).to_vec() })
+            } else {
+                None
+            }
+        });
+        for m in set.ranks() {
+            let got = results[m].as_ref().unwrap();
+            for (i, member) in set.ranks().enumerate() {
+                for j in 0..nelems {
+                    let want = (member * 10_000 + j) as u32;
+                    if got[i * nelems + j] != want {
+                        return Err(format!(
+                            "{algo:?}: PE {m} block {i} elem {j} = {}, want {want}",
+                            got[i * nelems + j]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Back-to-back mixed collectives on the same world must not interfere —
+/// the sharpest test of the reset/§4.5.2 discipline.
+#[test]
+fn mixed_collective_sequences_are_isolated() {
+    forall("mixed sequences", 10, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..5);
+        let rounds = g.usize_in(3..10);
+        let algo = algos(g);
+        let seq: Vec<u8> = (0..rounds).map(|_| g.usize_in(0..4) as u8).collect();
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n_pes, cfg).unwrap();
+        let seq2 = seq.clone();
+        let oks = w.run_collect(move |ctx| {
+            let n = ctx.n_pes();
+            let set = ActiveSet::world(n);
+            let a = ctx.shmalloc_n::<i64>(64).unwrap();
+            let b = ctx.shmalloc_n::<i64>(64 * n).unwrap();
+            let mut ok = true;
+            for (round, &kind) in seq2.iter().enumerate() {
+                unsafe {
+                    for (j, s) in ctx.local_mut(a).iter_mut().enumerate() {
+                        *s = (round * 31 + ctx.my_pe() * 7 + j) as i64;
+                    }
+                }
+                match kind {
+                    0 => {
+                        ctx.reduce_to_all(b.slice(0, 64), a, 64, ReduceOp::Sum, &set);
+                        let want: i64 = (0..n).map(|pe| (round * 31 + pe * 7) as i64).sum();
+                        ok &= unsafe { ctx.local(b)[0] } == want;
+                    }
+                    1 => {
+                        let root = round % n;
+                        ctx.broadcast(b.slice(0, 64), a, 64, root, &set);
+                        if ctx.my_pe() != set.rank_at(root) {
+                            ok &= unsafe { ctx.local(b)[63] }
+                                == (round * 31 + root * 7 + 63) as i64;
+                        }
+                    }
+                    2 => {
+                        ctx.fcollect(b, a, 64, &set);
+                        for pe in 0..n {
+                            ok &= unsafe { ctx.local(b)[pe * 64] }
+                                == (round * 31 + pe * 7) as i64;
+                        }
+                    }
+                    _ => {
+                        ctx.barrier(&set);
+                    }
+                }
+            }
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("sequence {seq:?} with {algo:?} corrupted data"))
+        }
+    });
+}

@@ -1,0 +1,180 @@
+//! Property tests over the data-movement layer: copy engines, strided
+//! transfers, put/get composition, and the UPC baseline — all against
+//! byte-exact oracles.
+
+use posh::baseline::upc::{Consistency, UpcWorld};
+use posh::mem::copy::{copy_slice_with, CopyImpl};
+use posh::pe::{PoshConfig, World};
+use posh::util::quickcheck::{forall, Gen};
+
+/// Every engine must be byte-identical to the stock copy on arbitrary
+/// lengths and (simulated) alignments.
+#[test]
+fn all_engines_agree_with_stock() {
+    forall("engines agree", 150, |g: &mut Gen| {
+        let data = g.bytes(0..20_000);
+        let head = g.usize_in(0..16.min(data.len() + 1));
+        let src = &data[head..];
+        for imp in CopyImpl::available() {
+            let mut dst = vec![0u8; src.len()];
+            copy_slice_with(imp, &mut dst, src);
+            if dst != src {
+                return Err(format!("{imp:?} corrupted {} bytes (head {head})", src.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// iput/iget round-trip: scatter with stride, gather with the same stride,
+/// recover the original.
+#[test]
+fn strided_roundtrip_recovers_original() {
+    let w = World::threads(2, PoshConfig::small()).unwrap();
+    forall("iput/iget roundtrip", 60, |g: &mut Gen| {
+        let nelems = g.usize_in(1..200);
+        let dst_stride = g.usize_in(1..5);
+        let src_stride = g.usize_in(1..5);
+        let ok = w.run_collect(move |ctx| {
+            let span = (nelems - 1) * dst_stride + 1;
+            let remote = ctx.shmalloc_n::<i64>(span).unwrap();
+            let mut ok = true;
+            if ctx.my_pe() == 0 {
+                let src: Vec<i64> =
+                    (0..(nelems - 1) * src_stride + 1).map(|i| i as i64 * 7 - 3).collect();
+                ctx.iput(remote, &src, dst_stride, src_stride, nelems, 1);
+                // Gather back with the transposed strides.
+                let mut back = vec![0i64; (nelems - 1) * src_stride + 1];
+                ctx.iget(&mut back, remote, src_stride, dst_stride, nelems, 1);
+                for i in 0..nelems {
+                    ok &= back[i * src_stride] == src[i * src_stride];
+                }
+            }
+            ctx.barrier_all();
+            ctx.shfree(remote).unwrap();
+            ok
+        });
+        if ok.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("roundtrip lost data (n={nelems}, dst={dst_stride}, src={src_stride})"))
+        }
+    });
+}
+
+/// put followed by get from a third PE observes exactly the written bytes
+/// (after a barrier) for random sizes/offsets.
+#[test]
+fn put_get_third_party_consistency() {
+    let w = World::threads(3, PoshConfig::small()).unwrap();
+    forall("3-party put/get", 40, |g: &mut Gen| {
+        let len = g.usize_in(1..5000);
+        let off = g.usize_in(0..64);
+        let seed = g.usize_in(0..1_000_000) as u64;
+        let ok = w.run_collect(move |ctx| {
+            let buf = ctx.shmalloc_n::<u8>(len + off).unwrap();
+            let view = buf.slice(off, len);
+            let mut expect = vec![0u8; len];
+            let mut r = posh::util::prng::Rng::new(seed);
+            r.fill_bytes(&mut expect);
+            if ctx.my_pe() == 0 {
+                ctx.put(view, &expect, 1); // 0 writes PE 1
+            }
+            ctx.barrier_all();
+            let mut ok = true;
+            if ctx.my_pe() == 2 {
+                let mut got = vec![0u8; len];
+                ctx.get(&mut got, view, 1); // 2 reads PE 1
+                ok = got == expect;
+            }
+            ctx.barrier_all();
+            ctx.shfree(buf).unwrap();
+            ok
+        });
+        if ok.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("third-party get diverged (len {len}, off {off})"))
+        }
+    });
+}
+
+/// UPC baseline: memput/memget/memcpy against a Vec oracle for random
+/// programs of operations.
+#[test]
+fn upc_baseline_matches_oracle() {
+    forall("upc oracle", 40, |g: &mut Gen| {
+        let threads = g.usize_in(1..4);
+        let seg = 1 << 14;
+        let w = UpcWorld::new(threads, seg).unwrap();
+        // Oracle: a plain Vec per thread.
+        let mut oracle: Vec<Vec<u8>> = vec![vec![0u8; seg]; threads];
+        for _ in 0..g.usize_in(1..40) {
+            let t = g.usize_in(0..threads);
+            let len = g.usize_in(1..512);
+            let off = g.usize_in(0..seg - len);
+            let mode = if g.bool(0.3) { Consistency::Strict } else { Consistency::Relaxed };
+            match g.usize_in(0..3) {
+                0 => {
+                    let data = g.bytes(len..len + 1);
+                    w.memput(w.global_ptr(t, off), &data, mode);
+                    oracle[t][off..off + len].copy_from_slice(&data);
+                }
+                1 => {
+                    let mut got = vec![0u8; len];
+                    w.memget(&mut got, w.global_ptr(t, off), mode);
+                    if got != oracle[t][off..off + len] {
+                        return Err(format!("memget diverged at t{t} off {off} len {len}"));
+                    }
+                }
+                _ => {
+                    let t2 = g.usize_in(0..threads);
+                    let off2 = g.usize_in(0..seg - len);
+                    // Skip same-thread overlapping windows: UPC's memcpy has
+                    // memmove semantics but our Vec oracle models distinct
+                    // windows only.
+                    if t == t2 && (off.max(off2) - off.min(off2)) < len {
+                        continue;
+                    }
+                    w.memcpy(w.global_ptr(t2, off2), w.global_ptr(t, off), len, mode);
+                    let src: Vec<u8> = oracle[t][off..off + len].to_vec();
+                    oracle[t2][off2..off2 + len].copy_from_slice(&src);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Locks under randomized critical-section lengths still give exact counts.
+#[test]
+fn lock_mutual_exclusion_randomized() {
+    forall("lock excl", 8, |g: &mut Gen| {
+        let n = g.usize_in(2..5);
+        let iters = g.usize_in(20..120);
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        let totals = w.run_collect(move |ctx| {
+            let lock = ctx.shmalloc_n::<i64>(1).unwrap();
+            let cell = ctx.shmalloc_n::<u64>(1).unwrap();
+            let mut local_rng = posh::util::prng::Rng::for_pe(9, ctx.my_pe());
+            for _ in 0..iters {
+                ctx.with_lock(lock, || {
+                    let v = ctx.get_one(cell, 0);
+                    // Variable-length critical section.
+                    for _ in 0..local_rng.next_below(64) {
+                        std::hint::spin_loop();
+                    }
+                    ctx.put_one(cell, v + 1, 0);
+                });
+            }
+            ctx.barrier_all();
+            ctx.get_one(cell, 0)
+        });
+        let want = (n * iters) as u64;
+        if totals.iter().all(|&t| t == want) {
+            Ok(())
+        } else {
+            Err(format!("lost updates: {totals:?}, want {want}"))
+        }
+    });
+}

@@ -1,0 +1,186 @@
+//! Property tests for the paper's memory-model theorems.
+//!
+//! * **Fact 1** — identical allocation sequences produce identical offsets
+//!   on every PE, for arbitrary random alloc/align/free/realloc programs.
+//! * **Corollary 1** — the address-translation formula resolves to the same
+//!   cell the handle resolves to, for random handles on random heaps.
+//! * **Lemma 1** — non-symmetric temporaries inside a collective leave the
+//!   heaps byte-symmetric after the collective completes.
+
+use posh::collectives::{ActiveSet, AlgoKind, ReduceOp};
+use posh::pe::{PoshConfig, World};
+use posh::symheap::handle::translate;
+use posh::util::quickcheck::{forall, Gen};
+
+/// Random symmetric alloc/free program, mirrored on all PEs ⇒ same handles.
+#[test]
+fn fact1_random_symmetric_programs() {
+    forall("fact1", 30, |g: &mut Gen| {
+        let n_pes = g.usize_in(1..5);
+        // Script of operations, generated once, replayed by every PE.
+        #[derive(Clone)]
+        enum Op {
+            Alloc { size: usize, align: usize },
+            Free { idx: usize },
+            Realloc { idx: usize, count: usize },
+        }
+        let n_ops = g.usize_in(1..25);
+        let mut script = Vec::new();
+        let mut live = 0usize;
+        for _ in 0..n_ops {
+            if live > 0 && g.bool(0.3) {
+                script.push(Op::Free { idx: g.usize_in(0..live) });
+                live -= 1;
+            } else if live > 0 && g.bool(0.2) {
+                script.push(Op::Realloc { idx: g.usize_in(0..live), count: g.usize_in(1..2000) });
+            } else {
+                script.push(Op::Alloc {
+                    size: g.usize_in(1..4000),
+                    align: 1 << g.usize_in(0..8),
+                });
+                live += 1;
+            }
+        }
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let script = std::sync::Arc::new(script);
+        let offsets = w.run_collect({
+            let script = std::sync::Arc::clone(&script);
+            move |ctx| {
+                let mut handles = Vec::new();
+                let mut trace = Vec::new();
+                for op in script.iter() {
+                    match op {
+                        Op::Alloc { size, align } => {
+                            let p = ctx.shmemalign_n::<u8>(*align, *size).unwrap();
+                            trace.push(p.offset());
+                            handles.push(p);
+                        }
+                        Op::Free { idx } => {
+                            let p = handles.remove(*idx);
+                            ctx.shfree(p).unwrap();
+                        }
+                        Op::Realloc { idx, count } => {
+                            let p = handles[*idx];
+                            let np = ctx.shrealloc(p, *count).unwrap();
+                            trace.push(np.offset());
+                            handles[*idx] = np;
+                        }
+                    }
+                }
+                trace.push(ctx.heap().journal_hash() as usize);
+                trace
+            }
+        });
+        for pe in 1..n_pes {
+            if offsets[pe] != offsets[0] {
+                return Err(format!(
+                    "Fact 1 violated with {n_pes} PEs: PE {pe} trace {:?} != PE 0 trace {:?}",
+                    offsets[pe], offsets[0]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Corollary 1 for random handles: formula == direct resolution.
+#[test]
+fn corollary1_random_handles() {
+    let w = World::threads(3, PoshConfig::small()).unwrap();
+    forall("corollary1", 50, |g: &mut Gen| {
+        let count = g.usize_in(1..500);
+        let seed_off = g.usize_in(0..64);
+        let ctxs = w.run_collect(move |ctx| {
+            let p = ctx.shmalloc_n::<u64>(count + seed_off).unwrap();
+            let sub = p.slice(seed_off, count);
+            let mut ok = true;
+            for pe in 0..ctx.n_pes() {
+                unsafe {
+                    let local = ctx.remote_addr(sub, ctx.my_pe()) as *const u8;
+                    let formula =
+                        translate(local, ctx.base_of(ctx.my_pe()), ctx.base_of(pe));
+                    ok &= formula as usize == ctx.remote_addr(sub, pe) as usize;
+                }
+            }
+            ctx.shfree(p).unwrap();
+            ok
+        });
+        if ctxs.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err("translation formula diverged from direct resolution".into())
+        }
+    });
+}
+
+/// Lemma 1: reductions allocate root-side scratch; afterwards allocation
+/// state must be identical across PEs (same live count, same journal-visible
+/// layout for subsequent allocations).
+#[test]
+fn lemma1_temporaries_restore_symmetry() {
+    forall("lemma1", 12, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..5);
+        let nreduce = g.usize_in(1..300);
+        let algo = g.pick(&[
+            AlgoKind::LinearPut,
+            AlgoKind::Tree,
+            AlgoKind::RecursiveDoubling,
+            AlgoKind::LinearGet,
+        ]);
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(algo);
+        let w = World::threads(n_pes, cfg).unwrap();
+        let states = w.run_collect(move |ctx| {
+            let src = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            let dst = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            unsafe {
+                for (i, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() + i) as i64;
+                }
+            }
+            ctx.barrier_all();
+            let set = ActiveSet::world(ctx.n_pes());
+            ctx.reduce_to_all(dst, src, nreduce, ReduceOp::Max, &set);
+            // After the collective: scratch freed everywhere.
+            let live = ctx.heap().live_allocations();
+            let bytes = ctx.heap().allocated_bytes();
+            // A post-collective symmetric allocation must land at the same
+            // offset on every PE — the operative meaning of Lemma 1.
+            let probe = ctx.shmalloc_n::<u8>(64).unwrap();
+            let off = probe.offset();
+            (live, bytes, off)
+        });
+        if states.windows(2).all(|w| w[0] == w[1]) && states[0].0 == 2 {
+            Ok(())
+        } else {
+            Err(format!("asymmetric post-collective state ({algo:?}): {states:?}"))
+        }
+    });
+}
+
+/// The statics area (§4.2) obeys Fact 1 too: same manifest ⇒ same offsets.
+#[test]
+fn statics_placement_symmetric() {
+    forall("statics", 30, |g: &mut Gen| {
+        let n_decls = g.usize_in(1..12);
+        let sizes: Vec<usize> = (0..n_decls).map(|_| g.usize_in(1..512)).collect();
+        let aligns: Vec<usize> = (0..n_decls).map(|_| 1usize << g.usize_in(0..5)).collect();
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        let placements = w.run_collect({
+            let sizes = sizes.clone();
+            let aligns = aligns.clone();
+            move |ctx| {
+                sizes
+                    .iter()
+                    .zip(&aligns)
+                    .map(|(&s, &a)| ctx.heap().place_static(s, a).unwrap().offset())
+                    .collect::<Vec<_>>()
+            }
+        });
+        if placements[0] == placements[1] {
+            Ok(())
+        } else {
+            Err(format!("{:?} != {:?}", placements[0], placements[1]))
+        }
+    });
+}
