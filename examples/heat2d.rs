@@ -12,20 +12,18 @@
 use posh::collectives::{ActiveSet, ReduceOp};
 use posh::pe::{Ctx, PoshConfig, World};
 
-struct Band {
-    rows: usize, // interior rows of this PE
-    cols: usize,
-}
-
 fn pe_body(ctx: Ctx, grid_rows: usize, cols: usize, iters: usize) {
     let n = ctx.n_pes();
     let me = ctx.my_pe();
+    // Interior rows of this PE's horizontal band.
     let rows = grid_rows / n + if me < grid_rows % n { 1 } else { 0 };
-    let band = Band { rows, cols };
 
     // Local band with two halo rows, double-buffered. Symmetric so
-    // neighbours can push halos one-sidedly.
-    let total = (band.rows + 2) * cols;
+    // neighbours can push halos one-sidedly. Allocation calls must be
+    // identical on every PE (Fact 1), so size every band for the *largest*
+    // one even when grid_rows % n != 0; `rows` governs the local interior.
+    let max_rows = grid_rows / n + if grid_rows % n != 0 { 1 } else { 0 };
+    let total = (max_rows + 2) * cols;
     let cur = ctx.shmalloc_n::<f64>(total).unwrap();
     let nxt = ctx.shmalloc_n::<f64>(total).unwrap();
     let res_src = ctx.shmalloc_n::<f64>(1).unwrap();
@@ -55,7 +53,7 @@ fn pe_body(ctx: Ctx, grid_rows: usize, cols: usize, iters: usize) {
         // --- Halo exchange: push my boundary rows into the neighbours'
         // halo rows (pure one-sided; no receives anywhere).
         let my_first = unsafe { ctx.local(src.slice(cols, cols)).to_vec() };
-        let my_last = unsafe { ctx.local(src.slice(band.rows * cols, cols)).to_vec() };
+        let my_last = unsafe { ctx.local(src.slice(rows * cols, cols)).to_vec() };
         if let Some(u) = up {
             // My first interior row becomes u's bottom halo. u has the same
             // row count only if ranks divide evenly; compute u's halo slot
@@ -74,10 +72,10 @@ fn pe_body(ctx: Ctx, grid_rows: usize, cols: usize, iters: usize) {
         unsafe {
             let s = ctx.local(src);
             let d = ctx.local_mut(dst);
-            for r in 1..=band.rows {
+            for r in 1..=rows {
                 // Global boundary rows are Dirichlet: keep them fixed.
                 let is_global_top = me == 0 && r == 1;
-                let is_global_bottom = down.is_none() && r == band.rows;
+                let is_global_bottom = down.is_none() && r == rows;
                 for c in 0..cols {
                     let idx = r * cols + c;
                     if is_global_top || is_global_bottom || c == 0 || c == cols - 1 {
@@ -110,7 +108,7 @@ fn pe_body(ctx: Ctx, grid_rows: usize, cols: usize, iters: usize) {
     // Sanity: heat flows downward — PE 0's band is warmer than the last's.
     let my_mean: f64 = unsafe {
         let g = ctx.local(src);
-        g[cols..(band.rows + 1) * cols].iter().sum::<f64>() / (band.rows * cols) as f64
+        g[cols..(rows + 1) * cols].iter().sum::<f64>() / (rows * cols) as f64
     };
     unsafe { ctx.local_mut(res_src)[0] = if me == 0 { my_mean } else { 0.0 } };
     ctx.barrier_all();

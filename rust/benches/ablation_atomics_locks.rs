@@ -9,13 +9,9 @@ use posh::pe::{PoshConfig, World};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 fn main() {
-    // --- Single-PE atomic op costs (no contention).
+    // --- Single-PE atomic op costs (no contention). The table is built and
+    // printed inside the PE body (measurement happens on the PE's thread).
     let w = World::threads(1, PoshConfig::small()).unwrap();
-    let mut t = Table::new(
-        "Ablation C1: atomic op latency (self, uncontended)",
-        "ns/op",
-        &["fadd", "finc", "swap", "cswap", "put_one", "get_one"],
-    );
     w.run(|ctx| {
         let cell = ctx.shmalloc_n::<i64>(1).unwrap();
         let row = vec![
@@ -53,7 +49,6 @@ fn main() {
         table.print();
         table.write_csv("ablationC_atomics").unwrap();
     });
-    drop(t);
 
     // --- Lock throughput under contention.
     let mut t2 = Table::new(

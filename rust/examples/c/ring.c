@@ -1,0 +1,40 @@
+/*
+ * ring.c — demo input for the §4.2 pre-parser (`oshrun preparse`).
+ *
+ * A token circulates around the PE ring; each hop is recorded in `trace`.
+ * The file-scope objects below are what the pre-parser must lift into the
+ * symmetric heap: four statics (ring_value, hops, trace, tag) and one plain
+ * global (world_visible_flag). The static *inside* ping() must stay local.
+ */
+#include <shmem.h>
+#include <string.h>
+
+static double ring_value;        /* 8 B, BSS            */
+static int hops = 3;             /* 4 B, data segment   */
+static double trace[64];         /* 512 B, BSS          */
+static long tag;                 /* 8 B, BSS            */
+int world_visible_flag;          /* plain global, BSS   */
+
+static void ping(void) {
+    static int calls;            /* function-local: NOT lifted */
+    calls++;
+}
+
+int main(int argc, char **argv) {
+    start_pes(0);
+    int me = _my_pe();
+    int npes = _num_pes();
+    if (npes < 2) {
+        return 1;
+    }
+    for (int h = 0; h < hops; h++) {
+        ping();
+        shmem_double_p(&ring_value, me * 1.0 + h, (me + 1) % npes);
+        shmem_barrier_all();
+        trace[h % 64] = ring_value;
+    }
+    tag = (long)me;
+    world_visible_flag = 1;
+    shmem_barrier_all();
+    return 0;
+}

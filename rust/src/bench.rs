@@ -262,13 +262,10 @@ mod tests {
         t.row("row1", vec![1.0, 2.0]);
         t.row("row2", vec![1000.5, 0.0]);
         t.print();
-        let dir = std::env::temp_dir().join("posh_bench_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let prev = std::env::current_dir().unwrap();
-        std::env::set_current_dir(&dir).unwrap();
-        let p = t.write_csv("t").unwrap();
+        // write_csv targets ./bench_out; tests must not touch the process
+        // cwd (libtest runs tests on parallel threads, cwd is global).
+        let p = t.write_csv("test_table_roundtrip").unwrap();
         let s = std::fs::read_to_string(&p).unwrap();
-        std::env::set_current_dir(prev).unwrap();
         assert!(s.contains("label,a,b"));
         assert!(s.contains("row1,1,2"));
     }
@@ -282,13 +279,8 @@ mod tests {
             s2.push(8 << i, i as f64 * 2.0);
         }
         ascii_plot(&s1, 4);
-        let dir = std::env::temp_dir().join("posh_bench_test2");
-        std::fs::create_dir_all(&dir).unwrap();
-        let prev = std::env::current_dir().unwrap();
-        std::env::set_current_dir(&dir).unwrap();
-        let p = write_series_csv("fig", "bytes", &[s1, s2]).unwrap();
+        let p = write_series_csv("test_series_csv", "bytes", &[s1, s2]).unwrap();
         let content = std::fs::read_to_string(&p).unwrap();
-        std::env::set_current_dir(prev).unwrap();
         assert!(content.starts_with("bytes,put,get"));
         assert_eq!(content.lines().count(), 5);
     }

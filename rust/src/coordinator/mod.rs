@@ -9,6 +9,11 @@
 
 pub mod dataset;
 pub mod metrics;
+// The trainer executes AOT-compiled HLO through PJRT, so it exists only when
+// the `xla` feature (and its runtime) is compiled in; the corpus and metrics
+// halves are pure Rust and always available.
+#[cfg(feature = "xla")]
 pub mod trainer;
 
+#[cfg(feature = "xla")]
 pub use trainer::{TrainReport, Trainer, TrainerConfig};

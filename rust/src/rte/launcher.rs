@@ -159,7 +159,7 @@ mod tests {
         let pes = l.spawn_all().unwrap();
         assert_eq!(pes.len(), 3);
         let mut seen = Vec::new();
-        for mut pe in pes {
+        for pe in pes {
             let out = pe.child.wait_with_output().unwrap();
             assert!(out.status.success());
             let text = String::from_utf8_lossy(&out.stdout).trim().to_string();

@@ -18,11 +18,14 @@ pub fn with_client<R>(f: impl FnOnce(&xla::PjRtClient) -> Result<R>) -> Result<R
         let mut slot = c.borrow_mut();
         if slot.is_none() {
             let client = xla::PjRtClient::cpu()?;
-            log::info!(
-                "PJRT client up: platform={} devices={}",
-                client.platform_name(),
-                client.device_count()
-            );
+            // No `log` crate in the vendored registry; opt-in stderr note.
+            if std::env::var_os("POSH_VERBOSE").is_some() {
+                eprintln!(
+                    "PJRT client up: platform={} devices={}",
+                    client.platform_name(),
+                    client.device_count()
+                );
+            }
             *slot = Some(client);
         }
         f(slot.as_ref().unwrap())

@@ -7,9 +7,28 @@
 //! emits protos with 64-bit instruction ids that the image's xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids (see /opt/xla-example).
 
+#[cfg(feature = "xla")]
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod manifest;
 
+#[cfg(feature = "xla")]
 pub use artifact::Artifact;
 pub use manifest::Manifest;
+
+/// Stub of [`client`] for builds without the `xla` feature: the manifest
+/// layer (pure Rust) stays available, the PJRT surface reports itself
+/// unavailable instead of failing to link. Tracking: the `xla` feature gains
+/// a real dependency in the PR that lands the AOT artifact pipeline.
+#[cfg(not(feature = "xla"))]
+pub mod client {
+    use crate::Result;
+    use anyhow::bail;
+
+    /// Platform info string (for `oshrun info`). Always an error here: this
+    /// build carries no PJRT client.
+    pub fn platform_info() -> Result<String> {
+        bail!("built without the `xla` feature: PJRT runtime not compiled in")
+    }
+}

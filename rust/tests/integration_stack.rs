@@ -161,7 +161,9 @@ fn stress_mix() {
 }
 
 /// PJRT runtime + trainer over the real artifacts (skips cleanly when
-/// `make artifacts` has not run — e.g. a bare `cargo test`).
+/// `make artifacts` has not run — e.g. a bare `cargo test`). Needs the
+/// `xla` feature: without it the trainer is not compiled in at all.
+#[cfg(feature = "xla")]
 #[test]
 fn trainer_over_artifacts_if_present() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {
@@ -190,6 +192,8 @@ fn trainer_over_artifacts_if_present() {
 }
 
 /// The grad_reduce Pallas artifact agrees with the Rust-side reduction.
+/// Needs the `xla` feature (PJRT execution).
+#[cfg(feature = "xla")]
 #[test]
 fn pallas_reduce_artifact_matches_posh_reduce() {
     if !std::path::Path::new("artifacts/manifest.json").exists() {

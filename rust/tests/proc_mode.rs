@@ -134,6 +134,24 @@ fn main() {
     if World::env_present() {
         pe_body();
     } else {
+        // True multi-process POSIX-shm mode needs a *writable* /dev/shm
+        // (normal on Linux; absent or read-only in some hardened sandboxes).
+        // Probe by actually creating a file there — existence alone is not
+        // enough. Skip rather than fail — tracking: revisit if a shm-less
+        // CI runner ever becomes the primary environment, e.g. by falling
+        // back to a file-backed segment under $TMPDIR.
+        let probe = format!("/dev/shm/posh.probe.{}", std::process::id());
+        let shm_ok = match std::fs::File::create(&probe) {
+            Ok(_) => {
+                let _ = std::fs::remove_file(&probe);
+                true
+            }
+            Err(_) => false,
+        };
+        if !shm_ok {
+            println!("proc_mode: skipping ( /dev/shm not writable in this environment )");
+            return;
+        }
         launcher_role();
     }
 }
