@@ -9,7 +9,7 @@
 //! Usage: `heat2d [rows cols iters]` (defaults 256×256×200), thread mode
 //! with 4 PEs, or process mode under `oshrun -np K`.
 
-use posh::collectives::{ActiveSet, ReduceOp};
+use posh::collectives::ReduceOp;
 use posh::pe::{Ctx, PoshConfig, World};
 
 fn pe_body(ctx: Ctx, grid_rows: usize, cols: usize, iters: usize) {
@@ -42,7 +42,7 @@ fn pe_body(ctx: Ctx, grid_rows: usize, cols: usize, iters: usize) {
     }
     ctx.barrier_all();
 
-    let world = ActiveSet::world(n);
+    let world = ctx.team_world();
     let up = me.checked_sub(1);
     let down = (me + 1 < n).then_some(me + 1);
 

@@ -10,7 +10,6 @@
 //!
 //! Usage: `histogram [samples_per_pe bins]` (defaults 200000, 64).
 
-use posh::collectives::ActiveSet;
 use posh::pe::{Ctx, PoshConfig, World};
 use posh::util::prng::Rng;
 
@@ -46,7 +45,7 @@ fn pe_body(ctx: Ctx, samples: usize, bins: usize) {
     let updates_per_s = samples as f64 / t0.elapsed().as_secs_f64();
 
     // Gather the distributed histogram on every PE.
-    let world = ActiveSet::world(n);
+    let world = ctx.team_world();
     ctx.fcollect(gathered, mine, per_pe, &world);
     let hist = unsafe { ctx.local(gathered).to_vec() };
 

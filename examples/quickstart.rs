@@ -1,5 +1,6 @@
 //! Quickstart: the OpenSHMEM "hello world" — symmetric allocation, put/get,
-//! barrier, atomics, a reduction, a broadcast, and a lock.
+//! barrier, atomics, a reduction, a broadcast, a lock, and the 1.4 team +
+//! communication-context surface.
 //!
 //! Run in-process (thread mode):
 //! ```text
@@ -10,7 +11,7 @@
 //! cargo run --release --bin oshrun -- -np 4 target/release/examples/quickstart
 //! ```
 
-use posh::collectives::{ActiveSet, ReduceOp};
+use posh::collectives::ReduceOp;
 use posh::pe::{Ctx, PoshConfig, World};
 
 fn pe_body(ctx: Ctx) {
@@ -42,7 +43,7 @@ fn pe_body(ctx: Ctx) {
     let dst = ctx.shmalloc_n::<i64>(1).unwrap();
     unsafe { ctx.local_mut(src)[0] = me as i64 + 1 };
     ctx.barrier_all();
-    let world = ActiveSet::world(n);
+    let world = ctx.team_world();
     ctx.reduce_to_all(dst, src, 1, ReduceOp::Sum, &world);
     let sum = unsafe { ctx.local(dst)[0] };
     assert_eq!(sum, (n as i64 * (n as i64 + 1)) / 2);
@@ -61,6 +62,28 @@ fn pe_body(ctx: Ctx) {
     if me != n - 1 {
         assert_eq!(unsafe { ctx.local(out) }, &[7i64; 4]);
     }
+
+    // --- Teams & communication contexts (OpenSHMEM 1.4): split off the
+    // lower half of the world, ring-put inside it on an explicit context,
+    // and quiesce that context independently of the default domain.
+    let probe = ctx.shmalloc_n::<i64>(1).unwrap(); // collective: all PEs
+    let half = world.split_strided(0, 1, (n + 1) / 2);
+    if let Some(half) = &half {
+        let cc = half.create_ctx(posh::ctx::CtxOptions::new());
+        let next = (half.my_pe() + 1) % half.n_pes(); // team-relative rank
+        cc.put_nbi(probe, &[half.my_pe() as i64], next);
+        cc.quiet(); // retires cc's NBI ops only
+        half.sync();
+        let prev = (half.my_pe() + half.n_pes() - 1) % half.n_pes();
+        assert_eq!(unsafe { ctx.local(probe)[0] }, prev as i64);
+        println!("PE {me}: team rank {}/{} ring OK", half.my_pe(), half.n_pes());
+        cc.destroy();
+    }
+    ctx.barrier_all();
+    if let Some(half) = half {
+        half.destroy();
+    }
+    ctx.barrier_all();
 
     // --- Atomic counter + lock-protected critical section.
     let counter = ctx.shmalloc_n::<i64>(1).unwrap();

@@ -11,7 +11,6 @@
 //! Usage: `sample_sort [keys_per_pe]` (default 100_000), 4 PEs thread mode,
 //! or any `-np` under `oshrun`.
 
-use posh::collectives::ActiveSet;
 use posh::pe::{Ctx, PoshConfig, World};
 use posh::util::prng::Rng;
 
@@ -20,7 +19,7 @@ const OVERSAMPLE: usize = 16;
 fn pe_body(ctx: Ctx, keys_per_pe: usize) {
     let n = ctx.n_pes();
     let me = ctx.my_pe();
-    let world = ActiveSet::world(n);
+    let world = ctx.team_world();
 
     // Local shard of random keys.
     let mut rng = Rng::for_pe(0x5047, me);

@@ -1,7 +1,9 @@
 //! **Ablation B** (DESIGN.md §3) — barrier algorithms: dissemination vs
-//! central counter across PE counts, plus the active-set barrier. The
-//! dissemination barrier is O(log n) rounds with no hot cache line; the
-//! central counter is the O(n)-fan-in baseline.
+//! central counter across PE counts, plus the legacy active-set barrier and
+//! the team barriers of the 1.4 surface (world team, and a split team of
+//! half the PEs). The dissemination barrier is O(log n) rounds with no hot
+//! cache line; the central counter is the O(n)-fan-in baseline; team
+//! barriers fan in on the team root over the team's own sync cells.
 
 use posh::bench::{measure, Table};
 use posh::collectives::ActiveSet;
@@ -43,11 +45,54 @@ fn bench_set_barrier(n: usize) -> f64 {
     ns.load(Ordering::Relaxed) as f64
 }
 
+/// Team sync over the whole world team (reserved slot 0 cells).
+fn bench_team_sync_world(n: usize) -> f64 {
+    let w = World::threads(n, PoshConfig::small()).unwrap();
+    let ns = AtomicU64::new(0);
+    w.run(|ctx| {
+        let team = ctx.team_world();
+        ctx.barrier_all();
+        let m = measure(0, 200, || {
+            team.sync();
+        });
+        if ctx.my_pe() == 0 {
+            ns.store(m.latency_ns() as u64, Ordering::Relaxed);
+        }
+        ctx.barrier_all();
+    });
+    ns.load(Ordering::Relaxed) as f64
+}
+
+/// Team sync over a split team of half the PEs (claimed slot cells):
+/// the non-members idle, so this measures a sub-world ordering domain.
+fn bench_team_sync_half(n: usize) -> f64 {
+    let w = World::threads(n, PoshConfig::small()).unwrap();
+    let ns = AtomicU64::new(0);
+    w.run(|ctx| {
+        let half = ctx.team_world().split_strided(0, 1, (n + 1) / 2);
+        ctx.barrier_all();
+        if let Some(team) = &half {
+            let m = measure(0, 200, || {
+                team.sync();
+            });
+            if ctx.my_pe() == 0 {
+                ns.store(m.latency_ns() as u64, Ordering::Relaxed);
+            }
+        }
+        ctx.barrier_all();
+        if let Some(team) = half {
+            team.destroy();
+        }
+        ctx.barrier_all();
+    });
+    ns.load(Ordering::Relaxed) as f64
+}
+
 fn main() {
     let mut t = Table::new(
         "Ablation B: barrier latency",
         "ns/op",
-        &["dissemination", "central", "set-linear"],
+        &["dissemination", "central", "set-linear", "team-world", "team-half"],
     );
     for &n in &[2usize, 4, 8, 16] {
         t.row(
@@ -56,6 +101,8 @@ fn main() {
                 bench_barrier(n, BarrierKind::Dissemination),
                 bench_barrier(n, BarrierKind::Central),
                 bench_set_barrier(n),
+                bench_team_sync_world(n),
+                bench_team_sync_half(n),
             ],
         );
     }
@@ -64,6 +111,7 @@ fn main() {
     println!("\n(1-core container: expect flat-ish numbers dominated by \
               scheduling; on a real multicore the dissemination barrier's \
               log-n scaling separates from the central counter's linear \
-              fan-in)");
+              fan-in. team-half synchronises n/2 PEs, so it should sit \
+              below the full-world columns)");
     println!("csv: bench_out/ablationB_barrier.csv");
 }

@@ -4,7 +4,7 @@
 //! compile-time default.
 
 use posh::bench::{measure, Table};
-use posh::collectives::{ActiveSet, AlgoKind, ReduceOp};
+use posh::collectives::{AlgoKind, ReduceOp};
 use posh::pe::{PoshConfig, World};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -17,7 +17,7 @@ fn bench_world(n: usize, algo: AlgoKind, nelems: usize) -> (f64, f64) {
     let bcast_ns = AtomicU64::new(0);
     let reduce_ns = AtomicU64::new(0);
     w.run(|ctx| {
-        let set = ActiveSet::world(n);
+        let team = ctx.team_world();
         let src = ctx.shmalloc_n::<i64>(nelems).unwrap();
         let dst = ctx.shmalloc_n::<i64>(nelems).unwrap();
         unsafe {
@@ -28,14 +28,14 @@ fn bench_world(n: usize, algo: AlgoKind, nelems: usize) -> (f64, f64) {
         ctx.barrier_all();
         let reps = if nelems >= 1 << 18 { 5 } else { 30 };
         let m = measure(nelems * 8, reps, || {
-            ctx.broadcast(dst, src, nelems, 0, &set);
+            ctx.broadcast(dst, src, nelems, 0, &team);
         });
         if ctx.my_pe() == 0 {
             bcast_ns.store(m.latency_ns() as u64, Ordering::Relaxed);
         }
         ctx.barrier_all();
         let m = measure(nelems * 8, reps, || {
-            ctx.reduce_to_all(dst, src, nelems, ReduceOp::Sum, &set);
+            ctx.reduce_to_all(dst, src, nelems, ReduceOp::Sum, &team);
         });
         if ctx.my_pe() == 0 {
             reduce_ns.store(m.latency_ns() as u64, Ordering::Relaxed);

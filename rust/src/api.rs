@@ -1,4 +1,5 @@
-//! The flat OpenSHMEM-1.0 C-style API (§4.3 "Datatype-specific routines").
+//! The flat OpenSHMEM C-style API (§4.3 "Datatype-specific routines"),
+//! extended with the 1.4/1.5 team and context entry points.
 //!
 //! The paper's observation: SHMEM defines one function **per data type**
 //! (`shmem_short_g`, `shmem_int_g`, `shmem_long_g`, …) and a C++ template
@@ -8,24 +9,40 @@
 //!
 //! Rust generics are the same machinery; the macros below instantiate the
 //! typed entry points from the generic `Ctx` core exactly as the paper's
-//! `shmem_template_g<T>` does, C names and all.
+//! `shmem_template_g<T>` does, C names and all. The same macro that emits
+//! the deprecated 1.0 `shmem_<T>_<op>_to_all` active-set reductions emits
+//! their 1.5 `shmem_<T>_<op>_reduce` team replacements.
 //!
 //! The implicit-context model of the C API (no handle arguments) is realised
-//! with a thread-local `Ctx` installed by [`start_pes`] (process mode picks
+//! with a thread-local `Ctx` installed by [`shmem_init`] (process mode picks
 //! it up from the `oshrun` environment; thread-mode tests install one with
-//! [`install_ctx`]).
+//! [`install_ctx`]). [`shmem_finalize`] tears the world down deterministically
+//! — segments unlink on drop instead of leaking to process exit, which is
+//! what the deprecated [`start_pes`] used to do via `mem::forget`.
+//!
+//! **Triplet deprecation**: every `(PE_start, logPE_stride, PE_size)` entry
+//! point survives, marked `#[deprecated]`, as a thin shim that wraps the
+//! triplet in a temporary legacy [`Team`] — source compatibility for 1.0
+//! programs, teams for everything new.
 
-use crate::collectives::ActiveSet;
-use crate::pe::Ctx;
+use crate::ctx::{CommCtx, CtxOptions};
+use crate::pe::{Ctx, World};
 use crate::symheap::SymPtr;
+use crate::team::Team;
 use std::cell::RefCell;
+use std::sync::Mutex;
 
 thread_local! {
     static CURRENT: RefCell<Option<Ctx>> = const { RefCell::new(None) };
 }
 
+/// The process-global world created by [`shmem_init`], held so that
+/// [`shmem_finalize`] can drop it deterministically (unmapping and — on the
+/// owner side — unlinking its segments).
+static WORLD_SLOT: Mutex<Option<World>> = Mutex::new(None);
+
 /// Install the calling thread's implicit context (thread-mode worlds call
-/// this from inside `world.run`; `start_pes` does it in process mode).
+/// this from inside `world.run`; `shmem_init` does it in process mode).
 pub fn install_ctx(ctx: Ctx) {
     CURRENT.with(|c| *c.borrow_mut() = Some(ctx));
 }
@@ -40,21 +57,45 @@ pub fn ctx() -> Ctx {
     CURRENT.with(|c| {
         c.borrow()
             .clone()
-            .expect("no SHMEM context on this thread: call start_pes()/install_ctx() first")
+            .expect("no SHMEM context on this thread: call shmem_init()/install_ctx() first")
     })
 }
 
-/// `start_pes(0)`: initialise the library from the `oshrun` environment
-/// (process mode) and install the implicit context. Returns the context for
-/// callers that also want the explicit API.
-pub fn start_pes(_npes_ignored: usize) -> crate::Result<Ctx> {
-    let world = crate::pe::World::from_env()?;
+/// `shmem_init` (OpenSHMEM 1.2 naming): initialise the library from the
+/// `oshrun` environment (process mode), install the implicit context, and
+/// park the world in a process-global slot so [`shmem_finalize`] can tear
+/// it down deterministically. Returns the context for callers that also
+/// want the explicit API.
+pub fn shmem_init() -> crate::Result<Ctx> {
+    let world = World::from_env()?;
     let c = world.my_ctx();
     install_ctx(c.clone());
-    // Leak the world: the C API has no shutdown handle; process exit cleans
-    // up (the segment owner unlinks via the RTE's job teardown).
-    std::mem::forget(world);
+    *WORLD_SLOT.lock().unwrap() = Some(world);
     Ok(c)
+}
+
+/// `shmem_finalize`: complete outstanding communication (the spec makes
+/// finalize collective — a quiet plus a barrier), release the implicit
+/// context, and drop the world created by [`shmem_init`]. Once the last
+/// handle is gone the segments unmap and the ones this process owns unlink
+/// — a clean shutdown instead of the historical leak-to-exit. Callers that
+/// retain the `Ctx` returned by `shmem_init` (or a `Team`/`CommCtx` built
+/// from it) keep the world alive until those handles drop too; the plain
+/// C-style pattern (implicit context only) tears down here. Idempotent; a
+/// no-op if `shmem_init` was never called.
+pub fn shmem_finalize() {
+    if let Some(c) = CURRENT.with(|c| c.borrow().clone()) {
+        c.quiet_nbi();
+        c.barrier_all();
+    }
+    clear_ctx();
+    *WORLD_SLOT.lock().unwrap() = None;
+}
+
+/// `start_pes(0)`: the OpenSHMEM 1.0 initialiser.
+#[deprecated(note = "use shmem_init()/shmem_finalize(); start_pes leaked the world by design")]
+pub fn start_pes(_npes_ignored: usize) -> crate::Result<Ctx> {
+    shmem_init()
 }
 
 /// `shmem_my_pe` / `_my_pe`.
@@ -96,20 +137,181 @@ pub fn shmem_barrier_all() {
 /// `shmem_barrier(PE_start, logPE_stride, PE_size, pSync)` — `pSync` is
 /// accepted for source compatibility and ignored (coordination runs over
 /// header cells; see module docs of [`crate::collectives`]).
+#[deprecated(note = "OpenSHMEM 1.0 active-set interface; use shmem_team_sync over a split team")]
 pub fn shmem_barrier(pe_start: usize, log_pe_stride: usize, pe_size: usize, _psync: &[i64]) {
     let c = ctx();
-    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
-    c.barrier(&set);
+    let team = Team::from_triplet(&c, pe_start, log_pe_stride, pe_size);
+    c.barrier(&team);
 }
 
-/// `shmem_fence`.
+/// `shmem_fence` (default context).
 pub fn shmem_fence() {
     ctx().fence();
 }
 
-/// `shmem_quiet`.
+/// `shmem_quiet` (default context): completes all outstanding puts and
+/// retires the default context's NBI accounting. Explicit contexts quiesce
+/// through [`shmem_ctx_quiet`].
 pub fn shmem_quiet() {
     ctx().quiet_nbi();
+}
+
+// ---------------------------------------------------------------------------
+// Teams (OpenSHMEM 1.4 §9).
+// ---------------------------------------------------------------------------
+
+/// `SHMEM_TEAM_WORLD`: the world team handle.
+pub fn shmem_team_world() -> Team {
+    ctx().team_world()
+}
+
+/// `shmem_team_split_strided(parent, start, stride, size)`: collectively
+/// split a sub-team; returns the new handle for members, `None` otherwise.
+/// Unlike the 1.0 triplet, `stride` is an arbitrary positive integer.
+pub fn shmem_team_split_strided(
+    parent: &Team,
+    start: usize,
+    stride: usize,
+    size: usize,
+) -> Option<Team> {
+    parent.split_strided(start, stride, size)
+}
+
+/// `shmem_team_split_2d(parent, xrange)`: collectively split the parent
+/// into a row-major grid; returns this PE's `(x_team, y_team)`.
+pub fn shmem_team_split_2d(parent: &Team, xrange: usize) -> (Team, Team) {
+    parent.split_2d(xrange)
+}
+
+/// `shmem_team_my_pe`: the calling PE's rank in `team`, or `-1` if it is
+/// not a member.
+pub fn shmem_team_my_pe(team: &Team) -> i32 {
+    if team.is_member() {
+        team.my_pe() as i32
+    } else {
+        -1
+    }
+}
+
+/// `shmem_team_n_pes`: the number of PEs in `team`.
+pub fn shmem_team_n_pes(team: &Team) -> i32 {
+    team.n_pes() as i32
+}
+
+/// `shmem_team_translate_pe`: translate `pe` of `src_team` into the rank
+/// space of `dest_team`; `-1` if the PE is not a member of `dest_team`.
+pub fn shmem_team_translate_pe(src_team: &Team, pe: usize, dest_team: &Team) -> i32 {
+    match src_team.translate_pe(pe, dest_team) {
+        Some(p) => p as i32,
+        None => -1,
+    }
+}
+
+/// `shmem_team_sync`: barrier over the team.
+pub fn shmem_team_sync(team: &Team) {
+    team.sync();
+}
+
+/// `shmem_team_destroy`: collectively retire the team and recycle its
+/// sync-cell slot.
+pub fn shmem_team_destroy(team: Team) {
+    team.destroy();
+}
+
+// ---------------------------------------------------------------------------
+// Communication contexts (OpenSHMEM 1.4 §8).
+// ---------------------------------------------------------------------------
+
+/// `shmem_ctx_create` (team form): a context whose ordering domain is
+/// `team`. PE arguments to context operations are team-relative.
+pub fn shmem_ctx_create(team: &Team, opts: CtxOptions) -> CommCtx {
+    CommCtx::create(team, opts)
+}
+
+/// `shmem_ctx_destroy`: quiesce and drop a context.
+pub fn shmem_ctx_destroy(cctx: CommCtx) {
+    cctx.destroy();
+}
+
+/// `shmem_ctx_quiet`: complete and retire the NBI operations issued on
+/// `cctx` — and only those; sibling contexts and the default context keep
+/// their pending operations.
+pub fn shmem_ctx_quiet(cctx: &CommCtx) {
+    cctx.quiet();
+}
+
+/// `shmem_ctx_fence`: order puts issued on `cctx` per destination PE.
+pub fn shmem_ctx_fence(cctx: &CommCtx) {
+    cctx.fence();
+}
+
+// ---------------------------------------------------------------------------
+// Team collectives (generic element type via monomorphisation, §4.3).
+// ---------------------------------------------------------------------------
+
+/// `shmem_broadcast(team, …)` (1.5 team form): broadcast from team rank
+/// `pe_root`; the root's `target` is not written.
+pub fn shmem_team_broadcast<T: Copy>(
+    team: &Team,
+    target: SymPtr<T>,
+    source: SymPtr<T>,
+    nelems: usize,
+    pe_root: usize,
+) {
+    ctx().broadcast(target, source, nelems, pe_root, team);
+}
+
+/// `shmem_fcollect(team, …)` (1.5 team form).
+pub fn shmem_team_fcollect<T: Copy>(team: &Team, target: SymPtr<T>, source: SymPtr<T>, nelems: usize) {
+    ctx().fcollect(target, source, nelems, team);
+}
+
+/// `shmem_collect(team, …)` (1.5 team form): variable contribution sizes;
+/// returns the total gathered element count.
+pub fn shmem_team_collect<T: Copy>(
+    team: &Team,
+    target: SymPtr<T>,
+    source: SymPtr<T>,
+    nelems: usize,
+) -> usize {
+    ctx().collect(target, source, nelems, team)
+}
+
+/// `shmem_alltoall(team, …)` (1.5 team form).
+pub fn shmem_team_alltoall<T: Copy>(team: &Team, target: SymPtr<T>, source: SymPtr<T>, nelems: usize) {
+    ctx().alltoall(target, source, nelems, team);
+}
+
+/// `shmem_broadcast64`-style 1.0 entry (element type via generic
+/// monomorphism).
+#[deprecated(note = "OpenSHMEM 1.0 active-set interface; use shmem_team_broadcast with a Team")]
+pub fn shmem_broadcast<T: Copy>(
+    target: SymPtr<T>,
+    source: SymPtr<T>,
+    nelems: usize,
+    pe_root: usize,
+    pe_start: usize,
+    log_pe_stride: usize,
+    pe_size: usize,
+) {
+    let c = ctx();
+    let team = Team::from_triplet(&c, pe_start, log_pe_stride, pe_size);
+    c.broadcast(target, source, nelems, pe_root, &team);
+}
+
+/// `shmem_fcollect`-style 1.0 entry.
+#[deprecated(note = "OpenSHMEM 1.0 active-set interface; use shmem_team_fcollect with a Team")]
+pub fn shmem_fcollect<T: Copy>(
+    target: SymPtr<T>,
+    source: SymPtr<T>,
+    nelems: usize,
+    pe_start: usize,
+    log_pe_stride: usize,
+    pe_size: usize,
+) {
+    let c = ctx();
+    let team = Team::from_triplet(&c, pe_start, log_pe_stride, pe_size);
+    c.fcollect(target, source, nelems, &team);
 }
 
 /// Generates `shmem_<ty>_{p,g,put,get,iput,iget}` — the §4.3 instantiation.
@@ -222,17 +424,22 @@ pub fn shmem_test_lock(lock: SymPtr<i64>) -> i32 {
     }
 }
 
-/// Generates `shmem_<ty>_<op>_to_all` reductions.
+/// Generates, per data type and operator, both the deprecated 1.0
+/// `shmem_<ty>_<op>_to_all` active-set reduction and its 1.5
+/// `shmem_<ty>_<op>_reduce` team replacement. Operators are passed as bare
+/// variant idents and qualified inside the expansion — no anchor imports
+/// needed.
 macro_rules! typed_reductions {
-    ($($cname:ident : $t:ty => [$($opname:ident : $op:expr),+ $(,)?]),+ $(,)?) => {$(
+    ($($cname:ident : $t:ty => [$($old:ident | $new:ident : $op:ident),+ $(,)?]),+ $(,)?) => {$(
         /// Typed reduction entry points for one C data type.
         pub mod $cname {
             use super::super::*;
-            use crate::collectives::ReduceOp;
             $(
-                /// `shmem_<T>_<op>_to_all`. `pWrk`/`pSync` omitted — see
-                /// module docs.
-                pub fn $opname(
+                /// `shmem_<T>_<op>_to_all` (OpenSHMEM 1.0 active-set form).
+                /// `pWrk`/`pSync` omitted — see module docs.
+                #[deprecated(note = "OpenSHMEM 1.0 active-set interface; \
+                                     use the `_reduce` team form")]
+                pub fn $old(
                     target: SymPtr<$t>,
                     source: SymPtr<$t>,
                     nreduce: usize,
@@ -241,74 +448,69 @@ macro_rules! typed_reductions {
                     pe_size: usize,
                 ) {
                     let c = ctx();
-                    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
-                    let _ = ReduceOp::Sum; // anchor the import
-                    c.reduce_to_all(target, source, nreduce, $op, &set);
+                    let team =
+                        crate::team::Team::from_triplet(&c, pe_start, log_pe_stride, pe_size);
+                    c.reduce_to_all(
+                        target,
+                        source,
+                        nreduce,
+                        crate::collectives::ReduceOp::$op,
+                        &team,
+                    );
+                }
+
+                /// `shmem_<T>_<op>_reduce(team, …)` (OpenSHMEM 1.5 team
+                /// form): every member receives the reduction.
+                pub fn $new(
+                    team: &crate::team::Team,
+                    target: SymPtr<$t>,
+                    source: SymPtr<$t>,
+                    nreduce: usize,
+                ) {
+                    ctx().reduce_to_all(
+                        target,
+                        source,
+                        nreduce,
+                        crate::collectives::ReduceOp::$op,
+                        team,
+                    );
                 }
             )+
         }
     )+};
 }
 
-/// Reduction namespaces (`reduce::int::sum_to_all` ≙ `shmem_int_sum_to_all`).
+/// Reduction namespaces (`reduce::int::sum_reduce` ≙ `shmem_int_sum_reduce`,
+/// `reduce::int::sum_to_all` ≙ the deprecated `shmem_int_sum_to_all`).
 pub mod reduce {
     typed_reductions!(
         short: i16 => [
-            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
-            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
-            and_to_all: ReduceOp::And, or_to_all: ReduceOp::Or,
-            xor_to_all: ReduceOp::Xor,
+            sum_to_all | sum_reduce: Sum, prod_to_all | prod_reduce: Prod,
+            min_to_all | min_reduce: Min, max_to_all | max_reduce: Max,
+            and_to_all | and_reduce: And, or_to_all | or_reduce: Or,
+            xor_to_all | xor_reduce: Xor,
         ],
         int: i32 => [
-            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
-            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
-            and_to_all: ReduceOp::And, or_to_all: ReduceOp::Or,
-            xor_to_all: ReduceOp::Xor,
+            sum_to_all | sum_reduce: Sum, prod_to_all | prod_reduce: Prod,
+            min_to_all | min_reduce: Min, max_to_all | max_reduce: Max,
+            and_to_all | and_reduce: And, or_to_all | or_reduce: Or,
+            xor_to_all | xor_reduce: Xor,
         ],
         long: i64 => [
-            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
-            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
-            and_to_all: ReduceOp::And, or_to_all: ReduceOp::Or,
-            xor_to_all: ReduceOp::Xor,
+            sum_to_all | sum_reduce: Sum, prod_to_all | prod_reduce: Prod,
+            min_to_all | min_reduce: Min, max_to_all | max_reduce: Max,
+            and_to_all | and_reduce: And, or_to_all | or_reduce: Or,
+            xor_to_all | xor_reduce: Xor,
         ],
         float: f32 => [
-            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
-            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
+            sum_to_all | sum_reduce: Sum, prod_to_all | prod_reduce: Prod,
+            min_to_all | min_reduce: Min, max_to_all | max_reduce: Max,
         ],
         double: f64 => [
-            sum_to_all: ReduceOp::Sum, prod_to_all: ReduceOp::Prod,
-            min_to_all: ReduceOp::Min, max_to_all: ReduceOp::Max,
+            sum_to_all | sum_reduce: Sum, prod_to_all | prod_reduce: Prod,
+            min_to_all | min_reduce: Min, max_to_all | max_reduce: Max,
         ],
     );
-}
-
-/// `shmem_broadcast64`-style entry (element type via generic monomorphism).
-pub fn shmem_broadcast<T: Copy>(
-    target: SymPtr<T>,
-    source: SymPtr<T>,
-    nelems: usize,
-    pe_root: usize,
-    pe_start: usize,
-    log_pe_stride: usize,
-    pe_size: usize,
-) {
-    let c = ctx();
-    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
-    c.broadcast(target, source, nelems, pe_root, &set);
-}
-
-/// `shmem_fcollect`-style entry.
-pub fn shmem_fcollect<T: Copy>(
-    target: SymPtr<T>,
-    source: SymPtr<T>,
-    nelems: usize,
-    pe_start: usize,
-    log_pe_stride: usize,
-    pe_size: usize,
-) {
-    let c = ctx();
-    let set = ActiveSet::new(pe_start, log_pe_stride, pe_size, c.n_pes());
-    c.fcollect(target, source, nelems, &set);
 }
 
 #[cfg(test)]
@@ -381,7 +583,7 @@ mod tests {
     }
 
     #[test]
-    fn c_style_reduce_and_broadcast() {
+    fn c_style_team_reduce_and_broadcast() {
         with_api(4, || {
             let c = ctx();
             let src = c.shmalloc_n::<i32>(4).unwrap();
@@ -392,6 +594,79 @@ mod tests {
                 }
             }
             shmem_barrier_all();
+            let world = shmem_team_world();
+            reduce::int::sum_reduce(&world, dst, src, 4);
+            assert_eq!(unsafe { c.local(dst) }, &[1 + 2 + 3 + 4; 4][..]);
+            shmem_barrier_all();
+            shmem_team_broadcast(&world, dst, src, 4, 2);
+            if shmem_my_pe() != 2 {
+                assert_eq!(unsafe { c.local(dst) }, &[3; 4][..]);
+            }
+            shmem_barrier_all();
+        });
+    }
+
+    #[test]
+    fn c_style_team_split_and_sync() {
+        with_api(4, || {
+            let world = shmem_team_world();
+            assert_eq!(shmem_team_n_pes(&world), 4);
+            assert_eq!(shmem_team_my_pe(&world), shmem_my_pe());
+            // Even ranks 0, 2.
+            let evens = shmem_team_split_strided(&world, 0, 2, 2);
+            if shmem_my_pe() % 2 == 0 {
+                let t = evens.unwrap();
+                assert_eq!(shmem_team_my_pe(&t), shmem_my_pe() / 2);
+                assert_eq!(
+                    shmem_team_translate_pe(&t, shmem_team_my_pe(&t) as usize, &world),
+                    shmem_my_pe()
+                );
+                shmem_team_sync(&t);
+                shmem_barrier_all();
+                shmem_team_destroy(t);
+            } else {
+                assert!(evens.is_none());
+                shmem_barrier_all();
+            }
+            shmem_barrier_all();
+        });
+    }
+
+    #[test]
+    fn c_style_ctx_quiet_scoping() {
+        with_api(2, || {
+            let c = ctx();
+            let world = shmem_team_world();
+            let cc = shmem_ctx_create(&world, CtxOptions::new().serialized());
+            let buf = c.shmalloc_n::<u8>(4).unwrap();
+            let peer = (shmem_my_pe() as usize + 1) % 2;
+            cc.put_nbi(buf, &[5; 4], peer);
+            c.put_nbi(buf, &[5; 4], peer);
+            shmem_ctx_quiet(&cc);
+            assert_eq!(cc.pending_nbi(), 0);
+            assert_eq!(c.pending_nbi(), 1, "ctx quiet must not retire the default domain");
+            shmem_quiet();
+            assert_eq!(c.pending_nbi(), 0);
+            shmem_ctx_fence(&cc);
+            shmem_ctx_destroy(cc);
+            shmem_barrier_all();
+        });
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_triplet_shims_still_work() {
+        with_api(4, || {
+            let c = ctx();
+            let src = c.shmalloc_n::<i32>(4).unwrap();
+            let dst = c.shmalloc_n::<i32>(4).unwrap();
+            unsafe {
+                for s in c.local_mut(src).iter_mut() {
+                    *s = shmem_my_pe() + 1;
+                }
+            }
+            shmem_barrier_all();
+            // 1.0 triplet forms, now shims over a temporary legacy team.
             reduce::int::sum_to_all(dst, src, 4, 0, 0, 4);
             assert_eq!(unsafe { c.local(dst) }, &[1 + 2 + 3 + 4; 4][..]);
             shmem_barrier_all();
@@ -399,6 +674,9 @@ mod tests {
             if shmem_my_pe() != 2 {
                 assert_eq!(unsafe { c.local(dst) }, &[3; 4][..]);
             }
+            shmem_barrier_all();
+            let psync = [0i64; 1];
+            shmem_barrier(0, 0, 4, &psync);
             shmem_barrier_all();
         });
     }

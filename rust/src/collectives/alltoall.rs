@@ -6,23 +6,24 @@
 //! pure one-sided puts, each member pushes `size` blocks and receives
 //! `size − 1` signals.
 
-use super::state::ActiveSet;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
+use crate::team::Team;
 
 impl Ctx {
     /// `shmem_alltoall`: exchange `nelems`-element blocks between all
-    /// members of the active set.
+    /// members of the team.
     pub fn alltoall<T: Copy>(
         &self,
         target: SymPtr<T>,
         source: SymPtr<T>,
         nelems: usize,
-        set: &ActiveSet,
+        team: &Team,
     ) {
+        let set = &team.set;
         let bytes = nelems * std::mem::size_of::<T>();
-        let idx = self.coll_enter(set, CollOpTag::Alltoall, bytes);
+        let idx = self.coll_enter(team, CollOpTag::Alltoall, bytes);
         if self.config().safe {
             assert!(source.len() >= nelems * set.size, "alltoall source too small");
             assert!(target.len() >= nelems * set.size, "alltoall target too small");
@@ -45,13 +46,12 @@ impl Ctx {
             }
         }
         self.coll_wait_count((set.size - 1) as u64);
-        self.coll_exit(set);
+        self.coll_exit(team);
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::pe::{PoshConfig, World};
 
     #[test]
@@ -60,7 +60,7 @@ mod tests {
         let nelems = 3;
         let w = World::threads(n, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(n);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<u32>(n * nelems).unwrap();
             let dst = ctx.shmalloc_n::<u32>(n * nelems).unwrap();
             // src block j element k = me*10000 + j*100 + k
@@ -71,7 +71,7 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            ctx.alltoall(dst, src, nelems, &set);
+            ctx.alltoall(dst, src, nelems, &team);
             // dst block i element k must be  i*10000 + me*100 + k
             let local = unsafe { ctx.local(dst) };
             for i in 0..n {
@@ -91,7 +91,7 @@ mod tests {
     fn alltoall_two_pes_swap() {
         let w = World::threads(2, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(2);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<i64>(2).unwrap();
             let dst = ctx.shmalloc_n::<i64>(2).unwrap();
             unsafe {
@@ -99,7 +99,7 @@ mod tests {
                     .copy_from_slice(&[ctx.my_pe() as i64 * 2, ctx.my_pe() as i64 * 2 + 1]);
             }
             ctx.barrier_all();
-            ctx.alltoall(dst, src, 1, &set);
+            ctx.alltoall(dst, src, 1, &team);
             let local = unsafe { ctx.local(dst) };
             // dst[0] = PE0's block me, dst[1] = PE1's block me.
             assert_eq!(local[0], ctx.my_pe() as i64);
@@ -112,7 +112,7 @@ mod tests {
     fn alltoall_repeated() {
         let w = World::threads(3, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(3);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<u64>(3).unwrap();
             let dst = ctx.shmalloc_n::<u64>(3).unwrap();
             for round in 0..60u64 {
@@ -121,7 +121,7 @@ mod tests {
                         *s = round * 100 + (ctx.my_pe() * 10 + j) as u64;
                     }
                 }
-                ctx.alltoall(dst, src, 1, &set);
+                ctx.alltoall(dst, src, 1, &team);
                 let local = unsafe { ctx.local(dst) };
                 for i in 0..3 {
                     assert_eq!(local[i], round * 100 + (i * 10 + ctx.my_pe()) as u64);

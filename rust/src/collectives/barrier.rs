@@ -1,28 +1,28 @@
-//! `shmem_barrier` over an active set — the public face of the set barrier,
-//! with the §4.5.5 safe-mode bookkeeping wrapped around it.
+//! The team barrier — the public face of the per-team barrier, with the
+//! §4.5.5 safe-mode bookkeeping wrapped around it.
 //!
 //! (`shmem_barrier_all` lives in [`crate::sync::barrier`] and uses the
-//! faster dissemination algorithm over the header mailboxes; the active-set
-//! variant must work for arbitrary subsets, so it fans in on the set root.)
+//! faster dissemination algorithm over the header mailboxes; the team
+//! variant must work for arbitrary subsets, so it fans in on the team root
+//! over the team's own sync cells.)
 
-use super::state::ActiveSet;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
+use crate::team::Team;
 
 impl Ctx {
-    /// `shmem_barrier(PE_start, logPE_stride, PE_size)`: synchronise the
-    /// active set and complete all outstanding memory updates.
-    pub fn barrier(&self, set: &ActiveSet) {
-        let _idx = self.coll_enter(set, CollOpTag::Barrier, 0);
-        // barrier_set() opens with a quiet, giving the spec's "complete all
-        // outstanding updates" guarantee; coll_exit runs it.
-        self.coll_exit(set);
+    /// `shmem_team_sync` / 1.0 `shmem_barrier`: synchronise the team's
+    /// members and complete all outstanding memory updates.
+    pub fn barrier(&self, team: &Team) {
+        let _idx = self.coll_enter(team, CollOpTag::Barrier, 0);
+        // team_barrier_raw() opens with a quiet, giving the spec's
+        // "complete all outstanding updates" guarantee; coll_exit runs it.
+        self.coll_exit(team);
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::pe::{PoshConfig, World};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -31,14 +31,18 @@ mod tests {
         let w = World::threads(4, PoshConfig::small()).unwrap();
         let hits = AtomicUsize::new(0);
         w.run(|ctx| {
-            let set = ActiveSet::new(0, 0, 2, 4); // PEs 0 and 1
-            if set.contains(ctx.my_pe()) {
+            let team = ctx.team_world().split_strided(0, 1, 2); // PEs 0 and 1
+            if let Some(team) = &team {
                 for round in 1..=40 {
                     hits.fetch_add(1, Ordering::SeqCst);
-                    ctx.barrier(&set);
+                    ctx.barrier(team);
                     assert!(hits.load(Ordering::SeqCst) >= 2 * round);
-                    ctx.barrier(&set);
+                    ctx.barrier(team);
                 }
+            }
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
             }
             ctx.barrier_all();
         });
@@ -48,16 +52,36 @@ mod tests {
     fn barrier_flushes_puts() {
         let w = World::threads(3, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(3);
+            let team = ctx.team_world();
             let cell = ctx.shmalloc_n::<u64>(3).unwrap();
             for round in 1..30u64 {
                 let peer = (ctx.my_pe() + 1) % 3;
                 ctx.put_one(cell.at(ctx.my_pe()), round, peer);
-                ctx.barrier(&set);
+                ctx.barrier(&team);
                 let prev = (ctx.my_pe() + 2) % 3;
                 assert_eq!(unsafe { ctx.local(cell)[prev] }, round);
-                ctx.barrier(&set);
+                ctx.barrier(&team);
             }
+        });
+    }
+
+    #[test]
+    fn legacy_triplet_barrier_still_works() {
+        // The deprecated shims route through Team::from_triplet — the
+        // 1.0-compatible legacy cells must still synchronise correctly.
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        let hits = AtomicUsize::new(0);
+        w.run(|ctx| {
+            let team = crate::team::Team::from_triplet(&ctx, 0, 1, 2, 4); // PEs 0, 2
+            if team.is_member() {
+                for round in 1..=25 {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                    ctx.barrier(&team);
+                    assert!(hits.load(Ordering::SeqCst) >= 2 * round);
+                    ctx.barrier(&team);
+                }
+            }
+            ctx.barrier_all();
         });
     }
 }

@@ -1,7 +1,7 @@
-//! Broadcast (`shmem_broadcast32/64` semantics).
+//! Broadcast (`shmem_broadcast32/64` semantics, team-scoped).
 //!
 //! OpenSHMEM quirk preserved: the **root's `target` is not written** — only
-//! the other members of the active set receive the data.
+//! the other members of the team receive the data.
 //!
 //! Variants (§4.5 put- vs get-based, §4.5.4 switching):
 //! * `LinearPut` — root pushes into every member's target, then signals.
@@ -15,9 +15,10 @@ use super::state::ActiveSet;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
+use crate::team::Team;
 
 impl Ctx {
-    /// Broadcast `nelems` elements from the member at set index `root_idx`'s
+    /// Broadcast `nelems` elements from the member at team rank `root_idx`'s
     /// `source` to every other member's `target`.
     pub fn broadcast<T: Copy>(
         &self,
@@ -25,11 +26,12 @@ impl Ctx {
         source: SymPtr<T>,
         nelems: usize,
         root_idx: usize,
-        set: &ActiveSet,
+        team: &Team,
     ) {
-        assert!(root_idx < set.size, "root index {root_idx} outside set");
+        let set = &team.set;
+        assert!(root_idx < set.size, "root index {root_idx} outside team");
         let bytes = nelems * std::mem::size_of::<T>();
-        let idx = self.coll_enter(set, CollOpTag::Broadcast, bytes);
+        let idx = self.coll_enter(team, CollOpTag::Broadcast, bytes);
         match self.coll_algo() {
             super::AlgoKind::LinearPut => {
                 self.bcast_linear_put(target, source, nelems, root_idx, set, idx)
@@ -41,7 +43,7 @@ impl Ctx {
                 self.bcast_tree(target, source, nelems, root_idx, set, idx)
             }
         }
-        self.coll_exit(set);
+        self.coll_exit(team);
     }
 
     fn bcast_linear_put<T: Copy>(
@@ -148,7 +150,6 @@ impl Ctx {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::collectives::AlgoKind;
     use crate::pe::{PoshConfig, World};
 
@@ -157,7 +158,7 @@ mod tests {
         cfg.coll_algo = Some(algo);
         let w = World::threads(n, cfg).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(n);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<u64>(nelems.max(1)).unwrap();
             let dst = ctx.shmalloc_n::<u64>(nelems.max(1)).unwrap();
             // Root fills its source; everyone poisons target.
@@ -170,10 +171,10 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            ctx.broadcast(dst, src, nelems, root_idx, &set);
+            ctx.broadcast(dst, src, nelems, root_idx, &team);
             let me = ctx.my_pe();
             let local = unsafe { ctx.local(dst) };
-            if set.index_of(me) == Some(root_idx) {
+            if team.team_rank_of(me) == Some(root_idx) {
                 // Root's target untouched (spec quirk).
                 assert!(local[..nelems].iter().all(|&v| v == u64::MAX), "{algo:?}");
             } else {
@@ -210,22 +211,26 @@ mod tests {
     }
 
     #[test]
-    fn broadcast_on_subset() {
-        // Set = ranks {1, 3, 5} of 6; outsiders do unrelated barriers.
+    fn broadcast_on_split_team() {
+        // Team = ranks {1, 3, 5} of 6; outsiders do unrelated barriers.
         let w = World::threads(6, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::new(1, 1, 3, 6);
+            let team = ctx.team_world().split_strided(1, 2, 3);
             let src = ctx.shmalloc_n::<u32>(8).unwrap();
             let dst = ctx.shmalloc_n::<u32>(8).unwrap();
             unsafe {
                 ctx.local_mut(src).copy_from_slice(&[7; 8]);
             }
             ctx.barrier_all();
-            if set.contains(ctx.my_pe()) {
-                ctx.broadcast(dst, src, 8, 0, &set);
-                if set.index_of(ctx.my_pe()) != Some(0) {
+            if let Some(team) = &team {
+                ctx.broadcast(dst, src, 8, 0, team);
+                if team.my_pe() != 0 {
                     assert_eq!(unsafe { ctx.local(dst) }, &[7u32; 8][..]);
                 }
+            }
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
             }
             ctx.barrier_all();
         });
@@ -237,7 +242,7 @@ mod tests {
         cfg.coll_algo = Some(AlgoKind::Tree);
         let w = World::threads(4, cfg).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(4);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<u64>(4).unwrap();
             let dst = ctx.shmalloc_n::<u64>(4).unwrap();
             for round in 0..100u64 {
@@ -246,8 +251,8 @@ mod tests {
                         *s = round;
                     }
                 }
-                ctx.broadcast(dst, src, 4, (round % 4) as usize, &set);
-                if set.index_of(ctx.my_pe()) != Some((round % 4) as usize) {
+                ctx.broadcast(dst, src, 4, (round % 4) as usize, &team);
+                if team.my_pe() != (round % 4) as usize {
                     assert_eq!(unsafe { ctx.local(dst) }, &[round; 4][..]);
                 }
             }

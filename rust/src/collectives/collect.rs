@@ -1,7 +1,7 @@
 //! Concatenation collectives: `shmem_fcollect` (fixed contribution size) and
 //! `shmem_collect` (variable contribution size).
 //!
-//! Every member ends with the concatenation, in set-index order, of all
+//! Every member ends with the concatenation, in team-rank order, of all
 //! members' `source` arrays in its `target`.
 //!
 //! * `fcollect` put-based: each member pushes its block to every member at
@@ -12,24 +12,25 @@
 //!   `data_size` field: each member publishes its element count and reads
 //!   every peer's — the size exchange is itself a tiny get-based collective.
 
-use super::state::ActiveSet;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
+use crate::team::Team;
 use std::sync::atomic::Ordering;
 
 impl Ctx {
     /// `shmem_fcollect`: gather `nelems` elements from every member into
-    /// every member's `target`, ordered by set index.
+    /// every member's `target`, ordered by team rank.
     pub fn fcollect<T: Copy>(
         &self,
         target: SymPtr<T>,
         source: SymPtr<T>,
         nelems: usize,
-        set: &ActiveSet,
+        team: &Team,
     ) {
+        let set = &team.set;
         let bytes = nelems * std::mem::size_of::<T>();
-        let idx = self.coll_enter(set, CollOpTag::Fcollect, bytes);
+        let idx = self.coll_enter(team, CollOpTag::Fcollect, bytes);
         if self.config().safe {
             assert!(
                 target.len() >= nelems * set.size,
@@ -79,7 +80,7 @@ impl Ctx {
                 self.coll_wait_count((set.size - 1) as u64);
             }
         }
-        self.coll_exit(set);
+        self.coll_exit(team);
     }
 
     /// `shmem_collect`: variable-size gather. `nelems` is **this member's**
@@ -90,9 +91,10 @@ impl Ctx {
         target: SymPtr<T>,
         source: SymPtr<T>,
         nelems: usize,
-        set: &ActiveSet,
+        team: &Team,
     ) -> usize {
-        let idx = self.coll_enter(set, CollOpTag::Collect, 0);
+        let set = &team.set;
+        let idx = self.coll_enter(team, CollOpTag::Collect, 0);
         // Size exchange through the §4.5.1 data_size field (+1 so that a
         // legitimate 0-element contribution is distinguishable from "not
         // entered yet").
@@ -140,14 +142,13 @@ impl Ctx {
             }
         }
         self.coll_wait_count((set.size - 1) as u64);
-        self.coll_exit(set);
+        self.coll_exit(team);
         total
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::collectives::AlgoKind;
     use crate::pe::{PoshConfig, World};
 
@@ -156,7 +157,7 @@ mod tests {
         cfg.coll_algo = Some(algo);
         let w = World::threads(n, cfg).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(n);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<u32>(nelems).unwrap();
             let dst = ctx.shmalloc_n::<u32>(nelems * n).unwrap();
             unsafe {
@@ -165,7 +166,7 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            ctx.fcollect(dst, src, nelems, &set);
+            ctx.fcollect(dst, src, nelems, &team);
             let local = unsafe { ctx.local(dst) };
             for pe in 0..n {
                 for j in 0..nelems {
@@ -205,7 +206,7 @@ mod tests {
         let n = 4;
         let w = World::threads(n, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(n);
+            let team = ctx.team_world();
             // PE i contributes i+1 elements: total = 10, offsets 0,1,3,6.
             let mine = ctx.my_pe() + 1;
             let src = ctx.shmalloc_n::<i64>(n).unwrap(); // oversized, symmetric
@@ -216,7 +217,7 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            let total = ctx.collect(dst, src.slice(0, mine), mine, &set);
+            let total = ctx.collect(dst, src.slice(0, mine), mine, &team);
             assert_eq!(total, 10);
             let local = unsafe { ctx.local(dst) };
             let mut off = 0usize;
@@ -235,7 +236,7 @@ mod tests {
         let n = 3;
         let w = World::threads(n, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(n);
+            let team = ctx.team_world();
             // PE 1 contributes nothing.
             let mine = if ctx.my_pe() == 1 { 0 } else { 2 };
             let src = ctx.shmalloc_n::<u16>(2).unwrap();
@@ -246,7 +247,7 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            let total = ctx.collect(dst, src.slice(0, mine), mine, &set);
+            let total = ctx.collect(dst, src.slice(0, mine), mine, &team);
             assert_eq!(total, 4);
             let local = unsafe { ctx.local(dst) };
             assert_eq!(&local[..4], &[0, 1, 20, 21]);
@@ -258,7 +259,7 @@ mod tests {
     fn fcollect_repeated() {
         let w = World::threads(3, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(3);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<u64>(2).unwrap();
             let dst = ctx.shmalloc_n::<u64>(6).unwrap();
             for round in 0..50u64 {
@@ -267,7 +268,7 @@ mod tests {
                         *s = round * 10 + ctx.my_pe() as u64;
                     }
                 }
-                ctx.fcollect(dst, src, 2, &set);
+                ctx.fcollect(dst, src, 2, &team);
                 let local = unsafe { ctx.local(dst) };
                 for pe in 0..3 {
                     assert_eq!(local[pe * 2], round * 10 + pe as u64);

@@ -25,11 +25,17 @@
 //!   tags and buffer sizes across participants and detects a PE entering
 //!   two collectives at once.
 //!
-//! Active sets follow OpenSHMEM 1.0: a triple `(PE_start, logPE_stride,
-//! PE_size)` selecting `PE_start + i·2^logPE_stride`. The `pSync`/`pWrk`
-//! arrays of the C API are accepted by the [`crate::api`] shims but not
-//! needed — coordination runs over the header cells and Lemma-1 temporaries,
-//! which is exactly the latitude the spec grants implementations.
+//! Membership follows OpenSHMEM 1.4 **teams**: every collective takes a
+//! `&`[`crate::team::Team`], built collectively by `split_strided`/
+//! `split_2d` from the world team. [`ActiveSet`] survives as the internal
+//! strided-membership representation behind a team (now with arbitrary
+//! stride, not just powers of two); the 1.0 `(PE_start, logPE_stride,
+//! PE_size)` triplet is only spoken by the deprecated [`crate::api`] shims,
+//! which wrap it in a temporary legacy team. The `pSync`/`pWrk` arrays of
+//! the C API are accepted by those shims but not needed — coordination runs
+//! over the header cells (per-team sync cells for real teams) and Lemma-1
+//! temporaries, which is exactly the latitude the spec grants
+//! implementations.
 
 pub mod algorithm;
 pub mod alltoall;

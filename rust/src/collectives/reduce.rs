@@ -1,6 +1,6 @@
-//! Reductions (`shmem_<type>_<op>_to_all`): every member of the active set
-//! ends with the element-wise reduction of all members' `source` arrays in
-//! its `target` array.
+//! Reductions (`shmem_<type>_<op>_reduce`, team-scoped): every member of
+//! the team ends with the element-wise reduction of all members' `source`
+//! arrays in its `target` array.
 //!
 //! Algorithm variants:
 //! * `LinearPut` — members push their contribution into a **temporary
@@ -19,6 +19,7 @@ use super::state::ActiveSet;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
+use crate::team::Team;
 
 /// Reduction operators of OpenSHMEM 1.0 §8.5.2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -128,21 +129,23 @@ fn combine_into<T: ReduceElem>(op: ReduceOp, acc: &mut [T], contrib: &[T]) {
 }
 
 impl Ctx {
-    /// `shmem_<type>_<op>_to_all` over the active set.
+    /// `shmem_<type>_<op>_reduce` over the team (every member receives the
+    /// result).
     pub fn reduce_to_all<T: ReduceElem>(
         &self,
         target: SymPtr<T>,
         source: SymPtr<T>,
         nreduce: usize,
         op: ReduceOp,
-        set: &ActiveSet,
+        team: &Team,
     ) {
+        let set = &team.set;
         let bytes = nreduce * std::mem::size_of::<T>();
-        let idx = self.coll_enter(set, CollOpTag::Reduce, bytes);
+        let idx = self.coll_enter(team, CollOpTag::Reduce, bytes);
         if set.size == 1 {
-            // Degenerate set: result = own source.
+            // Degenerate team: result = own source.
             self.put_sym(target, self.my_pe(), source, self.my_pe(), nreduce);
-            self.coll_exit(set);
+            self.coll_exit(team);
             return;
         }
         match self.coll_algo() {
@@ -161,7 +164,7 @@ impl Ctx {
                 }
             }
         }
-        self.coll_exit(set);
+        self.coll_exit(team);
     }
 
     /// Root-staged put-based reduction (Lemma-1 temporary in the root heap).
@@ -411,7 +414,7 @@ mod tests {
         cfg.coll_algo = Some(algo);
         let w = World::threads(n, cfg).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(n);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<i64>(nreduce).unwrap();
             let dst = ctx.shmalloc_n::<i64>(nreduce).unwrap();
             unsafe {
@@ -420,7 +423,7 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            ctx.reduce_to_all(dst, src, nreduce, op, &set);
+            ctx.reduce_to_all(dst, src, nreduce, op, &team);
             // Independent oracle.
             for j in 0..nreduce {
                 let contribs: Vec<i64> =
@@ -488,7 +491,7 @@ mod tests {
         // Small integers in f64 are exact under any combine order.
         let w = World::threads(4, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::world(4);
+            let team = ctx.team_world();
             let src = ctx.shmalloc_n::<f64>(8).unwrap();
             let dst = ctx.shmalloc_n::<f64>(8).unwrap();
             unsafe {
@@ -497,7 +500,7 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            ctx.reduce_to_all(dst, src, 8, ReduceOp::Sum, &set);
+            ctx.reduce_to_all(dst, src, 8, ReduceOp::Sum, &team);
             for j in 0..8 {
                 let want: f64 = (0..4).map(|pe| (pe * 10 + j) as f64).sum();
                 assert_eq!(unsafe { ctx.local(dst)[j] }, want);
@@ -507,11 +510,11 @@ mod tests {
     }
 
     #[test]
-    fn reduce_on_subset_strided() {
+    fn reduce_on_split_team_strided() {
         // Reduce over ranks {0, 2, 4}; odd ranks stay out.
         let w = World::threads(5, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let set = ActiveSet::new(0, 1, 3, 5);
+            let team = ctx.team_world().split_strided(0, 2, 3);
             let src = ctx.shmalloc_n::<i32>(4).unwrap();
             let dst = ctx.shmalloc_n::<i32>(4).unwrap();
             unsafe {
@@ -520,9 +523,13 @@ mod tests {
                 }
             }
             ctx.barrier_all();
-            if set.contains(ctx.my_pe()) {
-                ctx.reduce_to_all(dst, src, 4, ReduceOp::Sum, &set);
-                assert_eq!(unsafe { ctx.local(dst) }, &[0 + 2 + 4; 4][..]);
+            if let Some(team) = &team {
+                ctx.reduce_to_all(dst, src, 4, ReduceOp::Sum, team);
+                assert_eq!(unsafe { ctx.local(dst) }, &[6; 4][..]); // 0 + 2 + 4
+            }
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
             }
             ctx.barrier_all();
         });

@@ -1,48 +1,63 @@
-//! Active sets, the §4.5.1 state protocol, and the set-scoped barrier that
-//! closes every collective.
+//! Strided membership sets, the §4.5.1 state protocol, and the team-scoped
+//! barrier that closes every collective.
+//!
+//! As of the team redesign, [`ActiveSet`] is an *internal* membership
+//! representation: user code holds a [`crate::team::Team`] (built by
+//! `split_strided`/`split_2d`), and every collective entry point takes a
+//! `&Team`. The OpenSHMEM-1.0 `(PE_start, logPE_stride, PE_size)` triplet
+//! survives only in the deprecated [`crate::api`] shims, which build a
+//! temporary legacy team around an `ActiveSet`.
 
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
+use crate::team::{Team, TeamSlot};
 use std::sync::atomic::Ordering;
 
-/// An OpenSHMEM active set: PEs `start + i·2^logstride` for `i in 0..size`.
+/// A strided PE set: world ranks `start + i·stride` for `i in 0..size`.
+///
+/// This is the membership representation behind [`crate::team::Team`] —
+/// `split_strided` constructs one, collectives iterate it. Unlike the 1.0
+/// active-set triplet, `stride` is an arbitrary positive integer, not a
+/// power of two.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ActiveSet {
-    /// First world rank of the set (`PE_start`).
+    /// First world rank of the set.
     pub start: usize,
-    /// log₂ of the stride between consecutive members (`logPE_stride`).
-    pub logstride: usize,
-    /// Number of members (`PE_size`).
+    /// Stride in ranks between consecutive members (≥ 1).
+    pub stride: usize,
+    /// Number of members.
     pub size: usize,
 }
 
 impl ActiveSet {
     /// The whole world of `n` PEs.
     pub fn world(n: usize) -> ActiveSet {
-        ActiveSet { start: 0, logstride: 0, size: n }
+        ActiveSet { start: 0, stride: 1, size: n }
     }
 
-    /// Construct and validate against a world size.
-    pub fn new(start: usize, logstride: usize, size: usize, n_pes: usize) -> ActiveSet {
-        assert!(size >= 1, "active set must have at least one member");
+    /// Construct with an arbitrary stride and validate against a world size.
+    pub fn strided(start: usize, stride: usize, size: usize, n_pes: usize) -> ActiveSet {
+        assert!(size >= 1, "set must have at least one member");
+        assert!(stride >= 1, "stride must be at least 1");
+        let last = start + (size - 1) * stride;
+        assert!(last < n_pes, "set [{start}..={last}] exceeds world of {n_pes}");
+        ActiveSet { start, stride, size }
+    }
+
+    /// Construct from the OpenSHMEM-1.0 triplet (`PE_start`, `logPE_stride`,
+    /// `PE_size`) — the power-of-two-stride special case the deprecated
+    /// shims still speak.
+    pub fn from_triplet(start: usize, logstride: usize, size: usize, n_pes: usize) -> ActiveSet {
         assert!(logstride < usize::BITS as usize, "logstride too large");
-        let last = start + (size - 1) * (1usize << logstride);
-        assert!(last < n_pes, "active set [{start}..={last}] exceeds world of {n_pes}");
-        ActiveSet { start, logstride, size }
-    }
-
-    /// Stride in ranks.
-    #[inline]
-    pub fn stride(&self) -> usize {
-        1usize << self.logstride
+        Self::strided(start, 1usize << logstride, size, n_pes)
     }
 
     /// World rank of set index `i`.
     #[inline]
     pub fn rank_at(&self, i: usize) -> usize {
         debug_assert!(i < self.size);
-        self.start + i * self.stride()
+        self.start + i * self.stride
     }
 
     /// Set index of a world rank, if the rank is a member.
@@ -51,10 +66,10 @@ impl ActiveSet {
             return None;
         }
         let d = rank - self.start;
-        if d % self.stride() != 0 {
+        if d % self.stride != 0 {
             return None;
         }
-        let i = d / self.stride();
+        let i = d / self.stride;
         (i < self.size).then_some(i)
     }
 
@@ -76,12 +91,13 @@ impl ActiveSet {
 
 impl Ctx {
     /// Enter a collective: §4.5.5 checks, then stamp our own state.
-    /// Returns this PE's index within the set.
-    pub(crate) fn coll_enter(&self, set: &ActiveSet, tag: CollOpTag, bytes: usize) -> usize {
+    /// Returns this PE's index within the team.
+    pub(crate) fn coll_enter(&self, team: &Team, tag: CollOpTag, bytes: usize) -> usize {
         let me = self.my_pe();
-        let idx = set
-            .index_of(me)
-            .unwrap_or_else(|| panic!("PE {me} called a collective of set {set:?} it is not in"));
+        let idx = team.my_idx.unwrap_or_else(|| {
+            panic!("PE {me} called a collective on a team it is not a member of")
+        });
+        debug_assert_eq!(team.set.index_of(me), Some(idx));
         let st = &self.header_of(me).coll;
         if self.config().safe {
             // "the safe mode checks that when a process wants to run a
@@ -126,18 +142,18 @@ impl Ctx {
         }
     }
 
-    /// Leave a collective: reset our state, then close with the set barrier.
+    /// Leave a collective: reset our state, then close with the team barrier.
     ///
     /// Reset-first is sound by the paper's own §4.5.2 argument: every
     /// algorithm's internal waits guarantee that, by the time its body
     /// returns, all signals and reads directed at this PE have landed —
     /// "a process exits the collective as soon as its participation is
     /// over; hence, no other process will access its collective data
-    /// structure. It can therefore be reset." The closing set barrier then
+    /// structure. It can therefore be reset." The closing team barrier then
     /// guarantees *peers*' state is also reset before anyone starts the next
     /// collective, so no PE can ever observe a stale `buf_offset`/`counter`
     /// from the previous operation.
-    pub(crate) fn coll_exit(&self, set: &ActiveSet) {
+    pub(crate) fn coll_exit(&self, team: &Team) {
         let st = &self.header_of(self.my_pe()).coll;
         st.op_type.store(CollOpTag::None as u32, Ordering::Release);
         st.in_progress.store(0, Ordering::Release);
@@ -145,7 +161,7 @@ impl Ctx {
         st.counter.store(0, Ordering::Release);
         st.data_size.store(0, Ordering::Release);
         st.seq.fetch_add(1, Ordering::AcqRel);
-        self.barrier_set(set);
+        self.team_barrier_raw(team);
     }
 
     /// Wait until PE `pe` has entered the current collective instance
@@ -154,8 +170,8 @@ impl Ctx {
     /// POSH-RS has the writer wait for the `in_progress` flag — equivalent
     /// observable behaviour, no remote initialisation to undo).
     ///
-    /// Sound because collectives on one active set are totally ordered by
-    /// the exit barrier: a peer's `in_progress` can only be 1 for *this*
+    /// Sound because collectives on one team are totally ordered by the
+    /// exit barrier: a peer's `in_progress` can only be 1 for *this*
     /// instance (the previous instance cleared it before its exit barrier,
     /// and the next cannot start until we ourselves finish).
     pub(crate) fn coll_wait_entered(&self, pe: usize, tag: CollOpTag) {
@@ -198,16 +214,66 @@ impl Ctx {
         std::sync::atomic::fence(Ordering::Acquire);
     }
 
-    /// Barrier over an active set (also the public `shmem_barrier`).
+    /// The raw barrier over a team's members (quiet + linear fan-in/fan-out
+    /// on the team root). Reserved-slot teams use their own `TeamCell`
+    /// sync cells — which is what makes barriers on *overlapping* teams
+    /// safe; legacy triplet teams share the 1.0 `set_count`/`set_sense`
+    /// pair, preserving the historical behaviour of the deprecated shims.
+    pub(crate) fn team_barrier_raw(&self, team: &Team) {
+        self.quiet();
+        let set = &team.set;
+        if set.size == 1 {
+            return;
+        }
+        let me = self.my_pe();
+        debug_assert!(set.contains(me));
+        match team.slot {
+            TeamSlot::Legacy => self.set_barrier_cells(set),
+            TeamSlot::Reserved(slot) => {
+                let root = set.root();
+                if me == root {
+                    let cell = &self.header_of(root).teams[slot];
+                    let want = (set.size - 1) as u64;
+                    self.spin_wait(|| cell.sync_count.load(Ordering::Acquire) >= want);
+                    cell.sync_count.store(0, Ordering::Relaxed);
+                    for r in set.ranks() {
+                        if r != root {
+                            self.header_of(r).teams[slot]
+                                .sync_sense
+                                .fetch_add(1, Ordering::AcqRel);
+                        }
+                    }
+                } else {
+                    let mine = &self.header_of(me).teams[slot].sync_sense;
+                    let before = mine.load(Ordering::Acquire);
+                    self.header_of(root).teams[slot]
+                        .sync_count
+                        .fetch_add(1, Ordering::AcqRel);
+                    self.spin_wait(|| mine.load(Ordering::Acquire) > before);
+                }
+            }
+        }
+    }
+
+    /// Barrier over a raw active set (the deprecated 1.0 `shmem_barrier`
+    /// path and the ablation benches).
     ///
-    /// Linear fan-in/fan-out on the set root using the dedicated
-    /// `set_count`/`set_sense` cells. Monotone release word, count reset by
-    /// the root *before* releasing, so back-to-back set barriers are safe.
+    /// Linear fan-in/fan-out on the set root using the single shared
+    /// `set_count`/`set_sense` cell pair. Monotone release word, count reset
+    /// by the root *before* releasing, so back-to-back set barriers are
+    /// safe. Unlike reserved-team barriers, two *overlapping* sets sharing a
+    /// root must not barrier concurrently — that limitation is why teams
+    /// carry their own cells.
     pub fn barrier_set(&self, set: &ActiveSet) {
         self.quiet();
         if set.size == 1 {
             return;
         }
+        self.set_barrier_cells(set);
+    }
+
+    /// Fan-in/fan-out body shared by [`Ctx::barrier_set`] and legacy teams.
+    fn set_barrier_cells(&self, set: &ActiveSet) {
         let me = self.my_pe();
         debug_assert!(set.contains(me));
         let root = set.root();
@@ -237,7 +303,7 @@ mod tests {
 
     #[test]
     fn active_set_indexing() {
-        let s = ActiveSet::new(2, 1, 3, 8); // ranks 2, 4, 6
+        let s = ActiveSet::strided(2, 2, 3, 8); // ranks 2, 4, 6
         assert_eq!(s.rank_at(0), 2);
         assert_eq!(s.rank_at(2), 6);
         assert_eq!(s.index_of(4), Some(1));
@@ -250,9 +316,24 @@ mod tests {
     }
 
     #[test]
+    fn active_set_arbitrary_stride() {
+        // Stride 3 — impossible to express as a 1.0 triplet.
+        let s = ActiveSet::strided(1, 3, 3, 8); // ranks 1, 4, 7
+        assert_eq!(s.ranks().collect::<Vec<_>>(), vec![1, 4, 7]);
+        assert_eq!(s.index_of(4), Some(1));
+        assert_eq!(s.index_of(5), None);
+    }
+
+    #[test]
+    fn active_set_triplet_compat() {
+        let s = ActiveSet::from_triplet(2, 1, 3, 8); // logstride 1 ⇒ stride 2
+        assert_eq!(s, ActiveSet::strided(2, 2, 3, 8));
+    }
+
+    #[test]
     #[should_panic(expected = "exceeds world")]
     fn active_set_overflow_panics() {
-        let _ = ActiveSet::new(4, 1, 3, 8); // 4, 6, 8 — 8 is out
+        let _ = ActiveSet::strided(4, 2, 3, 8); // 4, 6, 8 — 8 is out
     }
 
     #[test]
@@ -267,8 +348,8 @@ mod tests {
         // complement set is also active — no cross-talk.
         let w = World::threads(4, PoshConfig::small()).unwrap();
         w.run(|ctx| {
-            let evens = ActiveSet::new(0, 1, 2, 4); // 0, 2
-            let odds = ActiveSet::new(1, 1, 2, 4); // 1, 3
+            let evens = ActiveSet::strided(0, 2, 2, 4); // 0, 2
+            let odds = ActiveSet::strided(1, 2, 2, 4); // 1, 3
             let mine = if ctx.my_pe() % 2 == 0 { evens } else { odds };
             for _ in 0..200 {
                 ctx.barrier_set(&mine);
@@ -290,6 +371,37 @@ mod tests {
                 assert!(c.load(Ordering::SeqCst) >= 3 * round);
                 ctx.barrier_set(&set);
             }
+        });
+    }
+
+    #[test]
+    fn overlapping_team_barriers_do_not_collide() {
+        // Teams {0,1} and {0,2} share root PE 0. With the 1.0 shared set
+        // cells this pattern lost arrivals (PE 2's increment could be
+        // consumed by team A's barrier); per-team cells make it safe.
+        let w = World::threads(3, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let a = world.split_strided(0, 1, 2); // PEs {0, 1}
+            let b = world.split_strided(0, 2, 2); // PEs {0, 2}
+            for _ in 0..50 {
+                match ctx.my_pe() {
+                    0 => {
+                        a.as_ref().unwrap().sync();
+                        b.as_ref().unwrap().sync();
+                    }
+                    1 => a.as_ref().unwrap().sync(),
+                    _ => b.as_ref().unwrap().sync(),
+                }
+            }
+            ctx.barrier_all();
+            if let Some(t) = a {
+                t.destroy();
+            }
+            if let Some(t) = b {
+                t.destroy();
+            }
+            ctx.barrier_all();
         });
     }
 }

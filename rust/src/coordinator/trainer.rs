@@ -2,7 +2,7 @@
 
 use super::dataset::CorpusSpec;
 use super::metrics::{MetricsLog, StepMetric};
-use crate::collectives::{ActiveSet, ReduceOp};
+use crate::collectives::ReduceOp;
 use crate::pe::Ctx;
 use crate::runtime::{artifact::cached, Manifest};
 use crate::Result;
@@ -96,7 +96,7 @@ impl Trainer {
             }
         }
         ctx.barrier_all();
-        let world = ActiveSet::world(ctx.n_pes());
+        let world = ctx.team_world();
         // Root keeps its copy (broadcast skips the root target — put locally).
         if ctx.my_pe() != 0 {
             unsafe {

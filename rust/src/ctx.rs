@@ -1,0 +1,283 @@
+//! Communication contexts (OpenSHMEM 1.4 §8): explicit ordering domains for
+//! point-to-point traffic.
+//!
+//! A [`CommCtx`] is created from a [`Team`] and carries its **own**
+//! non-blocking-implicit (NBI) accounting: `ctx.quiet()` completes and
+//! retires only the operations issued *on that context*, never the default
+//! context's or a sibling context's. That is the whole point — two
+//! independent streams of NBI puts (say, a gradient push and a metrics
+//! trickle) can be quiesced independently instead of serialising through
+//! the one global domain OpenSHMEM 1.0 offered.
+//!
+//! PE arguments to context operations are **team-relative** (translated
+//! through the team the context was created from), matching the 1.4
+//! team/context contract.
+//!
+//! The default context is the thread-local accounting behind
+//! [`Ctx::put_nbi`]/[`Ctx::quiet_nbi`](crate::pe::Ctx) — exactly the 1.0
+//! behaviour, untouched. See `docs/memory_model.md` §"Per-context ordering"
+//! for the guarantee→test mapping.
+
+use crate::p2p::nbi::NbiDomain;
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+use crate::team::Team;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Creation options for a [`CommCtx`] (`SHMEM_CTX_SERIALIZED` /
+/// `SHMEM_CTX_PRIVATE`). Both are *promises the program makes*, recorded on
+/// the context and available to future scheduling decisions; neither changes
+/// the memory-ordering guarantees.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CtxOptions {
+    /// The program promises not to use the context from multiple threads
+    /// concurrently (it may still move it between threads).
+    pub serialized: bool,
+    /// The program promises the context is used only by the creating
+    /// thread.
+    pub private: bool,
+}
+
+impl CtxOptions {
+    /// No promises: the context may be shared freely.
+    pub fn new() -> CtxOptions {
+        CtxOptions::default()
+    }
+
+    /// Set the `SERIALIZED` promise.
+    pub fn serialized(mut self) -> CtxOptions {
+        self.serialized = true;
+        self
+    }
+
+    /// Set the `PRIVATE` promise.
+    pub fn private(mut self) -> CtxOptions {
+        self.private = true;
+        self
+    }
+}
+
+/// An explicit communication context: a private NBI ordering domain bound
+/// to a team.
+///
+/// Not `Clone` — the identity of a context *is* its accounting; hand out
+/// references instead.
+#[derive(Debug)]
+pub struct CommCtx {
+    ctx: Ctx,
+    team: Team,
+    opts: CtxOptions,
+    /// NBI operations issued on this context and not yet retired by
+    /// [`CommCtx::quiet`].
+    pending: AtomicU64,
+}
+
+impl CommCtx {
+    /// `shmem_ctx_create`: build a context over `team`'s communication
+    /// domain. The calling PE must be a member of the team.
+    pub fn create(team: &Team, opts: CtxOptions) -> CommCtx {
+        assert!(team.is_member(), "shmem_ctx_create: calling PE is not a member of the team");
+        CommCtx {
+            ctx: team.ctx().clone(),
+            team: team.clone(),
+            opts,
+            pending: AtomicU64::new(0),
+        }
+    }
+
+    /// The team this context was created from (`shmem_ctx_get_team`).
+    pub fn team(&self) -> &Team {
+        &self.team
+    }
+
+    /// The options the context was created with.
+    pub fn options(&self) -> CtxOptions {
+        self.opts
+    }
+
+    /// This PE's rank within the context's team.
+    pub fn my_pe(&self) -> usize {
+        self.team.my_pe()
+    }
+
+    /// Number of PEs in the context's team.
+    pub fn n_pes(&self) -> usize {
+        self.team.n_pes()
+    }
+
+    /// Translate a team-relative PE argument to a world rank.
+    #[inline]
+    fn world_pe(&self, pe: usize) -> usize {
+        self.team.world_rank(pe)
+    }
+
+    /// The explicit NBI domain of this context.
+    #[inline]
+    fn domain(&self) -> NbiDomain<'_> {
+        NbiDomain::Explicit(&self.pending)
+    }
+
+    // -----------------------------------------------------------------
+    // Blocking RMA (team-relative PE numbering).
+    // -----------------------------------------------------------------
+
+    /// `shmem_ctx_put`: blocking put to team rank `pe`.
+    pub fn put<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
+        self.ctx.put(dest, src, self.world_pe(pe));
+    }
+
+    /// `shmem_ctx_get`: blocking get from team rank `pe`.
+    pub fn get<T: Copy>(&self, dest: &mut [T], src: SymPtr<T>, pe: usize) {
+        self.ctx.get(dest, src, self.world_pe(pe));
+    }
+
+    /// `shmem_ctx_p`: single-element put.
+    pub fn put_one<T: Copy>(&self, dest: SymPtr<T>, value: T, pe: usize) {
+        self.ctx.put_one(dest, value, self.world_pe(pe));
+    }
+
+    /// `shmem_ctx_g`: single-element get.
+    pub fn get_one<T: Copy>(&self, src: SymPtr<T>, pe: usize) -> T {
+        self.ctx.get_one(src, self.world_pe(pe))
+    }
+
+    // -----------------------------------------------------------------
+    // Non-blocking-implicit RMA: accounted on *this* context only.
+    // -----------------------------------------------------------------
+
+    /// `shmem_ctx_put_nbi`: start a put on this context; complete at the
+    /// next [`CommCtx::quiet`].
+    pub fn put_nbi<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
+        let world = self.world_pe(pe);
+        self.ctx.put_nbi_domain(&self.domain(), dest, src, world);
+    }
+
+    /// `shmem_ctx_get_nbi`: start a get on this context; the value is only
+    /// guaranteed after the next [`CommCtx::quiet`].
+    pub fn get_nbi<T: Copy>(&self, dest: &mut [T], src: SymPtr<T>, pe: usize) {
+        let world = self.world_pe(pe);
+        self.ctx.get_nbi_domain(&self.domain(), dest, src, world);
+    }
+
+    /// NBI operations issued on this context and not yet retired.
+    pub fn pending_nbi(&self) -> u64 {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    // -----------------------------------------------------------------
+    // Ordering, scoped to this context.
+    // -----------------------------------------------------------------
+
+    /// `shmem_ctx_quiet`: complete and retire the NBI operations issued on
+    /// **this** context. Pending operations on the default context or on
+    /// sibling contexts are untouched.
+    pub fn quiet(&self) {
+        self.ctx.quiet_domain(&self.domain());
+    }
+
+    /// `shmem_ctx_fence`: order the puts issued on this context per
+    /// destination PE. Does not retire NBI accounting (fences never do).
+    pub fn fence(&self) {
+        self.ctx.fence_domain(&self.domain());
+    }
+
+    /// `shmem_ctx_destroy`: quiesce the context and drop it. All pending
+    /// NBI operations are completed first, as the spec requires.
+    pub fn destroy(self) {
+        self.quiet();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+
+    #[test]
+    fn ctx_ops_are_team_relative() {
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            // Odd ranks 1, 3 — team ranks 0, 1.
+            let odds = world.split_strided(1, 2, 2);
+            let cell = ctx.shmalloc_n::<u64>(1).unwrap();
+            if let Some(t) = &odds {
+                let c = t.create_ctx(CtxOptions::new());
+                assert_eq!(c.n_pes(), 2);
+                // Team rank 0 writes team rank 1's cell: world PE 1 → 3.
+                if c.my_pe() == 0 {
+                    c.put_one(cell, 77, 1);
+                }
+                t.sync();
+                if c.my_pe() == 1 {
+                    assert_eq!(c.get_one(cell, 1), 77);
+                    assert_eq!(ctx.my_pe(), 3, "team rank 1 must be world PE 3");
+                }
+                c.destroy();
+            }
+            ctx.barrier_all();
+            if let Some(t) = odds {
+                t.destroy();
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn quiet_is_scoped_to_one_context() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let a = world.create_ctx(CtxOptions::new().private());
+            let b = world.create_ctx(CtxOptions::new());
+            let buf = ctx.shmalloc_n::<u32>(8).unwrap();
+            let peer = (ctx.my_pe() + 1) % 2;
+
+            a.put_nbi(buf, &[1; 8], peer);
+            b.put_nbi(buf, &[1; 8], peer);
+            ctx.put_nbi(buf, &[1; 8], peer); // default context
+            assert_eq!(a.pending_nbi(), 1);
+            assert_eq!(b.pending_nbi(), 1);
+            assert_eq!(ctx.pending_nbi(), 1);
+
+            // Quiet on A retires A only — B and the default domain still
+            // hold their pending operations.
+            a.quiet();
+            assert_eq!(a.pending_nbi(), 0);
+            assert_eq!(b.pending_nbi(), 1);
+            assert_eq!(ctx.pending_nbi(), 1);
+
+            // Default-context quiet leaves B alone.
+            ctx.quiet_nbi();
+            assert_eq!(ctx.pending_nbi(), 0);
+            assert_eq!(b.pending_nbi(), 1);
+
+            b.quiet();
+            assert_eq!(b.pending_nbi(), 0);
+
+            // Fence orders but never retires.
+            b.put_nbi(buf, &[2; 8], peer);
+            b.fence();
+            assert_eq!(b.pending_nbi(), 1);
+            b.destroy();
+            ctx.barrier_all();
+            assert_eq!(unsafe { ctx.local(buf) }, &[2u32; 8][..]);
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn options_are_recorded() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let t = ctx.team_world();
+            let c = t.create_ctx(CtxOptions::new().serialized().private());
+            assert!(c.options().serialized);
+            assert!(c.options().private);
+            let d = t.create_ctx(CtxOptions::new());
+            assert!(!d.options().serialized && !d.options().private);
+            c.destroy();
+            d.destroy();
+        });
+    }
+}

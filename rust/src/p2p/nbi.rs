@@ -1,4 +1,5 @@
-//! Non-blocking-implicit transfers: `shmem_put_nbi` / `shmem_get_nbi`.
+//! Non-blocking-implicit transfers: `shmem_put_nbi` / `shmem_get_nbi`,
+//! accounted per **ordering domain**.
 //!
 //! **Extension** (OpenSHMEM 1.3; not in the 1.0 spec the paper implements —
 //! listed under "future works" in its conclusion). On a shared-memory node
@@ -8,52 +9,106 @@
 //!
 //! POSH-RS issues NBI transfers eagerly (measurements in EXPERIMENTS.md
 //! show deferral buys nothing when the transport is a local memcpy — there
-//! is no NIC to overlap with) but keeps the full accounting contract:
-//! `pending_nbi()` counts issued-but-unretired operations and `quiet()`
-//! retires them, so programs written against the 1.3 semantics run
-//! unmodified and the completion discipline is testable.
+//! is no NIC to overlap with) but keeps the full accounting contract, now
+//! split by domain ([`NbiDomain`]):
+//!
+//! * the **default domain** is a thread-local counter — the 1.0 behaviour:
+//!   [`Ctx::put_nbi`] issues into it, [`Ctx::quiet_nbi`] retires it;
+//! * each **explicit domain** is the private counter of one
+//!   [`crate::ctx::CommCtx`]; `ctx.quiet()` retires that counter and *only*
+//!   that counter.
+//!
+//! `pending_nbi()` counts issued-but-unretired operations per domain, so
+//! programs written against the 1.3/1.4 semantics run unmodified and the
+//! completion discipline — including its per-context scoping — is testable.
 
 use crate::pe::Ctx;
 use crate::symheap::SymPtr;
 use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 thread_local! {
-    /// Issued-but-unretired NBI operations of the calling PE thread.
+    /// Issued-but-unretired NBI operations of the calling PE thread's
+    /// default domain.
     static PENDING: Cell<u64> = const { Cell::new(0) };
 }
 
+/// An NBI ordering domain: where issued-but-unretired operations are
+/// counted, and which counter a quiet retires.
+pub(crate) enum NbiDomain<'a> {
+    /// The thread-local default context (OpenSHMEM 1.0 behaviour).
+    Default,
+    /// An explicit context's private counter.
+    Explicit(&'a AtomicU64),
+}
+
 impl Ctx {
-    /// `shmem_put_nbi`: start a put; completion only at the next `quiet`
-    /// (or barrier, which includes one).
-    pub fn put_nbi<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
+    /// Record one issued NBI operation in `domain`.
+    pub(crate) fn nbi_issued(&self, domain: &NbiDomain<'_>) {
+        match domain {
+            NbiDomain::Default => PENDING.with(|p| p.set(p.get() + 1)),
+            NbiDomain::Explicit(cell) => {
+                cell.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Retire every pending NBI operation of `domain`.
+    pub(crate) fn nbi_retire(&self, domain: &NbiDomain<'_>) {
+        match domain {
+            NbiDomain::Default => PENDING.with(|p| p.set(0)),
+            NbiDomain::Explicit(cell) => cell.store(0, Ordering::Relaxed),
+        }
+    }
+
+    /// `put_nbi` into an explicit domain (the [`crate::ctx::CommCtx`] path).
+    pub(crate) fn put_nbi_domain<T: Copy>(
+        &self,
+        domain: &NbiDomain<'_>,
+        dest: SymPtr<T>,
+        src: &[T],
+        pe: usize,
+    ) {
         self.put(dest, src, pe);
-        PENDING.with(|p| p.set(p.get() + 1));
+        self.nbi_issued(domain);
     }
 
-    /// `shmem_get_nbi`: start a get; the value is only guaranteed after the
-    /// next `quiet`.
-    pub fn get_nbi<T: Copy>(&self, dest: &mut [T], src: SymPtr<T>, pe: usize) {
+    /// `get_nbi` into an explicit domain (the [`crate::ctx::CommCtx`] path).
+    pub(crate) fn get_nbi_domain<T: Copy>(
+        &self,
+        domain: &NbiDomain<'_>,
+        dest: &mut [T],
+        src: SymPtr<T>,
+        pe: usize,
+    ) {
         self.get(dest, src, pe);
-        PENDING.with(|p| p.set(p.get() + 1));
+        self.nbi_issued(domain);
     }
 
-    /// Number of NBI operations issued by this PE and not yet retired by a
-    /// `quiet`/barrier.
+    /// `shmem_put_nbi` (default context): start a put; completion only at
+    /// the next [`Ctx::quiet_nbi`] (or barrier, which includes a quiet).
+    pub fn put_nbi<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
+        self.put_nbi_domain(&NbiDomain::Default, dest, src, pe);
+    }
+
+    /// `shmem_get_nbi` (default context): start a get; the value is only
+    /// guaranteed after the next [`Ctx::quiet_nbi`].
+    pub fn get_nbi<T: Copy>(&self, dest: &mut [T], src: SymPtr<T>, pe: usize) {
+        self.get_nbi_domain(&NbiDomain::Default, dest, src, pe);
+    }
+
+    /// Number of NBI operations issued by this PE on the **default**
+    /// context and not yet retired by a [`Ctx::quiet_nbi`]. Explicit
+    /// contexts keep their own count ([`crate::ctx::CommCtx::pending_nbi`]).
     pub fn pending_nbi(&self) -> u64 {
         PENDING.with(|p| p.get())
     }
 
-    /// Retire NBI operations (called from `quiet`).
-    pub(crate) fn retire_nbi(&self) {
-        PENDING.with(|p| p.set(0));
-    }
-
-    /// `shmem_quiet` variant that also retires NBI accounting. (The plain
-    /// `quiet` in `sync::order` is the fence; this is the bookkeeping face
-    /// used by programs that check `pending_nbi`.)
+    /// `shmem_quiet` variant that also retires the default context's NBI
+    /// accounting. (The plain `quiet` in `sync::order` is the fence; this
+    /// is the bookkeeping face used by programs that check `pending_nbi`.)
     pub fn quiet_nbi(&self) {
-        self.quiet();
-        self.retire_nbi();
+        self.quiet_domain(&NbiDomain::Default);
     }
 }
 

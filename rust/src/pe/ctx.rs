@@ -55,6 +55,13 @@ impl Ctx {
         &self.shared
     }
 
+    /// The world team (`SHMEM_TEAM_WORLD`): every PE of the job, team rank
+    /// = world rank. The starting point for [`crate::team::Team::split_strided`]
+    /// and [`crate::team::Team::split_2d`].
+    pub fn team_world(&self) -> crate::team::Team {
+        crate::team::Team::world(self)
+    }
+
     /// This PE's own symmetric heap.
     #[inline]
     pub fn heap(&self) -> &SymHeap {

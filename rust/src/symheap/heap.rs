@@ -47,6 +47,10 @@ impl SymHeap {
         };
         let hdr = h.header();
         hdr.rank.store(rank as u64, Ordering::Relaxed);
+        // Seed the team slot pool (only PE 0's copy is ever consulted, but
+        // every header carries it so the layout stays rank-independent).
+        hdr.team_slot_bitmap
+            .store(super::layout::TEAM_SLOT_FREE_INIT, Ordering::Relaxed);
         hdr.magic.store(MAGIC, Ordering::Release);
         hdr.ready.store(1, Ordering::Release);
         Ok(h)

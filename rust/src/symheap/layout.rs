@@ -17,6 +17,15 @@ pub const MAX_BARRIER_ROUNDS: usize = 20; // up to 2^20 PEs
 /// Number of named-lock slots in each header (§4.6 named mutexes).
 pub const NAMED_LOCK_SLOTS: usize = 64;
 
+/// Number of team sync-cell slots in each header. Slot 0 is permanently the
+/// world team; the rest are claimed/released through the slot bitmap on
+/// PE 0's header as teams are split and destroyed.
+pub const MAX_TEAMS: usize = 32;
+
+/// Initial value of [`HeapHeader::team_slot_bitmap`]: every slot free
+/// (bit set) except slot 0, which is the world team.
+pub const TEAM_SLOT_FREE_INIT: u64 = ((1u64 << MAX_TEAMS) - 1) & !1u64;
+
 /// Default size of the statics area (pre-parser output target, §4.2).
 pub const DEFAULT_STATICS_SIZE: usize = 1 << 20;
 
@@ -106,6 +115,38 @@ pub struct BarrierCells {
     pub set_sense: AtomicU64,
 }
 
+/// Per-team synchronisation cells, one slot per live team (OpenSHMEM 1.4
+/// teams). Giving every team its own cells — instead of the single
+/// `set_count`/`set_sense` pair the 1.0 active-set barrier used — is what
+/// makes barriers on *overlapping* teams safe: two teams sharing a root PE
+/// no longer race on one arrival counter.
+///
+/// The descriptor triple (`start`/`stride`/`size`, world ranks, `size` 0 =
+/// slot unused) is written by every member at split time; safe mode
+/// cross-checks it against the team root's copy, turning a membership
+/// disagreement (a §6.4-style programmer error) into a loud panic.
+#[repr(C, align(128))]
+pub struct TeamCell {
+    /// First world rank of the team's strided membership.
+    pub start: AtomicU64,
+    /// World-rank stride between consecutive members (≥ 1 when live).
+    pub stride: AtomicU64,
+    /// Member count; 0 while the slot is unused.
+    pub size: AtomicU64,
+    /// Broadcast mailbox used during `split_*`: the parent root publishes
+    /// the child's slot index here as `slot + 1` (0 = nothing published).
+    pub pub_val: AtomicU64,
+    /// Generation counter: bumped on this PE each time it joins a team on
+    /// this slot and again when it destroys it. A `Team` handle records the
+    /// value it saw, so `destroy` can detect a stale clone (slot recycled
+    /// or already destroyed) instead of corrupting the current occupant.
+    pub gen: AtomicU64,
+    /// Team-barrier arrivals (counted on the team root's cell).
+    pub sync_count: AtomicU64,
+    /// Team-barrier release word (monotone, bumped by the team root).
+    pub sync_sense: AtomicU64,
+}
+
 /// The header at offset 0 of every symmetric-heap segment.
 #[repr(C)]
 pub struct HeapHeader {
@@ -131,6 +172,11 @@ pub struct HeapHeader {
     pub named_locks: [AtomicU64; NAMED_LOCK_SLOTS],
     /// Per-PE "signal" mailbox used by wait/wait_until tests and the RTE.
     pub mailbox: AtomicU64,
+    /// Free team slots as a bitmap (bit t set = slot t free). Only PE 0's
+    /// copy is authoritative; teams claim slots with a CAS loop on it.
+    pub team_slot_bitmap: AtomicU64,
+    /// Per-team sync cells and membership descriptors (OpenSHMEM 1.4 teams).
+    pub teams: [TeamCell; MAX_TEAMS],
 }
 
 impl HeapHeader {
@@ -186,10 +232,11 @@ mod tests {
     use std::sync::atomic::Ordering;
 
     #[test]
-    fn header_fits_one_page_region() {
-        // Keep the header compact; if this grows past 2 pages something is
-        // wrong (the named-lock table dominates: 64 * 8B).
-        assert!(std::mem::size_of::<HeapHeader>() < 8192);
+    fn header_fits_small_region() {
+        // Keep the header compact; if this grows past 4 pages something is
+        // wrong (the team table dominates: MAX_TEAMS cache lines, then the
+        // named-lock table: 64 * 8B).
+        assert!(std::mem::size_of::<HeapHeader>() < 16384);
         assert_eq!(HeapHeader::region_size() % crate::shm::inproc::page_size(), 0);
     }
 
@@ -197,6 +244,14 @@ mod tests {
     fn coll_state_is_cacheline_isolated() {
         assert_eq!(std::mem::align_of::<CollectiveState>(), 128);
         assert_eq!(std::mem::align_of::<BarrierCells>(), 128);
+        assert_eq!(std::mem::align_of::<TeamCell>(), 128);
+    }
+
+    #[test]
+    fn team_slot_bitmap_init_value() {
+        // Slot 0 (world) reserved, everything else free.
+        assert_eq!(TEAM_SLOT_FREE_INIT & 1, 0);
+        assert_eq!(TEAM_SLOT_FREE_INIT.count_ones() as usize, MAX_TEAMS - 1);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Memory-ordering primitives: `shmem_fence` and `shmem_quiet`.
+//! Memory-ordering primitives: `shmem_fence` and `shmem_quiet`, resolved
+//! against an NBI **ordering domain**.
 //!
 //! On a shared-memory node every put is a synchronous memory copy performed
 //! by the origin core, so by the time `put` returns the stores have been
@@ -12,7 +13,17 @@
 //!   Our non-temporal copy variant uses weakly-ordered streaming stores, so
 //!   quiet must issue a full `SeqCst` fence (which lowers to `mfence` on
 //!   x86, ordering streaming stores too — `sfence` semantics included).
+//!
+//! Since the context redesign, completion *accounting* is per ordering
+//! domain: [`Ctx::quiet_nbi`] retires the default (thread-local) domain,
+//! [`crate::ctx::CommCtx::quiet`] retires that context's private domain,
+//! and neither waits on — or retires — the other's pending operations. The
+//! hardware fence itself is process-wide either way (it costs the same),
+//! so the *visibility* guarantee of a quiet is never weaker than 1.0; the
+//! per-domain scoping is about completion semantics and the bookkeeping
+//! programs observe through `pending_nbi`.
 
+use crate::p2p::nbi::NbiDomain;
 use crate::pe::Ctx;
 use std::sync::atomic::{fence, Ordering};
 
@@ -28,6 +39,21 @@ impl Ctx {
     #[inline]
     pub fn quiet(&self) {
         fence(Ordering::SeqCst);
+    }
+
+    /// Quiet resolved against one ordering domain: the completion fence,
+    /// then retire that domain's (and only that domain's) NBI accounting.
+    #[inline]
+    pub(crate) fn quiet_domain(&self, domain: &NbiDomain<'_>) {
+        self.quiet();
+        self.nbi_retire(domain);
+    }
+
+    /// Fence resolved against one ordering domain. Fences order, they do
+    /// not complete — no accounting is retired, on any domain.
+    #[inline]
+    pub(crate) fn fence_domain(&self, _domain: &NbiDomain<'_>) {
+        self.fence();
     }
 }
 
@@ -90,6 +116,30 @@ mod tests {
                 ctx.barrier_all();
             }
             let _ = Ordering::SeqCst;
+        });
+    }
+
+    /// Quiet on an explicit context must not retire the default domain's
+    /// pending NBI operations, and vice versa — the ordering-domain
+    /// isolation guarantee of the context redesign.
+    #[test]
+    fn quiet_does_not_cross_domains() {
+        use crate::ctx::CtxOptions;
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let c = world.create_ctx(CtxOptions::new());
+            let buf = ctx.shmalloc_n::<u8>(4).unwrap();
+            let peer = (ctx.my_pe() + 1) % 2;
+            ctx.put_nbi(buf, &[9; 4], peer);
+            c.put_nbi(buf, &[9; 4], peer);
+            c.quiet();
+            assert_eq!(c.pending_nbi(), 0);
+            assert_eq!(ctx.pending_nbi(), 1, "ctx quiet must not retire the default domain");
+            ctx.quiet_nbi();
+            assert_eq!(ctx.pending_nbi(), 0);
+            c.destroy();
+            ctx.barrier_all();
         });
     }
 }

@@ -1,0 +1,575 @@
+//! Teams (OpenSHMEM 1.4 §9): named, first-class PE subsets that replace the
+//! 1.0 `(PE_start, logPE_stride, PE_size)` active-set triplet as the
+//! ordering/membership domain of every collective.
+//!
+//! A [`Team`] is split *collectively* from an existing team
+//! ([`Team::split_strided`], [`Team::split_2d`]), starting from the world
+//! team ([`Team::world`] / [`crate::pe::Ctx::team_world`]). Each live team
+//! owns a slot of per-team synchronisation cells in every member's heap
+//! header ([`crate::symheap::layout::TeamCell`]), claimed from a shared
+//! bitmap on PE 0 and agreed on through a broadcast over the *parent* team —
+//! so membership really is a collective contract, not a local conviction,
+//! and (in safe mode) each member cross-checks its computed membership
+//! descriptor against the team root's copy.
+//!
+//! Why per-team cells matter: the 1.0 set barrier funnelled every subset
+//! through one `set_count`/`set_sense` pair per header, so two overlapping
+//! sets sharing a root could steal each other's arrivals. Teams cannot —
+//! each has its own cells for as long as it lives. Slots are recycled by
+//! [`Team::destroy`].
+//!
+//! Communication contexts ([`crate::ctx::CommCtx`]) are created *from* a
+//! team and give point-to-point traffic the same explicit-domain treatment
+//! teams give collectives.
+
+use crate::collectives::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::layout::MAX_TEAMS;
+use std::sync::atomic::Ordering;
+
+/// The reserved sync-cell slot of the world team.
+pub const WORLD_TEAM_SLOT: usize = 0;
+
+/// Which synchronisation cells a team barriers on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum TeamSlot {
+    /// A claimed `TeamCell` slot (index into `HeapHeader::teams`).
+    Reserved(usize),
+    /// The shared 1.0 `set_count`/`set_sense` cells — deprecated-triplet
+    /// shims only.
+    Legacy,
+}
+
+/// A handle to one team: a strided subset of the world's PEs with its own
+/// rank numbering, sync cells, and (via [`crate::ctx::CommCtx`]) ordering
+/// domains.
+///
+/// Cheap to clone. Collective operations on the team must be entered by
+/// *every* member; `split_*` must additionally be entered by every member
+/// of the team being split.
+#[derive(Clone, Debug)]
+pub struct Team {
+    ctx: Ctx,
+    /// World-rank membership (strided).
+    pub(crate) set: ActiveSet,
+    /// This PE's team rank, if it is a member.
+    pub(crate) my_idx: Option<usize>,
+    /// Sync-cell slot.
+    pub(crate) slot: TeamSlot,
+    /// This PE's slot-generation stamp at join time (0 for the world team
+    /// and legacy teams, whose slots are never recycled). `destroy` checks
+    /// it against the header so a stale clone fails loudly instead of
+    /// touching a recycled slot.
+    gen: u64,
+}
+
+impl Team {
+    /// The world team (`SHMEM_TEAM_WORLD`): every PE, team rank = world
+    /// rank, permanently bound to sync slot 0. Not collective — the world
+    /// team pre-exists; this merely builds a handle to it.
+    pub fn world(ctx: &Ctx) -> Team {
+        Team {
+            ctx: ctx.clone(),
+            set: ActiveSet::world(ctx.n_pes()),
+            my_idx: Some(ctx.my_pe()),
+            slot: TeamSlot::Reserved(WORLD_TEAM_SLOT),
+            gen: 0,
+        }
+    }
+
+    /// A *legacy* team over a 1.0 active-set triplet. Not collective, no
+    /// reserved sync cells (barriers share the historical set cells) — this
+    /// exists solely so the deprecated triplet entry points in
+    /// [`crate::api`] can keep compiling. New code should use
+    /// [`Team::split_strided`].
+    pub fn from_triplet(ctx: &Ctx, pe_start: usize, log_pe_stride: usize, pe_size: usize) -> Team {
+        let set = ActiveSet::from_triplet(pe_start, log_pe_stride, pe_size, ctx.n_pes());
+        Team {
+            ctx: ctx.clone(),
+            my_idx: set.index_of(ctx.my_pe()),
+            set,
+            slot: TeamSlot::Legacy,
+            gen: 0,
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Identity and rank translation.
+    // -----------------------------------------------------------------
+
+    /// This PE's rank within the team (`shmem_team_my_pe`). Panics if the
+    /// calling PE is not a member (non-members hold no reserved-team handle;
+    /// only legacy triplet teams can reach this state).
+    pub fn my_pe(&self) -> usize {
+        self.my_idx.expect("calling PE is not a member of this team")
+    }
+
+    /// Number of PEs in the team (`shmem_team_n_pes`).
+    pub fn n_pes(&self) -> usize {
+        self.set.size
+    }
+
+    /// Whether the calling PE is a member.
+    pub fn is_member(&self) -> bool {
+        self.my_idx.is_some()
+    }
+
+    /// The reserved sync-cell slot, or `None` for legacy triplet teams.
+    pub fn id(&self) -> Option<usize> {
+        match self.slot {
+            TeamSlot::Reserved(s) => Some(s),
+            TeamSlot::Legacy => None,
+        }
+    }
+
+    /// World rank of team rank `pe` (team → world translation).
+    pub fn world_rank(&self, pe: usize) -> usize {
+        assert!(pe < self.set.size, "team rank {pe} out of range ({} PEs)", self.set.size);
+        self.set.rank_at(pe)
+    }
+
+    /// Team rank of a world rank, if it is a member (world → team
+    /// translation).
+    pub fn team_rank_of(&self, world_rank: usize) -> Option<usize> {
+        self.set.index_of(world_rank)
+    }
+
+    /// Translate team rank `pe` of `self` into the corresponding rank of
+    /// `dest` (`shmem_team_translate_pe`): `None` if the PE is not a member
+    /// of `dest`.
+    pub fn translate_pe(&self, pe: usize, dest: &Team) -> Option<usize> {
+        dest.team_rank_of(self.world_rank(pe))
+    }
+
+    /// Whether `world_rank` is a member of this team.
+    pub fn contains_world(&self, world_rank: usize) -> bool {
+        self.set.contains(world_rank)
+    }
+
+    /// Iterate the member world ranks in team-rank order.
+    pub fn ranks(&self) -> impl Iterator<Item = usize> + '_ {
+        self.set.ranks()
+    }
+
+    /// The per-PE context this team was built from.
+    pub(crate) fn ctx(&self) -> &Ctx {
+        &self.ctx
+    }
+
+    // -----------------------------------------------------------------
+    // Collective team operations.
+    // -----------------------------------------------------------------
+
+    /// `shmem_team_sync`: barrier over the team's members (includes quiet,
+    /// as all POSH-RS barriers do).
+    pub fn sync(&self) {
+        self.ctx.barrier(self);
+    }
+
+    /// `shmem_team_split_strided`: collectively split off the sub-team of
+    /// team ranks `start + i·stride` for `i in 0..size`. **Every member of
+    /// `self` must call this with identical arguments.** Returns the new
+    /// team handle for members of the child, `None` for the rest.
+    ///
+    /// The child's sync-cell slot is claimed from the world pool by the
+    /// parent root and broadcast through the parent's own team cell, and
+    /// every child member records the agreed membership descriptor in its
+    /// heap header (cross-checked against the child root's in safe mode).
+    pub fn split_strided(&self, start: usize, stride: usize, size: usize) -> Option<Team> {
+        let me_idx = self
+            .my_idx
+            .expect("split_strided is collective over the parent team; caller is not a member");
+        assert!(stride >= 1, "team stride must be >= 1");
+        assert!(size >= 1, "a team must have at least one member");
+        assert!(
+            start + (size - 1) * stride < self.set.size,
+            "split (start {start}, stride {stride}, size {size}) exceeds parent team of {}",
+            self.set.size
+        );
+
+        // Child membership in world ranks — a pure function of the parent's
+        // membership and the split arguments, so every member computes the
+        // same set (Fact-1 style determinism).
+        let start_w = self.set.rank_at(start);
+        let stride_w = stride * self.set.stride;
+        let child_set = ActiveSet::strided(start_w, stride_w, size, self.ctx.n_pes());
+
+        // Agree on the child's sync-cell slot.
+        let slot = self.broadcast_claimed_slot();
+
+        // My child rank, if any.
+        let my_child_idx = if me_idx >= start && (me_idx - start) % stride == 0 {
+            let i = (me_idx - start) / stride;
+            (i < size).then_some(i)
+        } else {
+            None
+        };
+
+        // Child members publish the membership descriptor they computed and
+        // stamp their local slot generation (stale-handle detection).
+        let mut my_gen = 0u64;
+        if my_child_idx.is_some() {
+            let cell = &self.ctx.header_of(self.ctx.my_pe()).teams[slot];
+            my_gen = cell.gen.fetch_add(1, Ordering::AcqRel) + 1;
+            cell.start.store(child_set.start as u64, Ordering::Release);
+            cell.stride.store(child_set.stride as u64, Ordering::Release);
+            cell.size.store(child_set.size as u64, Ordering::Release);
+        }
+        self.sync();
+        // Safe mode: my computed membership must agree with the child
+        // root's published copy — a split-argument mismatch across PEs is
+        // the team-era analogue of §6.4 asymmetric allocation.
+        if self.ctx.config().safe && my_child_idx.is_some() {
+            let root_cell = &self.ctx.header_of(child_set.root()).teams[slot];
+            let (s, t, z) = (
+                root_cell.start.load(Ordering::Acquire) as usize,
+                root_cell.stride.load(Ordering::Acquire) as usize,
+                root_cell.size.load(Ordering::Acquire) as usize,
+            );
+            assert!(
+                (s, t, z) == (child_set.start, child_set.stride, child_set.size),
+                "team membership disagreement: PE {} computed (start {}, stride {}, size {}), \
+                 child root published (start {s}, stride {t}, size {z})",
+                self.ctx.my_pe(),
+                child_set.start,
+                child_set.stride,
+                child_set.size
+            );
+        }
+
+        my_child_idx.map(|i| Team {
+            ctx: self.ctx.clone(),
+            set: child_set,
+            my_idx: Some(i),
+            slot: TeamSlot::Reserved(slot),
+            gen: my_gen,
+        })
+    }
+
+    /// `shmem_team_split_2d`: collectively arrange the team's ranks in a
+    /// row-major grid `xrange` wide and return this PE's `(x_team, y_team)`
+    /// — the row team (stride 1) and the column team (stride `xrange`).
+    /// Edge rows/columns are shorter when `xrange` does not divide the team
+    /// size. **Every member of `self` must call this with the same
+    /// `xrange`.**
+    pub fn split_2d(&self, xrange: usize) -> (Team, Team) {
+        let me = self
+            .my_idx
+            .expect("split_2d is collective over the parent team; caller is not a member");
+        assert!(xrange >= 1, "xrange must be >= 1");
+        let size = self.set.size;
+        let xrange = xrange.min(size);
+        let nrows = (size + xrange - 1) / xrange;
+        let my_row = me / xrange;
+        let my_col = me % xrange;
+        // One collective split per row, then per column; everyone
+        // participates in all of them, keeping only its own.
+        let mut x_team = None;
+        for row in 0..nrows {
+            let rstart = row * xrange;
+            let rsize = (size - rstart).min(xrange);
+            let t = self.split_strided(rstart, 1, rsize);
+            if row == my_row {
+                x_team = t;
+            }
+        }
+        let mut y_team = None;
+        for col in 0..xrange {
+            let csize = (size - col + xrange - 1) / xrange;
+            let t = self.split_strided(col, xrange, csize);
+            if col == my_col {
+                y_team = t;
+            }
+        }
+        (
+            x_team.expect("every parent rank lies in exactly one row"),
+            y_team.expect("every parent rank lies in exactly one column"),
+        )
+    }
+
+    /// `shmem_team_destroy`: collectively retire the team and return its
+    /// sync-cell slot to the world pool. All members must call this; the
+    /// world team cannot be destroyed, and destroying a legacy triplet team
+    /// is a no-op (it never claimed a slot).
+    ///
+    /// `Team` is `Clone`, so a program can hold several handles to one
+    /// team; destroying it through one handle makes the clones stale. Using
+    /// a stale clone is a usage error (as in C OpenSHMEM); `destroy` checks
+    /// the per-PE slot generation and panics on the common cases (double
+    /// destroy, destroy after the slot was recycled on this PE) instead of
+    /// corrupting the slot's current occupant.
+    pub fn destroy(self) {
+        match self.slot {
+            TeamSlot::Legacy => (),
+            TeamSlot::Reserved(WORLD_TEAM_SLOT) => {
+                panic!("the world team cannot be destroyed")
+            }
+            TeamSlot::Reserved(slot) => {
+                let cell = &self.ctx.header_of(self.ctx.my_pe()).teams[slot];
+                assert!(
+                    cell.gen.load(Ordering::Acquire) == self.gen,
+                    "stale team handle: sync slot {slot} was already destroyed or \
+                     recycled on PE {} (destroy called twice via a clone?)",
+                    self.ctx.my_pe()
+                );
+                // Quiesce every member before the slot can be reused.
+                self.sync();
+                // Invalidate this PE's outstanding handles to the team.
+                cell.gen.fetch_add(1, Ordering::AcqRel);
+                if self.my_idx == Some(0) {
+                    cell.start.store(0, Ordering::Release);
+                    cell.stride.store(0, Ordering::Release);
+                    cell.size.store(0, Ordering::Release);
+                    release_team_slot(&self.ctx, slot);
+                }
+            }
+        }
+    }
+
+    /// Create a communication context whose ordering domain is this team
+    /// (`shmem_team_create_ctx`).
+    pub fn create_ctx(&self, opts: crate::ctx::CtxOptions) -> crate::ctx::CommCtx {
+        crate::ctx::CommCtx::create(self, opts)
+    }
+
+    // -----------------------------------------------------------------
+    // Slot-agreement plumbing.
+    // -----------------------------------------------------------------
+
+    /// Parent root claims a slot from the world pool and broadcasts it to
+    /// every parent member through the parent's own team cell. Three team
+    /// barriers bracket the publish/read/reset phases so back-to-back
+    /// splits can never observe a stale value.
+    fn broadcast_claimed_slot(&self) -> usize {
+        let pslot = match self.slot {
+            TeamSlot::Reserved(s) => s,
+            TeamSlot::Legacy => {
+                panic!("legacy triplet teams cannot be split; build a real team first")
+            }
+        };
+        let root_pe = self.set.root();
+        self.sync();
+        let mailbox = &self.ctx.header_of(root_pe).teams[pslot].pub_val;
+        let slot;
+        if self.ctx.my_pe() == root_pe {
+            slot = claim_team_slot(&self.ctx);
+            mailbox.store(slot as u64 + 1, Ordering::Release);
+        } else {
+            let mut v = 0u64;
+            self.ctx.spin_wait(|| {
+                v = mailbox.load(Ordering::Acquire);
+                v != 0
+            });
+            slot = (v - 1) as usize;
+        }
+        self.sync();
+        if self.ctx.my_pe() == root_pe {
+            mailbox.store(0, Ordering::Release);
+        }
+        self.sync();
+        slot
+    }
+}
+
+/// Claim a free team slot from the bitmap on PE 0's header.
+fn claim_team_slot(ctx: &Ctx) -> usize {
+    let bm = &ctx.header_of(0).team_slot_bitmap;
+    loop {
+        let cur = bm.load(Ordering::Acquire);
+        assert!(
+            cur != 0,
+            "team sync-cell slots exhausted ({MAX_TEAMS} concurrent teams); \
+             destroy unused teams to recycle slots"
+        );
+        let bit = cur.trailing_zeros() as usize;
+        if bm
+            .compare_exchange(cur, cur & !(1u64 << bit), Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return bit;
+        }
+    }
+}
+
+/// Return a team slot to the bitmap on PE 0's header.
+fn release_team_slot(ctx: &Ctx, slot: usize) {
+    debug_assert!(slot != WORLD_TEAM_SLOT && slot < MAX_TEAMS);
+    ctx.header_of(0).team_slot_bitmap.fetch_or(1u64 << slot, Ordering::AcqRel);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+    use crate::symheap::layout::TEAM_SLOT_FREE_INIT;
+
+    #[test]
+    fn world_team_identity() {
+        let w = World::threads(4, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let t = ctx.team_world();
+            assert_eq!(t.my_pe(), ctx.my_pe());
+            assert_eq!(t.n_pes(), 4);
+            assert_eq!(t.id(), Some(WORLD_TEAM_SLOT));
+            assert_eq!(t.world_rank(3), 3);
+            assert_eq!(t.team_rank_of(2), Some(2));
+            assert!(t.is_member());
+        });
+    }
+
+    #[test]
+    fn split_strided_membership_and_translation() {
+        let w = World::threads(6, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            // Odd ranks: 1, 3, 5.
+            let odds = world.split_strided(1, 2, 3);
+            if ctx.my_pe() % 2 == 1 {
+                let t = odds.as_ref().unwrap();
+                assert_eq!(t.n_pes(), 3);
+                assert_eq!(t.my_pe(), ctx.my_pe() / 2);
+                assert_eq!(t.world_rank(t.my_pe()), ctx.my_pe());
+                assert_eq!(t.team_rank_of(ctx.my_pe()), Some(t.my_pe()));
+                // Round-trip through the world team.
+                assert_eq!(t.translate_pe(t.my_pe(), &world), Some(ctx.my_pe()));
+                t.sync();
+                t.sync();
+            } else {
+                assert!(odds.is_none());
+            }
+            ctx.barrier_all();
+            if let Some(t) = odds {
+                t.destroy();
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn nested_split_of_split() {
+        let w = World::threads(8, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let evens = world.split_strided(0, 2, 4); // 0, 2, 4, 6
+            if let Some(evens) = evens {
+                // Every second even: 0, 4 — stride composes (2 · 2 = 4).
+                let quarter = evens.split_strided(0, 2, 2);
+                if ctx.my_pe() % 4 == 0 {
+                    let q = quarter.as_ref().unwrap();
+                    assert_eq!(q.n_pes(), 2);
+                    assert_eq!(q.my_pe(), ctx.my_pe() / 4);
+                    assert_eq!(q.world_rank(1), 4);
+                    q.sync();
+                } else {
+                    assert!(quarter.is_none());
+                }
+                evens.sync();
+                if let Some(q) = quarter {
+                    q.destroy();
+                }
+                evens.destroy();
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn split_2d_rows_and_columns() {
+        let w = World::threads(6, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            // 3-wide grid over 6 PEs: rows {0,1,2} {3,4,5}; cols {0,3} {1,4} {2,5}.
+            let (x, y) = world.split_2d(3);
+            let me = ctx.my_pe();
+            assert_eq!(x.n_pes(), 3);
+            assert_eq!(x.my_pe(), me % 3);
+            assert_eq!(x.world_rank(0), (me / 3) * 3);
+            assert_eq!(y.n_pes(), 2);
+            assert_eq!(y.my_pe(), me / 3);
+            assert_eq!(y.world_rank(0), me % 3);
+            x.sync();
+            y.sync();
+            ctx.barrier_all();
+            x.destroy();
+            y.destroy();
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn split_2d_ragged_grid() {
+        let w = World::threads(5, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            // 2-wide grid over 5 PEs: rows {0,1} {2,3} {4}; cols {0,2,4} {1,3}.
+            let (x, y) = world.split_2d(2);
+            let me = ctx.my_pe();
+            let expect_row = if me == 4 { 1 } else { 2 };
+            assert_eq!(x.n_pes(), expect_row);
+            let expect_col = if me % 2 == 0 { 3 } else { 2 };
+            assert_eq!(y.n_pes(), expect_col);
+            ctx.barrier_all();
+            x.destroy();
+            y.destroy();
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn destroy_recycles_slots() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            // Far more create/destroy cycles than there are slots.
+            for _ in 0..3 * crate::symheap::layout::MAX_TEAMS {
+                let t = ctx.team_world().split_strided(0, 1, 2).unwrap();
+                t.sync();
+                t.destroy();
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 0 {
+                // Every claimed slot was returned.
+                let bm = ctx.header_of(0).team_slot_bitmap.load(Ordering::Acquire);
+                assert_eq!(bm, TEAM_SLOT_FREE_INIT);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "world team cannot be destroyed")]
+    fn world_team_destroy_rejected() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            ctx.team_world().destroy();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "stale team handle")]
+    fn double_destroy_via_clone_detected() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let t = ctx.team_world().split_strided(0, 1, 1).unwrap();
+            let stale = t.clone();
+            t.destroy();
+            stale.destroy(); // must panic, not corrupt a recycled slot
+        });
+    }
+
+    #[test]
+    fn sibling_teams_partition_parent() {
+        let w = World::threads(6, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let lo = world.split_strided(0, 1, 3); // 0, 1, 2
+            let hi = world.split_strided(3, 1, 3); // 3, 4, 5
+            assert!(lo.is_some() != hi.is_some(), "siblings must partition");
+            let mine = lo.or(hi).unwrap();
+            assert_eq!(mine.my_pe(), ctx.my_pe() % 3);
+            mine.sync();
+            ctx.barrier_all();
+            mine.destroy();
+            ctx.barrier_all();
+        });
+    }
+}

@@ -2,7 +2,7 @@
 //! together, larger worlds, stress mixes, and the PJRT runtime over real
 //! artifacts when `make artifacts` has run.
 
-use posh::collectives::{ActiveSet, AlgoKind, ReduceOp};
+use posh::collectives::{AlgoKind, ReduceOp};
 use posh::pe::{BarrierKind, PoshConfig, World};
 use posh::util::prng::Rng;
 
@@ -51,8 +51,8 @@ fn pipeline_across_modules() {
             ctx.local_mut(vsum).copy_from_slice(ctx.local(tmp));
         }
         ctx.barrier_all();
-        let set = ActiveSet::world(n);
-        ctx.reduce_to_all(vsum, vsum, cols, ReduceOp::Max, &set);
+        let team = ctx.team_world();
+        ctx.reduce_to_all(vsum, vsum, cols, ReduceOp::Max, &team);
         // Every PE's shifted vector is identical, so max == the vector.
         assert_eq!(unsafe { ctx.local(vsum).to_vec() }, want);
         ctx.barrier_all();
@@ -69,14 +69,14 @@ fn twelve_pes_all_algorithms() {
             cfg.coll_algo = Some(algo);
             let w = World::threads(12, cfg).unwrap();
             w.run(|ctx| {
-                let set = ActiveSet::world(12);
+                let team = ctx.team_world();
                 let src = ctx.shmalloc_n::<i32>(8).unwrap();
                 let dst = ctx.shmalloc_n::<i32>(8).unwrap();
                 unsafe {
                     ctx.local_mut(src).fill(ctx.my_pe() as i32 + 1);
                 }
                 ctx.barrier_all();
-                ctx.reduce_to_all(dst, src, 8, ReduceOp::Sum, &set);
+                ctx.reduce_to_all(dst, src, 8, ReduceOp::Sum, &team);
                 assert_eq!(unsafe { ctx.local(dst)[0] }, (1..=12).sum::<i32>());
                 ctx.barrier_all();
             });
@@ -84,24 +84,30 @@ fn twelve_pes_all_algorithms() {
     }
 }
 
-/// Concurrent disjoint active sets run collectives simultaneously.
+/// Concurrent disjoint teams run collectives simultaneously.
 #[test]
-fn disjoint_sets_run_concurrently() {
+fn disjoint_teams_run_concurrently() {
     let n = 6;
     let w = World::threads(n, PoshConfig::small()).unwrap();
     w.run(|ctx| {
-        let evens = ActiveSet::new(0, 1, 3, n); // 0, 2, 4
-        let odds = ActiveSet::new(1, 1, 3, n); // 1, 3, 5
-        let mine = if ctx.my_pe() % 2 == 0 { evens } else { odds };
+        let world = ctx.team_world();
+        let evens = world.split_strided(0, 2, 3); // 0, 2, 4
+        let odds = world.split_strided(1, 2, 3); // 1, 3, 5
+        let mine = if ctx.my_pe() % 2 == 0 { &evens } else { &odds };
+        let mine = mine.as_ref().unwrap();
         let src = ctx.shmalloc_n::<i64>(16).unwrap();
         let dst = ctx.shmalloc_n::<i64>(16).unwrap();
         for round in 0..30 {
             unsafe {
                 ctx.local_mut(src).fill((ctx.my_pe() + round) as i64);
             }
-            ctx.reduce_to_all(dst, src, 16, ReduceOp::Sum, &mine);
+            ctx.reduce_to_all(dst, src, 16, ReduceOp::Sum, mine);
             let want: i64 = mine.ranks().map(|r| (r + round) as i64).sum();
             assert_eq!(unsafe { ctx.local(dst)[0] }, want, "round {round}");
+        }
+        ctx.barrier_all();
+        for t in [evens, odds].into_iter().flatten() {
+            t.destroy();
         }
         ctx.barrier_all();
     });
@@ -114,7 +120,7 @@ fn stress_mix() {
     let n = 4;
     let w = World::threads(n, PoshConfig::small()).unwrap();
     w.run(|ctx| {
-        let set = ActiveSet::world(n);
+        let team = ctx.team_world();
         let counter = ctx.shmalloc_n::<i64>(1).unwrap();
         let lock = ctx.shmalloc_n::<i64>(1).unwrap();
         let buf = ctx.shmalloc_n::<i64>(64).unwrap();
@@ -139,7 +145,7 @@ fn stress_mix() {
                 }
                 2 => {
                     unsafe { ctx.local_mut(red_src).fill(ctx.my_pe() as i64) };
-                    ctx.reduce_to_all(red_dst, red_src, 4, ReduceOp::Sum, &set);
+                    ctx.reduce_to_all(red_dst, red_src, 4, ReduceOp::Sum, &team);
                     assert_eq!(
                         unsafe { ctx.local(red_dst)[0] },
                         (0..n as i64).sum::<i64>()

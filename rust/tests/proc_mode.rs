@@ -4,9 +4,10 @@
 //! (spawning itself N times under the RTE, §4.7); invoked with the `POSH_*`
 //! environment it acts as a PE, attaches to the job's POSIX segments, and
 //! runs a full SHMEM workout — put/get, atomics, locks, barrier, reduce,
-//! broadcast, fcollect — over *real* `/dev/shm` segments across processes.
+//! broadcast, fcollect, team splits — over *real* `/dev/shm` segments
+//! across processes.
 
-use posh::collectives::{ActiveSet, ReduceOp};
+use posh::collectives::ReduceOp;
 use posh::pe::World;
 use posh::rte::gateway::Gateway;
 use posh::rte::launcher::{JobSpec, Launcher};
@@ -66,8 +67,8 @@ fn pe_body() {
         assert_eq!(ctx.get_one(shared, 0), (n as i64) * 100);
     }
 
-    // collectives across processes.
-    let set = ActiveSet::world(n);
+    // collectives across processes (team surface over real shm headers).
+    let team = ctx.team_world();
     let src = ctx.shmalloc_n::<i64>(32).unwrap();
     let dst = ctx.shmalloc_n::<i64>(32).unwrap();
     unsafe {
@@ -76,19 +77,37 @@ fn pe_body() {
         }
     }
     ctx.barrier_all();
-    ctx.reduce_to_all(dst, src, 32, ReduceOp::Sum, &set);
+    ctx.reduce_to_all(dst, src, 32, ReduceOp::Sum, &team);
     for j in 0..32 {
         let want: i64 = (0..n).map(|pe| (pe * 10 + j) as i64).sum();
         assert_eq!(unsafe { ctx.local(dst)[j] }, want);
     }
-    ctx.broadcast(dst, src, 32, 1, &set);
+    ctx.broadcast(dst, src, 32, 1, &team);
     if me != 1 {
         assert_eq!(unsafe { ctx.local(dst)[5] }, 15);
     }
     let gat = ctx.shmalloc_n::<i64>(32 * n).unwrap();
-    ctx.fcollect(gat, src, 32, &set);
+    ctx.fcollect(gat, src, 32, &team);
     for pe in 0..n {
         assert_eq!(unsafe { ctx.local(gat)[pe * 32 + 7] }, (pe * 10 + 7) as i64);
+    }
+
+    // team split across processes: slot claim + membership agreement run
+    // over PE 0's real shared-memory header.
+    let front = team.split_strided(0, 1, 2); // PEs {0, 1}
+    if me < 2 {
+        let t = front.as_ref().unwrap();
+        assert_eq!(t.my_pe(), me);
+        assert_eq!(t.n_pes(), 2);
+        t.sync();
+        ctx.reduce_to_all(dst, src, 32, ReduceOp::Max, t);
+        assert_eq!(unsafe { ctx.local(dst)[0] }, 10); // max over PEs 0,1 of pe*10
+    } else {
+        assert!(front.is_none());
+    }
+    ctx.barrier_all();
+    if let Some(t) = front {
+        t.destroy();
     }
 
     ctx.barrier_all();

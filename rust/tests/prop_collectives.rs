@@ -1,8 +1,9 @@
-//! Property tests over the collective layer: random active sets, random
-//! payloads, every algorithm — results must match a serial oracle, and
-//! repeated collectives must not interfere (the §4.5.1 reset discipline).
+//! Property tests over the collective layer: random team splits (arbitrary
+//! strides — beyond what the 1.0 triplet could express), random payloads,
+//! every algorithm — results must match a serial oracle, and repeated
+//! collectives must not interfere (the §4.5.1 reset discipline).
 
-use posh::collectives::{ActiveSet, AlgoKind, ReduceOp};
+use posh::collectives::{AlgoKind, ReduceOp};
 use posh::pe::{PoshConfig, World};
 use posh::util::quickcheck::{forall, Gen};
 
@@ -15,22 +16,26 @@ fn algos(g: &mut Gen) -> AlgoKind {
     ])
 }
 
-/// Random active set within a random world.
-fn random_set(g: &mut Gen, n_pes: usize) -> ActiveSet {
-    let logstride = g.usize_in(0..3);
-    let stride = 1usize << logstride;
+/// Random strided split parameters `(start, stride, size)` within a world
+/// of `n_pes` — any stride, not just powers of two.
+fn random_split(g: &mut Gen, n_pes: usize) -> (usize, usize, usize) {
+    let stride = g.usize_in(1..4);
     let max_size = (n_pes + stride - 1) / stride;
     let size = g.usize_in(1..max_size + 1);
     let max_start = n_pes - (size - 1) * stride;
     let start = g.usize_in(0..max_start);
-    ActiveSet::new(start, logstride, size, n_pes)
+    (start, stride, size)
+}
+
+fn split_members(start: usize, stride: usize, size: usize) -> Vec<usize> {
+    (0..size).map(|i| start + i * stride).collect()
 }
 
 #[test]
-fn reduce_matches_oracle_random_sets() {
+fn reduce_matches_oracle_random_teams() {
     forall("reduce oracle", 25, |g: &mut Gen| {
         let n_pes = g.usize_in(2..7);
-        let set = random_set(g, n_pes);
+        let (start, stride, size) = random_split(g, n_pes);
         let nreduce = g.usize_in(1..200);
         let algo = algos(g);
         let op = g.pick(&ReduceOp::all());
@@ -47,15 +52,21 @@ fn reduce_matches_oracle_random_sets() {
                 ctx.local_mut(dst).fill(i64::MIN);
             }
             ctx.barrier_all();
-            if set.contains(ctx.my_pe()) {
-                ctx.reduce_to_all(dst, src, nreduce, op, &set);
+            let team = ctx.team_world().split_strided(start, stride, size);
+            let out = if let Some(team) = &team {
+                ctx.reduce_to_all(dst, src, nreduce, op, team);
                 Some(unsafe { ctx.local(dst).to_vec() })
             } else {
                 None
+            };
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
             }
+            out
         });
         // Oracle.
-        let members: Vec<usize> = set.ranks().collect();
+        let members = split_members(start, stride, size);
         for j in 0..nreduce {
             let mut acc = contrib(members[0], j);
             for &m in &members[1..] {
@@ -65,7 +76,8 @@ fn reduce_matches_oracle_random_sets() {
                 let got = results[m].as_ref().unwrap()[j];
                 if got != acc {
                     return Err(format!(
-                        "{algo:?} {op:?} set {set:?} elem {j}: PE {m} got {got}, want {acc}"
+                        "{algo:?} {op:?} split ({start},{stride},{size}) elem {j}: \
+                         PE {m} got {got}, want {acc}"
                     ));
                 }
             }
@@ -87,9 +99,9 @@ fn combine(op: ReduceOp, a: i64, b: i64) -> i64 {
 fn broadcast_matches_oracle_random_roots() {
     forall("broadcast oracle", 25, |g: &mut Gen| {
         let n_pes = g.usize_in(2..7);
-        let set = random_set(g, n_pes);
+        let (start, stride, size) = random_split(g, n_pes);
         let nelems = g.usize_in(1..300);
-        let root_idx = g.usize_in(0..set.size);
+        let root_idx = g.usize_in(0..size);
         let algo = algos(g);
         let mut cfg = PoshConfig::small();
         cfg.coll_algo = Some(algo);
@@ -104,15 +116,22 @@ fn broadcast_matches_oracle_random_roots() {
                 ctx.local_mut(dst).fill(u64::MAX);
             }
             ctx.barrier_all();
-            if set.contains(ctx.my_pe()) {
-                ctx.broadcast(dst, src, nelems, root_idx, &set);
+            let team = ctx.team_world().split_strided(start, stride, size);
+            let out = if let Some(team) = &team {
+                ctx.broadcast(dst, src, nelems, root_idx, team);
                 Some(unsafe { ctx.local(dst).to_vec() })
             } else {
                 None
+            };
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
             }
+            out
         });
-        let root_pe = set.rank_at(root_idx);
-        for m in set.ranks() {
+        let members = split_members(start, stride, size);
+        let root_pe = members[root_idx];
+        for &m in &members {
             let got = results[m].as_ref().unwrap();
             if m == root_pe {
                 if got.iter().any(|&v| v != u64::MAX) {
@@ -123,7 +142,8 @@ fn broadcast_matches_oracle_random_roots() {
                     let want = (root_pe * 1_000 + j) as u64;
                     if v != want {
                         return Err(format!(
-                            "{algo:?} set {set:?} root {root_idx}: PE {m} elem {j} = {v}, want {want}"
+                            "{algo:?} split ({start},{stride},{size}) root {root_idx}: \
+                             PE {m} elem {j} = {v}, want {want}"
                         ));
                     }
                 }
@@ -137,7 +157,7 @@ fn broadcast_matches_oracle_random_roots() {
 fn fcollect_matches_oracle() {
     forall("fcollect oracle", 20, |g: &mut Gen| {
         let n_pes = g.usize_in(2..6);
-        let set = random_set(g, n_pes);
+        let (start, stride, size) = random_split(g, n_pes);
         let nelems = g.usize_in(1..120);
         let algo = algos(g);
         let mut cfg = PoshConfig::small();
@@ -145,23 +165,30 @@ fn fcollect_matches_oracle() {
         let w = World::threads(n_pes, cfg).unwrap();
         let results = w.run_collect(move |ctx| {
             let src = ctx.shmalloc_n::<u32>(nelems).unwrap();
-            let dst = ctx.shmalloc_n::<u32>(nelems * set.size).unwrap();
+            let dst = ctx.shmalloc_n::<u32>(nelems * size).unwrap();
             unsafe {
                 for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
                     *s = (ctx.my_pe() * 10_000 + j) as u32;
                 }
             }
             ctx.barrier_all();
-            if set.contains(ctx.my_pe()) {
-                ctx.fcollect(dst, src, nelems, &set);
+            let team = ctx.team_world().split_strided(start, stride, size);
+            let out = if let Some(team) = &team {
+                ctx.fcollect(dst, src, nelems, team);
                 Some(unsafe { ctx.local(dst).to_vec() })
             } else {
                 None
+            };
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
             }
+            out
         });
-        for m in set.ranks() {
+        let members = split_members(start, stride, size);
+        for &m in &members {
             let got = results[m].as_ref().unwrap();
-            for (i, member) in set.ranks().enumerate() {
+            for (i, &member) in members.iter().enumerate() {
                 for j in 0..nelems {
                     let want = (member * 10_000 + j) as u32;
                     if got[i * nelems + j] != want {
@@ -192,7 +219,7 @@ fn mixed_collective_sequences_are_isolated() {
         let seq2 = seq.clone();
         let oks = w.run_collect(move |ctx| {
             let n = ctx.n_pes();
-            let set = ActiveSet::world(n);
+            let team = ctx.team_world();
             let a = ctx.shmalloc_n::<i64>(64).unwrap();
             let b = ctx.shmalloc_n::<i64>(64 * n).unwrap();
             let mut ok = true;
@@ -204,27 +231,27 @@ fn mixed_collective_sequences_are_isolated() {
                 }
                 match kind {
                     0 => {
-                        ctx.reduce_to_all(b.slice(0, 64), a, 64, ReduceOp::Sum, &set);
+                        ctx.reduce_to_all(b.slice(0, 64), a, 64, ReduceOp::Sum, &team);
                         let want: i64 = (0..n).map(|pe| (round * 31 + pe * 7) as i64).sum();
                         ok &= unsafe { ctx.local(b)[0] } == want;
                     }
                     1 => {
                         let root = round % n;
-                        ctx.broadcast(b.slice(0, 64), a, 64, root, &set);
-                        if ctx.my_pe() != set.rank_at(root) {
+                        ctx.broadcast(b.slice(0, 64), a, 64, root, &team);
+                        if ctx.my_pe() != team.world_rank(root) {
                             ok &= unsafe { ctx.local(b)[63] }
                                 == (round * 31 + root * 7 + 63) as i64;
                         }
                     }
                     2 => {
-                        ctx.fcollect(b, a, 64, &set);
+                        ctx.fcollect(b, a, 64, &team);
                         for pe in 0..n {
                             ok &= unsafe { ctx.local(b)[pe * 64] }
                                 == (round * 31 + pe * 7) as i64;
                         }
                     }
                     _ => {
-                        ctx.barrier(&set);
+                        ctx.barrier(&team);
                     }
                 }
             }

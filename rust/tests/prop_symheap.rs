@@ -7,7 +7,7 @@
 //! * **Lemma 1** — non-symmetric temporaries inside a collective leave the
 //!   heaps byte-symmetric after the collective completes.
 
-use posh::collectives::{ActiveSet, AlgoKind, ReduceOp};
+use posh::collectives::{AlgoKind, ReduceOp};
 use posh::pe::{PoshConfig, World};
 use posh::symheap::handle::translate;
 use posh::util::quickcheck::{forall, Gen};
@@ -139,8 +139,8 @@ fn lemma1_temporaries_restore_symmetry() {
                 }
             }
             ctx.barrier_all();
-            let set = ActiveSet::world(ctx.n_pes());
-            ctx.reduce_to_all(dst, src, nreduce, ReduceOp::Max, &set);
+            let team = ctx.team_world();
+            ctx.reduce_to_all(dst, src, nreduce, ReduceOp::Max, &team);
             // After the collective: scratch freed everywhere.
             let live = ctx.heap().live_allocations();
             let bytes = ctx.heap().allocated_bytes();

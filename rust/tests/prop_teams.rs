@@ -1,0 +1,234 @@
+//! Property tests for the team/context surface (OpenSHMEM 1.4):
+//!
+//! * **Translation round-trip** — for random strided and 2-D splits,
+//!   team-rank → world-rank → team-rank is the identity on members.
+//! * **Partition** — disjoint sibling splits cover the parent exactly once.
+//! * **Oracle** — a team reduction equals the serial oracle restricted to
+//!   the team's members.
+//! * **Quiet scoping** — quiet on one communication context never retires
+//!   another context's (or the default domain's) pending NBI operations.
+
+use posh::collectives::ReduceOp;
+use posh::ctx::CtxOptions;
+use posh::pe::{PoshConfig, World};
+use posh::util::quickcheck::{forall, Gen};
+
+/// Random strided split parameters within `n_pes` world ranks.
+fn random_split(g: &mut Gen, n_pes: usize) -> (usize, usize, usize) {
+    let stride = g.usize_in(1..4);
+    let max_size = (n_pes + stride - 1) / stride;
+    let size = g.usize_in(1..max_size + 1);
+    let max_start = n_pes - (size - 1) * stride;
+    let start = g.usize_in(0..max_start);
+    (start, stride, size)
+}
+
+#[test]
+fn strided_split_translation_round_trips() {
+    forall("strided round-trip", 30, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..8);
+        let (start, stride, size) = random_split(g, n_pes);
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let oks = w.run_collect(move |ctx| {
+            let world = ctx.team_world();
+            let team = world.split_strided(start, stride, size);
+            let me = ctx.my_pe();
+            let expect_member = me >= start && (me - start) % stride == 0
+                && (me - start) / stride < size;
+            let mut ok = team.is_some() == expect_member;
+            if let Some(t) = &team {
+                // team → world → team is the identity.
+                ok &= t.world_rank(t.my_pe()) == me;
+                ok &= t.team_rank_of(me) == Some(t.my_pe());
+                ok &= t.translate_pe(t.my_pe(), &world) == Some(me);
+                ok &= world.translate_pe(me, t) == Some(t.my_pe());
+                // Every team rank maps to a distinct member world rank.
+                for r in 0..t.n_pes() {
+                    ok &= t.team_rank_of(t.world_rank(r)) == Some(r);
+                }
+            }
+            ctx.barrier_all();
+            if let Some(t) = team {
+                t.destroy();
+            }
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("round-trip failed for split ({start},{stride},{size})"))
+        }
+    });
+}
+
+#[test]
+fn split_2d_translation_round_trips() {
+    forall("2d round-trip", 20, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..9);
+        let xrange = g.usize_in(1..5);
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let oks = w.run_collect(move |ctx| {
+            let world = ctx.team_world();
+            let (x, y) = world.split_2d(xrange);
+            let me = ctx.my_pe();
+            let xr = xrange.min(n_pes);
+            let mut ok = true;
+            // Row team: contiguous, my x-rank is my column.
+            ok &= x.my_pe() == me % xr;
+            ok &= x.world_rank(x.my_pe()) == me;
+            // Column team: stride xr, my y-rank is my row.
+            ok &= y.my_pe() == me / xr;
+            ok &= y.world_rank(y.my_pe()) == me;
+            // The row and column teams intersect exactly at me.
+            ok &= x.translate_pe(x.my_pe(), &y) == Some(y.my_pe());
+            ctx.barrier_all();
+            x.destroy();
+            y.destroy();
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("2d round-trip failed (n={n_pes}, xrange={xrange})"))
+        }
+    });
+}
+
+#[test]
+fn sibling_splits_partition_parent() {
+    forall("sibling partition", 25, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..9);
+        // Cut the world at a random point into [0, cut) and [cut, n).
+        let cut = g.usize_in(1..n_pes);
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let memberships = w.run_collect(move |ctx| {
+            let world = ctx.team_world();
+            let lo = world.split_strided(0, 1, cut);
+            let hi = world.split_strided(cut, 1, n_pes - cut);
+            let membership = (lo.is_some(), hi.is_some());
+            let my_rank = lo.as_ref().or(hi.as_ref()).map(|t| t.my_pe());
+            ctx.barrier_all();
+            for t in [lo, hi].into_iter().flatten() {
+                t.destroy();
+            }
+            (membership, my_rank)
+        });
+        for (pe, ((in_lo, in_hi), rank)) in memberships.iter().enumerate() {
+            // Exactly one sibling contains each parent rank…
+            if *in_lo == *in_hi {
+                return Err(format!("PE {pe} in {} siblings (cut {cut})",
+                    if *in_lo { 2 } else { 0 }));
+            }
+            // …at the rank the partition predicts.
+            let want = if pe < cut { pe } else { pe - cut };
+            if *rank != Some(want) {
+                return Err(format!("PE {pe}: rank {rank:?}, want {want} (cut {cut})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn team_reduction_matches_member_oracle() {
+    forall("team reduce oracle", 20, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let (start, stride, size) = random_split(g, n_pes);
+        let nreduce = g.usize_in(1..64);
+        let op = g.pick(&ReduceOp::all());
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let results = w.run_collect(move |ctx| {
+            let src = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            let dst = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = seed(ctx.my_pe(), j);
+                }
+            }
+            ctx.barrier_all();
+            let team = ctx.team_world().split_strided(start, stride, size);
+            let out = if let Some(team) = &team {
+                ctx.reduce_to_all(dst, src, nreduce, op, team);
+                Some(unsafe { ctx.local(dst).to_vec() })
+            } else {
+                None
+            };
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
+            }
+            out
+        });
+        let members: Vec<usize> = (0..size).map(|i| start + i * stride).collect();
+        for j in 0..nreduce {
+            // Serial oracle restricted to the members.
+            use posh::collectives::reduce::ReduceElem;
+            let mut acc = seed(members[0], j);
+            for &m in &members[1..] {
+                acc = i64::combine(op, acc, seed(m, j));
+            }
+            for &m in &members {
+                let got = results[m].as_ref().unwrap()[j];
+                if got != acc {
+                    return Err(format!(
+                        "{op:?} split ({start},{stride},{size}): PE {m} elem {j} \
+                         got {got}, want {acc}"
+                    ));
+                }
+            }
+            // Non-members were never written.
+            for (pe, r) in results.iter().enumerate() {
+                if !members.contains(&pe) && r.is_some() {
+                    return Err(format!("non-member PE {pe} ran the reduction"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn seed(pe: usize, j: usize) -> i64 {
+    ((pe as i64 + 5) * (j as i64 + 3)) % 23 + 2
+}
+
+/// Quiet on one context must not retire any other domain's pending NBI
+/// operations — for a random number of contexts and a random interleaving
+/// of issues.
+#[test]
+fn ctx_quiet_never_crosses_domains() {
+    forall("ctx quiet isolation", 15, |g: &mut Gen| {
+        let n_ctx = g.usize_in(2..5);
+        let issues: Vec<usize> = (0..g.usize_in(3..20)).map(|_| g.usize_in(0..n_ctx)).collect();
+        let quiesce = g.usize_in(0..n_ctx);
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        let issues2 = issues.clone();
+        let oks = w.run_collect(move |ctx| {
+            let world = ctx.team_world();
+            let ctxs: Vec<_> = (0..n_ctx)
+                .map(|_| world.create_ctx(CtxOptions::new()))
+                .collect();
+            let buf = ctx.shmalloc_n::<u64>(4).unwrap();
+            let peer = (ctx.my_pe() + 1) % 2;
+            let mut want = vec![0u64; n_ctx];
+            for &k in &issues2 {
+                ctxs[k].put_nbi(buf, &[7; 4], peer);
+                want[k] += 1;
+            }
+            ctxs[quiesce].quiet();
+            want[quiesce] = 0;
+            let ok = ctxs.iter().zip(&want).all(|(c, &w)| c.pending_nbi() == w);
+            for c in ctxs {
+                c.destroy();
+            }
+            ctx.barrier_all();
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!(
+                "quiet on ctx {quiesce} disturbed a sibling (issues {issues:?})"
+            ))
+        }
+    });
+}
