@@ -1,13 +1,16 @@
 //! **Ablation B** (DESIGN.md §3) — barrier algorithms: dissemination vs
 //! central counter across PE counts, plus the legacy active-set barrier and
-//! the team barriers of the 1.4 surface (world team, and a split team of
-//! half the PEs). The dissemination barrier is O(log n) rounds with no hot
-//! cache line; the central counter is the O(n)-fan-in baseline; team
-//! barriers fan in on the team root over the team's own sync cells.
+//! the team syncs of the 1.4/1.5 surface. Since the one-engine refactor,
+//! `barrier_all` *is* the dissemination sync over the world team's slot-0
+//! cells, and team syncs run the same engine over their own slot — so the
+//! interesting A/B here is `team-dissem` (O(log n) rounds, the production
+//! default) vs `team-linear` (the retired linear fan-in on the team root,
+//! kept behind `PoshConfig::team_barrier` / `POSH_TEAM_BARRIER=linear` for
+//! exactly this comparison).
 
 use posh::bench::{measure, Table};
 use posh::collectives::ActiveSet;
-use posh::pe::{BarrierKind, PoshConfig, World};
+use posh::pe::{BarrierKind, PoshConfig, TeamBarrierKind, World};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 fn bench_barrier(n: usize, kind: BarrierKind) -> f64 {
@@ -45,9 +48,12 @@ fn bench_set_barrier(n: usize) -> f64 {
     ns.load(Ordering::Relaxed) as f64
 }
 
-/// Team sync over the whole world team (reserved slot 0 cells).
-fn bench_team_sync_world(n: usize) -> f64 {
-    let w = World::threads(n, PoshConfig::small()).unwrap();
+/// Team sync over the whole world team (reserved slot 0 cells), with the
+/// given engine — the dissemination-vs-linear-fan-in A/B column pair.
+fn bench_team_sync_world(n: usize, kind: TeamBarrierKind) -> f64 {
+    let mut cfg = PoshConfig::small();
+    cfg.team_barrier = kind;
+    let w = World::threads(n, cfg).unwrap();
     let ns = AtomicU64::new(0);
     w.run(|ctx| {
         let team = ctx.team_world();
@@ -57,6 +63,12 @@ fn bench_team_sync_world(n: usize) -> f64 {
         });
         if ctx.my_pe() == 0 {
             ns.store(m.latency_ns() as u64, Ordering::Relaxed);
+            // The acceptance hook: dissemination completes in ⌈log₂ n⌉
+            // rounds, the linear baseline serialises through n−1.
+            eprintln!(
+                "# team sync {n} PEs {kind:?}: {} rounds",
+                ctx.last_sync_rounds()
+            );
         }
         ctx.barrier_all();
     });
@@ -92,7 +104,7 @@ fn main() {
     let mut t = Table::new(
         "Ablation B: barrier latency",
         "ns/op",
-        &["dissemination", "central", "set-linear", "team-world", "team-half"],
+        &["dissemination", "central", "set-linear", "team-dissem", "team-linear", "team-half"],
     );
     for &n in &[2usize, 4, 8, 16] {
         t.row(
@@ -101,7 +113,8 @@ fn main() {
                 bench_barrier(n, BarrierKind::Dissemination),
                 bench_barrier(n, BarrierKind::Central),
                 bench_set_barrier(n),
-                bench_team_sync_world(n),
+                bench_team_sync_world(n, TeamBarrierKind::Dissemination),
+                bench_team_sync_world(n, TeamBarrierKind::LinearFanin),
                 bench_team_sync_half(n),
             ],
         );
@@ -109,9 +122,10 @@ fn main() {
     t.print();
     t.write_csv("ablationB_barrier").unwrap();
     println!("\n(1-core container: expect flat-ish numbers dominated by \
-              scheduling; on a real multicore the dissemination barrier's \
-              log-n scaling separates from the central counter's linear \
-              fan-in. team-half synchronises n/2 PEs, so it should sit \
-              below the full-world columns)");
+              scheduling; on a real multicore the dissemination engine's \
+              log-n rounds separate from the linear fan-in's serial chain \
+              as n grows — team-dissem vs team-linear is the direct A/B on \
+              identical cells. team-half synchronises n/2 PEs, so it should \
+              sit below the full-world columns)");
     println!("csv: bench_out/ablationB_barrier.csv");
 }

@@ -129,9 +129,16 @@ pub fn shfree<T>(ptr: SymPtr<T>) -> crate::Result<()> {
     ctx().shfree(ptr)
 }
 
-/// `shmem_barrier_all`.
+/// `shmem_barrier_all`: synchronise every PE and complete all outstanding
+/// memory updates (retiring the default NBI domain's accounting).
 pub fn shmem_barrier_all() {
     ctx().barrier_all();
+}
+
+/// `shmem_sync_all` (OpenSHMEM 1.5): synchronise every PE **without** the
+/// implicit quiet — the cheap, control-flow-only path.
+pub fn shmem_sync_all() {
+    ctx().sync_all();
 }
 
 /// `shmem_barrier(PE_start, logPE_stride, PE_size, pSync)` — `pSync` is
@@ -207,9 +214,19 @@ pub fn shmem_team_translate_pe(src_team: &Team, pe: usize, dest_team: &Team) -> 
     }
 }
 
-/// `shmem_team_sync`: barrier over the team.
+/// `shmem_team_sync` (OpenSHMEM 1.5): synchronise the team's members
+/// **without** an implicit quiet — outstanding puts are not guaranteed
+/// visible afterwards and no NBI domain is retired. Use
+/// [`shmem_team_barrier`] (or a fence/quiet first) when they must be.
 pub fn shmem_team_sync(team: &Team) {
     team.sync();
+}
+
+/// Team barrier with the classic 1.0 contract: quiet, then synchronise the
+/// team's members. (The spec spells this `shmem_barrier` over an active
+/// set; the team-handle form is this library's spelling.)
+pub fn shmem_team_barrier(team: &Team) {
+    team.barrier();
 }
 
 /// `shmem_team_destroy`: collectively retire the team and recycle its

@@ -1,23 +1,44 @@
-//! The team barrier — the public face of the per-team barrier, with the
-//! §4.5.5 safe-mode bookkeeping wrapped around it.
+//! The team barrier and the 1.5 sync-only variant.
 //!
-//! (`shmem_barrier_all` lives in [`crate::sync::barrier`] and uses the
-//! faster dissemination algorithm over the header mailboxes; the team
-//! variant must work for arbitrary subsets, so it fans in on the team root
-//! over the team's own sync cells.)
+//! Both run the same dissemination engine over the team's per-round mailbox
+//! cells (`collectives::state::team_sync_dissemination` — the engine
+//! `shmem_barrier_all` itself uses over the world team's slot 0). The
+//! difference is purely the completion contract:
+//!
+//! * [`Ctx::barrier`] — 1.0 `shmem_barrier` semantics: quiet first (all
+//!   outstanding puts complete, default-domain NBI accounting retires),
+//!   then synchronise, wrapped in the §4.5.5 safe-mode bookkeeping.
+//! * [`Ctx::team_sync`] — OpenSHMEM 1.5 `shmem_team_sync`: arrival/release
+//!   only. **No implicit quiet**: outstanding puts may still be in flight
+//!   and no NBI domain is retired. The cheap path for control-flow
+//!   synchronisation (phase counters, slot agreement, ready flags published
+//!   with atomics).
 
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::team::Team;
 
 impl Ctx {
-    /// `shmem_team_sync` / 1.0 `shmem_barrier`: synchronise the team's
-    /// members and complete all outstanding memory updates.
+    /// 1.0 `shmem_barrier`: synchronise the team's members **and** complete
+    /// all outstanding memory updates.
     pub fn barrier(&self, team: &Team) {
         let _idx = self.coll_enter(team, CollOpTag::Barrier, 0);
         // team_barrier_raw() opens with a quiet, giving the spec's
         // "complete all outstanding updates" guarantee; coll_exit runs it.
         self.coll_exit(team);
+    }
+
+    /// `shmem_team_sync` (OpenSHMEM 1.5): synchronise the team's members
+    /// **without** the implicit quiet — no completion guarantee for
+    /// outstanding puts, no NBI retirement on any domain. Use
+    /// [`Ctx::barrier`] when data written before the synchronisation point
+    /// must be visible after it.
+    pub fn team_sync(&self, team: &Team) {
+        assert!(
+            team.is_member(),
+            "team_sync is collective over the team; calling PE is not a member"
+        );
+        self.team_sync_raw(team);
     }
 }
 
@@ -72,7 +93,7 @@ mod tests {
         let w = World::threads(4, PoshConfig::small()).unwrap();
         let hits = AtomicUsize::new(0);
         w.run(|ctx| {
-            let team = crate::team::Team::from_triplet(&ctx, 0, 1, 2, 4); // PEs 0, 2
+            let team = crate::team::Team::from_triplet(&ctx, 0, 1, 2); // PEs 0, 2
             if team.is_member() {
                 for round in 1..=25 {
                     hits.fetch_add(1, Ordering::SeqCst);

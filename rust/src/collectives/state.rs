@@ -12,7 +12,14 @@ use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
 use crate::team::{Team, TeamSlot};
+use std::cell::Cell;
 use std::sync::atomic::Ordering;
+
+thread_local! {
+    /// Rounds executed by this PE thread's most recent team sync — the
+    /// round-count hook behind [`Ctx::last_sync_rounds`].
+    static LAST_SYNC_ROUNDS: Cell<usize> = const { Cell::new(0) };
+}
 
 /// A strided PE set: world ranks `start + i·stride` for `i in 0..size`.
 ///
@@ -214,45 +221,117 @@ impl Ctx {
         std::sync::atomic::fence(Ordering::Acquire);
     }
 
-    /// The raw barrier over a team's members (quiet + linear fan-in/fan-out
-    /// on the team root). Reserved-slot teams use their own `TeamCell`
-    /// sync cells — which is what makes barriers on *overlapping* teams
-    /// safe; legacy triplet teams share the 1.0 `set_count`/`set_sense`
-    /// pair, preserving the historical behaviour of the deprecated shims.
+    /// The raw barrier over a team's members: quiet (which also retires the
+    /// default NBI domain — a barrier *completes* outstanding operations),
+    /// then the team sync engine. Reserved-slot teams use their own
+    /// `TeamCell` sync cells — which is what makes barriers on *overlapping*
+    /// teams safe; legacy triplet teams share the 1.0
+    /// `set_count`/`set_sense` pair, preserving the historical behaviour of
+    /// the deprecated shims.
     pub(crate) fn team_barrier_raw(&self, team: &Team) {
-        self.quiet();
+        self.quiet_nbi();
+        self.team_sync_raw(team);
+    }
+
+    /// The pure synchronisation half of a team barrier: no quiet, no NBI
+    /// retirement — the OpenSHMEM 1.5 `shmem_team_sync` semantics
+    /// ([`Ctx::team_sync`](crate::pe::Ctx) is the public face).
+    pub(crate) fn team_sync_raw(&self, team: &Team) {
         let set = &team.set;
         if set.size == 1 {
+            LAST_SYNC_ROUNDS.with(|r| r.set(0));
+            return;
+        }
+        debug_assert!(set.contains(self.my_pe()));
+        match team.slot {
+            TeamSlot::Legacy => self.set_barrier_cells(set),
+            TeamSlot::Reserved(slot) => self.team_sync_cells(set, slot),
+        }
+    }
+
+    /// Sync over a reserved slot's cells, algorithm per
+    /// [`crate::pe::TeamBarrierKind`].
+    pub(crate) fn team_sync_cells(&self, set: &ActiveSet, slot: usize) {
+        match self.config().team_barrier {
+            crate::pe::TeamBarrierKind::Dissemination => {
+                self.team_sync_dissemination(set, slot)
+            }
+            crate::pe::TeamBarrierKind::LinearFanin => self.team_sync_linear(set, slot),
+        }
+    }
+
+    /// Dissemination sync in **team-rank space**: ⌈log₂ size⌉ rounds; in
+    /// round *r* team rank *i* signals team rank *(i + 2ʳ) mod size* through
+    /// the target's per-round mailbox on this slot and waits for the
+    /// matching signal in its own. Epochs are monotone (`>=` absorbs a fast
+    /// peer one epoch ahead), and the mailboxes are zeroed when the slot is
+    /// claimed at split time, so a recycled slot cannot leak a stale epoch
+    /// into a new team.
+    ///
+    /// This is *the* barrier engine: `shmem_barrier_all` runs it over the
+    /// world team's slot 0 ([`Ctx::barrier_all`](crate::pe::Ctx)).
+    pub(crate) fn team_sync_dissemination(&self, set: &ActiveSet, slot: usize) {
+        let size = set.size;
+        if size == 1 {
+            LAST_SYNC_ROUNDS.with(|r| r.set(0));
             return;
         }
         let me = self.my_pe();
-        debug_assert!(set.contains(me));
-        match team.slot {
-            TeamSlot::Legacy => self.set_barrier_cells(set),
-            TeamSlot::Reserved(slot) => {
-                let root = set.root();
-                if me == root {
-                    let cell = &self.header_of(root).teams[slot];
-                    let want = (set.size - 1) as u64;
-                    self.spin_wait(|| cell.sync_count.load(Ordering::Acquire) >= want);
-                    cell.sync_count.store(0, Ordering::Relaxed);
-                    for r in set.ranks() {
-                        if r != root {
-                            self.header_of(r).teams[slot]
-                                .sync_sense
-                                .fetch_add(1, Ordering::AcqRel);
-                        }
-                    }
-                } else {
-                    let mine = &self.header_of(me).teams[slot].sync_sense;
-                    let before = mine.load(Ordering::Acquire);
-                    self.header_of(root).teams[slot]
-                        .sync_count
-                        .fetch_add(1, Ordering::AcqRel);
-                    self.spin_wait(|| mine.load(Ordering::Acquire) > before);
+        let idx = set.index_of(me).expect("dissemination sync by a non-member");
+        let my_cell = &self.header_of(me).teams[slot];
+        // Only this PE writes its own sync_epoch on this slot.
+        let epoch = my_cell.sync_epoch.load(Ordering::Relaxed) + 1;
+        let rounds = crate::sync::barrier::ceil_log2(size);
+        for r in 0..rounds {
+            let dist = 1usize << r;
+            let to = set.rank_at((idx + dist) % size);
+            self.header_of(to).teams[slot].sync_flags[r].store(epoch, Ordering::Release);
+            self.spin_wait(|| my_cell.sync_flags[r].load(Ordering::Acquire) >= epoch);
+        }
+        my_cell.sync_epoch.store(epoch, Ordering::Release);
+        LAST_SYNC_ROUNDS.with(|r| r.set(rounds));
+    }
+
+    /// Linear fan-in/fan-out on the team root over the slot's
+    /// `sync_count`/`sync_sense` pair — the pre-dissemination baseline, kept
+    /// for the Ablation-B A/B comparison
+    /// ([`crate::pe::TeamBarrierKind::LinearFanin`]).
+    fn team_sync_linear(&self, set: &ActiveSet, slot: usize) {
+        let me = self.my_pe();
+        let root = set.root();
+        if me == root {
+            let cell = &self.header_of(root).teams[slot];
+            let want = (set.size - 1) as u64;
+            self.spin_wait(|| cell.sync_count.load(Ordering::Acquire) >= want);
+            cell.sync_count.store(0, Ordering::Relaxed);
+            for r in set.ranks() {
+                if r != root {
+                    self.header_of(r).teams[slot].sync_sense.fetch_add(1, Ordering::AcqRel);
                 }
             }
+        } else {
+            let mine = &self.header_of(me).teams[slot].sync_sense;
+            let before = mine.load(Ordering::Acquire);
+            self.header_of(root).teams[slot].sync_count.fetch_add(1, Ordering::AcqRel);
+            self.spin_wait(|| mine.load(Ordering::Acquire) > before);
         }
+        // The serialisation depth: every non-root funnels through the root.
+        LAST_SYNC_ROUNDS.with(|r| r.set(set.size - 1));
+    }
+
+    /// Record the step count of the sync that just ran (the hook behind
+    /// [`Ctx::last_sync_rounds`]).
+    pub(crate) fn record_sync_rounds(&self, rounds: usize) {
+        LAST_SYNC_ROUNDS.with(|r| r.set(rounds));
+    }
+
+    /// Synchronisation steps this PE executed in its most recent sync or
+    /// barrier: ⌈log₂ size⌉ for the dissemination engine, `size − 1` for
+    /// the serial baselines (linear fan-in, legacy set cells, central
+    /// counter), 0 for a single-member sync. The observable hook behind the
+    /// O(log n) acceptance check.
+    pub fn last_sync_rounds(&self) -> usize {
+        LAST_SYNC_ROUNDS.with(|r| r.get())
     }
 
     /// Barrier over a raw active set (the deprecated 1.0 `shmem_barrier`
@@ -265,7 +344,7 @@ impl Ctx {
     /// root must not barrier concurrently — that limitation is why teams
     /// carry their own cells.
     pub fn barrier_set(&self, set: &ActiveSet) {
-        self.quiet();
+        self.quiet_nbi();
         if set.size == 1 {
             return;
         }
@@ -293,6 +372,7 @@ impl Ctx {
             self.header_of(root).barrier.set_count.fetch_add(1, Ordering::AcqRel);
             self.spin_wait(|| mine.load(Ordering::Acquire) > before);
         }
+        self.record_sync_rounds(set.size - 1);
     }
 }
 

@@ -2,12 +2,15 @@
 //! point-to-point traffic.
 //!
 //! A [`CommCtx`] is created from a [`Team`] and carries its **own**
-//! non-blocking-implicit (NBI) accounting: `ctx.quiet()` completes and
-//! retires only the operations issued *on that context*, never the default
-//! context's or a sibling context's. That is the whole point — two
-//! independent streams of NBI puts (say, a gradient push and a metrics
-//! trickle) can be quiesced independently instead of serialising through
-//! the one global domain OpenSHMEM 1.0 offered.
+//! non-blocking-implicit (NBI) domain — private accounting *and* a private
+//! deferred-put batch (`p2p::nbi::NbiBatch`). Small `put_nbi`s are queued,
+//! not issued; `ctx.quiet()` is a **batched drain**: it issues and retires
+//! only the operations of *this* context — no process-wide fence, and
+//! never the default context's or a sibling context's traffic. That is the
+//! whole point — two independent streams of NBI puts (say, a gradient push
+//! and a metrics trickle) quiesce independently instead of serialising
+//! through the one global domain (and one global `mfence`) OpenSHMEM 1.0
+//! offered.
 //!
 //! PE arguments to context operations are **team-relative** (translated
 //! through the team the context was created from), matching the 1.4
@@ -18,11 +21,10 @@
 //! behaviour, untouched. See `docs/memory_model.md` §"Per-context ordering"
 //! for the guarantee→test mapping.
 
-use crate::p2p::nbi::NbiDomain;
+use crate::p2p::nbi::{NbiBatch, NbiDomain};
 use crate::pe::Ctx;
 use crate::symheap::SymPtr;
 use crate::team::Team;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Creation options for a [`CommCtx`] (`SHMEM_CTX_SERIALIZED` /
 /// `SHMEM_CTX_PRIVATE`). Both are *promises the program makes*, recorded on
@@ -67,9 +69,9 @@ pub struct CommCtx {
     ctx: Ctx,
     team: Team,
     opts: CtxOptions,
-    /// NBI operations issued on this context and not yet retired by
-    /// [`CommCtx::quiet`].
-    pending: AtomicU64,
+    /// This context's NBI domain: issued-but-unretired accounting plus the
+    /// deferred-put batch a [`CommCtx::quiet`] drains.
+    batch: NbiBatch,
 }
 
 impl CommCtx {
@@ -81,7 +83,7 @@ impl CommCtx {
             ctx: team.ctx().clone(),
             team: team.clone(),
             opts,
-            pending: AtomicU64::new(0),
+            batch: NbiBatch::new(),
         }
     }
 
@@ -114,7 +116,7 @@ impl CommCtx {
     /// The explicit NBI domain of this context.
     #[inline]
     fn domain(&self) -> NbiDomain<'_> {
-        NbiDomain::Explicit(&self.pending)
+        NbiDomain::Explicit(&self.batch)
     }
 
     // -----------------------------------------------------------------
@@ -146,7 +148,10 @@ impl CommCtx {
     // -----------------------------------------------------------------
 
     /// `shmem_ctx_put_nbi`: start a put on this context; complete at the
-    /// next [`CommCtx::quiet`].
+    /// next [`CommCtx::quiet`]. Puts up to
+    /// [`crate::p2p::nbi::NBI_DEFER_MAX_BYTES`] are *deferred* into this
+    /// context's batch and delivered by the quiet's drain; larger ones are
+    /// issued eagerly but retire with the same quiet.
     pub fn put_nbi<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
         let world = self.world_pe(pe);
         self.ctx.put_nbi_domain(&self.domain(), dest, src, world);
@@ -159,9 +164,10 @@ impl CommCtx {
         self.ctx.get_nbi_domain(&self.domain(), dest, src, world);
     }
 
-    /// NBI operations issued on this context and not yet retired.
+    /// NBI operations issued on this context and not yet retired (both
+    /// deferred-into-the-batch and eagerly-issued bulk ones).
     pub fn pending_nbi(&self) -> u64 {
-        self.pending.load(Ordering::Relaxed)
+        self.batch.pending()
     }
 
     // -----------------------------------------------------------------
@@ -169,14 +175,18 @@ impl CommCtx {
     // -----------------------------------------------------------------
 
     /// `shmem_ctx_quiet`: complete and retire the NBI operations issued on
-    /// **this** context. Pending operations on the default context or on
-    /// sibling contexts are untouched.
+    /// **this** context — a batched drain of the deferred puts followed by
+    /// a release fence, *not* a process-wide completion fence. Pending
+    /// operations on the default context or on sibling contexts are
+    /// untouched: not delivered, not fenced for, not retired.
     pub fn quiet(&self) {
         self.ctx.quiet_domain(&self.domain());
     }
 
     /// `shmem_ctx_fence`: order the puts issued on this context per
-    /// destination PE. Does not retire NBI accounting (fences never do).
+    /// destination PE. Drains the deferred batch (delivery order must
+    /// respect the fence) but does not retire NBI accounting (fences never
+    /// do).
     pub fn fence(&self) {
         self.ctx.fence_domain(&self.domain());
     }
@@ -184,6 +194,16 @@ impl CommCtx {
     /// `shmem_ctx_destroy`: quiesce the context and drop it. All pending
     /// NBI operations are completed first, as the spec requires.
     pub fn destroy(self) {
+        self.quiet();
+    }
+}
+
+impl Drop for CommCtx {
+    /// Safety net for the deferred batch: a context dropped without
+    /// [`CommCtx::destroy`] still quiesces, so queued puts are delivered,
+    /// never silently discarded. (Redundant after `destroy` — the queue is
+    /// already empty.)
+    fn drop(&mut self) {
         self.quiet();
     }
 }

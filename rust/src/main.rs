@@ -30,6 +30,7 @@ OPTIONS (launch):
   --copy IMPL         memcpy|unrolled64|sse2|avx2|nontemporal
   --coll ALGO         linear-put|linear-get|tree|recdbl
   --barrier KIND      dissemination|central
+  --team-barrier KIND dissemination|linear (team-sync engine A/B)
   --safe              enable run-time checking (paper _SAFE mode)
   --debug-wait        each PE waits for a debugger at start-up (§4.7)
 "
@@ -161,6 +162,13 @@ fn launch(args: &[String]) {
             }
             "--barrier" => {
                 env.push(("POSH_BARRIER".into(), args.get(i + 1).cloned().unwrap_or_default()));
+                i += 2;
+            }
+            "--team-barrier" => {
+                env.push((
+                    "POSH_TEAM_BARRIER".into(),
+                    args.get(i + 1).cloned().unwrap_or_default(),
+                ));
                 i += 2;
             }
             "--safe" => {

@@ -1,31 +1,54 @@
 //! Non-blocking-implicit transfers: `shmem_put_nbi` / `shmem_get_nbi`,
-//! accounted per **ordering domain**.
+//! accounted — and, on explicit contexts, **batched** — per ordering
+//! domain.
 //!
 //! **Extension** (OpenSHMEM 1.3; not in the 1.0 spec the paper implements —
 //! listed under "future works" in its conclusion). On a shared-memory node
 //! the origin core performs the copy either way, so the useful freedom NBI
 //! grants an implementation is *deferral*: batch small transfers and issue
-//! them at the next `quiet`, amortising per-call overhead.
+//! them at the next `quiet`, amortising per-call overhead and letting one
+//! context's stream quiesce without fencing the world.
 //!
-//! POSH-RS issues NBI transfers eagerly (measurements in EXPERIMENTS.md
-//! show deferral buys nothing when the transport is a local memcpy — there
-//! is no NIC to overlap with) but keeps the full accounting contract, now
-//! split by domain ([`NbiDomain`]):
+//! The two domains behave differently, deliberately:
 //!
-//! * the **default domain** is a thread-local counter — the 1.0 behaviour:
-//!   [`Ctx::put_nbi`] issues into it, [`Ctx::quiet_nbi`] retires it;
-//! * each **explicit domain** is the private counter of one
-//!   [`crate::ctx::CommCtx`]; `ctx.quiet()` retires that counter and *only*
-//!   that counter.
+//! * the **default domain** is a thread-local counter and issues eagerly —
+//!   the 1.0 behaviour, bit-for-bit: [`Ctx::put_nbi`] copies immediately,
+//!   [`Ctx::quiet_nbi`] is the full `SeqCst` completion fence plus
+//!   retirement;
+//! * each **explicit domain** (an `NbiBatch`, owned by one
+//!   [`crate::ctx::CommCtx`]) *defers* puts of up to
+//!   [`NBI_DEFER_MAX_BYTES`] into a private queue. `ctx.quiet()` drains
+//!   that queue — and only that queue — then issues a release fence: the
+//!   batched drain needs no process-wide `SeqCst` fence because the drain
+//!   itself performs the copies and the copy engine orders its own
+//!   streaming stores. Larger puts are issued eagerly (a bulk copy gains
+//!   nothing from deferral) but still count against the domain; gets are
+//!   always eager (the destination borrow ends when the call returns) and
+//!   likewise counted.
 //!
 //! `pending_nbi()` counts issued-but-unretired operations per domain, so
 //! programs written against the 1.3/1.4 semantics run unmodified and the
-//! completion discipline — including its per-context scoping — is testable.
+//! completion discipline — including its per-context scoping — is testable:
+//! a deferred put is *provably* not delivered until its own context
+//! quiesces (see the flag-after-data conformance tests in
+//! `tests/prop_teams.rs`).
 
 use crate::pe::Ctx;
 use crate::symheap::SymPtr;
 use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Largest put (in bytes) an explicit context defers into its batch;
+/// anything bigger is issued eagerly (and still counted). Small enough that
+/// a batch of control-plane puts stays cache-resident, large enough to
+/// cover every flag/descriptor-sized message.
+pub const NBI_DEFER_MAX_BYTES: usize = 16 * 1024;
+
+/// Total queued bytes at which a batch drains inline (the ops are issued,
+/// the accounting stays pending until the next quiet) — bounds the memory a
+/// context can pin between quiets.
+pub const NBI_BATCH_DRAIN_BYTES: usize = 1 << 20;
 
 thread_local! {
     /// Issued-but-unretired NBI operations of the calling PE thread's
@@ -33,13 +56,51 @@ thread_local! {
     static PENDING: Cell<u64> = const { Cell::new(0) };
 }
 
+/// One deferred put: an owned copy of the source bytes, the destination
+/// handle's byte offset, and the (world-rank) target PE.
+#[derive(Debug)]
+struct DeferredPut {
+    dest_off: usize,
+    bytes: Vec<u8>,
+    pe: usize,
+}
+
+/// The queue half of a batch, guarded by one mutex so concurrent users of a
+/// non-`SERIALIZED` context stay coherent.
+#[derive(Debug, Default)]
+struct BatchQueue {
+    ops: Vec<DeferredPut>,
+    queued_bytes: usize,
+}
+
+/// An explicit NBI ordering domain: the private accounting **and** deferred
+/// put batch of one [`crate::ctx::CommCtx`].
+#[derive(Debug, Default)]
+pub(crate) struct NbiBatch {
+    /// Issued-but-unretired operations (deferred *and* eagerly issued).
+    pending: AtomicU64,
+    queue: Mutex<BatchQueue>,
+}
+
+impl NbiBatch {
+    /// An empty domain.
+    pub(crate) fn new() -> NbiBatch {
+        NbiBatch::default()
+    }
+
+    /// Issued-but-unretired operation count.
+    pub(crate) fn pending(&self) -> u64 {
+        self.pending.load(Ordering::Relaxed)
+    }
+}
+
 /// An NBI ordering domain: where issued-but-unretired operations are
-/// counted, and which counter a quiet retires.
+/// counted, and which queue/counter a quiet drains and retires.
 pub(crate) enum NbiDomain<'a> {
-    /// The thread-local default context (OpenSHMEM 1.0 behaviour).
+    /// The thread-local default context (OpenSHMEM 1.0 behaviour: eager).
     Default,
-    /// An explicit context's private counter.
-    Explicit(&'a AtomicU64),
+    /// An explicit context's private batch.
+    Explicit(&'a NbiBatch),
 }
 
 impl Ctx {
@@ -47,21 +108,60 @@ impl Ctx {
     pub(crate) fn nbi_issued(&self, domain: &NbiDomain<'_>) {
         match domain {
             NbiDomain::Default => PENDING.with(|p| p.set(p.get() + 1)),
-            NbiDomain::Explicit(cell) => {
-                cell.fetch_add(1, Ordering::Relaxed);
+            NbiDomain::Explicit(batch) => {
+                batch.pending.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
 
-    /// Retire every pending NBI operation of `domain`.
+    /// Retire every pending NBI operation of `domain` (accounting only —
+    /// the caller is responsible for having drained/fenced first).
     pub(crate) fn nbi_retire(&self, domain: &NbiDomain<'_>) {
         match domain {
             NbiDomain::Default => PENDING.with(|p| p.set(0)),
-            NbiDomain::Explicit(cell) => cell.store(0, Ordering::Relaxed),
+            NbiDomain::Explicit(batch) => batch.pending.store(0, Ordering::Relaxed),
         }
     }
 
-    /// `put_nbi` into an explicit domain (the [`crate::ctx::CommCtx`] path).
+    /// Count one eagerly-issued (already delivered) op against `batch`,
+    /// under the queue lock so the increment cannot interleave into the
+    /// middle of [`Ctx::nbi_quiet_batch`]'s drain→retire critical section
+    /// and survive as a phantom pending op after a completed quiet.
+    fn nbi_issued_locked(&self, batch: &NbiBatch) {
+        let _q = batch.queue.lock().unwrap();
+        batch.pending.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Issue every queued put of `batch`, in issue order. Accounting is not
+    /// touched — draining completes the data movement, quiet retires.
+    pub(crate) fn nbi_drain(&self, batch: &NbiBatch) {
+        let mut q = batch.queue.lock().unwrap();
+        self.drain_locked(&mut q);
+    }
+
+    /// The full explicit-domain quiet: drain, publish, retire — all under
+    /// the queue lock, so a `put_nbi` racing in from another thread of a
+    /// shared (non-`SERIALIZED`) context can never be counted away while
+    /// its op sits undelivered in the queue: an op is either drained here
+    /// (retiring it is correct) or enqueued-and-counted strictly after the
+    /// counter reset.
+    pub(crate) fn nbi_quiet_batch(&self, batch: &NbiBatch) {
+        let mut q = batch.queue.lock().unwrap();
+        self.drain_locked(&mut q);
+        std::sync::atomic::fence(Ordering::Release);
+        batch.pending.store(0, Ordering::Relaxed);
+    }
+
+    fn drain_locked(&self, q: &mut BatchQueue) {
+        for op in q.ops.drain(..) {
+            let dest: SymPtr<u8> = SymPtr::from_raw(op.dest_off, op.bytes.len());
+            self.put(dest, &op.bytes, op.pe);
+        }
+        q.queued_bytes = 0;
+    }
+
+    /// `put_nbi` into an explicit domain (the [`crate::ctx::CommCtx`] path):
+    /// deferred into the context's batch when small, eager when bulk.
     pub(crate) fn put_nbi_domain<T: Copy>(
         &self,
         domain: &NbiDomain<'_>,
@@ -69,11 +169,59 @@ impl Ctx {
         src: &[T],
         pe: usize,
     ) {
-        self.put(dest, src, pe);
-        self.nbi_issued(domain);
+        match domain {
+            NbiDomain::Default => {
+                self.put(dest, src, pe);
+                self.nbi_issued(domain);
+            }
+            NbiDomain::Explicit(batch) => {
+                let nbytes = std::mem::size_of_val(src);
+                if nbytes > NBI_DEFER_MAX_BYTES {
+                    // Eager: delivered by the time put() returns, so a
+                    // concurrent quiet retiring it early is still truthful.
+                    self.put(dest, src, pe);
+                    self.nbi_issued_locked(batch);
+                } else {
+                    // Validate at issue time so a bad call fails at its own
+                    // call site, not inside a later quiet.
+                    if self.config().safe {
+                        assert!(pe < self.n_pes(), "put_nbi: target PE {pe} out of range");
+                        assert!(
+                            src.len() <= dest.len(),
+                            "put_nbi: {} elems into a {}-elem symmetric object",
+                            src.len(),
+                            dest.len()
+                        );
+                    } else {
+                        debug_assert!(pe < self.n_pes());
+                        debug_assert!(src.len() <= dest.len());
+                    }
+                    // SAFETY: `src` is a live initialised slice of `Copy`
+                    // data; viewing it as bytes is always valid.
+                    let bytes = unsafe {
+                        std::slice::from_raw_parts(src.as_ptr() as *const u8, nbytes)
+                    }
+                    .to_vec();
+                    // Enqueue and count under one lock hold, pairing with
+                    // the drain+retire critical section of
+                    // [`Ctx::nbi_quiet_batch`]: a quiet either drains this
+                    // op (and may retire it) or runs entirely before this
+                    // increment — never wipes the count of a queued op.
+                    let mut q = batch.queue.lock().unwrap();
+                    q.queued_bytes += nbytes;
+                    q.ops.push(DeferredPut { dest_off: dest.offset(), bytes, pe });
+                    batch.pending.fetch_add(1, Ordering::Relaxed);
+                    if q.queued_bytes > NBI_BATCH_DRAIN_BYTES {
+                        self.drain_locked(&mut q);
+                    }
+                }
+            }
+        }
     }
 
-    /// `get_nbi` into an explicit domain (the [`crate::ctx::CommCtx`] path).
+    /// `get_nbi` into an explicit domain (the [`crate::ctx::CommCtx`]
+    /// path). Always eager — the destination borrow ends when this call
+    /// returns — but counted against the domain like any NBI op.
     pub(crate) fn get_nbi_domain<T: Copy>(
         &self,
         domain: &NbiDomain<'_>,
@@ -82,7 +230,10 @@ impl Ctx {
         pe: usize,
     ) {
         self.get(dest, src, pe);
-        self.nbi_issued(domain);
+        match domain {
+            NbiDomain::Default => self.nbi_issued(domain),
+            NbiDomain::Explicit(batch) => self.nbi_issued_locked(batch),
+        }
     }
 
     /// `shmem_put_nbi` (default context): start a put; completion only at
@@ -106,7 +257,8 @@ impl Ctx {
 
     /// `shmem_quiet` variant that also retires the default context's NBI
     /// accounting. (The plain `quiet` in `sync::order` is the fence; this
-    /// is the bookkeeping face used by programs that check `pending_nbi`.)
+    /// is the bookkeeping face used by programs that check `pending_nbi`,
+    /// and the one barriers fold in.)
     pub fn quiet_nbi(&self) {
         self.quiet_domain(&NbiDomain::Default);
     }
@@ -132,6 +284,68 @@ mod tests {
             // Data actually arrived.
             assert_eq!(unsafe { ctx.local(buf) }, &[1u32; 8][..]);
             ctx.barrier_all();
+        });
+    }
+
+    #[test]
+    fn barrier_retires_default_domain() {
+        // A barrier folds in a quiet: outstanding default-domain NBI
+        // accounting must be retired by it (and a sync-only must not — see
+        // the conformance tests in tests/prop_collectives.rs).
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let buf = ctx.shmalloc_n::<u32>(4).unwrap();
+            ctx.put_nbi(buf, &[3; 4], (ctx.my_pe() + 1) % 2);
+            assert_eq!(ctx.pending_nbi(), 1);
+            ctx.barrier_all();
+            assert_eq!(ctx.pending_nbi(), 0, "barrier_all must retire the default domain");
+            assert_eq!(unsafe { ctx.local(buf) }, &[3u32; 4][..]);
+            ctx.barrier_all();
+        });
+    }
+
+    /// An explicit context's small puts are deferred: until the context
+    /// quiesces, the target memory is untouched — deterministically, which
+    /// is what makes the cross-domain conformance oracle possible.
+    #[test]
+    fn explicit_domain_defers_small_puts() {
+        use crate::ctx::CtxOptions;
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let c = world.create_ctx(CtxOptions::new());
+            let buf = ctx.shmalloc_n::<u64>(2).unwrap();
+            unsafe { ctx.local_mut(buf).fill(0) };
+            c.put_nbi(buf, &[11, 22], 0);
+            assert_eq!(c.pending_nbi(), 1);
+            // Deferred: our own memory still holds the old value.
+            assert_eq!(unsafe { ctx.local(buf) }, &[0, 0][..]);
+            c.quiet();
+            assert_eq!(c.pending_nbi(), 0);
+            assert_eq!(unsafe { ctx.local(buf) }, &[11, 22][..]);
+            c.destroy();
+        });
+    }
+
+    /// Bulk puts bypass the batch (eager) but still count; the drain cap
+    /// bounds queued memory.
+    #[test]
+    fn bulk_puts_are_eager_but_counted() {
+        use super::NBI_DEFER_MAX_BYTES;
+        use crate::ctx::CtxOptions;
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let c = world.create_ctx(CtxOptions::new());
+            let n = NBI_DEFER_MAX_BYTES / 8 + 1; // u64 count just over the cap
+            let buf = ctx.shmalloc_n::<u64>(n).unwrap();
+            let src = vec![5u64; n];
+            c.put_nbi(buf, &src, 0);
+            assert_eq!(c.pending_nbi(), 1);
+            // Eager: already delivered, before any quiet.
+            assert_eq!(unsafe { ctx.local(buf)[n - 1] }, 5);
+            c.destroy();
+            ctx.shfree(buf).unwrap();
         });
     }
 }

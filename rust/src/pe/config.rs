@@ -25,6 +25,17 @@ pub enum BarrierKind {
     Central,
 }
 
+/// Which algorithm team syncs run over the per-team cells. The production
+/// default is dissemination (O(log n) rounds in team-rank space); the
+/// linear fan-in on the team root is kept as the Ablation-B A/B baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TeamBarrierKind {
+    /// Dissemination over the team's per-round mailbox cells.
+    Dissemination,
+    /// Linear fan-in/fan-out on the team root (pre-dissemination baseline).
+    LinearFanin,
+}
+
 /// Job-wide configuration.
 #[derive(Clone, Debug)]
 pub struct PoshConfig {
@@ -38,6 +49,8 @@ pub struct PoshConfig {
     pub coll_algo: Option<AlgoKind>,
     /// Barrier algorithm.
     pub barrier: BarrierKind,
+    /// Team-sync algorithm over the per-team cells.
+    pub team_barrier: TeamBarrierKind,
     /// Run-time safe mode (§4.5.5 checks). The `safe-mode` cargo feature
     /// forces this on.
     pub safe: bool,
@@ -51,6 +64,7 @@ impl Default for PoshConfig {
             copy_impl: None,
             coll_algo: None,
             barrier: BarrierKind::Dissemination,
+            team_barrier: TeamBarrierKind::Dissemination,
             safe: cfg!(feature = "safe-mode"),
         }
     }
@@ -68,7 +82,7 @@ impl PoshConfig {
 
     /// Apply `POSH_*` environment overrides (used by `oshrun` children):
     /// `POSH_HEAP_SIZE`, `POSH_STATICS_SIZE`, `POSH_COPY`, `POSH_COLL_ALGO`,
-    /// `POSH_BARRIER`, `POSH_SAFE`.
+    /// `POSH_BARRIER`, `POSH_TEAM_BARRIER`, `POSH_SAFE`.
     pub fn from_env(mut self) -> Self {
         if let Ok(v) = std::env::var("POSH_HEAP_SIZE") {
             if let Some(n) = parse_size(&v) {
@@ -90,6 +104,12 @@ impl PoshConfig {
             self.barrier = match v.to_ascii_lowercase().as_str() {
                 "central" => BarrierKind::Central,
                 _ => BarrierKind::Dissemination,
+            };
+        }
+        if let Ok(v) = std::env::var("POSH_TEAM_BARRIER") {
+            self.team_barrier = match v.to_ascii_lowercase().as_str() {
+                "linear" | "fanin" => TeamBarrierKind::LinearFanin,
+                _ => TeamBarrierKind::Dissemination,
             };
         }
         if let Ok(v) = std::env::var("POSH_SAFE") {
@@ -134,5 +154,6 @@ mod tests {
         assert!(c.heap_size >= 1 << 20);
         assert!(c.statics_size >= 1 << 12);
         assert_eq!(c.barrier, BarrierKind::Dissemination);
+        assert_eq!(c.team_barrier, TeamBarrierKind::Dissemination);
     }
 }

@@ -12,6 +12,6 @@ pub mod ctx;
 pub mod remote_table;
 pub mod world;
 
-pub use config::{BarrierKind, Mode, PoshConfig};
+pub use config::{BarrierKind, Mode, PoshConfig, TeamBarrierKind};
 pub use ctx::Ctx;
 pub use world::World;

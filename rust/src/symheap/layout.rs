@@ -11,8 +11,10 @@ use std::sync::atomic::{AtomicU32, AtomicU64};
 /// Segment magic ("POSHHEAP" little-endian-ish).
 pub const MAGIC: u64 = 0x504F_5348_4845_4150;
 
-/// log2 of the maximum PE count supported by the dissemination barrier.
-pub const MAX_BARRIER_ROUNDS: usize = 20; // up to 2^20 PEs
+/// log2 of the maximum member count supported by the dissemination sync
+/// engine: every [`TeamCell`] carries one mailbox word per round, and the
+/// world team (slot 0) is what `shmem_barrier_all` itself runs over.
+pub const MAX_SYNC_ROUNDS: usize = 20; // up to 2^20 PEs per team
 
 /// Number of named-lock slots in each header (§4.6 named mutexes).
 pub const NAMED_LOCK_SLOTS: usize = 64;
@@ -97,13 +99,14 @@ pub struct CollectiveState {
     pub seq: AtomicU64,
 }
 
-/// Dissemination-barrier mailboxes: `flags[r]` holds the highest epoch
-/// signalled to this PE at round `r`.
+/// Ablation/legacy barrier cells. The production `shmem_barrier_all` runs
+/// the dissemination engine over the world team's [`TeamCell`] (slot 0) —
+/// one engine for every barrier — so what remains here are the central
+/// counter (ablation baseline) and the shared 1.0 active-set pair the
+/// deprecated triplet shims still use.
 #[repr(C, align(128))]
 pub struct BarrierCells {
-    /// Per-round epoch mailboxes.
-    pub flags: [AtomicU64; MAX_BARRIER_ROUNDS],
-    /// This PE's completed-barrier epoch (monotone).
+    /// This PE's completed-barrier epoch (monotone; central bookkeeping).
     pub epoch: AtomicU64,
     /// Central-counter barrier (ablation baseline): arrivals this round.
     pub central_count: AtomicU64,
@@ -125,6 +128,12 @@ pub struct BarrierCells {
 /// slot unused) is written by every member at split time; safe mode
 /// cross-checks it against the team root's copy, turning a membership
 /// disagreement (a §6.4-style programmer error) into a loud panic.
+///
+/// Synchronisation runs through the per-round dissemination mailboxes
+/// (`sync_flags`/`sync_epoch`, O(log n) rounds in team-rank space) — the
+/// same engine `shmem_barrier_all` uses over the world team's slot 0. The
+/// `sync_count`/`sync_sense` pair is the linear fan-in baseline, kept for
+/// the Ablation-B A/B comparison (`PoshConfig::team_barrier`).
 #[repr(C, align(128))]
 pub struct TeamCell {
     /// First world rank of the team's strided membership.
@@ -141,10 +150,19 @@ pub struct TeamCell {
     /// value it saw, so `destroy` can detect a stale clone (slot recycled
     /// or already destroyed) instead of corrupting the current occupant.
     pub gen: AtomicU64,
-    /// Team-barrier arrivals (counted on the team root's cell).
+    /// Linear fan-in arrivals (A/B baseline; counted on the team root's
+    /// cell).
     pub sync_count: AtomicU64,
-    /// Team-barrier release word (monotone, bumped by the team root).
+    /// Linear fan-in release word (A/B baseline; monotone, bumped by the
+    /// team root).
     pub sync_sense: AtomicU64,
+    /// Dissemination mailboxes: `sync_flags[r]` holds the highest epoch
+    /// signalled to this member at round `r` by its round-`r` partner in
+    /// **team-rank space**. Monotone, so cells need no per-barrier reset;
+    /// they are zeroed once when the slot is (re)claimed at split time.
+    pub sync_flags: [AtomicU64; MAX_SYNC_ROUNDS],
+    /// This member's completed-sync epoch on this slot (monotone).
+    pub sync_epoch: AtomicU64,
 }
 
 /// The header at offset 0 of every symmetric-heap segment.
@@ -234,8 +252,9 @@ mod tests {
     #[test]
     fn header_fits_small_region() {
         // Keep the header compact; if this grows past 4 pages something is
-        // wrong (the team table dominates: MAX_TEAMS cache lines, then the
-        // named-lock table: 64 * 8B).
+        // wrong (the team table dominates: MAX_TEAMS * 256B with the
+        // per-round dissemination mailboxes, then the named-lock table:
+        // 64 * 8B).
         assert!(std::mem::size_of::<HeapHeader>() < 16384);
         assert_eq!(HeapHeader::region_size() % crate::shm::inproc::page_size(), 0);
     }
@@ -245,6 +264,66 @@ mod tests {
         assert_eq!(std::mem::align_of::<CollectiveState>(), 128);
         assert_eq!(std::mem::align_of::<BarrierCells>(), 128);
         assert_eq!(std::mem::align_of::<TeamCell>(), 128);
+    }
+
+    /// Byte offset of `field` within the struct that starts at `base`.
+    fn off<B, F>(base: &B, field: &F) -> usize {
+        field as *const F as usize - base as *const B as usize
+    }
+
+    /// Every `TeamCell` field at its expected offset, the whole cell
+    /// 128-byte aligned and exactly two cache lines, and the team table
+    /// inside its header budget — so layout drift (a reordered field, a
+    /// round-count change, an accidental padding hole) fails loudly instead
+    /// of silently desynchronising thread and process mode.
+    #[test]
+    fn team_cell_layout_pinned() {
+        let seg = crate::shm::inproc::InProcSegment::new(HeapHeader::region_size()).unwrap();
+        let hdr = unsafe { HeapHeader::at(seg.base()) };
+        let cell = &hdr.teams[0];
+
+        assert_eq!(off(cell, &cell.start), 0);
+        assert_eq!(off(cell, &cell.stride), 8);
+        assert_eq!(off(cell, &cell.size), 16);
+        assert_eq!(off(cell, &cell.pub_val), 24);
+        assert_eq!(off(cell, &cell.gen), 32);
+        assert_eq!(off(cell, &cell.sync_count), 40);
+        assert_eq!(off(cell, &cell.sync_sense), 48);
+        assert_eq!(off(cell, &cell.sync_flags), 56);
+        assert_eq!(off(cell, &cell.sync_flags[1]), 64);
+        assert_eq!(off(cell, &cell.sync_epoch), 56 + 8 * MAX_SYNC_ROUNDS);
+
+        // 7 descriptor/linear words + MAX_SYNC_ROUNDS mailboxes + the epoch,
+        // rounded up to the 128-byte alignment: exactly 256 bytes today.
+        assert_eq!(std::mem::size_of::<TeamCell>(), 256);
+        assert_eq!(std::mem::align_of::<TeamCell>(), 128);
+        // Consecutive slots are contiguous (no inter-element padding).
+        assert_eq!(
+            off(hdr, &hdr.teams[1]) - off(hdr, &hdr.teams[0]),
+            std::mem::size_of::<TeamCell>()
+        );
+
+        // Header budget: the team table must stay within two pages so the
+        // whole header keeps fitting `header_fits_small_region`'s bound.
+        assert_eq!(MAX_TEAMS * std::mem::size_of::<TeamCell>(), 8192);
+        assert!(MAX_TEAMS * std::mem::size_of::<TeamCell>() <= 2 * 4096);
+        use crate::shm::Segment;
+    }
+
+    /// `BarrierCells` after the one-engine refactor: ablation/legacy words
+    /// only, each at its pinned offset, one cache line total.
+    #[test]
+    fn barrier_cells_layout_pinned() {
+        let seg = crate::shm::inproc::InProcSegment::new(HeapHeader::region_size()).unwrap();
+        let hdr = unsafe { HeapHeader::at(seg.base()) };
+        let b = &hdr.barrier;
+        assert_eq!(off(b, &b.epoch), 0);
+        assert_eq!(off(b, &b.central_count), 8);
+        assert_eq!(off(b, &b.central_sense), 16);
+        assert_eq!(off(b, &b.set_count), 24);
+        assert_eq!(off(b, &b.set_sense), 32);
+        assert_eq!(std::mem::size_of::<BarrierCells>(), 128);
+        use crate::shm::Segment;
     }
 
     #[test]
@@ -261,8 +340,8 @@ mod tests {
         assert_eq!(hdr.magic.load(Ordering::Relaxed), 0);
         hdr.magic.store(MAGIC, Ordering::Release);
         assert_eq!(hdr.magic.load(Ordering::Acquire), MAGIC);
-        hdr.barrier.flags[3].fetch_add(7, Ordering::AcqRel);
-        assert_eq!(hdr.barrier.flags[3].load(Ordering::Relaxed), 7);
+        hdr.teams[0].sync_flags[3].fetch_add(7, Ordering::AcqRel);
+        assert_eq!(hdr.teams[0].sync_flags[3].load(Ordering::Relaxed), 7);
         use crate::shm::Segment;
     }
 

@@ -1,12 +1,18 @@
-//! Job-wide barriers.
+//! Job-wide barriers — thin calls over the **one** sync engine.
 //!
-//! Two algorithms, selectable via [`crate::pe::BarrierKind`] (ablation B in
-//! DESIGN.md):
+//! Since the team-scalable synchronisation refactor there is a single
+//! barrier engine: the dissemination sync over per-team mailbox cells in
+//! `collectives::state` (`team_sync_dissemination`). `shmem_barrier_all`
+//! runs it over the world team's permanently-reserved slot 0, `Team::sync`
+//! and `Team::barrier` run it over the team's own slot — same rounds, same
+//! cells, same proofs. Two algorithms remain selectable via
+//! [`crate::pe::BarrierKind`] (ablation B in DESIGN.md):
 //!
 //! * **Dissemination** — ⌈log₂ n⌉ rounds; in round *r* PE *i* signals PE
 //!   *(i+2ʳ) mod n* and waits for the matching signal. Mailboxes are the
-//!   per-round epoch cells in each PE's heap header, so the algorithm is
-//!   identical in thread and process mode. O(log n) latency, no hot spot.
+//!   world team's per-round epoch cells in each PE's heap header, so the
+//!   algorithm is identical in thread and process mode. O(log n) latency,
+//!   no hot spot.
 //! * **Central** — one counter + sense-reversal epoch on PE 0. O(n) fan-in
 //!   on a single cache line; the classic baseline the dissemination barrier
 //!   is measured against.
@@ -15,7 +21,9 @@
 //! barriers cannot interfere (a peer one epoch ahead simply stores a larger
 //! value, which `>=` absorbs).
 
+use crate::collectives::ActiveSet;
 use crate::pe::{BarrierKind, Ctx};
+use crate::team::WORLD_TEAM_SLOT;
 use std::sync::atomic::Ordering;
 
 /// ⌈log₂ n⌉ for n ≥ 1.
@@ -26,32 +34,29 @@ pub fn ceil_log2(n: usize) -> usize {
 
 impl Ctx {
     /// `shmem_barrier_all`: synchronise every PE **and** complete all
-    /// outstanding memory updates (the spec folds a quiet into the barrier).
+    /// outstanding memory updates (the spec folds a quiet into the barrier;
+    /// the default NBI domain's accounting retires with it).
     pub fn barrier_all(&self) {
-        self.quiet();
-        match self.config().barrier {
-            BarrierKind::Dissemination => self.barrier_dissemination(),
-            BarrierKind::Central => self.barrier_central(),
-        }
+        self.quiet_nbi();
+        self.sync_all();
     }
 
-    /// Dissemination barrier over all PEs.
-    pub(crate) fn barrier_dissemination(&self) {
+    /// `shmem_sync_all` (OpenSHMEM 1.5): synchronise every PE **without**
+    /// the implicit quiet — pure arrival/release, no completion guarantee
+    /// for outstanding puts and no NBI retirement. The cheap path when only
+    /// control synchronisation is needed.
+    pub fn sync_all(&self) {
         let n = self.n_pes();
         if n == 1 {
+            self.record_sync_rounds(0);
             return;
         }
-        let me = self.my_pe();
-        let my_hdr = self.header_of(me);
-        let epoch = my_hdr.barrier.epoch.load(Ordering::Relaxed) + 1;
-        let rounds = ceil_log2(n);
-        for r in 0..rounds {
-            let dist = 1usize << r;
-            let to = (me + dist) % n;
-            self.header_of(to).barrier.flags[r].store(epoch, Ordering::Release);
-            self.spin_wait(|| my_hdr.barrier.flags[r].load(Ordering::Acquire) >= epoch);
+        match self.config().barrier {
+            BarrierKind::Dissemination => {
+                self.team_sync_dissemination(&ActiveSet::world(n), WORLD_TEAM_SLOT)
+            }
+            BarrierKind::Central => self.barrier_central(),
         }
-        my_hdr.barrier.epoch.store(epoch, Ordering::Release);
     }
 
     /// Central-counter barrier (ablation baseline).
@@ -72,6 +77,8 @@ impl Ctx {
             self.spin_wait(|| h0.barrier.central_sense.load(Ordering::Acquire) >= epoch);
         }
         my_hdr.barrier.epoch.store(epoch, Ordering::Release);
+        // Serial depth of the central counter: n arrivals on one line.
+        self.record_sync_rounds(n - 1);
     }
 }
 
@@ -155,6 +162,28 @@ mod tests {
         w.run(|ctx| {
             for _ in 0..1000 {
                 ctx.barrier_all();
+            }
+        });
+    }
+
+    /// `sync_all` is a real barrier (phase separation) even though it skips
+    /// the quiet — and it interleaves safely with `barrier_all` on the same
+    /// slot-0 cells.
+    #[test]
+    fn sync_all_separates_phases() {
+        let n = 4;
+        let w = World::threads(n, PoshConfig::small()).unwrap();
+        let pre = AtomicUsize::new(0);
+        w.run(|ctx| {
+            for round in 0..50 {
+                pre.fetch_add(1, Ordering::SeqCst);
+                ctx.sync_all();
+                assert!(pre.load(Ordering::SeqCst) >= n * (round + 1));
+                if round % 3 == 0 {
+                    ctx.barrier_all();
+                } else {
+                    ctx.sync_all();
+                }
             }
         });
     }

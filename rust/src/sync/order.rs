@@ -14,14 +14,24 @@
 //!   quiet must issue a full `SeqCst` fence (which lowers to `mfence` on
 //!   x86, ordering streaming stores too — `sfence` semantics included).
 //!
-//! Since the context redesign, completion *accounting* is per ordering
-//! domain: [`Ctx::quiet_nbi`] retires the default (thread-local) domain,
-//! [`crate::ctx::CommCtx::quiet`] retires that context's private domain,
-//! and neither waits on — or retires — the other's pending operations. The
-//! hardware fence itself is process-wide either way (it costs the same),
-//! so the *visibility* guarantee of a quiet is never weaker than 1.0; the
-//! per-domain scoping is about completion semantics and the bookkeeping
-//! programs observe through `pending_nbi`.
+//! Since the context redesign, completion is resolved per ordering domain,
+//! and the two domain kinds complete differently:
+//!
+//! * the **default domain** issues eagerly, so [`Ctx::quiet_nbi`] is the
+//!   1.0 contract verbatim: the `SeqCst` completion fence, then retire the
+//!   thread-local accounting;
+//! * an **explicit context's** quiet ([`crate::ctx::CommCtx::quiet`]) is a
+//!   **batched drain**: issue that context's deferred puts (and only
+//!   those), then a `Release` fence — *no process-wide `SeqCst` fence*. The
+//!   drain performs the copies synchronously, the copy engine orders its
+//!   own streaming stores (`sfence` after every non-temporal loop), and the
+//!   release fence publishes them; nothing about a sibling context's or the
+//!   default domain's traffic is completed, fenced for, or retired.
+//!
+//! That asymmetry is the point: two independent NBI streams quiesce
+//! independently instead of serialising through one global `mfence`, and a
+//! context's pending ops are *provably* still pending after a sibling's
+//! quiet (see the flag-after-data conformance tests).
 
 use crate::p2p::nbi::NbiDomain;
 use crate::pe::Ctx;
@@ -41,18 +51,35 @@ impl Ctx {
         fence(Ordering::SeqCst);
     }
 
-    /// Quiet resolved against one ordering domain: the completion fence,
-    /// then retire that domain's (and only that domain's) NBI accounting.
-    #[inline]
+    /// Quiet resolved against one ordering domain: complete that domain's
+    /// (and only that domain's) operations, then retire its accounting.
     pub(crate) fn quiet_domain(&self, domain: &NbiDomain<'_>) {
-        self.quiet();
-        self.nbi_retire(domain);
+        match domain {
+            // Default domain ops were issued eagerly; the full SeqCst fence
+            // is what "complete and visible" means for them (it also drains
+            // weakly-ordered streaming stores).
+            NbiDomain::Default => {
+                self.quiet();
+                self.nbi_retire(domain);
+            }
+            // Explicit domain: batched drain + release publication + retire,
+            // as one critical section on the batch (a racing put_nbi from a
+            // sibling thread is either drained or counted after the retire).
+            // The drain copies synchronously, so no global completion fence
+            // is needed — and deliberately none is issued.
+            NbiDomain::Explicit(batch) => self.nbi_quiet_batch(batch),
+        }
     }
 
     /// Fence resolved against one ordering domain. Fences order, they do
-    /// not complete — no accounting is retired, on any domain.
-    #[inline]
-    pub(crate) fn fence_domain(&self, _domain: &NbiDomain<'_>) {
+    /// not complete — no accounting is retired, on any domain. An explicit
+    /// domain's queue is drained first: its puts must be *delivered* before
+    /// anything issued after the fence, which deferral would otherwise
+    /// invert.
+    pub(crate) fn fence_domain(&self, domain: &NbiDomain<'_>) {
+        if let NbiDomain::Explicit(batch) = domain {
+            self.nbi_drain(batch);
+        }
         self.fence();
     }
 }

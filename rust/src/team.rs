@@ -160,9 +160,18 @@ impl Team {
     // Collective team operations.
     // -----------------------------------------------------------------
 
-    /// `shmem_team_sync`: barrier over the team's members (includes quiet,
-    /// as all POSH-RS barriers do).
+    /// `shmem_team_sync` (OpenSHMEM 1.5): synchronise the team's members
+    /// **without** an implicit quiet — arrival/release only, the cheap path.
+    /// Outstanding puts are *not* guaranteed visible afterwards and no NBI
+    /// domain is retired; use [`Team::barrier`] when they must be.
     pub fn sync(&self) {
+        self.ctx.team_sync(self);
+    }
+
+    /// 1.0 `shmem_barrier` over the team: quiet (all outstanding memory
+    /// updates complete, default-domain NBI accounting retires) **then**
+    /// synchronise — both halves of the classic barrier contract.
+    pub fn barrier(&self) {
         self.ctx.barrier(self);
     }
 
@@ -206,11 +215,23 @@ impl Team {
         };
 
         // Child members publish the membership descriptor they computed and
-        // stamp their local slot generation (stale-handle detection).
+        // stamp their local slot generation (stale-handle detection). Each
+        // member also zeroes its own sync cells: the slot may be recycled,
+        // and the dissemination mailboxes' monotone epochs must restart from
+        // 0 for the new team — a stale epoch from the previous occupant
+        // would satisfy a `>=` wait instantly and desynchronise the team.
+        // The parent sync below orders these resets before any member can
+        // enter the child's first sync.
         let mut my_gen = 0u64;
         if my_child_idx.is_some() {
             let cell = &self.ctx.header_of(self.ctx.my_pe()).teams[slot];
             my_gen = cell.gen.fetch_add(1, Ordering::AcqRel) + 1;
+            for f in &cell.sync_flags {
+                f.store(0, Ordering::Relaxed);
+            }
+            cell.sync_epoch.store(0, Ordering::Relaxed);
+            cell.sync_count.store(0, Ordering::Relaxed);
+            cell.sync_sense.store(0, Ordering::Relaxed);
             cell.start.store(child_set.start as u64, Ordering::Release);
             cell.stride.store(child_set.stride as u64, Ordering::Release);
             cell.size.store(child_set.size as u64, Ordering::Release);

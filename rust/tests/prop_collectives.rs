@@ -1,7 +1,9 @@
 //! Property tests over the collective layer: random team splits (arbitrary
 //! strides — beyond what the 1.0 triplet could express), random payloads,
-//! every algorithm — results must match a serial oracle, and repeated
-//! collectives must not interfere (the §4.5.1 reset discipline).
+//! every algorithm — results must match a serial oracle, repeated
+//! collectives must not interfere (the §4.5.1 reset discipline), and the
+//! sync-vs-barrier completion contract holds: `shmem_team_sync` implies
+//! **no** quiet, team/world barriers do.
 
 use posh::collectives::{AlgoKind, ReduceOp};
 use posh::pe::{PoshConfig, World};
@@ -261,6 +263,62 @@ fn mixed_collective_sequences_are_isolated() {
             Ok(())
         } else {
             Err(format!("sequence {seq:?} with {algo:?} corrupted data"))
+        }
+    });
+}
+
+/// The guarantee→test rows for the 1.5 completion contract, over random
+/// team shapes:
+///
+/// * `shmem_team_sync` (sync-only) must **not** imply a quiet — pending NBI
+///   accounting on the default domain survives it;
+/// * a team *barrier* (and `barrier_all`) folds a quiet in and retires it.
+#[test]
+fn team_sync_is_sync_only_barrier_quiets() {
+    forall("sync-only vs barrier", 15, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let stride = g.usize_in(1..4);
+        let max_size = (n_pes + stride - 1) / stride;
+        let lo = 2usize.min(max_size);
+        let size = g.usize_in(lo..max_size + 1);
+        let max_start = n_pes - (size - 1) * stride;
+        let start = g.usize_in(0..max_start);
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let oks = w.run_collect(move |ctx| {
+            let world = ctx.team_world();
+            let team = world.split_strided(start, stride, size);
+            let mut ok = true;
+            if let Some(t) = &team {
+                let buf = ctx.heap().alloc_n::<u64>(4).unwrap();
+                let next = t.world_rank((t.my_pe() + 1) % t.n_pes());
+                for _ in 0..5 {
+                    ctx.put_nbi(buf, &[9; 4], next);
+                    ok &= ctx.pending_nbi() == 1;
+                    t.sync();
+                    // Sync-only: the default domain is untouched.
+                    ok &= ctx.pending_nbi() == 1;
+                    t.sync();
+                    ok &= ctx.pending_nbi() == 1;
+                    t.barrier();
+                    // Barrier = quiet + sync: accounting retired.
+                    ok &= ctx.pending_nbi() == 0;
+                }
+                ctx.heap().free(buf).unwrap();
+            }
+            ctx.barrier_all();
+            ok &= ctx.pending_nbi() == 0;
+            if let Some(t) = team {
+                t.destroy();
+            }
+            ctx.barrier_all();
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!(
+                "sync/barrier quiet contract violated (split ({start},{stride},{size}))"
+            ))
         }
     });
 }

@@ -6,11 +6,14 @@
 //! * **Oracle** — a team reduction equals the serial oracle restricted to
 //!   the team's members.
 //! * **Quiet scoping** — quiet on one communication context never retires
-//!   another context's (or the default domain's) pending NBI operations.
+//!   another context's (or the default domain's) pending NBI operations,
+//!   and (flag-after-data oracle) never *delivers* a sibling's deferred
+//!   puts: ctx A's quiet provably leaves ctx B's data un-arrived.
 
 use posh::collectives::ReduceOp;
 use posh::ctx::CtxOptions;
 use posh::pe::{PoshConfig, World};
+use posh::sync::CmpOp;
 use posh::util::quickcheck::{forall, Gen};
 
 /// Random strided split parameters within `n_pes` world ranks.
@@ -230,5 +233,58 @@ fn ctx_quiet_never_crosses_domains() {
                 "quiet on ctx {quiesce} disturbed a sibling (issues {issues:?})"
             ))
         }
+    });
+}
+
+/// The flag-after-data conformance oracle for the memory-model row
+/// "`quiet` on ctx A does not complete NBI ops issued on ctx B": both PEs
+/// issue a small (hence deferred) `put_nbi` on context B, quiesce context
+/// A, and raise a flag. When the peer's flag arrives, B's data must **not**
+/// have landed — deterministically, because deferred puts are only
+/// delivered by their own context's drain. After `B.quiet()` and a second
+/// flag, the data must be there.
+#[test]
+fn ctx_a_quiet_leaves_ctx_b_data_unarrived() {
+    let w = World::threads(2, PoshConfig::small()).unwrap();
+    w.run(|ctx| {
+        let world = ctx.team_world();
+        let a = world.create_ctx(CtxOptions::new());
+        let b = world.create_ctx(CtxOptions::new());
+        let data = ctx.shmalloc_n::<u64>(8).unwrap();
+        let flag = ctx.shmalloc_n::<u64>(1).unwrap();
+        unsafe { ctx.local_mut(data).fill(0) };
+        ctx.barrier_all();
+        let peer = (ctx.my_pe() + 1) % 2;
+        for round in 1..=40u64 {
+            b.put_nbi(data, &[round; 8], peer); // deferred on B
+            a.quiet(); // must not deliver or retire B's put
+            assert_eq!(b.pending_nbi(), 1, "A's quiet retired B's op");
+            // Phase 1: "my B-put is issued, my A-quiet is done".
+            ctx.put_one(flag, 3 * round - 2, peer);
+            ctx.wait_until(flag, CmpOp::Ge, 3 * round - 2);
+            let seen = unsafe { ctx.local(data).to_vec() };
+            assert!(
+                seen.iter().all(|&x| x != round),
+                "round {round}: ctx B's deferred put arrived after only ctx A's quiet: {seen:?}"
+            );
+            // Phase 2: "my not-arrived check is complete" — the peer may
+            // only drain B after this, or its delivery races the check.
+            ctx.put_one(flag, 3 * round - 1, peer);
+            ctx.wait_until(flag, CmpOp::Ge, 3 * round - 1);
+
+            b.quiet(); // now deliver
+            assert_eq!(b.pending_nbi(), 0);
+            // Phase 3: "my B drain is done".
+            ctx.put_one(flag, 3 * round, peer);
+            ctx.wait_until(flag, CmpOp::Ge, 3 * round);
+            let seen = unsafe { ctx.local(data).to_vec() };
+            assert!(
+                seen.iter().all(|&x| x == round),
+                "round {round}: ctx B's put missing after B's quiet: {seen:?}"
+            );
+        }
+        a.destroy();
+        b.destroy();
+        ctx.barrier_all();
     });
 }

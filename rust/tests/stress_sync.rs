@@ -1,0 +1,284 @@
+//! Multi-PE stress & conformance suite for the team-scalable sync engine.
+//!
+//! The dissemination team barrier and the per-team mailbox cells exist to
+//! make *overlapping* teams synchronise without stealing each other's
+//! signals, across slot recycling, under both engines, at high iteration
+//! counts. These tests hammer exactly that: concurrent barriers/syncs on
+//! overlapping split teams (thousands of iterations in release), randomized
+//! team shapes via `split_strided`/`split_2d`, split/destroy churn over the
+//! recycled slot pool, and the O(log n) round-count acceptance check.
+//!
+//! Iteration counts scale down in debug builds so the default `cargo test`
+//! stays quick; the CI release job runs the full counts.
+
+use posh::pe::{PoshConfig, TeamBarrierKind, World};
+use posh::util::quickcheck::{forall, Gen};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Release-build iteration count, scaled down 8× for debug builds.
+fn iters(release: usize) -> usize {
+    if cfg!(debug_assertions) {
+        (release / 8).max(1)
+    } else {
+        release
+    }
+}
+
+/// Overlapping teams sharing a root PE, hammered concurrently: teams
+/// {0,1} and {0,2} both have PE 0 as root. With the 1.0 shared set cells
+/// this lost arrivals; per-team cells (and per-round mailboxes) must keep
+/// every sync exact over thousands of back-to-back rounds.
+fn overlapping_hammer(kind: TeamBarrierKind) {
+    let rounds = iters(2000);
+    let mut cfg = PoshConfig::small();
+    cfg.team_barrier = kind;
+    let w = World::threads(3, cfg).unwrap();
+    let a_pre = AtomicUsize::new(0);
+    let b_pre = AtomicUsize::new(0);
+    w.run(|ctx| {
+        let world = ctx.team_world();
+        let a = world.split_strided(0, 1, 2); // PEs {0, 1}
+        let b = world.split_strided(0, 2, 2); // PEs {0, 2}
+        for round in 1..=rounds {
+            match ctx.my_pe() {
+                0 => {
+                    a_pre.fetch_add(1, Ordering::SeqCst);
+                    a.as_ref().unwrap().sync();
+                    assert!(a_pre.load(Ordering::SeqCst) >= 2 * round, "team A lost an arrival");
+                    b_pre.fetch_add(1, Ordering::SeqCst);
+                    b.as_ref().unwrap().sync();
+                    assert!(b_pre.load(Ordering::SeqCst) >= 2 * round, "team B lost an arrival");
+                }
+                1 => {
+                    a_pre.fetch_add(1, Ordering::SeqCst);
+                    a.as_ref().unwrap().sync();
+                    assert!(a_pre.load(Ordering::SeqCst) >= 2 * round, "team A lost an arrival");
+                }
+                _ => {
+                    b_pre.fetch_add(1, Ordering::SeqCst);
+                    b.as_ref().unwrap().sync();
+                    assert!(b_pre.load(Ordering::SeqCst) >= 2 * round, "team B lost an arrival");
+                }
+            }
+        }
+        ctx.barrier_all();
+        if let Some(t) = a {
+            t.destroy();
+        }
+        if let Some(t) = b {
+            t.destroy();
+        }
+        ctx.barrier_all();
+    });
+}
+
+#[test]
+fn overlapping_teams_hammer_dissemination() {
+    overlapping_hammer(TeamBarrierKind::Dissemination);
+}
+
+#[test]
+fn overlapping_teams_hammer_linear_fanin() {
+    overlapping_hammer(TeamBarrierKind::LinearFanin);
+}
+
+/// Randomized strided shapes: two overlapping teams split from random
+/// worlds, synced in lockstep with a per-team arrival oracle, with
+/// `barrier_all` (the same engine on slot 0) interleaved.
+#[test]
+fn randomized_strided_shapes_no_cross_team_collision() {
+    forall("strided stress", 12, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        // Team A: a prefix; team B: a strided set overlapping A's root.
+        let a_size = g.usize_in(1..n_pes + 1);
+        let b_stride = g.usize_in(1..4);
+        let b_max = (n_pes + b_stride - 1) / b_stride;
+        let b_size = g.usize_in(1..b_max + 1);
+        let rounds = iters(400);
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let a_pre = AtomicUsize::new(0);
+        let b_pre = AtomicUsize::new(0);
+        let oks = w.run_collect(|ctx| {
+            let world = ctx.team_world();
+            let a = world.split_strided(0, 1, a_size);
+            let b = world.split_strided(0, b_stride, b_size);
+            let mut ok = true;
+            for round in 1..=rounds {
+                if let Some(t) = &a {
+                    a_pre.fetch_add(1, Ordering::SeqCst);
+                    t.sync();
+                    ok &= a_pre.load(Ordering::SeqCst) >= a_size * round;
+                }
+                if let Some(t) = &b {
+                    b_pre.fetch_add(1, Ordering::SeqCst);
+                    t.sync();
+                    ok &= b_pre.load(Ordering::SeqCst) >= b_size * round;
+                }
+                if round % 64 == 0 {
+                    ctx.barrier_all();
+                }
+            }
+            ctx.barrier_all();
+            if let Some(t) = a {
+                t.destroy();
+            }
+            if let Some(t) = b {
+                t.destroy();
+            }
+            ctx.barrier_all();
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!(
+                "lost arrival (n={n_pes}, a_size={a_size}, b=({b_stride},{b_size}))"
+            ))
+        }
+    });
+}
+
+/// Randomized 2-D grids: every PE syncs its row team and its column team
+/// in alternation — rows and columns overlap pairwise at every PE, the
+/// densest overlap pattern the slot machinery supports.
+#[test]
+fn randomized_2d_grids_row_column_hammer() {
+    forall("2d stress", 8, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..9);
+        let xrange = g.usize_in(1..5);
+        let rounds = iters(300);
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let pre = AtomicUsize::new(0);
+        let oks = w.run_collect(|ctx| {
+            let world = ctx.team_world();
+            let (x, y) = world.split_2d(xrange);
+            let mut ok = true;
+            for round in 1..=rounds {
+                pre.fetch_add(1, Ordering::SeqCst);
+                x.sync();
+                y.sync();
+                // After syncing my row AND my column, every PE of both has
+                // posted this round's increment; the weakest global claim
+                // covering all grid shapes is my own row+column population.
+                let floor = x.n_pes().max(y.n_pes()) * round;
+                ok &= pre.load(Ordering::SeqCst) >= floor;
+            }
+            ctx.barrier_all();
+            ok &= pre.load(Ordering::SeqCst) == n_pes * rounds;
+            x.destroy();
+            y.destroy();
+            ctx.barrier_all();
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!("grid sync lost an arrival (n={n_pes}, xrange={xrange})"))
+        }
+    });
+}
+
+/// Split/destroy churn over the slot pool: recycled slots carry the
+/// previous occupant's monotone epochs, which the reset-at-claim in
+/// `split_strided` must clear — otherwise a new team's first sync would
+/// satisfy its `>=` waits instantly and desynchronise. Alternating team
+/// sizes maximise the epoch mismatch.
+#[test]
+fn slot_recycling_under_churn() {
+    let cycles = iters(6 * 32); // several times MAX_TEAMS
+    let w = World::threads(4, PoshConfig::small()).unwrap();
+    let pre = AtomicUsize::new(0);
+    w.run(|ctx| {
+        let world = ctx.team_world();
+        for k in 0..cycles {
+            let size = 2 + (k % 3); // 2, 3, 4 members
+            let team = world.split_strided(0, 1, size);
+            if let Some(t) = &team {
+                // A burst of syncs so the fresh slot's epochs advance past
+                // where a smaller predecessor team left them.
+                for burst in 1..=3 {
+                    pre.fetch_add(1, Ordering::SeqCst);
+                    t.sync();
+                    assert!(
+                        pre.load(Ordering::SeqCst) >= size * burst,
+                        "recycled slot lost an arrival (cycle {k}, size {size})"
+                    );
+                }
+            }
+            ctx.barrier_all();
+            pre.fetch_sub(if team.is_some() { 3 } else { 0 }, Ordering::SeqCst);
+            ctx.barrier_all();
+            if let Some(t) = team {
+                t.destroy();
+            }
+            ctx.barrier_all();
+        }
+    });
+}
+
+/// The acceptance hook: an 8-member team's dissemination sync completes in
+/// exactly ⌈log₂ 8⌉ = 3 rounds — O(log n), not the linear baseline's n − 1
+/// — and `barrier_all` reports the same engine over the world team.
+#[test]
+fn eight_member_team_syncs_in_log_rounds() {
+    let w = World::threads(8, PoshConfig::small()).unwrap();
+    w.run(|ctx| {
+        let world = ctx.team_world();
+        let team = world.split_strided(0, 1, 8).unwrap();
+        team.sync();
+        assert_eq!(
+            ctx.last_sync_rounds(),
+            3,
+            "8-member dissemination sync must take ceil(log2 8) = 3 rounds"
+        );
+        ctx.barrier_all();
+        assert_eq!(ctx.last_sync_rounds(), 3, "barrier_all runs the same engine");
+        ctx.barrier_all();
+        team.destroy();
+        ctx.barrier_all();
+    });
+}
+
+/// Same team, linear baseline: n − 1 serial steps — the number the
+/// dissemination engine's 3 rounds are measured against in Ablation B.
+#[test]
+fn eight_member_linear_baseline_is_n_minus_1() {
+    let mut cfg = PoshConfig::small();
+    cfg.team_barrier = TeamBarrierKind::LinearFanin;
+    let w = World::threads(8, cfg).unwrap();
+    w.run(|ctx| {
+        let team = ctx.team_world().split_strided(0, 1, 8).unwrap();
+        team.sync();
+        assert_eq!(ctx.last_sync_rounds(), 7, "linear fan-in serialises through n-1");
+        ctx.barrier_all();
+        team.destroy();
+        ctx.barrier_all();
+    });
+}
+
+/// Uneven (non-power-of-two) team sizes through the dissemination rounds,
+/// repeatedly, with members of the complement set also active.
+#[test]
+fn odd_sized_teams_dissemination() {
+    for &size in &[3usize, 5, 6, 7] {
+        let rounds = iters(500);
+        let w = World::threads(size + 1, PoshConfig::small()).unwrap();
+        let pre = AtomicUsize::new(0);
+        w.run(|ctx| {
+            let world = ctx.team_world();
+            let team = world.split_strided(0, 1, size);
+            for round in 1..=rounds {
+                if let Some(t) = &team {
+                    pre.fetch_add(1, Ordering::SeqCst);
+                    t.sync();
+                    assert!(pre.load(Ordering::SeqCst) >= size * round, "size {size}");
+                }
+            }
+            ctx.barrier_all();
+            if let Some(t) = team {
+                t.destroy();
+            }
+            ctx.barrier_all();
+        });
+    }
+}
