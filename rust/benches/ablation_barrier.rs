@@ -52,7 +52,7 @@ fn bench_set_barrier(n: usize) -> f64 {
 /// given engine — the dissemination-vs-linear-fan-in A/B column pair.
 fn bench_team_sync_world(n: usize, kind: TeamBarrierKind) -> f64 {
     let mut cfg = PoshConfig::small();
-    cfg.team_barrier = kind;
+    cfg.team_barrier = Some(kind);
     let w = World::threads(n, cfg).unwrap();
     let ns = AtomicU64::new(0);
     w.run(|ctx| {

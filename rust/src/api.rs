@@ -66,6 +66,13 @@ pub fn ctx() -> Ctx {
 /// park the world in a process-global slot so [`shmem_finalize`] can tear
 /// it down deterministically. Returns the context for callers that also
 /// want the explicit API.
+///
+/// Initialisation also resolves the job's tuning engine (the fitted
+/// `T(n) = α + n/β` channel model behind adaptive collective selection):
+/// rank 0 postulates it from `POSH_ALPHA_NS`/`POSH_BETA_GBPS` or runs the
+/// fast micro-calibration, and publishes the result through its heap
+/// header so every PE selects identically — see
+/// [`crate::collectives::tuning`] and `docs/tuning.md`.
 pub fn shmem_init() -> crate::Result<Ctx> {
     let world = World::from_env()?;
     let c = world.my_ctx();

@@ -1,15 +1,34 @@
-//! Collective algorithm selection (paper §4.5.4).
+//! Collective algorithm selection (paper §4.5.4, now model-driven).
 //!
 //! "In order to reduce the number of conditional branches, collective
 //! communication algorithms are chosen at compile-time … A default choice is
 //! provided if no option is passed to the compiler."
 //!
-//! POSH-RS: cargo features `coll-linear` / `coll-tree` / `coll-recdbl` fix
-//! the compile-time default ([`AlgoKind::default_algo`]); `PoshConfig` or
-//! `POSH_COLL_ALGO` may override it once at start-up. The per-op dispatch is
+//! POSH-RS closes the loop the paper leaves open between this switch and
+//! its own `T(n) = α + n/β` channel model (§5): the default is now
+//! [`AlgoKind::Adaptive`], which resolves per `(operation, payload size,
+//! team size)` through the fitted cost model
+//! ([`crate::collectives::tuning`]). The fixed families survive as *forced*
+//! overrides — cargo features `coll-linear` / `coll-tree` / `coll-recdbl`
+//! fix the compile-time default ([`AlgoKind::default_algo`]); `PoshConfig`
+//! or `POSH_COLL_ALGO` override once at start-up — so every Ablation-A A/B
+//! comparison stays reproducible. Either way the per-op dispatch is
 //! resolved before any data moves.
 
+use super::tuning::{self, CollOp};
+
 /// Which algorithm family a collective uses.
+///
+/// ```
+/// use posh::collectives::AlgoKind;
+/// // Every spelling round-trips through parse/name, `adaptive` included.
+/// assert_eq!(AlgoKind::parse("tree"), Some(AlgoKind::Tree));
+/// assert_eq!(AlgoKind::parse("adaptive"), Some(AlgoKind::Adaptive));
+/// assert_eq!(AlgoKind::Adaptive.name(), "adaptive");
+/// // `all()` enumerates only the forced families (ablation sweeps);
+/// // Adaptive is the selector, not a member of the sweep.
+/// assert!(!AlgoKind::all().contains(&AlgoKind::Adaptive));
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum AlgoKind {
     /// Put-based linear: the root (or every writer) pushes; O(n) puts.
@@ -22,10 +41,16 @@ pub enum AlgoKind {
     /// Recursive doubling: log₂(n) rounds, all PEs finish with the result
     /// (power-of-two set sizes; falls back to the linear variant otherwise).
     RecursiveDoubling,
+    /// Pick per call through the fitted cost model
+    /// ([`crate::collectives::tuning::Tuning::select`]): linear-put below
+    /// the latency crossover, tree/recursive-doubling above it, get-based
+    /// pull where bulk parallelism wins. The production default.
+    Adaptive,
 }
 
 impl AlgoKind {
-    /// Compile-time default from cargo features; `LinearPut` if none set.
+    /// Compile-time default from cargo features; [`AlgoKind::Adaptive`]
+    /// (model-driven selection) if none set.
     pub const fn default_algo() -> AlgoKind {
         #[cfg(feature = "coll-recdbl")]
         {
@@ -35,8 +60,15 @@ impl AlgoKind {
         {
             return AlgoKind::Tree;
         }
+        #[cfg(all(
+            feature = "coll-linear",
+            not(any(feature = "coll-tree", feature = "coll-recdbl"))
+        ))]
+        {
+            return AlgoKind::LinearPut;
+        }
         #[allow(unreachable_code)]
-        AlgoKind::LinearPut
+        AlgoKind::Adaptive
     }
 
     /// Parse CLI/env spellings.
@@ -46,6 +78,7 @@ impl AlgoKind {
             "linear-get" | "get" => Some(AlgoKind::LinearGet),
             "tree" | "binomial" => Some(AlgoKind::Tree),
             "recdbl" | "recursive-doubling" | "rd" => Some(AlgoKind::RecursiveDoubling),
+            "adaptive" | "auto" | "model" => Some(AlgoKind::Adaptive),
             _ => None,
         }
     }
@@ -57,10 +90,13 @@ impl AlgoKind {
             AlgoKind::LinearGet => "linear-get",
             AlgoKind::Tree => "tree",
             AlgoKind::RecursiveDoubling => "recdbl",
+            AlgoKind::Adaptive => "adaptive",
         }
     }
 
-    /// All variants (ablation sweeps).
+    /// All *forced* families (ablation sweeps). [`AlgoKind::Adaptive`] is
+    /// deliberately absent: it is the selector over these, not a fifth
+    /// schedule.
     pub fn all() -> [AlgoKind; 4] {
         [
             AlgoKind::LinearPut,
@@ -72,11 +108,41 @@ impl AlgoKind {
 }
 
 impl crate::pe::Ctx {
-    /// The algorithm collectives on this context use: config override or the
-    /// compile-time default.
+    /// The *requested* algorithm for collectives on this context: config
+    /// override or the compile-time default. May be [`AlgoKind::Adaptive`];
+    /// collectives resolve it per call through
+    /// [`coll_algo_for`](crate::pe::Ctx::coll_algo_for).
     #[inline]
     pub fn coll_algo(&self) -> AlgoKind {
         self.config().coll_algo.unwrap_or(AlgoKind::default_algo())
+    }
+
+    /// Resolve the algorithm one collective call will run: a forced kind
+    /// passes through untouched; [`AlgoKind::Adaptive`] asks the world's
+    /// tuning engine for the model's argmin at this `(op, team size,
+    /// payload bytes)`. Never returns `Adaptive`; the resolution is
+    /// recorded for [`last_coll_algo`](crate::pe::Ctx::last_coll_algo).
+    ///
+    /// Every PE resolves identically for the same call: forced kinds are
+    /// job-wide config, and the adaptive engine's model is shared (thread
+    /// mode) or published by rank 0 and adopted by every peer (process
+    /// mode) — see [`crate::collectives::tuning`].
+    #[inline]
+    pub fn coll_algo_for(&self, op: CollOp, team_size: usize, bytes: usize) -> AlgoKind {
+        let resolved = match self.coll_algo() {
+            AlgoKind::Adaptive => self.tuning().select(op, team_size, bytes),
+            fixed => fixed,
+        };
+        tuning::record_last_algo(resolved);
+        resolved
+    }
+
+    /// The algorithm the most recent collective on this PE thread resolved
+    /// to (`None` before the first one) — the observability hook behind the
+    /// crossover tests and the ablation benches, the selection-side
+    /// counterpart of [`Ctx::last_sync_rounds`](crate::pe::Ctx).
+    pub fn last_coll_algo(&self) -> Option<AlgoKind> {
+        tuning::last_algo()
     }
 }
 
@@ -89,12 +155,29 @@ mod tests {
         for a in AlgoKind::all() {
             assert_eq!(AlgoKind::parse(a.name()), Some(a));
         }
+        assert_eq!(AlgoKind::parse("adaptive"), Some(AlgoKind::Adaptive));
+        assert_eq!(AlgoKind::parse(AlgoKind::Adaptive.name()), Some(AlgoKind::Adaptive));
         assert_eq!(AlgoKind::parse("nope"), None);
     }
 
     #[test]
-    fn default_is_linear_without_features() {
-        #[cfg(not(any(feature = "coll-tree", feature = "coll-recdbl")))]
+    fn default_is_adaptive_without_features() {
+        #[cfg(not(any(
+            feature = "coll-linear",
+            feature = "coll-tree",
+            feature = "coll-recdbl"
+        )))]
+        assert_eq!(AlgoKind::default_algo(), AlgoKind::Adaptive);
+        #[cfg(all(
+            feature = "coll-linear",
+            not(any(feature = "coll-tree", feature = "coll-recdbl"))
+        ))]
         assert_eq!(AlgoKind::default_algo(), AlgoKind::LinearPut);
+    }
+
+    #[test]
+    fn all_is_the_forced_sweep() {
+        assert_eq!(AlgoKind::all().len(), 4);
+        assert!(!AlgoKind::all().contains(&AlgoKind::Adaptive));
     }
 }

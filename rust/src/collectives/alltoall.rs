@@ -6,6 +6,7 @@
 //! pure one-sided puts, each member pushes `size` blocks and receives
 //! `size − 1` signals.
 
+use super::tuning::CollOp;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
@@ -24,6 +25,10 @@ impl Ctx {
         let set = &team.set;
         let bytes = nelems * std::mem::size_of::<T>();
         let idx = self.coll_enter(team, CollOpTag::Alltoall, bytes);
+        // Routed through the engine; alltoall has a single (put-based)
+        // protocol today, so the resolution records the decision without
+        // branching.
+        let _ = self.coll_algo_for(CollOp::Alltoall, set.size, bytes);
         if self.config().safe {
             assert!(source.len() >= nelems * set.size, "alltoall source too small");
             assert!(target.len() >= nelems * set.size, "alltoall target too small");

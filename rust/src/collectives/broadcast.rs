@@ -3,15 +3,21 @@
 //! OpenSHMEM quirk preserved: the **root's `target` is not written** — only
 //! the other members of the team receive the data.
 //!
-//! Variants (§4.5 put- vs get-based, §4.5.4 switching):
+//! Variants (§4.5 put- vs get-based, §4.5.4 switching — resolved per call
+//! by the tuning engine when the algorithm is `Adaptive`, the default):
 //! * `LinearPut` — root pushes into every member's target, then signals.
+//!   The model's pick below the latency crossover (small payloads, small
+//!   teams: one serial writer, minimal handshaking).
 //! * `LinearGet` — root publishes its source handle; members pull
 //!   (§4.5.2: the root may not have entered yet, so members spin on the
-//!   published handle).
+//!   published handle). The model's pick for bulk payloads, where the
+//!   members' pulls proceed in parallel.
 //! * `Tree` / `RecursiveDoubling` — binomial tree, log₂(size) rounds;
-//!   interior nodes forward from their own `target`.
+//!   interior nodes forward from their own `target`. The model's pick for
+//!   latency-bound operations on larger teams.
 
 use super::state::ActiveSet;
+use super::tuning::CollOp;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
@@ -32,7 +38,7 @@ impl Ctx {
         assert!(root_idx < set.size, "root index {root_idx} outside team");
         let bytes = nelems * std::mem::size_of::<T>();
         let idx = self.coll_enter(team, CollOpTag::Broadcast, bytes);
-        match self.coll_algo() {
+        match self.coll_algo_for(CollOp::Broadcast, set.size, bytes) {
             super::AlgoKind::LinearPut => {
                 self.bcast_linear_put(target, source, nelems, root_idx, set, idx)
             }
@@ -42,6 +48,7 @@ impl Ctx {
             super::AlgoKind::Tree | super::AlgoKind::RecursiveDoubling => {
                 self.bcast_tree(target, source, nelems, root_idx, set, idx)
             }
+            super::AlgoKind::Adaptive => unreachable!("resolved by coll_algo_for"),
         }
         self.coll_exit(team);
     }

@@ -12,6 +12,7 @@
 //!   `data_size` field: each member publishes its element count and reads
 //!   every peer's — the size exchange is itself a tiny get-based collective.
 
+use super::tuning::CollOp;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
@@ -39,7 +40,7 @@ impl Ctx {
                 nelems * set.size
             );
         }
-        match self.coll_algo() {
+        match self.coll_algo_for(CollOp::Fcollect, set.size, bytes) {
             super::AlgoKind::LinearGet => {
                 // Publish, then pull every peer's block.
                 self.coll_publish_buf(source);
@@ -95,6 +96,10 @@ impl Ctx {
     ) -> usize {
         let set = &team.set;
         let idx = self.coll_enter(team, CollOpTag::Collect, 0);
+        // Routed through the engine like every collective; collect has a
+        // single protocol (the size exchange *is* the rendezvous), so the
+        // resolution is the recorded decision, not a branch.
+        let _ = self.coll_algo_for(CollOp::Collect, set.size, nelems * std::mem::size_of::<T>());
         // Size exchange through the §4.5.1 data_size field (+1 so that a
         // legitimate 0-element contribution is distinguishable from "not
         // entered yet").

@@ -7,9 +7,12 @@
 //!
 //! Design points carried over from the paper:
 //!
-//! * **Put-based vs get-based variants** (§4.5): both are implemented; the
-//!   algorithm is chosen at compile time via cargo features (§4.5.4) with a
-//!   runtime override for the ablation benches.
+//! * **Put-based vs get-based variants** (§4.5): both are implemented. The
+//!   paper chooses at compile time via compiler flags (§4.5.4); POSH-RS
+//!   resolves per call through the fitted `T(n) = α + n/β` cost model
+//!   ([`tuning`], the default), with the compile-time cargo features and
+//!   the `POSH_COLL_ALGO` runtime override surviving as forced choices for
+//!   the ablation benches.
 //! * **Late-entry handling** (§4.5.2): a PE can be drafted into a collective
 //!   before it enters the call — get-based ops publish their buffer handle
 //!   and peers spin on it; put-based reductions publish the root's temporary
@@ -44,7 +47,9 @@ pub mod broadcast;
 pub mod collect;
 pub mod reduce;
 pub mod state;
+pub mod tuning;
 
 pub use algorithm::AlgoKind;
 pub use reduce::ReduceOp;
 pub use state::ActiveSet;
+pub use tuning::{CollOp, Tuning, TuningSource};

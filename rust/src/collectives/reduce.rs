@@ -16,6 +16,7 @@
 //!   for non-power-of-two set sizes.
 
 use super::state::ActiveSet;
+use super::tuning::CollOp;
 use crate::pe::Ctx;
 use crate::symheap::layout::CollOpTag;
 use crate::symheap::SymPtr;
@@ -148,7 +149,7 @@ impl Ctx {
             self.coll_exit(team);
             return;
         }
-        match self.coll_algo() {
+        match self.coll_algo_for(CollOp::Reduce, set.size, bytes) {
             super::AlgoKind::LinearPut => {
                 self.reduce_linear_put(target, source, nreduce, op, set, idx)
             }
@@ -160,9 +161,12 @@ impl Ctx {
                 if set.size.is_power_of_two() {
                     self.reduce_recdbl(target, source, nreduce, op, set, idx)
                 } else {
+                    // Forced recdbl on a non-power-of-two team (adaptive
+                    // never selects it there — it is not a candidate).
                     self.reduce_linear_put(target, source, nreduce, op, set, idx)
                 }
             }
+            super::AlgoKind::Adaptive => unreachable!("resolved by coll_algo_for"),
         }
         self.coll_exit(team);
     }

@@ -250,9 +250,19 @@ impl Ctx {
     }
 
     /// Sync over a reserved slot's cells, algorithm per
-    /// [`crate::pe::TeamBarrierKind`].
+    /// [`crate::pe::TeamBarrierKind`] — forced by `PoshConfig::team_barrier`
+    /// (`POSH_TEAM_BARRIER`, the Ablation-B A/B switch) or, by default,
+    /// chosen by the tuning engine per team size
+    /// ([`crate::collectives::Tuning::select_barrier`]: `⌈log₂ n⌉·2α` rounds
+    /// of dissemination vs `2(n−1)·α` of root-serialised fan-in, which
+    /// resolves to dissemination at every size — the decision is now
+    /// model-driven, the production schedule unchanged).
     pub(crate) fn team_sync_cells(&self, set: &ActiveSet, slot: usize) {
-        match self.config().team_barrier {
+        let kind = self
+            .config()
+            .team_barrier
+            .unwrap_or_else(|| self.tuning().select_barrier(set.size));
+        match kind {
             crate::pe::TeamBarrierKind::Dissemination => {
                 self.team_sync_dissemination(set, slot)
             }

@@ -1,0 +1,664 @@
+//! Cost-model-driven adaptive collective selection.
+//!
+//! The paper fixes collective algorithms at compile time (§4.5.4) and,
+//! separately, derives the Hockney model `T(n) = α + n/β` for its
+//! shared-memory channel (§5) — but never closes the loop between the two.
+//! This module is that loop: it composes the fitted point-to-point model
+//! into **per-algorithm collective cost models** and picks, per
+//! `(operation, payload size, team size)`, the algorithm the model predicts
+//! fastest. `AlgoKind::Adaptive` (the default since this landed) routes
+//! every collective through [`Tuning::select`]; the fixed families survive
+//! untouched as forced overrides (`POSH_COLL_ALGO`, `PoshConfig::coll_algo`,
+//! the `coll-*` cargo features) so every Ablation-A A/B comparison stays
+//! reproducible.
+//!
+//! **Where the model comes from**, in priority order:
+//!
+//! 1. `POSH_ALPHA_NS` + `POSH_BETA_GBPS` (or `PoshConfig::cost_model`) —
+//!    postulated constants, no measurement;
+//! 2. a fast α/β micro-calibration over the shm channel
+//!    ([`calibrate`] — on a shared-memory node a put *is* a copy by the
+//!    origin core, so timing the configured copy engine over a size sweep
+//!    *is* measuring the channel), run once per process;
+//! 3. if the calibration fit is degenerate
+//!    ([`crate::model::CostModel::is_degenerate`]) or too noisy, the
+//!    paper's postulated constants ([`POSTULATED_ALPHA_NS`] /
+//!    [`POSTULATED_BETA_GBPS`]) with a warning.
+//!
+//! **Job-wide agreement.** Every PE of a job must make the *same* decision
+//! for the same collective call, or the protocols deadlock (one PE pushing
+//! put-based while its peer spins in the get-based rendezvous). In thread
+//! mode all PEs share this process's engine; in process mode rank 0
+//! publishes its fitted α/β through its heap header at world attach and
+//! every other rank adopts the published model (`pe::world`).
+//!
+//! The same fitted model also prices the NBI drain-time coalescing of
+//! `p2p::nbi`: merging two queued puts saves one per-call latency α and
+//! costs one extra staging copy `s/β`, so coalescing pays while the merged
+//! run stays under `n₁/₂ = α·β` bytes ([`Tuning::coalesce_threshold_bytes`]).
+//!
+//! The cost formulas are deliberately simple compositions of `m(s) = α +
+//! s/β` (one message) and `α` (one signal/handshake); they are documented
+//! per algorithm on [`Tuning::coll_model`] and, with worked examples, in
+//! `docs/tuning.md`.
+
+use super::algorithm::AlgoKind;
+use crate::model::CostModel;
+use crate::pe::TeamBarrierKind;
+use crate::sync::barrier::ceil_log2;
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// Which collective operation a selection is for (the tuning-engine face of
+/// the §4.5.1 `CollOpTag`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollOp {
+    /// Team barrier / sync (selection is over [`TeamBarrierKind`], not
+    /// [`AlgoKind`] — see [`Tuning::select_barrier`]).
+    Barrier,
+    /// Broadcast from a root.
+    Broadcast,
+    /// All-reduce (every member receives the reduction).
+    Reduce,
+    /// Fixed-size concatenation (`fcollect`).
+    Fcollect,
+    /// Variable-size concatenation (`collect`).
+    Collect,
+    /// All-to-all block exchange.
+    Alltoall,
+}
+
+impl CollOp {
+    /// Display name (bench tables, `oshrun calibrate`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollOp::Barrier => "barrier",
+            CollOp::Broadcast => "broadcast",
+            CollOp::Reduce => "reduce",
+            CollOp::Fcollect => "fcollect",
+            CollOp::Collect => "collect",
+            CollOp::Alltoall => "alltoall",
+        }
+    }
+}
+
+/// Where the engine's model came from (reported by `oshrun calibrate`; in
+/// process mode rank 0 publishes its source alongside the model and every
+/// rank adopts both, so the provenance is job-wide too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuningSource {
+    /// Fitted by the per-process micro-calibration.
+    Calibrated,
+    /// Postulated from `POSH_ALPHA_NS`/`POSH_BETA_GBPS` or
+    /// `PoshConfig::cost_model`.
+    Postulated,
+    /// Calibration was degenerate/noisy; the paper's constants were used.
+    Fallback,
+}
+
+impl TuningSource {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TuningSource::Calibrated => "calibrated",
+            TuningSource::Postulated => "postulated",
+            TuningSource::Fallback => "fallback",
+        }
+    }
+
+    /// Wire encoding for the heap-header publication (0 = not published).
+    pub(crate) fn to_wire(self) -> u64 {
+        match self {
+            TuningSource::Calibrated => 1,
+            TuningSource::Postulated => 2,
+            TuningSource::Fallback => 3,
+        }
+    }
+
+    /// Decode the wire encoding; unknown values read as `Fallback`.
+    pub(crate) fn from_wire(v: u64) -> TuningSource {
+        match v {
+            1 => TuningSource::Calibrated,
+            2 => TuningSource::Postulated,
+            _ => TuningSource::Fallback,
+        }
+    }
+}
+
+/// The paper's postulated α (ns): the put latency of its fastest machine
+/// ("Maximum", Table 2) — the fallback when calibration cannot be trusted.
+pub const POSTULATED_ALPHA_NS: f64 = 38.4;
+
+/// The paper's postulated asymptotic bandwidth (Gb/s): the put bandwidth of
+/// "Maximum" (Table 2).
+pub const POSTULATED_BETA_GBPS: f64 = 76.15;
+
+/// R² below which a calibration fit is treated as too noisy to trust and
+/// the engine falls back to the postulated constants.
+pub const MIN_CALIBRATION_R2: f64 = 0.5;
+
+/// The adaptive selection engine: a point-to-point cost model plus the
+/// per-algorithm composition rules.
+///
+/// ```
+/// use posh::collectives::{AlgoKind, CollOp, Tuning};
+/// // A postulated channel: 100 ns latency, 80 Gb/s (10 B/ns).
+/// let t = Tuning::postulated(100.0, 80.0);
+/// // 2-member broadcast: one push is unbeatable at any size.
+/// assert_eq!(t.select(CollOp::Broadcast, 2, 8), AlgoKind::LinearPut);
+/// // 8-member broadcast: linear-put below the latency crossover,
+/// // binomial tree in the middle …
+/// assert_eq!(t.select(CollOp::Broadcast, 8, 64), AlgoKind::LinearPut);
+/// assert_eq!(t.select(CollOp::Broadcast, 8, 300), AlgoKind::Tree);
+/// // … and get-based pull parallelism once payloads are large.
+/// assert_eq!(t.select(CollOp::Broadcast, 8, 1 << 20), AlgoKind::LinearGet);
+/// // The decision is exactly the model's argmin:
+/// let (n, s) = (8, 4096);
+/// let best = Tuning::candidates(CollOp::Broadcast, n)
+///     .iter()
+///     .copied()
+///     .min_by(|&a, &b| {
+///         t.coll_model(CollOp::Broadcast, a, n)
+///             .predict_ns(s)
+///             .total_cmp(&t.coll_model(CollOp::Broadcast, b, n).predict_ns(s))
+///     })
+///     .unwrap();
+/// assert_eq!(t.select(CollOp::Broadcast, n, s), best);
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct Tuning {
+    model: CostModel,
+    source: TuningSource,
+}
+
+impl Tuning {
+    /// Build an engine from an explicit model.
+    pub fn new(model: CostModel, source: TuningSource) -> Tuning {
+        Tuning { model, source }
+    }
+
+    /// Convenience: an engine postulated from α (ns) and bandwidth (Gb/s) —
+    /// what `POSH_ALPHA_NS`/`POSH_BETA_GBPS` construct.
+    pub fn postulated(alpha_ns: f64, gbps: f64) -> Tuning {
+        Tuning::new(CostModel::from_alpha_gbps(alpha_ns, gbps), TuningSource::Postulated)
+    }
+
+    /// The underlying point-to-point model.
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    /// Where the model came from.
+    pub fn source(&self) -> TuningSource {
+        self.source
+    }
+
+    /// The algorithm families actually implemented for `op` on a team of
+    /// `team_size` (recursive doubling only exists for power-of-two reduce
+    /// teams; `collect`/`alltoall` have a single protocol). Order is the
+    /// tie-break order of [`Tuning::select`].
+    pub fn candidates(op: CollOp, team_size: usize) -> &'static [AlgoKind] {
+        use AlgoKind::*;
+        match op {
+            CollOp::Broadcast => &[LinearPut, Tree, LinearGet],
+            CollOp::Reduce => {
+                if team_size.is_power_of_two() {
+                    &[LinearPut, LinearGet, Tree, RecursiveDoubling]
+                } else {
+                    &[LinearPut, LinearGet, Tree]
+                }
+            }
+            CollOp::Fcollect => &[LinearPut, LinearGet],
+            CollOp::Barrier | CollOp::Collect | CollOp::Alltoall => &[LinearPut],
+        }
+    }
+
+    /// The composed cost model of running `op` with `algo` on a team of
+    /// `team_size`: an affine `T(s) = base + s·slope` returned as a
+    /// [`CostModel`] so [`CostModel::predict_ns`] and
+    /// [`CostModel::crossover_bytes`] apply directly.
+    ///
+    /// Writing `m(s) = α + s/β` for one message and `α` for one
+    /// signal/handshake, with `n` members and ⌈log₂ n⌉ = `L`:
+    ///
+    /// | op | algorithm | cost |
+    /// |---|---|---|
+    /// | broadcast | linear-put | `(n−1)·m(s) + α` — root pushes serially, one fence+signal sweep |
+    /// | broadcast | tree | `L·(m(s) + 2α)` — per hop: entry wait, copy, signal |
+    /// | broadcast | linear-get | `3α + s/β + (n−1)·α` — publish/observe handshake, pulls in parallel, serialized completion signals |
+    /// | reduce | linear-put | `n·m(s) + (n−1)·s/β + 2α` — parallel deposits, root combines and fans out serially |
+    /// | reduce | linear-get | `(n−1)·(α + 2s/β) + α` — all-read-all: every PE pulls+combines n−1 contributions, concurrently |
+    /// | reduce | tree | `L·(m(s) + s/β + 2α) + (n−1)·m(s) + α` — binomial fan-in with combines, linear fan-out |
+    /// | reduce | recdbl | `L·(m(s) + s/β + 2α)` — pairwise exchange rounds (power-of-two teams) |
+    /// | fcollect | linear-put | `(n−1)·m(s) + α` — all-push-all, concurrent across PEs |
+    /// | fcollect | linear-get | `(n−1)·m(s) + 3α` — same traffic plus the publish handshake |
+    /// | collect | linear-put | `(n−1)·m(s) + n·α` — the size exchange costs one signal per member |
+    /// | alltoall | linear-put | `(n−1)·m(s) + α` |
+    /// | barrier | (see [`Tuning::select_barrier`]) | dissemination `L·2α` vs linear fan-in `2(n−1)·α` |
+    pub fn coll_model(&self, op: CollOp, algo: AlgoKind, team_size: usize) -> CostModel {
+        let a = self.model.alpha_ns;
+        // ns per byte of one copy; 0 when the base model is degenerate
+        // (β = ∞) so the composition degrades to pure latency comparison.
+        let c = if self.model.beta_bytes_per_ns.is_finite() {
+            1.0 / self.model.beta_bytes_per_ns
+        } else {
+            0.0
+        };
+        let n1 = team_size.saturating_sub(1) as f64;
+        let n = team_size as f64;
+        let l = ceil_log2(team_size.max(1)) as f64;
+        let (base, slope) = match (op, algo) {
+            // `Adaptive` is a selector, not a schedule; its "model" is the
+            // latency-regime argmin's (select never returns Adaptive, so
+            // this cannot recurse).
+            (_, AlgoKind::Adaptive) => {
+                return self.coll_model(op, self.select(op, team_size, 0), team_size);
+            }
+            (CollOp::Broadcast, AlgoKind::LinearPut) => (n1 * a + a, n1 * c),
+            (CollOp::Broadcast, AlgoKind::Tree | AlgoKind::RecursiveDoubling) => {
+                (l * 3.0 * a, l * c)
+            }
+            (CollOp::Broadcast, AlgoKind::LinearGet) => (3.0 * a + n1 * a, c),
+            (CollOp::Reduce, AlgoKind::LinearPut) => (n * a + 2.0 * a, n * c + n1 * c),
+            (CollOp::Reduce, AlgoKind::LinearGet) => (n1 * a + a, n1 * 2.0 * c),
+            (CollOp::Reduce, AlgoKind::Tree) => {
+                (l * 3.0 * a + n1 * a + a, l * 2.0 * c + n1 * c)
+            }
+            (CollOp::Reduce, AlgoKind::RecursiveDoubling) => (l * 3.0 * a, l * 2.0 * c),
+            (CollOp::Fcollect, AlgoKind::LinearGet) => (n1 * a + 3.0 * a, n1 * c),
+            (CollOp::Collect, _) => (n1 * a + n * a, n1 * c),
+            // Everything else runs the put-based all-push/linear protocol.
+            (CollOp::Fcollect | CollOp::Alltoall | CollOp::Barrier, _) => (n1 * a + a, n1 * c),
+        };
+        CostModel {
+            alpha_ns: base,
+            beta_bytes_per_ns: if slope > 0.0 { 1.0 / slope } else { f64::INFINITY },
+            r2: self.model.r2,
+        }
+    }
+
+    /// Pick the algorithm the model predicts fastest for `op` moving
+    /// `bytes` per member over a team of `team_size` — the argmin of
+    /// [`Tuning::coll_model`] over [`Tuning::candidates`], ties broken by
+    /// candidate order. Never returns [`AlgoKind::Adaptive`].
+    pub fn select(&self, op: CollOp, team_size: usize, bytes: usize) -> AlgoKind {
+        let cands = Self::candidates(op, team_size);
+        let mut best = cands[0];
+        if team_size <= 1 {
+            return best; // degenerate team: nothing to schedule
+        }
+        let mut best_ns = self.coll_model(op, best, team_size).predict_ns(bytes);
+        for &c in &cands[1..] {
+            let ns = self.coll_model(op, c, team_size).predict_ns(bytes);
+            if ns < best_ns {
+                best = c;
+                best_ns = ns;
+            }
+        }
+        best
+    }
+
+    /// Pick the team-sync engine for a team of `team_size`: dissemination
+    /// (`⌈log₂ n⌉·2α`) vs the linear fan-in baseline (`2(n−1)·α`), ties
+    /// (n = 2, where both are one round) broken toward dissemination so the
+    /// adaptive default matches the pre-adaptive production engine exactly.
+    pub fn select_barrier(&self, team_size: usize) -> TeamBarrierKind {
+        let a = self.model.alpha_ns;
+        let dissem = ceil_log2(team_size.max(1)) as f64 * 2.0 * a;
+        let linear = 2.0 * team_size.saturating_sub(1) as f64 * a;
+        if dissem <= linear {
+            TeamBarrierKind::Dissemination
+        } else {
+            TeamBarrierKind::LinearFanin
+        }
+    }
+
+    /// The payload size at which `b` overtakes `a` for `op` on a team of
+    /// `team_size`, if the composed models cross (`None` when one dominates
+    /// everywhere). This is the threshold [`Tuning::select`]'s argmin
+    /// realises.
+    pub fn crossover_bytes(
+        &self,
+        op: CollOp,
+        a: AlgoKind,
+        b: AlgoKind,
+        team_size: usize,
+    ) -> Option<f64> {
+        self.coll_model(op, b, team_size)
+            .crossover_bytes(&self.coll_model(op, a, team_size))
+    }
+
+    /// Maximum size (bytes) of a coalesced run of adjacent deferred NBI
+    /// puts: merging saves one per-call latency α and costs one extra
+    /// staging copy `s/β`, so it pays while the run stays under
+    /// `n₁/₂ = α·β` — clamped to `[64, NBI_DEFER_MAX_BYTES]` so pathological
+    /// models still coalesce flag-sized puts and never pin unbounded runs.
+    pub fn coalesce_threshold_bytes(&self) -> usize {
+        let n_half = self.model.n_half();
+        let cap = crate::p2p::nbi::NBI_DEFER_MAX_BYTES;
+        if !n_half.is_finite() {
+            return cap;
+        }
+        (n_half as usize).clamp(64, cap)
+    }
+}
+
+impl std::fmt::Display for Tuning {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} [{}]", self.model, self.source.name())
+    }
+}
+
+/// Micro-calibrate the shm channel: time the configured copy engine
+/// (`mem::copy`) over a latency-to-bandwidth size sweep and fit
+/// `T(n) = α + n/β`. On a shared-memory node the origin core performs
+/// every put/get as a copy (paper §5), so this *is* the channel model.
+/// Each size takes the minimum over a few batched repetitions — minima are
+/// robust against scheduler preemption, the failure mode of a loaded CI
+/// box. Budget: ~1–2 ms.
+pub fn calibrate() -> CostModel {
+    const SIZES: [usize; 6] = [64, 512, 4096, 32 << 10, 256 << 10, 1 << 20];
+    const REPS: usize = 5;
+    let max = *SIZES.last().unwrap();
+    let src = vec![0x5Au8; max];
+    let mut dst = vec![0u8; max];
+    let imp = crate::mem::copy::global_impl();
+    let mut samples = Vec::with_capacity(SIZES.len());
+    for &s in &SIZES {
+        // Batch so one repetition is ≥ ~10 µs (amortises the clock read).
+        let batch = (128 << 10) / s.max(1);
+        let batch = batch.clamp(1, 4096);
+        let mut best = f64::MAX;
+        for rep in 0..=REPS {
+            let t0 = std::time::Instant::now();
+            for _ in 0..batch {
+                crate::mem::copy::copy_slice_with(imp, &mut dst[..s], &src[..s]);
+                std::hint::black_box(&dst);
+            }
+            let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
+            if rep > 0 {
+                // rep 0 is the warm-up (page faults, cache training)
+                best = best.min(ns);
+            }
+        }
+        samples.push((s, best));
+    }
+    CostModel::fit(&samples)
+}
+
+/// The model `POSH_ALPHA_NS`/`POSH_BETA_GBPS` postulate, when both are set
+/// and sane.
+pub fn env_model() -> Option<CostModel> {
+    let a = std::env::var("POSH_ALPHA_NS").ok()?.trim().parse::<f64>().ok()?;
+    let b = std::env::var("POSH_BETA_GBPS").ok()?.trim().parse::<f64>().ok()?;
+    (a >= 0.0 && a.is_finite() && b > 0.0 && b.is_finite())
+        .then(|| CostModel::from_alpha_gbps(a, b))
+}
+
+static ENGINE: OnceLock<Tuning> = OnceLock::new();
+
+/// This process's tuning engine, resolved once: env postulation, else
+/// calibration, else (degenerate/noisy fit) the paper's constants with a
+/// warning. Thread-mode worlds share it; process-mode worlds start from it
+/// on rank 0 and publish it to the job (`pe::world`).
+pub fn process_engine() -> &'static Tuning {
+    ENGINE.get_or_init(|| {
+        if let Some(cm) = env_model() {
+            return Tuning::new(cm, TuningSource::Postulated);
+        }
+        let fit = calibrate();
+        if fit.is_degenerate() || fit.r2 < MIN_CALIBRATION_R2 {
+            eprintln!(
+                "posh: shm-channel calibration unusable ({fit}); falling back to the \
+                 paper's postulated constants (α = {POSTULATED_ALPHA_NS} ns, \
+                 β = {POSTULATED_BETA_GBPS} Gb/s) — set POSH_ALPHA_NS/POSH_BETA_GBPS \
+                 to postulate your own"
+            );
+            Tuning::new(
+                CostModel::from_alpha_gbps(POSTULATED_ALPHA_NS, POSTULATED_BETA_GBPS),
+                TuningSource::Fallback,
+            )
+        } else {
+            Tuning::new(fit, TuningSource::Calibrated)
+        }
+    })
+}
+
+thread_local! {
+    /// The algorithm resolved by this PE thread's most recent routed
+    /// collective — the observability hook behind `Ctx::last_coll_algo`.
+    static LAST_ALGO: Cell<Option<AlgoKind>> = const { Cell::new(None) };
+}
+
+/// Record the resolved algorithm of the routing decision that just ran.
+pub(crate) fn record_last_algo(algo: AlgoKind) {
+    LAST_ALGO.with(|c| c.set(Some(algo)));
+}
+
+/// The algorithm the most recent routed collective on this thread resolved
+/// to (`None` before the first one). See `Ctx::last_coll_algo`.
+pub(crate) fn last_algo() -> Option<AlgoKind> {
+    LAST_ALGO.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Independent argmin oracle: recompute the costs by hand from
+    /// `coll_model` and check `select` agrees — at sizes bracketing every
+    /// pairwise crossover, where a thresholding bug would flip the choice.
+    #[test]
+    fn select_is_model_argmin_around_every_crossover() {
+        let t = Tuning::postulated(100.0, 80.0);
+        for op in [CollOp::Broadcast, CollOp::Reduce, CollOp::Fcollect] {
+            for n in [2usize, 3, 4, 5, 8, 16, 64] {
+                let cands = Tuning::candidates(op, n);
+                let mut probe_sizes = vec![0usize, 1, 64, 4096, 1 << 20, 64 << 20];
+                for (i, &a) in cands.iter().enumerate() {
+                    for &b in &cands[i + 1..] {
+                        if let Some(x) = t.crossover_bytes(op, a, b, n) {
+                            let x = x.max(2.0) as usize;
+                            probe_sizes.push(x / 2);
+                            probe_sizes.push(x * 2);
+                        }
+                    }
+                }
+                for &s in &probe_sizes {
+                    let oracle = cands
+                        .iter()
+                        .copied()
+                        .min_by(|&x, &y| {
+                            t.coll_model(op, x, n)
+                                .predict_ns(s)
+                                .total_cmp(&t.coll_model(op, y, n).predict_ns(s))
+                        })
+                        .unwrap();
+                    let chosen = t.select(op, n, s);
+                    let chosen_ns = t.coll_model(op, chosen, n).predict_ns(s);
+                    let oracle_ns = t.coll_model(op, oracle, n).predict_ns(s);
+                    assert!(
+                        chosen_ns <= oracle_ns,
+                        "{op:?} n={n} s={s}: select={chosen:?} ({chosen_ns}) \
+                         vs argmin={oracle:?} ({oracle_ns})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The qualitative regimes the issue names: put below the latency
+    /// crossover, tree above it, get-based pull for large broadcasts.
+    #[test]
+    fn broadcast_regimes_match_the_paper_narrative() {
+        let t = Tuning::postulated(100.0, 80.0);
+        // Two members: one push, unbeatable.
+        for s in [8usize, 1 << 20] {
+            assert_eq!(t.select(CollOp::Broadcast, 2, s), AlgoKind::LinearPut);
+        }
+        // Eight members: put for tiny payloads, tree in the middle,
+        // get-based pull parallelism for bulk.
+        assert_eq!(t.select(CollOp::Broadcast, 8, 8), AlgoKind::LinearPut);
+        let x_put_tree = t
+            .crossover_bytes(CollOp::Broadcast, AlgoKind::LinearPut, AlgoKind::Tree, 8)
+            .expect("put/tree must cross at n=8");
+        let x_tree_get = t
+            .crossover_bytes(CollOp::Broadcast, AlgoKind::Tree, AlgoKind::LinearGet, 8)
+            .expect("tree/get must cross at n=8");
+        assert!(x_put_tree < x_tree_get, "{x_put_tree} !< {x_tree_get}");
+        let mid = ((x_put_tree + x_tree_get) / 2.0) as usize;
+        assert_eq!(t.select(CollOp::Broadcast, 8, mid), AlgoKind::Tree);
+        assert_eq!(
+            t.select(CollOp::Broadcast, 8, (x_tree_get * 4.0) as usize),
+            AlgoKind::LinearGet
+        );
+    }
+
+    #[test]
+    fn reduce_prefers_recdbl_on_large_pow2_teams() {
+        let t = Tuning::postulated(100.0, 80.0);
+        assert_eq!(
+            t.select(CollOp::Reduce, 8, 64 << 10),
+            AlgoKind::RecursiveDoubling
+        );
+        // Non-power-of-two: recdbl is not even a candidate.
+        assert!(!Tuning::candidates(CollOp::Reduce, 6).contains(&AlgoKind::RecursiveDoubling));
+        for s in [8usize, 1 << 20] {
+            let a = t.select(CollOp::Reduce, 6, s);
+            assert_ne!(a, AlgoKind::RecursiveDoubling);
+            assert_ne!(a, AlgoKind::Adaptive);
+        }
+    }
+
+    #[test]
+    fn single_protocol_ops_always_linear_put() {
+        let t = Tuning::postulated(50.0, 20.0);
+        for n in [1usize, 2, 7, 32] {
+            for s in [0usize, 1 << 16] {
+                assert_eq!(t.select(CollOp::Alltoall, n, s), AlgoKind::LinearPut);
+                assert_eq!(t.select(CollOp::Collect, n, s), AlgoKind::LinearPut);
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_selection_is_dissemination() {
+        // ⌈log₂ n⌉ ≤ n−1 for all n ≥ 2 (equality at 2, broken toward
+        // dissemination): the adaptive default must equal the pre-adaptive
+        // production engine on every team size.
+        let t = Tuning::postulated(100.0, 80.0);
+        for n in [1usize, 2, 3, 8, 1000] {
+            assert_eq!(t.select_barrier(n), TeamBarrierKind::Dissemination);
+        }
+    }
+
+    #[test]
+    fn coalesce_threshold_is_n_half_clamped() {
+        // α = 100 ns, β = 10 B/ns ⇒ n₁/₂ = 1000 B.
+        let t = Tuning::postulated(100.0, 80.0);
+        assert_eq!(t.coalesce_threshold_bytes(), 1000);
+        // Tiny α: clamped up to the 64-byte floor.
+        assert_eq!(Tuning::postulated(0.1, 80.0).coalesce_threshold_bytes(), 64);
+        // Huge α: clamped at the defer cap.
+        assert_eq!(
+            Tuning::postulated(1e9, 80.0).coalesce_threshold_bytes(),
+            crate::p2p::nbi::NBI_DEFER_MAX_BYTES
+        );
+        // Degenerate model (β = ∞): cap, never a panic.
+        let degenerate = Tuning::new(
+            CostModel::fit(&[(8, 100.0), (1024, 10.0)]),
+            TuningSource::Calibrated,
+        );
+        assert_eq!(
+            degenerate.coalesce_threshold_bytes(),
+            crate::p2p::nbi::NBI_DEFER_MAX_BYTES
+        );
+    }
+
+    #[test]
+    fn degenerate_model_still_selects_something_sane() {
+        let degenerate = Tuning::new(
+            CostModel::fit(&[(8, 100.0), (1024, 10.0)]),
+            TuningSource::Calibrated,
+        );
+        for op in [CollOp::Broadcast, CollOp::Reduce, CollOp::Fcollect] {
+            for n in [2usize, 8] {
+                let a = degenerate.select(op, n, 4096);
+                assert_ne!(a, AlgoKind::Adaptive);
+                let ns = degenerate.coll_model(op, a, n).predict_ns(4096);
+                assert!(ns.is_finite(), "{op:?} n={n}: {ns}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_on_this_host_is_usable_or_detectably_not() {
+        // Whatever this box produces, the engine contract holds: either the
+        // fit is healthy, or it is *flagged* (which is the whole point of
+        // the degenerate-fit fix).
+        let m = calibrate();
+        if !m.is_degenerate() {
+            assert!(m.alpha_ns >= 0.0);
+            assert!(m.beta_bytes_per_ns > 0.0);
+        }
+        // The process engine never hands out a degenerate model.
+        let e = process_engine();
+        assert!(!e.model().is_degenerate(), "{e}");
+    }
+
+    /// End to end: a live adaptive world resolves exactly what the engine
+    /// predicts, observable through `Ctx::last_coll_algo`, at payload sizes
+    /// bracketing the broadcast crossovers.
+    #[test]
+    fn live_world_records_the_model_argmin() {
+        use crate::pe::{PoshConfig, World};
+        let mut cfg = PoshConfig::small();
+        cfg.coll_algo = Some(AlgoKind::Adaptive);
+        cfg.cost_model = Some(CostModel::from_alpha_gbps(100.0, 80.0));
+        let n = 8;
+        let w = World::threads(n, cfg).unwrap();
+        w.run(|ctx| {
+            let t = *ctx.tuning();
+            let team = ctx.team_world();
+            let x1 = t
+                .crossover_bytes(CollOp::Broadcast, AlgoKind::LinearPut, AlgoKind::Tree, n)
+                .unwrap();
+            let x2 = t
+                .crossover_bytes(CollOp::Broadcast, AlgoKind::Tree, AlgoKind::LinearGet, n)
+                .unwrap();
+            // Probe below, between, and above the two thresholds (u64
+            // payloads, so nelems = bytes / 8).
+            for bytes in [
+                (x1 / 2.0) as usize,
+                ((x1 + x2) / 2.0) as usize,
+                (x2 * 2.0) as usize,
+            ] {
+                let nelems = (bytes / 8).max(1);
+                let src = ctx.shmalloc_n::<u64>(nelems).unwrap();
+                let dst = ctx.shmalloc_n::<u64>(nelems).unwrap();
+                ctx.broadcast(dst, src, nelems, 0, &team);
+                let want = t.select(CollOp::Broadcast, n, nelems * 8);
+                assert_eq!(
+                    ctx.last_coll_algo(),
+                    Some(want),
+                    "adaptive world must run the model argmin at {bytes} B"
+                );
+                ctx.barrier_all();
+                ctx.shfree(dst).unwrap();
+                ctx.shfree(src).unwrap();
+            }
+        });
+    }
+
+    #[test]
+    fn source_wire_roundtrip() {
+        for s in [
+            TuningSource::Calibrated,
+            TuningSource::Postulated,
+            TuningSource::Fallback,
+        ] {
+            assert_eq!(TuningSource::from_wire(s.to_wire()), s);
+        }
+        assert_eq!(TuningSource::from_wire(99), TuningSource::Fallback);
+    }
+}

@@ -3,6 +3,7 @@
 //! ```text
 //! oshrun -np N [options] -- program [args...]   launch a parallel job
 //! oshrun preparse FILE.c [-o OUT.c]             run the §4.2 pre-parser
+//! oshrun calibrate [--csv PATH]                 fit the shm-channel α/β model
 //! oshrun clean                                  sweep stale /dev/shm segments
 //! oshrun info                                   platform + config report
 //! ```
@@ -21,6 +22,7 @@ fn usage() -> ! {
 USAGE:
   oshrun -np N [options] -- PROGRAM [ARGS...]
   oshrun preparse FILE.c [-o OUT.c] [--manifest OUT.manifest]
+  oshrun calibrate [--csv PATH]
   oshrun clean
   oshrun info
 
@@ -28,11 +30,17 @@ OPTIONS (launch):
   -np N               number of PEs (required)
   --heap SIZE         symmetric heap per PE (e.g. 64M, 1G)
   --copy IMPL         memcpy|unrolled64|sse2|avx2|nontemporal
-  --coll ALGO         linear-put|linear-get|tree|recdbl
+  --coll-algo ALGO    adaptive|linear-put|linear-get|tree|recdbl
+                      (adaptive = per-call cost-model selection, the
+                      default; --coll is an alias; see docs/tuning.md)
   --barrier KIND      dissemination|central
-  --team-barrier KIND dissemination|linear (team-sync engine A/B)
+  --team-barrier KIND adaptive|dissemination|linear (team-sync engine A/B)
   --safe              enable run-time checking (paper _SAFE mode)
   --debug-wait        each PE waits for a debugger at start-up (§4.7)
+
+calibrate: fit T(n) = α + n/β over the shm channel with the configured
+copy engine and print α/β/R² plus the adaptive crossover table; --csv
+archives the fit for the ablation trajectory.
 "
     );
     std::process::exit(2);
@@ -53,7 +61,84 @@ fn main() {
         }
         "info" => info(),
         "preparse" => preparse(&args[1..]),
+        "calibrate" => calibrate_cmd(&args[1..]),
         _ => launch(&args),
+    }
+}
+
+/// `oshrun calibrate`: resolve the tuning engine exactly as a job would
+/// (env postulation, else micro-calibration, else the paper fallback) and
+/// report the fitted model plus the crossover thresholds it implies.
+fn calibrate_cmd(args: &[String]) {
+    use posh::collectives::{AlgoKind, CollOp};
+    let mut csv = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--csv" => {
+                let Some(path) = args.get(i + 1).cloned() else { usage() };
+                csv = Some(path);
+                i += 2;
+            }
+            _ => usage(),
+        }
+    }
+    let t = posh::collectives::tuning::process_engine();
+    let m = t.model();
+    println!("shm channel model ({}):", t.source().name());
+    println!("  {m}");
+    println!("  alpha_ns          : {:.2}", m.alpha_ns);
+    println!("  beta_bytes_per_ns : {:.3}  (= {:.2} Gb/s)", m.beta_bytes_per_ns, m.peak_gbps());
+    println!("  r2                : {:.5}", m.r2);
+    println!("  n_half_bytes      : {:.0}", m.n_half());
+    println!("  coalesce_bytes    : {}", t.coalesce_threshold_bytes());
+    println!("\nadaptive selection (payload bytes per member → algorithm):");
+    let probe_sizes = [64usize, 1024, 8192, 65536, 1 << 20];
+    for op in [CollOp::Broadcast, CollOp::Reduce, CollOp::Fcollect] {
+        for n in [2usize, 4, 8, 16] {
+            let picks: Vec<String> = probe_sizes
+                .iter()
+                .map(|&s| format!("{}B:{}", s, t.select(op, n, s).name()))
+                .collect();
+            println!("  {:9} n={:<2} {}", op.name(), n, picks.join("  "));
+        }
+    }
+    if let Some(path) = csv {
+        let mut out = String::from("quantity,value\n");
+        out.push_str(&format!("source,{}\n", t.source().name()));
+        out.push_str(&format!("alpha_ns,{}\n", m.alpha_ns));
+        out.push_str(&format!("beta_bytes_per_ns,{}\n", m.beta_bytes_per_ns));
+        out.push_str(&format!("peak_gbps,{}\n", m.peak_gbps()));
+        out.push_str(&format!("r2,{}\n", m.r2));
+        out.push_str(&format!("n_half_bytes,{}\n", m.n_half()));
+        out.push_str(&format!("coalesce_threshold_bytes,{}\n", t.coalesce_threshold_bytes()));
+        for op in [CollOp::Broadcast, CollOp::Reduce] {
+            for n in [2usize, 4, 8, 16] {
+                for pair in [
+                    (AlgoKind::LinearPut, AlgoKind::Tree),
+                    (AlgoKind::Tree, AlgoKind::LinearGet),
+                    (AlgoKind::LinearPut, AlgoKind::LinearGet),
+                ] {
+                    if let Some(x) = t.crossover_bytes(op, pair.0, pair.1, n) {
+                        out.push_str(&format!(
+                            "crossover_{}_{}_to_{}_n{},{:.0}\n",
+                            op.name(),
+                            pair.0.name(),
+                            pair.1.name(),
+                            n,
+                            x
+                        ));
+                    }
+                }
+            }
+        }
+        if let Some(dir) = std::path::Path::new(&path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).expect("creating csv directory");
+            }
+        }
+        std::fs::write(&path, out).expect("writing calibration csv");
+        println!("\ncsv: {path}");
     }
 }
 
@@ -69,7 +154,7 @@ fn info() {
             .join(", ")
     );
     println!(
-        "collective algo default   : {}",
+        "collective algo default   : {} (see `oshrun calibrate`)",
         posh::collectives::AlgoKind::default_algo().name()
     );
     println!("safe mode (compile)       : {}", cfg!(feature = "safe-mode"));
@@ -156,7 +241,7 @@ fn launch(args: &[String]) {
                 env.push(("POSH_COPY".into(), args.get(i + 1).cloned().unwrap_or_default()));
                 i += 2;
             }
-            "--coll" => {
+            "--coll" | "--coll-algo" => {
                 env.push(("POSH_COLL_ALGO".into(), args.get(i + 1).cloned().unwrap_or_default()));
                 i += 2;
             }

@@ -17,6 +17,13 @@ pub struct CostModel {
 impl CostModel {
     /// Construct from explicit α (ns) and bandwidth in **Gb/s** (the paper's
     /// unit).
+    ///
+    /// ```
+    /// use posh::model::CostModel;
+    /// let m = CostModel::from_alpha_gbps(100.0, 80.0); // 100 ns, 80 Gb/s
+    /// assert_eq!(m.beta_bytes_per_ns, 10.0);           // 80 Gb/s = 10 B/ns
+    /// assert!(!m.is_degenerate());
+    /// ```
     pub fn from_alpha_gbps(alpha_ns: f64, gbps: f64) -> CostModel {
         CostModel {
             alpha_ns,
@@ -27,6 +34,28 @@ impl CostModel {
 
     /// Fit from `(size_bytes, time_ns)` samples by least squares on
     /// `t = α + s·(1/β)`.
+    ///
+    /// A non-positive slope (times that do not grow with size — a broken or
+    /// wildly noisy measurement) cannot be inverted into a bandwidth; the
+    /// returned model then carries `β = ∞` and reports
+    /// [`CostModel::is_degenerate`], which callers (notably the calibration
+    /// in [`crate::collectives::tuning`]) must check before trusting the
+    /// fit.
+    ///
+    /// ```
+    /// use posh::model::CostModel;
+    /// // Synthetic samples from T(n) = 50 + n/8 are recovered exactly.
+    /// let samples: Vec<(usize, f64)> =
+    ///     (0..10).map(|i| (1usize << i, 50.0 + (1 << i) as f64 / 8.0)).collect();
+    /// let fit = CostModel::fit(&samples);
+    /// assert!((fit.alpha_ns - 50.0).abs() < 1e-6);
+    /// assert!((fit.beta_bytes_per_ns - 8.0).abs() < 1e-6);
+    /// assert!(!fit.is_degenerate());
+    ///
+    /// // Times *shrinking* with size have no affine explanation: flagged.
+    /// let bad = CostModel::fit(&[(8, 100.0), (1024, 10.0)]);
+    /// assert!(bad.is_degenerate());
+    /// ```
     pub fn fit(samples: &[(usize, f64)]) -> CostModel {
         assert!(samples.len() >= 2, "need >=2 samples to fit");
         let xs: Vec<f64> = samples.iter().map(|&(s, _)| s as f64).collect();
@@ -39,7 +68,26 @@ impl CostModel {
         }
     }
 
+    /// `true` when this model cannot be trusted as a bandwidth model: the
+    /// fitted slope was non-positive (`β` is infinite — see
+    /// [`CostModel::fit`]) or a parameter is NaN/negative. Calibration falls
+    /// back to the paper's postulated constants when this is set.
+    pub fn is_degenerate(&self) -> bool {
+        !self.beta_bytes_per_ns.is_finite()
+            || self.beta_bytes_per_ns <= 0.0
+            || !self.alpha_ns.is_finite()
+            || self.alpha_ns < 0.0
+            || self.r2.is_nan()
+    }
+
     /// Predicted time for an `n`-byte operation, in ns.
+    ///
+    /// ```
+    /// use posh::model::CostModel;
+    /// let m = CostModel::from_alpha_gbps(100.0, 80.0); // β = 10 B/ns
+    /// assert_eq!(m.predict_ns(0), 100.0);              // latency floor
+    /// assert_eq!(m.predict_ns(1000), 200.0);           // + 1000 B / 10 B/ns
+    /// ```
     pub fn predict_ns(&self, n: usize) -> f64 {
         self.alpha_ns + n as f64 / self.beta_bytes_per_ns
     }
@@ -127,6 +175,21 @@ mod tests {
         // At n1/2 the achieved bandwidth is half the peak.
         let bw = m.predict_gbps(1000);
         assert!((bw - m.peak_gbps() / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_fit_is_flagged_not_silent() {
+        // Non-positive slope: the historical behaviour was a silent β = ∞;
+        // it still is ∞ (predict_ns degrades to the latency floor), but the
+        // condition is now observable.
+        let bad = CostModel::fit(&[(64, 500.0), (1 << 20, 500.0)]);
+        assert!(bad.is_degenerate(), "{bad}");
+        assert_eq!(bad.predict_ns(1 << 20), bad.alpha_ns);
+        let worse = CostModel::fit(&[(64, 500.0), (1 << 20, 50.0)]);
+        assert!(worse.is_degenerate(), "{worse}");
+        // A healthy fit is not flagged.
+        let good = CostModel::fit(&[(64, 100.0), (1 << 20, 100_000.0)]);
+        assert!(!good.is_degenerate(), "{good}");
     }
 
     #[test]

@@ -21,10 +21,14 @@
 //!   that queue — and only that queue — then issues a release fence: the
 //!   batched drain needs no process-wide `SeqCst` fence because the drain
 //!   itself performs the copies and the copy engine orders its own
-//!   streaming stores. Larger puts are issued eagerly (a bulk copy gains
-//!   nothing from deferral) but still count against the domain; gets are
-//!   always eager (the destination borrow ends when the call returns) and
-//!   likewise counted.
+//!   streaming stores. At drain time, consecutive queued puts to the same
+//!   PE at byte-adjacent offsets are **coalesced** into one copy, up to a
+//!   run size derived from the fitted channel model (the `n₁/₂ = α·β`
+//!   break-even — see `Ctx::drain`'s doc and `docs/tuning.md`); delivery is
+//!   byte-identical either way, which the drain tests pin. Larger puts are
+//!   issued eagerly (a bulk copy gains nothing from deferral) but still
+//!   count against the domain; gets are always eager (the destination
+//!   borrow ends when the call returns) and likewise counted.
 //!
 //! `pending_nbi()` counts issued-but-unretired operations per domain, so
 //! programs written against the 1.3/1.4 semantics run unmodified and the
@@ -152,11 +156,36 @@ impl Ctx {
         batch.pending.store(0, Ordering::Relaxed);
     }
 
+    /// Issue the queued puts, **coalescing** runs of queue-consecutive ops
+    /// that target the same PE at byte-adjacent offsets into one `put` (one
+    /// `mem::copy` dispatch instead of one per op). Merging only
+    /// consecutive, exactly-adjacent entries preserves the per-PE delivery
+    /// order a fence promises. The run-size cap comes from the fitted
+    /// channel model ([`crate::collectives::Tuning::coalesce_threshold_bytes`]):
+    /// merging saves one per-call latency α and costs one extra staging
+    /// append `s/β`, so it pays while the run stays under `n₁/₂ = α·β`.
     fn drain_locked(&self, q: &mut BatchQueue) {
-        for op in q.ops.drain(..) {
-            let dest: SymPtr<u8> = SymPtr::from_raw(op.dest_off, op.bytes.len());
-            self.put(dest, &op.bytes, op.pe);
+        let max_run = self.tuning().coalesce_threshold_bytes();
+        let mut i = 0;
+        while i < q.ops.len() {
+            let (dest_off, pe) = (q.ops[i].dest_off, q.ops[i].pe);
+            // Taking the first op's buffer (not the whole queue) keeps the
+            // queue's backing allocation alive across drains.
+            let mut run = std::mem::take(&mut q.ops[i].bytes);
+            let mut j = i + 1;
+            while j < q.ops.len()
+                && q.ops[j].pe == pe
+                && q.ops[j].dest_off == dest_off + run.len()
+                && run.len() + q.ops[j].bytes.len() <= max_run
+            {
+                run.extend_from_slice(&q.ops[j].bytes);
+                j += 1;
+            }
+            let dest: SymPtr<u8> = SymPtr::from_raw(dest_off, run.len());
+            self.put(dest, &run, pe);
+            i = j;
         }
+        q.ops.clear();
         q.queued_bytes = 0;
     }
 
@@ -323,6 +352,97 @@ mod tests {
             c.quiet();
             assert_eq!(c.pending_nbi(), 0);
             assert_eq!(unsafe { ctx.local(buf) }, &[11, 22][..]);
+            c.destroy();
+        });
+    }
+
+    /// Coalesced and uncoalesced delivery are byte-identical: the same
+    /// sequence of puts issued (a) deferred through a context batch — where
+    /// adjacent runs coalesce at drain time — and (b) eagerly on the
+    /// default domain must leave the target memory equal, including across
+    /// gaps, PE switches, and an overlapping rewrite that must NOT merge
+    /// (order within the drain is what keeps last-writer-wins intact).
+    #[test]
+    fn coalesced_drain_byte_identical_to_eager() {
+        use crate::ctx::CtxOptions;
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let a = ctx.shmalloc_n::<u8>(512).unwrap(); // deferred+coalesced target
+            let b = ctx.shmalloc_n::<u8>(512).unwrap(); // eager reference target
+            unsafe {
+                ctx.local_mut(a).fill(0);
+                ctx.local_mut(b).fill(0);
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 0 {
+                let world = ctx.team_world();
+                let c = world.create_ctx(CtxOptions::new());
+                // The put script: three adjacent runs (coalescable), a gap,
+                // a PE switch in the middle, and an overlapping rewrite.
+                let script: &[(usize, &[u8], usize)] = &[
+                    (0, &[1; 16], 1),   // run start
+                    (16, &[2; 16], 1),  // adjacent → coalesces
+                    (32, &[3; 8], 1),   // adjacent → coalesces
+                    (100, &[4; 4], 1),  // gap → new run
+                    (104, &[5; 4], 0),  // adjacent offset but other PE → no merge
+                    (108, &[6; 4], 1),  // not adjacent to the PE-1 run’s predecessor
+                    (200, &[7; 32], 1), // fresh run…
+                    (216, &[8; 32], 1), // …overlapping rewrite: must stay ordered
+                ];
+                for &(off, bytes, pe) in script {
+                    c.put_nbi(a.slice(off, bytes.len()), bytes, pe);
+                }
+                assert_eq!(c.pending_nbi(), script.len() as u64);
+                c.quiet();
+                // Reference: the same script, eager blocking puts.
+                for &(off, bytes, pe) in script {
+                    ctx.put(b.slice(off, bytes.len()), bytes, pe);
+                }
+                ctx.quiet();
+                c.destroy();
+            }
+            ctx.barrier_all();
+            let (got, want) = unsafe { (ctx.local(a), ctx.local(b)) };
+            assert_eq!(got, want, "PE {}: coalesced != eager delivery", ctx.my_pe());
+            // And the overlap really was last-writer-wins on PE 1.
+            if ctx.my_pe() == 1 {
+                assert_eq!(got[200..216], [7; 16]);
+                assert_eq!(got[216..248], [8; 32]);
+            }
+            ctx.barrier_all();
+        });
+    }
+
+    /// Runs larger than the model-derived threshold stop coalescing but
+    /// still deliver exactly; a postulated model with a tiny n₁/₂ floors at
+    /// the 64-byte clamp.
+    #[test]
+    fn coalescing_respects_model_threshold() {
+        use crate::ctx::CtxOptions;
+        let mut cfg = PoshConfig::small();
+        // α = 100 ns, β = 10 B/ns ⇒ n₁/₂ = 1000 B: a 1 KiB run cap.
+        cfg.cost_model = Some(crate::model::CostModel::from_alpha_gbps(100.0, 80.0));
+        let w = World::threads(1, cfg).unwrap();
+        w.run(|ctx| {
+            assert_eq!(ctx.tuning().coalesce_threshold_bytes(), 1000);
+            let buf = ctx.shmalloc_n::<u8>(4096).unwrap();
+            unsafe { ctx.local_mut(buf).fill(0) };
+            let world = ctx.team_world();
+            let c = world.create_ctx(CtxOptions::new());
+            // 16 adjacent 256-B puts: 4 KiB total, must split into several
+            // ≤1000-B runs — and still land byte-exact.
+            for k in 0..16usize {
+                let chunk = [(k + 1) as u8; 256];
+                c.put_nbi(buf.slice(k * 256, 256), &chunk, 0);
+            }
+            c.quiet();
+            let local = unsafe { ctx.local(buf) };
+            for k in 0..16usize {
+                assert!(
+                    local[k * 256..(k + 1) * 256].iter().all(|&v| v == (k + 1) as u8),
+                    "chunk {k} corrupted"
+                );
+            }
             c.destroy();
         });
     }

@@ -6,6 +6,7 @@
 
 use crate::collectives::AlgoKind;
 use crate::mem::copy::CopyImpl;
+use crate::model::CostModel;
 
 /// How PEs are realised.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,9 +26,11 @@ pub enum BarrierKind {
     Central,
 }
 
-/// Which algorithm team syncs run over the per-team cells. The production
-/// default is dissemination (O(log n) rounds in team-rank space); the
-/// linear fan-in on the team root is kept as the Ablation-B A/B baseline.
+/// Which algorithm team syncs run over the per-team cells. With
+/// `PoshConfig::team_barrier = None` (the default) the tuning engine picks
+/// per team size — which resolves to dissemination (O(log n) rounds in
+/// team-rank space) on every size; the linear fan-in on the team root is
+/// kept as the forced Ablation-B A/B baseline.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TeamBarrierKind {
     /// Dissemination over the team's per-round mailbox cells.
@@ -45,12 +48,20 @@ pub struct PoshConfig {
     pub statics_size: usize,
     /// Copy implementation; `None` keeps the compile-time default.
     pub copy_impl: Option<CopyImpl>,
-    /// Default collective algorithm; `None` keeps the compile-time default.
+    /// Default collective algorithm; `None` keeps the compile-time default
+    /// (which is [`AlgoKind::Adaptive`] unless a `coll-*` feature pins it).
     pub coll_algo: Option<AlgoKind>,
     /// Barrier algorithm.
     pub barrier: BarrierKind,
-    /// Team-sync algorithm over the per-team cells.
-    pub team_barrier: TeamBarrierKind,
+    /// Team-sync algorithm over the per-team cells; `None` lets the tuning
+    /// engine decide per team size (`Some` forces one — the Ablation-B A/B
+    /// switch).
+    pub team_barrier: Option<TeamBarrierKind>,
+    /// Postulated channel model for the tuning engine (α/β, what
+    /// `POSH_ALPHA_NS`/`POSH_BETA_GBPS` set); `None` calibrates at world
+    /// creation (thread mode shares the process engine; process mode rank 0
+    /// publishes and peers adopt).
+    pub cost_model: Option<CostModel>,
     /// Run-time safe mode (§4.5.5 checks). The `safe-mode` cargo feature
     /// forces this on.
     pub safe: bool,
@@ -64,7 +75,8 @@ impl Default for PoshConfig {
             copy_impl: None,
             coll_algo: None,
             barrier: BarrierKind::Dissemination,
-            team_barrier: TeamBarrierKind::Dissemination,
+            team_barrier: None,
+            cost_model: None,
             safe: cfg!(feature = "safe-mode"),
         }
     }
@@ -82,7 +94,9 @@ impl PoshConfig {
 
     /// Apply `POSH_*` environment overrides (used by `oshrun` children):
     /// `POSH_HEAP_SIZE`, `POSH_STATICS_SIZE`, `POSH_COPY`, `POSH_COLL_ALGO`,
-    /// `POSH_BARRIER`, `POSH_TEAM_BARRIER`, `POSH_SAFE`.
+    /// `POSH_BARRIER`, `POSH_TEAM_BARRIER`, `POSH_ALPHA_NS` +
+    /// `POSH_BETA_GBPS`, `POSH_SAFE`. See `docs/tuning.md` for the knob
+    /// handbook.
     pub fn from_env(mut self) -> Self {
         if let Ok(v) = std::env::var("POSH_HEAP_SIZE") {
             if let Some(n) = parse_size(&v) {
@@ -108,9 +122,13 @@ impl PoshConfig {
         }
         if let Ok(v) = std::env::var("POSH_TEAM_BARRIER") {
             self.team_barrier = match v.to_ascii_lowercase().as_str() {
-                "linear" | "fanin" => TeamBarrierKind::LinearFanin,
-                _ => TeamBarrierKind::Dissemination,
+                "linear" | "fanin" => Some(TeamBarrierKind::LinearFanin),
+                "adaptive" | "auto" | "" => None,
+                _ => Some(TeamBarrierKind::Dissemination),
             };
+        }
+        if let Some(cm) = crate::collectives::tuning::env_model() {
+            self.cost_model = Some(cm);
         }
         if let Ok(v) = std::env::var("POSH_SAFE") {
             self.safe = v == "1" || v.eq_ignore_ascii_case("true");
@@ -154,6 +172,10 @@ mod tests {
         assert!(c.heap_size >= 1 << 20);
         assert!(c.statics_size >= 1 << 12);
         assert_eq!(c.barrier, BarrierKind::Dissemination);
-        assert_eq!(c.team_barrier, TeamBarrierKind::Dissemination);
+        // Team sync and collective algorithm default to model-driven
+        // (adaptive) selection; the cost model defaults to calibration.
+        assert_eq!(c.team_barrier, None);
+        assert_eq!(c.coll_algo, None);
+        assert!(c.cost_model.is_none());
     }
 }

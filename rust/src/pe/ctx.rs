@@ -40,6 +40,16 @@ impl Ctx {
         &self.shared.cfg
     }
 
+    /// The job's tuning engine: the fitted (or postulated) `T(n) = α + n/β`
+    /// channel model plus the adaptive collective-selection and
+    /// NBI-coalescing rules built on it. Identical on every PE of the job
+    /// (process mode adopts rank 0's published model), which is what makes
+    /// adaptive selection a job-wide agreement rather than a per-PE guess.
+    #[inline]
+    pub fn tuning(&self) -> &crate::collectives::Tuning {
+        &self.shared.tuning
+    }
+
     /// Execution mode.
     pub fn mode(&self) -> super::config::Mode {
         self.shared.mode

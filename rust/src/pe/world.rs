@@ -3,6 +3,8 @@
 use super::config::{Mode, PoshConfig};
 use super::ctx::Ctx;
 use super::remote_table::{RemoteTable, SendPtr};
+use crate::collectives::tuning::{self, Tuning, TuningSource};
+use crate::model::CostModel;
 use crate::shm::naming::{fresh_job_id, heap_segment_name};
 use crate::shm::posix::PosixShmSegment;
 use crate::symheap::layout::Layout;
@@ -32,6 +34,22 @@ pub struct WorldShared {
     /// Raised when any PE panics (thread mode); spin loops poll it so one
     /// failing PE aborts the job instead of hanging the barrier.
     pub(crate) abort: AtomicBool,
+    /// The job's tuning engine (adaptive collective selection + NBI
+    /// coalescing thresholds). Identical on every PE by construction:
+    /// thread mode shares one value, process mode adopts rank 0's published
+    /// model — adaptive decisions must agree job-wide or the collective
+    /// protocols deadlock.
+    pub(crate) tuning: Tuning,
+}
+
+/// Resolve the engine a world (or its rank 0) uses: a postulated config
+/// model wins, otherwise the once-per-process engine (env / calibration /
+/// paper fallback).
+fn resolve_tuning(cfg: &PoshConfig) -> Tuning {
+    match cfg.cost_model {
+        Some(cm) => Tuning::new(cm, TuningSource::Postulated),
+        None => *tuning::process_engine(),
+    }
 }
 
 /// A POSH job handle.
@@ -56,6 +74,7 @@ impl World {
             heaps.push(SymHeap::new(seg, layout, rank)?);
         }
         let bases = heaps.iter().map(|h| SendPtr(h.base())).collect();
+        let tuning = resolve_tuning(&cfg);
         Ok(World {
             shared: Arc::new(WorldShared {
                 cfg,
@@ -68,6 +87,7 @@ impl World {
                 my_pe_fixed: None,
                 remote: None,
                 abort: AtomicBool::new(false),
+                tuning,
             }),
         })
     }
@@ -109,6 +129,42 @@ impl World {
                 std::thread::yield_now();
             }
         }
+        // Agree on one tuning model job-wide: rank 0 resolves (config /
+        // env / calibration) and publishes α, β, R² through its header;
+        // everyone else adopts the published model, so the adaptive engine
+        // selects identically on every PE — a per-PE calibration could
+        // straddle a crossover threshold and deadlock mixed protocols.
+        let hdr0 = unsafe { crate::symheap::layout::HeapHeader::at(table.base_of(0)) };
+        let tuning = if rank == 0 {
+            let t = resolve_tuning(&cfg);
+            hdr0.tuning_alpha_bits.store(t.model().alpha_ns.to_bits(), Ordering::Relaxed);
+            hdr0.tuning_beta_bits
+                .store(t.model().beta_bytes_per_ns.to_bits(), Ordering::Relaxed);
+            hdr0.tuning_r2_bits.store(t.model().r2.to_bits(), Ordering::Relaxed);
+            hdr0.tuning_ready.store(t.source().to_wire(), Ordering::Release);
+            t
+        } else {
+            let deadline = std::time::Instant::now() + timeout;
+            let mut wire = 0u64;
+            while wire == 0 {
+                wire = hdr0.tuning_ready.load(Ordering::Acquire);
+                if wire == 0 {
+                    if std::time::Instant::now() > deadline {
+                        bail!("PE 0 did not publish the tuning model within {timeout:?}");
+                    }
+                    std::hint::spin_loop();
+                    std::thread::yield_now();
+                }
+            }
+            let model = CostModel {
+                alpha_ns: f64::from_bits(hdr0.tuning_alpha_bits.load(Ordering::Relaxed)),
+                beta_bytes_per_ns: f64::from_bits(
+                    hdr0.tuning_beta_bits.load(Ordering::Relaxed),
+                ),
+                r2: f64::from_bits(hdr0.tuning_r2_bits.load(Ordering::Relaxed)),
+            };
+            Tuning::new(model, TuningSource::from_wire(wire))
+        };
         let bases = table.bases();
         Ok(World {
             shared: Arc::new(WorldShared {
@@ -122,6 +178,7 @@ impl World {
                 my_pe_fixed: Some(rank),
                 remote: Some(table),
                 abort: AtomicBool::new(false),
+                tuning,
             }),
         })
     }

@@ -193,6 +193,19 @@ pub struct HeapHeader {
     /// Free team slots as a bitmap (bit t set = slot t free). Only PE 0's
     /// copy is authoritative; teams claim slots with a CAS loop on it.
     pub team_slot_bitmap: AtomicU64,
+    /// Published tuning model, α in ns as `f64::to_bits` (process mode:
+    /// rank 0 writes at world attach; every rank adopts, so adaptive
+    /// collective selection is identical job-wide). Only PE 0's copy is
+    /// meaningful.
+    pub tuning_alpha_bits: AtomicU64,
+    /// Published tuning model, β in bytes/ns as `f64::to_bits`.
+    pub tuning_beta_bits: AtomicU64,
+    /// Published tuning model, fit R² as `f64::to_bits`.
+    pub tuning_r2_bits: AtomicU64,
+    /// 0 until the model is published; then the wire encoding of its
+    /// [`crate::collectives::TuningSource`]. Peers spin on this before
+    /// reading the three `tuning_*_bits` words.
+    pub tuning_ready: AtomicU64,
     /// Per-team sync cells and membership descriptors (OpenSHMEM 1.4 teams).
     pub teams: [TeamCell; MAX_TEAMS],
 }

@@ -19,6 +19,27 @@ fn info_reports_platform() {
 }
 
 #[test]
+fn calibrate_reports_model_and_writes_csv() {
+    let dir = std::env::temp_dir().join(format!("posh_calib_{}", std::process::id()));
+    let csv = dir.join("calibration.csv");
+    let out = oshrun()
+        .args(["calibrate", "--csv", csv.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("shm channel model"));
+    assert!(text.contains("alpha_ns"));
+    assert!(text.contains("r2"));
+    assert!(text.contains("adaptive selection"));
+    let content = std::fs::read_to_string(&csv).unwrap();
+    assert!(content.starts_with("quantity,value"));
+    assert!(content.contains("alpha_ns,"));
+    assert!(content.contains("n_half_bytes,"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn launches_shell_job_with_rank_prefixed_io() {
     let out = oshrun()
         .args(["-np", "3", "--", "/bin/sh", "-c", "echo hello from $POSH_RANK"])

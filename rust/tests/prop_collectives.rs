@@ -1,9 +1,12 @@
 //! Property tests over the collective layer: random team splits (arbitrary
 //! strides — beyond what the 1.0 triplet could express), random payloads,
 //! every algorithm — results must match a serial oracle, repeated
-//! collectives must not interfere (the §4.5.1 reset discipline), and the
-//! sync-vs-barrier completion contract holds: `shmem_team_sync` implies
-//! **no** quiet, team/world barriers do.
+//! collectives must not interfere (the §4.5.1 reset discipline), the
+//! sync-vs-barrier completion contract holds (`shmem_team_sync` implies
+//! **no** quiet, team/world barriers do), and adaptive selection never
+//! changes collective *semantics*: over random team shapes, `Adaptive`
+//! and every forced `AlgoKind` produce identical results — the model only
+//! reschedules the data movement.
 
 use posh::collectives::{AlgoKind, ReduceOp};
 use posh::pe::{PoshConfig, World};
@@ -200,6 +203,85 @@ fn fcollect_matches_oracle() {
                         ));
                     }
                 }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Adaptive selection is a *schedule*, not a semantic: over randomized
+/// team shapes, payload sizes and operators, running the same collective
+/// sequence under `Adaptive` and under every forced `AlgoKind` must yield
+/// byte-identical results on every member. The payload sweep deliberately
+/// brackets the model's crossover region (tiny → bulk) so the property
+/// holds on both sides of every switching threshold.
+#[test]
+fn adaptive_matches_every_forced_algo() {
+    forall("adaptive ≡ forced", 10, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let (start, stride, size) = random_split(g, n_pes);
+        // Bracket the crossovers: latency-bound through bandwidth-bound.
+        let nelems = g.pick(&[1usize, 7, 64, 700, 3000]);
+        let root_idx = g.usize_in(0..size);
+        let op = g.pick(&ReduceOp::all());
+        type PeOut = Option<(Vec<i64>, Vec<u64>, Vec<u32>)>;
+        let run_with = |algo: AlgoKind| -> Vec<PeOut> {
+            let mut cfg = PoshConfig::small();
+            cfg.coll_algo = Some(algo);
+            // A postulated model with crossovers inside the payload sweep,
+            // so the adaptive run genuinely switches algorithms.
+            cfg.cost_model = Some(posh::model::CostModel::from_alpha_gbps(100.0, 80.0));
+            // Roots stage Lemma-1 scratch for linear-put reductions.
+            cfg.heap_size = (nelems * 8 * (n_pes + 6)).max(4 << 20);
+            let w = World::threads(n_pes, cfg).unwrap();
+            w.run_collect(move |ctx| {
+                let rsrc = ctx.shmalloc_n::<i64>(nelems).unwrap();
+                let rdst = ctx.shmalloc_n::<i64>(nelems).unwrap();
+                let bsrc = ctx.shmalloc_n::<u64>(nelems).unwrap();
+                let bdst = ctx.shmalloc_n::<u64>(nelems).unwrap();
+                let fsrc = ctx.shmalloc_n::<u32>(nelems).unwrap();
+                let fdst = ctx.shmalloc_n::<u32>(nelems * size).unwrap();
+                unsafe {
+                    for j in 0..nelems {
+                        ctx.local_mut(rsrc)[j] = contrib(ctx.my_pe(), j);
+                        ctx.local_mut(bsrc)[j] = (ctx.my_pe() * 1_000 + j) as u64;
+                        ctx.local_mut(fsrc)[j] = (ctx.my_pe() * 10_000 + j) as u32;
+                    }
+                    ctx.local_mut(rdst).fill(i64::MIN);
+                    ctx.local_mut(bdst).fill(u64::MAX);
+                    ctx.local_mut(fdst).fill(u32::MAX);
+                }
+                ctx.barrier_all();
+                let team = ctx.team_world().split_strided(start, stride, size);
+                let out = if let Some(team) = &team {
+                    ctx.reduce_to_all(rdst, rsrc, nelems, op, team);
+                    ctx.broadcast(bdst, bsrc, nelems, root_idx, team);
+                    ctx.fcollect(fdst, fsrc, nelems, team);
+                    Some(unsafe {
+                        (
+                            ctx.local(rdst).to_vec(),
+                            ctx.local(bdst).to_vec(),
+                            ctx.local(fdst).to_vec(),
+                        )
+                    })
+                } else {
+                    None
+                };
+                ctx.barrier_all();
+                if let Some(team) = team {
+                    team.destroy();
+                }
+                out
+            })
+        };
+        let adaptive = run_with(AlgoKind::Adaptive);
+        for forced in AlgoKind::all() {
+            let got = run_with(forced);
+            if got != adaptive {
+                return Err(format!(
+                    "adaptive and {forced:?} disagree: split ({start},{stride},{size}), \
+                     nelems {nelems}, op {op:?}, root {root_idx}"
+                ));
             }
         }
         Ok(())

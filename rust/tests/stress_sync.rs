@@ -31,7 +31,7 @@ fn iters(release: usize) -> usize {
 fn overlapping_hammer(kind: TeamBarrierKind) {
     let rounds = iters(2000);
     let mut cfg = PoshConfig::small();
-    cfg.team_barrier = kind;
+    cfg.team_barrier = Some(kind);
     let w = World::threads(3, cfg).unwrap();
     let a_pre = AtomicUsize::new(0);
     let b_pre = AtomicUsize::new(0);
@@ -244,7 +244,7 @@ fn eight_member_team_syncs_in_log_rounds() {
 #[test]
 fn eight_member_linear_baseline_is_n_minus_1() {
     let mut cfg = PoshConfig::small();
-    cfg.team_barrier = TeamBarrierKind::LinearFanin;
+    cfg.team_barrier = Some(TeamBarrierKind::LinearFanin);
     let w = World::threads(8, cfg).unwrap();
     w.run(|ctx| {
         let team = ctx.team_world().split_strided(0, 1, 8).unwrap();
