@@ -5,8 +5,76 @@
 //! atomics being the named examples).
 
 use posh::bench::{measure, Table};
+use posh::ctx::CtxOptions;
 use posh::pe::{PoshConfig, World};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// C3 worker: aggregate `put_nbi` issue rates (ops/s) with `threads`
+/// workers on one PE — (a) one `SERIALIZED` context shared behind a
+/// `Mutex`, the only sound way to share a serialized context, vs (b) a
+/// private context per thread from `Team::ctx_for_thread` (lock-free issue
+/// path, independent quiets). Each op is an 8-element deferred put; a quiet
+/// every 512 ops bounds queue growth identically on both sides.
+fn ctx_threads_rates(threads: usize, ops_per_thread: usize) -> (f64, f64) {
+    const CHUNK: usize = 8; // u64s per put_nbi — the deferred fast path
+    let shared_bits = AtomicU64::new(0);
+    let pooled_bits = AtomicU64::new(0);
+    let w = World::threads(1, PoshConfig::small()).unwrap();
+    w.run(|ctx| {
+        let buf = ctx.shmalloc_n::<u64>(threads * 8 * CHUNK).unwrap();
+        let team = ctx.team_world();
+        let vals = [1u64; CHUNK];
+
+        // (a) shared SERIALIZED ctx: every issue funnels through one lock.
+        let locked = Mutex::new(team.create_ctx(CtxOptions::new().serialized()));
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let locked = &locked;
+                s.spawn(move || {
+                    for i in 0..ops_per_thread {
+                        let g = locked.lock().unwrap();
+                        g.put_nbi(buf.slice(t * 8 * CHUNK + (i % 8) * CHUNK, CHUNK), &vals, 0);
+                        if i % 512 == 511 {
+                            g.quiet();
+                        }
+                    }
+                });
+            }
+        });
+        locked.lock().unwrap().quiet();
+        let shared = (threads * ops_per_thread) as f64 / t0.elapsed().as_secs_f64();
+        locked.into_inner().unwrap().destroy();
+
+        // (b) ctx-per-thread: lock-free issue, per-thread completion.
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let team = team.clone();
+                s.spawn(move || {
+                    let c = team.ctx_for_thread();
+                    for i in 0..ops_per_thread {
+                        c.put_nbi(buf.slice(t * 8 * CHUNK + (i % 8) * CHUNK, CHUNK), &vals, 0);
+                        if i % 512 == 511 {
+                            c.quiet();
+                        }
+                    }
+                    c.quiet();
+                });
+            }
+        });
+        let pooled = (threads * ops_per_thread) as f64 / t0.elapsed().as_secs_f64();
+
+        shared_bits.store(shared.to_bits(), Ordering::Relaxed);
+        pooled_bits.store(pooled.to_bits(), Ordering::Relaxed);
+    });
+    (
+        f64::from_bits(shared_bits.load(Ordering::Relaxed)),
+        f64::from_bits(pooled_bits.load(Ordering::Relaxed)),
+    )
+}
 
 fn main() {
     // --- Single-PE atomic op costs (no contention). The table is built and
@@ -88,5 +156,40 @@ fn main() {
     }
     t2.print();
     t2.write_csv("ablationC_locks").unwrap();
-    println!("\ncsv: bench_out/ablationC_atomics.csv, bench_out/ablationC_locks.csv");
+
+    // --- C3: SHMEM_THREAD_MULTIPLE scaling — one shared SERIALIZED
+    // context (mutex-funnelled) vs a per-thread context pool. The ≥2×
+    // acceptance gate at 8 threads pins the point of `ctx_for_thread`:
+    // per-thread completion state scales where a shared lock serialises.
+    let mut t3 = Table::new(
+        "Ablation C3: aggregate put_nbi throughput — shared SERIALIZED ctx vs ctx-per-thread",
+        "Mops/s aggregate (speedup column is the ratio)",
+        &["shared-serialized", "ctx-per-thread", "speedup"],
+    );
+    let ops = 60_000;
+    for &threads in &[1usize, 2, 4, 8] {
+        let (mut a, mut b) = ctx_threads_rates(threads, ops);
+        if threads == 8 && b < 2.0 * a {
+            // One retry to shake scheduler noise before the gate.
+            let (a2, b2) = ctx_threads_rates(threads, ops);
+            a = a2;
+            b = b2;
+        }
+        let speedup = b / a;
+        if threads == 8 && std::env::var_os("POSH_BENCH_NO_ASSERT").is_none() {
+            assert!(
+                speedup >= 2.0,
+                "ctx-per-thread must give >= 2x aggregate put_nbi throughput over a \
+                 shared SERIALIZED ctx at 8 threads (got {speedup:.2}x; set \
+                 POSH_BENCH_NO_ASSERT=1 to record anyway)"
+            );
+        }
+        t3.row(&format!("{threads} threads"), vec![a / 1e6, b / 1e6, speedup]);
+    }
+    t3.print();
+    t3.write_csv("ablationC_ctx_threads").unwrap();
+    println!(
+        "\ncsv: bench_out/ablationC_atomics.csv, bench_out/ablationC_locks.csv, \
+         bench_out/ablationC_ctx_threads.csv"
+    );
 }

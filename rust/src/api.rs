@@ -52,13 +52,136 @@ pub fn clear_ctx() {
     CURRENT.with(|c| *c.borrow_mut() = None);
 }
 
+/// OpenSHMEM 1.4 thread levels (§9.2), in increasing order of permitted
+/// concurrency — the declaration order makes `Ord` express exactly that.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ThreadLevel {
+    /// `SHMEM_THREAD_SINGLE`: one thread exists; only it may call SHMEM.
+    Single,
+    /// `SHMEM_THREAD_FUNNELED`: many threads, but only the initialising
+    /// ("main") thread makes SHMEM calls.
+    Funneled,
+    /// `SHMEM_THREAD_SERIALIZED`: any thread may call SHMEM, but the
+    /// program promises the calls never overlap in time.
+    Serialized,
+    /// `SHMEM_THREAD_MULTIPLE`: any thread, any time, concurrently — the
+    /// level the sharded NBI queues and per-thread context pools exist for.
+    Multiple,
+}
+
+/// Why the calling thread has no implicit SHMEM context — the structured
+/// form of the error [`ctx`] turns into a panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CtxError {
+    /// The library was never initialised on this process (no
+    /// `shmem_init`/`shmem_init_thread`/`install_ctx` happened).
+    Uninitialized,
+    /// The library *is* initialised, but at a thread level that confines
+    /// the SHMEM API to the initialising thread — and the caller is a
+    /// different thread.
+    LevelForbids {
+        /// The level the job was initialised with.
+        level: ThreadLevel,
+    },
+}
+
+impl std::fmt::Display for CtxError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CtxError::Uninitialized => write!(
+                f,
+                "no SHMEM context on this thread: call shmem_init()/\
+                 shmem_init_thread(level)/install_ctx() first"
+            ),
+            CtxError::LevelForbids { level } => write!(
+                f,
+                "no SHMEM context on this thread: the job was initialised at \
+                 thread level {level:?}, which confines the SHMEM API to the \
+                 initialising thread — initialise with \
+                 shmem_init_thread(ThreadLevel::Multiple) (or Serialized) to \
+                 call SHMEM from spawned threads"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CtxError {}
+
+/// The process-wide thread environment established by [`shmem_init_thread`]
+/// (or [`install_ctx_thread`]): the PE's context, the provided thread
+/// level, and the initialising thread's identity for `SINGLE`/`FUNNELED`
+/// enforcement.
+struct ThreadEnv {
+    ctx: Ctx,
+    level: ThreadLevel,
+    home: std::thread::ThreadId,
+}
+
+/// Process-global thread environment. Spawned threads of a
+/// `SERIALIZED`/`MULTIPLE` job bootstrap their thread-local context from
+/// here on first SHMEM call. (Thread-mode *test* worlds — many PEs in one
+/// process — install per-PE contexts with [`install_ctx`] instead and
+/// leave this slot alone.)
+static THREAD_ENV: Mutex<Option<ThreadEnv>> = Mutex::new(None);
+
 /// Fetch the implicit context; panics outside a PE body.
 pub fn ctx() -> Ctx {
-    CURRENT.with(|c| {
-        c.borrow()
-            .clone()
-            .expect("no SHMEM context on this thread: call shmem_init()/install_ctx() first")
-    })
+    match try_ctx() {
+        Ok(c) => c,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+/// Fetch the implicit context, structured-error form: the fast path is the
+/// calling thread's cached handle; on a miss, a `SERIALIZED`/`MULTIPLE`
+/// job hands any thread a clone of the PE context (cached thread-locally
+/// for subsequent calls), a `SINGLE`/`FUNNELED` job only the initialising
+/// thread.
+pub fn try_ctx() -> Result<Ctx, CtxError> {
+    if let Some(c) = CURRENT.with(|c| c.borrow().clone()) {
+        return Ok(c);
+    }
+    let env = THREAD_ENV.lock().unwrap();
+    match &*env {
+        None => Err(CtxError::Uninitialized),
+        Some(te) => {
+            let allowed = matches!(te.level, ThreadLevel::Serialized | ThreadLevel::Multiple)
+                || std::thread::current().id() == te.home;
+            if allowed {
+                let c = te.ctx.clone();
+                drop(env);
+                install_ctx(c.clone());
+                Ok(c)
+            } else {
+                Err(CtxError::LevelForbids { level: te.level })
+            }
+        }
+    }
+}
+
+/// Install the calling thread's context *and* publish the process-wide
+/// thread environment at `level` (what [`shmem_init_thread`] does after
+/// building the world; thread-level tests call it directly). Returns the
+/// provided level — on shared memory every level is supportable, so the
+/// request is granted verbatim.
+pub fn install_ctx_thread(ctx: Ctx, level: ThreadLevel) -> ThreadLevel {
+    install_ctx(ctx.clone());
+    *THREAD_ENV.lock().unwrap() =
+        Some(ThreadEnv { ctx, level, home: std::thread::current().id() });
+    level
+}
+
+/// Remove both the calling thread's context and the process-wide thread
+/// environment (finalize-time teardown).
+pub fn clear_ctx_thread() {
+    clear_ctx();
+    *THREAD_ENV.lock().unwrap() = None;
+}
+
+/// `shmem_query_thread`: the thread level the job was initialised at, or
+/// `None` before initialisation.
+pub fn shmem_query_thread() -> Option<ThreadLevel> {
+    THREAD_ENV.lock().unwrap().as_ref().map(|te| te.level)
 }
 
 /// `shmem_init` (OpenSHMEM 1.2 naming): initialise the library from the
@@ -74,11 +197,24 @@ pub fn ctx() -> Ctx {
 /// header so every PE selects identically — see
 /// [`crate::collectives::tuning`] and `docs/tuning.md`.
 pub fn shmem_init() -> crate::Result<Ctx> {
+    shmem_init_thread(ThreadLevel::Single).map(|(c, _)| c)
+}
+
+/// `shmem_init_thread` (OpenSHMEM 1.4 §9.2): initialise like [`shmem_init`]
+/// and establish the job's thread level. Returns the context plus the
+/// *provided* level — on a shared-memory node every level is supportable
+/// (the sharded NBI queues make even `MULTIPLE`'s concurrent hot paths
+/// lock-free), so the request is granted as asked. Under
+/// `Serialized`/`Multiple`, any spawned thread may call the SHMEM API: its
+/// first call bootstraps a thread-local context clone from the process
+/// environment. Under `Single`/`Funneled`, calls from other threads fail
+/// with [`CtxError::LevelForbids`].
+pub fn shmem_init_thread(requested: ThreadLevel) -> crate::Result<(Ctx, ThreadLevel)> {
     let world = World::from_env()?;
     let c = world.my_ctx();
-    install_ctx(c.clone());
+    let provided = install_ctx_thread(c.clone(), requested);
     *WORLD_SLOT.lock().unwrap() = Some(world);
-    Ok(c)
+    Ok((c, provided))
 }
 
 /// `shmem_finalize`: complete outstanding communication (the spec makes
@@ -95,7 +231,7 @@ pub fn shmem_finalize() {
         c.quiet_nbi();
         c.barrier_all();
     }
-    clear_ctx();
+    clear_ctx_thread();
     *WORLD_SLOT.lock().unwrap() = None;
 }
 
@@ -705,10 +841,93 @@ mod tests {
         });
     }
 
+    /// Serialises every test that reads or writes the process-global
+    /// [`THREAD_ENV`] (libtest runs tests on threads of one process).
+    /// Poison-tolerant: `missing_ctx_panics` unwinds while holding it.
+    static ENV_GUARD: Mutex<()> = Mutex::new(());
+
+    fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+        ENV_GUARD.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     #[test]
     #[should_panic(expected = "no SHMEM context")]
     fn missing_ctx_panics() {
-        clear_ctx();
+        let _g = env_lock();
+        clear_ctx_thread();
         let _ = shmem_my_pe();
+    }
+
+    /// The uninitialized path is a structured error, not just a panic
+    /// string — and its message points at `shmem_init_thread`.
+    #[test]
+    fn uninitialized_try_ctx_is_structured_error() {
+        let _g = env_lock();
+        clear_ctx_thread();
+        assert_eq!(shmem_query_thread(), None);
+        let err = try_ctx().unwrap_err();
+        assert_eq!(err, CtxError::Uninitialized);
+        let msg = err.to_string();
+        assert!(msg.contains("no SHMEM context"), "{msg}");
+        assert!(msg.contains("shmem_init_thread"), "{msg}");
+    }
+
+    /// `SINGLE` confines the API to the initialising thread: it works
+    /// there, and a spawned thread gets `LevelForbids` naming the level
+    /// and the fix.
+    #[test]
+    fn single_level_confines_api_to_home_thread() {
+        let _g = env_lock();
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|c| {
+            let provided = install_ctx_thread(c, ThreadLevel::Single);
+            assert_eq!(provided, ThreadLevel::Single);
+            assert_eq!(shmem_query_thread(), Some(ThreadLevel::Single));
+            assert_eq!(shmem_my_pe(), 0, "the home thread keeps full API access");
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    let err = try_ctx().unwrap_err();
+                    assert_eq!(err, CtxError::LevelForbids { level: ThreadLevel::Single });
+                    let msg = err.to_string();
+                    assert!(msg.contains("no SHMEM context"), "{msg}");
+                    assert!(msg.contains("Single"), "{msg}");
+                    assert!(msg.contains("shmem_init_thread"), "{msg}");
+                });
+            });
+            clear_ctx_thread();
+        });
+    }
+
+    /// `MULTIPLE` hands every spawned thread a context on first call, with
+    /// no per-thread install.
+    #[test]
+    fn multiple_level_spawned_threads_get_ctx() {
+        let _g = env_lock();
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|c| {
+            let provided = install_ctx_thread(c, ThreadLevel::Multiple);
+            assert_eq!(provided, ThreadLevel::Multiple);
+            std::thread::scope(|s| {
+                for _ in 0..4 {
+                    s.spawn(|| {
+                        assert_eq!(shmem_my_pe(), 0);
+                        assert_eq!(shmem_n_pes(), 1);
+                        assert_eq!(shmem_query_thread(), Some(ThreadLevel::Multiple));
+                        // Drop this thread's bootstrapped clone before the
+                        // world tears down.
+                        clear_ctx();
+                    });
+                }
+            });
+            clear_ctx_thread();
+        });
+    }
+
+    /// Levels order by permitted concurrency (spec §9.2 table).
+    #[test]
+    fn thread_levels_are_ordered() {
+        assert!(ThreadLevel::Single < ThreadLevel::Funneled);
+        assert!(ThreadLevel::Funneled < ThreadLevel::Serialized);
+        assert!(ThreadLevel::Serialized < ThreadLevel::Multiple);
     }
 }

@@ -249,6 +249,40 @@ impl Ctx {
         }
     }
 
+    /// Enter a team sync/barrier on `slot`: CAS this PE's per-slot entry
+    /// guard 0→1. Both team-sync engines wait on *per-PE* mailboxes that a
+    /// second same-PE caller would race (two threads of one PE consuming one
+    /// epoch's signals), so under `SHMEM_THREAD_MULTIPLE` a concurrent
+    /// same-PE entry is a program error — the spec requires the *program* to
+    /// serialise collectives per PE. The guard turns that silent hang or
+    /// lost-arrival into an immediate, diagnosable panic.
+    ///
+    /// Guarded at **entry points only** ([`Ctx::team_sync_cells`] and the
+    /// world-slot dissemination arm of `sync_all`) — never inside
+    /// `team_sync_dissemination` itself, which the guarded paths call.
+    /// The legacy shared-cell paths (`set_barrier_cells`, `barrier_central`)
+    /// predate teams and stay unguarded.
+    pub(crate) fn coll_entry_guard_acquire(&self, slot: usize) {
+        let me = self.my_pe();
+        let guard = &self.header_of(me).teams[slot].entry_guard;
+        if guard
+            .compare_exchange(0, 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            panic!(
+                "PE {me}: concurrent sync/barrier entry on team slot {slot} — another \
+                 thread of this PE is already inside a synchronisation on this team; \
+                 serialise collectives per PE (OpenSHMEM 1.4 §9.2)"
+            );
+        }
+    }
+
+    /// Leave a team sync/barrier on `slot`: release the entry guard taken by
+    /// [`Ctx::coll_entry_guard_acquire`].
+    pub(crate) fn coll_entry_guard_release(&self, slot: usize) {
+        self.header_of(self.my_pe()).teams[slot].entry_guard.store(0, Ordering::Release);
+    }
+
     /// Sync over a reserved slot's cells, algorithm per
     /// [`crate::pe::TeamBarrierKind`] — forced by `PoshConfig::team_barrier`
     /// (`POSH_TEAM_BARRIER`, the Ablation-B A/B switch) or, by default,
@@ -262,12 +296,14 @@ impl Ctx {
             .config()
             .team_barrier
             .unwrap_or_else(|| self.tuning().select_barrier(set.size));
+        self.coll_entry_guard_acquire(slot);
         match kind {
             crate::pe::TeamBarrierKind::Dissemination => {
                 self.team_sync_dissemination(set, slot)
             }
             crate::pe::TeamBarrierKind::LinearFanin => self.team_sync_linear(set, slot),
         }
+        self.coll_entry_guard_release(slot);
     }
 
     /// Dissemination sync in **team-rank space**: ⌈log₂ size⌉ rounds; in
@@ -462,6 +498,34 @@ mod tests {
                 ctx.barrier_set(&set);
             }
         });
+    }
+
+    /// Two threads of one PE entering a sync on the same team concurrently
+    /// is a program error under `SHMEM_THREAD_MULTIPLE`; the per-slot entry
+    /// guard must turn it into an immediate panic instead of a lost arrival
+    /// or a silent hang. Simulated by pre-claiming PE 0's world-slot guard
+    /// before its sync — exactly what a still-inside sibling thread looks
+    /// like to the CAS.
+    #[test]
+    fn concurrent_sync_entry_panics() {
+        use crate::team::WORLD_TEAM_SLOT;
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::atomic::Ordering;
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            w.run(|ctx| {
+                if ctx.my_pe() == 0 {
+                    ctx.header_of(0).teams[WORLD_TEAM_SLOT]
+                        .entry_guard
+                        .store(1, Ordering::Release);
+                }
+                ctx.team_world().sync();
+            });
+        }));
+        // PE 0 panics on the guard CAS; PE 1's spin then aborts via the
+        // panic flag. Which panic propagates is a race, so assert only
+        // that the run failed.
+        assert!(res.is_err(), "concurrent same-PE sync entry must panic");
     }
 
     #[test]

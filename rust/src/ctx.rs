@@ -20,6 +20,17 @@
 //! [`Ctx::put_nbi`]/[`Ctx::quiet_nbi`](crate::pe::Ctx) — exactly the 1.0
 //! behaviour, untouched. See `docs/memory_model.md` §"Per-context ordering"
 //! for the guarantee→test mapping.
+//!
+//! **Threads.** A `CommCtx` is `Send + Sync`: under
+//! `SHMEM_THREAD_MULTIPLE` ([`crate::api::ThreadLevel::Multiple`]) many
+//! threads may drive one context concurrently — the deferred-put queue is
+//! sharded per thread, so the `put_nbi` issue path takes no lock, and
+//! concurrent `quiet`s each retire exactly what they deliver (see
+//! [`crate::p2p::nbi`] and `docs/memory_model.md` §"Thread levels"). The
+//! `SERIALIZED`/`PRIVATE` options remain *promises*, not requirements for
+//! soundness. For per-thread completion state — so one thread's quiet
+//! cannot stall another's — use [`Team::ctx_for_thread`], which pools a
+//! private `SERIALIZED` context per calling thread.
 
 use crate::p2p::nbi::{NbiBatch, NbiDomain};
 use crate::pe::Ctx;

@@ -11,6 +11,7 @@
 
 pub mod nbi;
 pub mod ptr;
+pub(crate) mod shard_queue;
 pub mod strided;
 
 use crate::mem::copy::{copy_bytes_with, global_impl, CopyImpl};

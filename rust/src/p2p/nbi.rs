@@ -30,18 +30,31 @@
 //!   count against the domain; gets are always eager (the destination
 //!   borrow ends when the call returns) and likewise counted.
 //!
+//! **Threading** (`SHMEM_THREAD_MULTIPLE`, OpenSHMEM 1.4 §9.2): an
+//! explicit domain's queue is a sharded MPSC structure
+//! ([`crate::p2p::shard_queue::ShardedQueue`]), not a mutex-guarded `Vec`.
+//! Each application thread pushes onto the shard selected by its
+//! process-wide [`crate::p2p::shard_queue::thread_slot`] with a single
+//! Release CAS — the issue path takes **no lock** — and a quiet drains all
+//! [`NBI_SHARDS`] shards, publishes with one Release fence, and retires
+//! exactly what was delivered. Delivery order is FIFO *per issuing thread*
+//! (same thread ⇒ same shard); cross-thread order on one context is
+//! unspecified, as the spec allows. The coalescer therefore also operates
+//! per thread: only a single thread's adjacent puts merge, so its
+//! last-writer-wins guarantees are untouched by threading.
+//!
 //! `pending_nbi()` counts issued-but-unretired operations per domain, so
 //! programs written against the 1.3/1.4 semantics run unmodified and the
 //! completion discipline — including its per-context scoping — is testable:
 //! a deferred put is *provably* not delivered until its own context
 //! quiesces (see the flag-after-data conformance tests in
-//! `tests/prop_teams.rs`).
+//! `tests/prop_teams.rs`, and the multi-thread isolation tests in
+//! `tests/stress_threads.rs`).
 
+use crate::p2p::shard_queue::{thread_slot, ShardedQueue};
 use crate::pe::Ctx;
 use crate::symheap::SymPtr;
 use std::cell::Cell;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 
 /// Largest put (in bytes) an explicit context defers into its batch;
 /// anything bigger is issued eagerly (and still counted). Small enough that
@@ -49,10 +62,16 @@ use std::sync::Mutex;
 /// cover every flag/descriptor-sized message.
 pub const NBI_DEFER_MAX_BYTES: usize = 16 * 1024;
 
-/// Total queued bytes at which a batch drains inline (the ops are issued,
-/// the accounting stays pending until the next quiet) — bounds the memory a
-/// context can pin between quiets.
+/// Queued bytes **per shard** at which a batch drains that shard inline
+/// (the ops are issued, the accounting stays pending until the next quiet)
+/// — bounds the memory one issuing thread can pin between quiets.
 pub const NBI_BATCH_DRAIN_BYTES: usize = 1 << 20;
+
+/// Shard count of every explicit domain's deferred-put queue. Each issuing
+/// thread maps to `thread_slot() % NBI_SHARDS`, so up to this many threads
+/// push with zero contention; beyond it, threads sharing a shard still only
+/// contend on CAS retries, never a lock.
+pub const NBI_SHARDS: usize = 16;
 
 thread_local! {
     /// Issued-but-unretired NBI operations of the calling PE thread's
@@ -69,32 +88,32 @@ struct DeferredPut {
     pe: usize,
 }
 
-/// The queue half of a batch, guarded by one mutex so concurrent users of a
-/// non-`SERIALIZED` context stay coherent.
-#[derive(Debug, Default)]
-struct BatchQueue {
-    ops: Vec<DeferredPut>,
-    queued_bytes: usize,
-}
-
 /// An explicit NBI ordering domain: the private accounting **and** deferred
-/// put batch of one [`crate::ctx::CommCtx`].
-#[derive(Debug, Default)]
+/// put batch of one [`crate::ctx::CommCtx`]. The queue is sharded per
+/// issuing thread so concurrent users of a `MULTIPLE` context never take a
+/// lock to issue — see [`crate::p2p::shard_queue`] for the design and its
+/// loom/Miri/TSan coverage.
+#[derive(Debug)]
 pub(crate) struct NbiBatch {
-    /// Issued-but-unretired operations (deferred *and* eagerly issued).
-    pending: AtomicU64,
-    queue: Mutex<BatchQueue>,
+    /// Deferred puts plus the pending/completed accounting.
+    queue: ShardedQueue<DeferredPut>,
 }
 
 impl NbiBatch {
     /// An empty domain.
     pub(crate) fn new() -> NbiBatch {
-        NbiBatch::default()
+        NbiBatch { queue: ShardedQueue::new(NBI_SHARDS) }
     }
 
     /// Issued-but-unretired operation count.
     pub(crate) fn pending(&self) -> u64 {
-        self.pending.load(Ordering::Relaxed)
+        self.queue.pending()
+    }
+}
+
+impl Default for NbiBatch {
+    fn default() -> NbiBatch {
+        NbiBatch::new()
     }
 }
 
@@ -112,81 +131,72 @@ impl Ctx {
     pub(crate) fn nbi_issued(&self, domain: &NbiDomain<'_>) {
         match domain {
             NbiDomain::Default => PENDING.with(|p| p.set(p.get() + 1)),
-            NbiDomain::Explicit(batch) => {
-                batch.pending.fetch_add(1, Ordering::Relaxed);
-            }
+            NbiDomain::Explicit(batch) => batch.queue.note_eager(),
         }
     }
 
-    /// Retire every pending NBI operation of `domain` (accounting only —
-    /// the caller is responsible for having drained/fenced first).
+    /// Retire every pending NBI operation of `domain`. For the default
+    /// domain this is accounting only (the caller has already fenced); an
+    /// explicit domain cannot retire blindly — a `put_nbi` racing in from
+    /// another thread of a `MULTIPLE` context must not be counted away
+    /// while its op sits undelivered in a shard — so it routes through the
+    /// full drain-then-retire quiet, which retires exactly what it ships.
     pub(crate) fn nbi_retire(&self, domain: &NbiDomain<'_>) {
         match domain {
             NbiDomain::Default => PENDING.with(|p| p.set(0)),
-            NbiDomain::Explicit(batch) => batch.pending.store(0, Ordering::Relaxed),
+            NbiDomain::Explicit(batch) => self.nbi_quiet_batch(batch),
         }
     }
 
-    /// Count one eagerly-issued (already delivered) op against `batch`,
-    /// under the queue lock so the increment cannot interleave into the
-    /// middle of [`Ctx::nbi_quiet_batch`]'s drain→retire critical section
-    /// and survive as a phantom pending op after a completed quiet.
-    fn nbi_issued_locked(&self, batch: &NbiBatch) {
-        let _q = batch.queue.lock().unwrap();
-        batch.pending.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Issue every queued put of `batch`, in issue order. Accounting is not
-    /// touched — draining completes the data movement, quiet retires.
+    /// Issue every queued put of `batch`, in per-thread issue order.
+    /// Accounting stays pending — draining completes the data movement,
+    /// quiet retires (the delivered count parks inside the queue until
+    /// then).
     pub(crate) fn nbi_drain(&self, batch: &NbiBatch) {
-        let mut q = batch.queue.lock().unwrap();
-        self.drain_locked(&mut q);
+        batch.queue.drain(&mut |run| self.nbi_deliver_run(run));
     }
 
-    /// The full explicit-domain quiet: drain, publish, retire — all under
-    /// the queue lock, so a `put_nbi` racing in from another thread of a
-    /// shared (non-`SERIALIZED`) context can never be counted away while
-    /// its op sits undelivered in the queue: an op is either drained here
-    /// (retiring it is correct) or enqueued-and-counted strictly after the
-    /// counter reset.
+    /// The full explicit-domain quiet: drain every shard, publish with one
+    /// Release fence, retire exactly what was delivered. An op pushed
+    /// concurrently from another thread is either taken by this drain's
+    /// Acquire swap (retiring it is correct — it shipped) or stays queued
+    /// *with its pending increment intact* for the next quiet: the
+    /// increment-before-Release-CAS protocol in
+    /// [`crate::p2p::shard_queue::ShardedQueue::push`] makes counting an
+    /// undelivered op away impossible.
     pub(crate) fn nbi_quiet_batch(&self, batch: &NbiBatch) {
-        let mut q = batch.queue.lock().unwrap();
-        self.drain_locked(&mut q);
-        std::sync::atomic::fence(Ordering::Release);
-        batch.pending.store(0, Ordering::Relaxed);
+        batch.queue.quiet(&mut |run| self.nbi_deliver_run(run));
     }
 
-    /// Issue the queued puts, **coalescing** runs of queue-consecutive ops
-    /// that target the same PE at byte-adjacent offsets into one `put` (one
-    /// `mem::copy` dispatch instead of one per op). Merging only
-    /// consecutive, exactly-adjacent entries preserves the per-PE delivery
-    /// order a fence promises. The run-size cap comes from the fitted
-    /// channel model ([`crate::collectives::Tuning::coalesce_threshold_bytes`]):
-    /// merging saves one per-call latency α and costs one extra staging
-    /// append `s/β`, so it pays while the run stays under `n₁/₂ = α·β`.
-    fn drain_locked(&self, q: &mut BatchQueue) {
+    /// Issue one drained shard's puts, **coalescing** runs of
+    /// queue-consecutive ops that target the same PE at byte-adjacent
+    /// offsets into one `put` (one `mem::copy` dispatch instead of one per
+    /// op). A shard holds a single thread's stream in FIFO order, so
+    /// merging only consecutive, exactly-adjacent entries preserves the
+    /// per-thread delivery order a fence promises. The run-size cap comes
+    /// from the fitted channel model
+    /// ([`crate::collectives::Tuning::coalesce_threshold_bytes`]): merging
+    /// saves one per-call latency α and costs one extra staging append
+    /// `s/β`, so it pays while the run stays under `n₁/₂ = α·β`.
+    fn nbi_deliver_run(&self, mut ops: Vec<DeferredPut>) {
         let max_run = self.tuning().coalesce_threshold_bytes();
         let mut i = 0;
-        while i < q.ops.len() {
-            let (dest_off, pe) = (q.ops[i].dest_off, q.ops[i].pe);
-            // Taking the first op's buffer (not the whole queue) keeps the
-            // queue's backing allocation alive across drains.
-            let mut run = std::mem::take(&mut q.ops[i].bytes);
+        while i < ops.len() {
+            let (dest_off, pe) = (ops[i].dest_off, ops[i].pe);
+            let mut run = std::mem::take(&mut ops[i].bytes);
             let mut j = i + 1;
-            while j < q.ops.len()
-                && q.ops[j].pe == pe
-                && q.ops[j].dest_off == dest_off + run.len()
-                && run.len() + q.ops[j].bytes.len() <= max_run
+            while j < ops.len()
+                && ops[j].pe == pe
+                && ops[j].dest_off == dest_off + run.len()
+                && run.len() + ops[j].bytes.len() <= max_run
             {
-                run.extend_from_slice(&q.ops[j].bytes);
+                run.extend_from_slice(&ops[j].bytes);
                 j += 1;
             }
             let dest: SymPtr<u8> = SymPtr::from_raw(dest_off, run.len());
             self.put(dest, &run, pe);
             i = j;
         }
-        q.ops.clear();
-        q.queued_bytes = 0;
     }
 
     /// `put_nbi` into an explicit domain (the [`crate::ctx::CommCtx`] path):
@@ -209,7 +219,7 @@ impl Ctx {
                     // Eager: delivered by the time put() returns, so a
                     // concurrent quiet retiring it early is still truthful.
                     self.put(dest, src, pe);
-                    self.nbi_issued_locked(batch);
+                    batch.queue.note_eager();
                 } else {
                     // Validate at issue time so a bad call fails at its own
                     // call site, not inside a later quiet.
@@ -231,17 +241,18 @@ impl Ctx {
                         std::slice::from_raw_parts(src.as_ptr() as *const u8, nbytes)
                     }
                     .to_vec();
-                    // Enqueue and count under one lock hold, pairing with
-                    // the drain+retire critical section of
-                    // [`Ctx::nbi_quiet_batch`]: a quiet either drains this
-                    // op (and may retire it) or runs entirely before this
-                    // increment — never wipes the count of a queued op.
-                    let mut q = batch.queue.lock().unwrap();
-                    q.queued_bytes += nbytes;
-                    q.ops.push(DeferredPut { dest_off: dest.offset(), bytes, pe });
-                    batch.pending.fetch_add(1, Ordering::Relaxed);
-                    if q.queued_bytes > NBI_BATCH_DRAIN_BYTES {
-                        self.drain_locked(&mut q);
+                    // Lock-free enqueue onto this thread's shard. The push
+                    // counts the op *before* publishing it, so a racing
+                    // quiet either ships it (and retires it) or leaves it
+                    // counted — never wipes the count of a queued op.
+                    let slot = thread_slot();
+                    let shard_bytes = batch.queue.push(
+                        slot,
+                        DeferredPut { dest_off: dest.offset(), bytes, pe },
+                        nbytes,
+                    );
+                    if shard_bytes > NBI_BATCH_DRAIN_BYTES {
+                        batch.queue.drain_slot(slot, &mut |run| self.nbi_deliver_run(run));
                     }
                 }
             }
@@ -259,10 +270,7 @@ impl Ctx {
         pe: usize,
     ) {
         self.get(dest, src, pe);
-        match domain {
-            NbiDomain::Default => self.nbi_issued(domain),
-            NbiDomain::Explicit(batch) => self.nbi_issued_locked(batch),
-        }
+        self.nbi_issued(domain);
     }
 
     /// `shmem_put_nbi` (default context): start a put; completion only at

@@ -1,0 +1,574 @@
+//! The sharded MPSC queue behind every explicit NBI ordering domain —
+//! the `SHMEM_THREAD_MULTIPLE` hot path.
+//!
+//! The pre-thread-levels `NbiBatch` guarded its deferred-put queue with one
+//! `Mutex<Vec<…>>`: correct, but every `put_nbi` from every application
+//! thread of a `MULTIPLE` job serialised through that lock. This module
+//! replaces it with a design whose **issue path is lock-free**:
+//!
+//! * the queue is split into [`Shard`]s; each pushing thread maps to a
+//!   stable shard via its [`thread_slot`] (a process-wide monotone
+//!   thread-local id, taken mod the shard count);
+//! * a push is a Treiber-stack CAS onto the shard's `head` — no lock, no
+//!   syscall, O(1) with only CAS retries under contention *on the same
+//!   shard*;
+//! * a drain takes the shard's `drain_lock`, `swap`s the whole stack out
+//!   with one `Acquire` exchange, reverses it to FIFO order, and delivers.
+//!   Holding the lock **through delivery** is what preserves per-thread
+//!   delivery order across concurrent quiets: a second drainer cannot
+//!   deliver a thread's later puts before its earlier puts finish.
+//!
+//! Accounting is two counters, not a counter behind the queue lock:
+//! `pending` is incremented *before* the push (so the Release CAS publishes
+//! the increment to any Acquire drain that takes the node) and decremented
+//! only by [`ShardedQueue::quiet`]; `completed` absorbs operations that
+//! were *delivered* without being *retired* — eager bulk ops (delivered at
+//! issue) and fence-path drains (fences deliver, they never retire). A
+//! quiet retires `drained_now + completed.swap(0)` in one subtraction:
+//! every operation is retired exactly once, no drained-but-still-counted
+//! op can survive a quiet, and no op can be counted away while it still
+//! sits in a shard (its `pending` increment happens-before any drain that
+//! observes it).
+//!
+//! The same source builds under `--cfg loom` against the `loom` model
+//! checker's shimmed atomics (the loom job in CI adds the dev-dependency;
+//! the vendored registry this crate normally builds against does not carry
+//! it, so there is deliberately no `Cargo.toml` entry). The
+//! `loom_model` tests exhaustively interleave 2–3 threads over push /
+//! drain / drop and pin: no lost entry, no double-delivery, and the
+//! quiet's Release/Acquire pairing. The plain `tests` module replays the
+//! same schedules deterministically (join-ordering instead of model
+//! exploration) so the default `cargo test` run covers them too.
+
+#[cfg(loom)]
+use loom::sync::atomic::{fence, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+use loom::sync::Mutex;
+#[cfg(not(loom))]
+use std::sync::atomic::{fence, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+use std::sync::Mutex;
+
+use std::ptr;
+
+/// Process-wide monotone thread-id allocator backing [`thread_slot`].
+/// Always `std` atomics, even under loom: slot assignment is identity, not
+/// synchronisation, and loom models pass explicit slots instead.
+static NEXT_SLOT: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+thread_local! {
+    static MY_SLOT: usize = NEXT_SLOT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// The calling thread's stable queue slot: assigned once per thread, for
+/// its lifetime, from a process-wide counter. Same thread ⇒ same slot ⇒
+/// same shard ⇒ FIFO delivery of that thread's deferred puts; distinct
+/// threads usually land on distinct shards (mod the shard count) and never
+/// contend on the issue path when they do.
+pub(crate) fn thread_slot() -> usize {
+    MY_SLOT.with(|s| *s)
+}
+
+/// One queued entry: the item plus its byte weight (for the per-shard
+/// inline-drain cap).
+struct Node<T> {
+    item: T,
+    nbytes: usize,
+    next: *mut Node<T>,
+}
+
+/// One shard: a Treiber stack of pending entries plus the drain lock that
+/// serialises delivery (issue stays lock-free).
+struct Shard<T> {
+    /// Stack head; pushes CAS here with `Release`, drains `swap` with
+    /// `Acquire`.
+    head: AtomicPtr<Node<T>>,
+    /// Held across `swap`-and-deliver so concurrent drains keep per-thread
+    /// delivery order.
+    drain_lock: Mutex<()>,
+    /// Bytes currently queued on this shard (advisory, for the inline-drain
+    /// cap; maintained with relaxed ops).
+    queued_bytes: AtomicUsize,
+}
+
+/// A sharded multi-producer queue with quiet/fence-shaped accounting. See
+/// the module docs for the design and the ordering argument.
+pub(crate) struct ShardedQueue<T> {
+    shards: Box<[Shard<T>]>,
+    /// Issued-but-unretired operations (queued, eagerly delivered, or
+    /// fence-drained — everything a future quiet still owes a retirement).
+    pending: AtomicU64,
+    /// Delivered-but-unretired operations: eager ops and fence-path drains
+    /// park their count here until a quiet subtracts it from `pending`.
+    completed: AtomicU64,
+}
+
+// The queue moves `T` values across threads (push on one, deliver on
+// another) exactly like a channel, so `Send` on `T` is the right bound for
+// both. The auto impls would be unconditional (`AtomicPtr<Node<T>>` is
+// always `Send + Sync`), which would be unsound for `!Send` payloads —
+// these manual impls restore the bound.
+unsafe impl<T: Send> Send for ShardedQueue<T> {}
+unsafe impl<T: Send> Sync for ShardedQueue<T> {}
+
+impl<T> ShardedQueue<T> {
+    /// An empty queue with `shards` shards (≥ 1).
+    pub(crate) fn new(shards: usize) -> ShardedQueue<T> {
+        assert!(shards >= 1, "a sharded queue needs at least one shard");
+        let shards = (0..shards)
+            .map(|_| Shard {
+                head: AtomicPtr::new(ptr::null_mut()),
+                drain_lock: Mutex::new(()),
+                queued_bytes: AtomicUsize::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ShardedQueue { shards, pending: AtomicU64::new(0), completed: AtomicU64::new(0) }
+    }
+
+    /// Issued-but-unretired operation count.
+    pub(crate) fn pending(&self) -> u64 {
+        self.pending.load(Ordering::Relaxed)
+    }
+
+    /// Lock-free push of `item` (weighing `nbytes`) onto the shard for
+    /// `slot`. Returns the shard's queued bytes after the push so the
+    /// caller can trigger an inline drain past its cap.
+    ///
+    /// `pending` is incremented **before** the node is published: the
+    /// `Release` CAS then carries the increment to any drain whose
+    /// `Acquire` swap takes the node, so a concurrent quiet can never
+    /// retire an op it did not deliver.
+    pub(crate) fn push(&self, slot: usize, item: T, nbytes: usize) -> usize {
+        let shard = &self.shards[slot % self.shards.len()];
+        self.pending.fetch_add(1, Ordering::Relaxed);
+        let node = Box::into_raw(Box::new(Node { item, nbytes, next: ptr::null_mut() }));
+        let mut head = shard.head.load(Ordering::Relaxed);
+        loop {
+            // SAFETY: `node` is ours until the CAS publishes it.
+            unsafe { (*node).next = head };
+            match shard.head.compare_exchange_weak(head, node, Ordering::Release, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(cur) => head = cur,
+            }
+        }
+        shard.queued_bytes.fetch_add(nbytes, Ordering::Relaxed) + nbytes
+    }
+
+    /// Count one eagerly-delivered operation (a bulk put or a get): it is
+    /// already complete, so it goes straight to `completed` and retires at
+    /// the next quiet. `pending` first — a quiet interleaving between the
+    /// two increments then sees a still-pending op (truthful: its
+    /// retirement waits for the next quiet) rather than a negative balance.
+    pub(crate) fn note_eager(&self) {
+        self.pending.fetch_add(1, Ordering::Relaxed);
+        self.completed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Swap out and deliver one shard's queue in FIFO order under its drain
+    /// lock. Returns the number of entries delivered. Accounting untouched.
+    fn drain_shard(&self, idx: usize, deliver: &mut dyn FnMut(Vec<T>)) -> u64 {
+        let shard = &self.shards[idx];
+        let _guard = shard.drain_lock.lock().unwrap();
+        let mut head = shard.head.swap(ptr::null_mut(), Ordering::Acquire);
+        if head.is_null() {
+            return 0;
+        }
+        // Reverse the LIFO stack into issue (FIFO) order.
+        let mut items = Vec::new();
+        let mut bytes = 0usize;
+        while !head.is_null() {
+            // SAFETY: the swap made this list exclusively ours; every node
+            // was created by `Box::into_raw` in `push`.
+            let node = unsafe { Box::from_raw(head) };
+            head = node.next;
+            bytes += node.nbytes;
+            items.push(node.item);
+        }
+        items.reverse();
+        let n = items.len() as u64;
+        shard.queued_bytes.fetch_sub(bytes, Ordering::Relaxed);
+        // Deliver while still holding the drain lock: a racing drain of the
+        // same shard must not ship later entries before these land.
+        deliver(items);
+        n
+    }
+
+    /// Fence-path drain of every shard: deliver everything queued, leave
+    /// the accounting pending (fences order, they do not retire). The
+    /// delivered count parks in `completed` for the next quiet.
+    pub(crate) fn drain(&self, deliver: &mut dyn FnMut(Vec<T>)) {
+        let mut n = 0;
+        for idx in 0..self.shards.len() {
+            n += self.drain_shard(idx, deliver);
+        }
+        if n > 0 {
+            self.completed.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Inline-cap drain of a single slot's shard (the `put_nbi` overflow
+    /// path): deliver, keep pending, park the count in `completed`.
+    pub(crate) fn drain_slot(&self, slot: usize, deliver: &mut dyn FnMut(Vec<T>)) {
+        let n = self.drain_shard(slot % self.shards.len(), deliver);
+        if n > 0 {
+            self.completed.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// The quiet: deliver every shard, publish with **one** `Release`
+    /// fence, then retire everything delivered — by this quiet directly,
+    /// plus whatever eager/fence traffic parked in `completed`. Concurrent
+    /// quiets each retire exactly the operations they (or the swap they
+    /// won) delivered, so every op retires exactly once.
+    pub(crate) fn quiet(&self, deliver: &mut dyn FnMut(Vec<T>)) {
+        let mut n = 0;
+        for idx in 0..self.shards.len() {
+            n += self.drain_shard(idx, deliver);
+        }
+        fence(Ordering::Release);
+        let done = n + self.completed.swap(0, Ordering::Relaxed);
+        if done > 0 {
+            self.pending.fetch_sub(done, Ordering::Relaxed);
+        }
+    }
+}
+
+impl<T> Drop for ShardedQueue<T> {
+    /// Free any still-queued nodes. (The NBI layer quiesces on context drop
+    /// before this runs, so in production the shards are already empty;
+    /// this covers direct users and the error paths.)
+    fn drop(&mut self) {
+        for shard in self.shards.iter() {
+            let mut head = shard.head.swap(ptr::null_mut(), Ordering::Acquire);
+            while !head.is_null() {
+                // SAFETY: `&mut self` — no concurrent pushes; nodes are
+                // `Box::into_raw` allocations owned by the queue.
+                let node = unsafe { Box::from_raw(head) };
+                head = node.next;
+            }
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for ShardedQueue<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedQueue")
+            .field("shards", &self.shards.len())
+            .field("pending", &self.pending())
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loom model checks: exhaustive interleavings of the 2–3-thread schedules.
+// Only built under `--cfg loom` (CI's loom job adds the dev-dependency and
+// runs `cargo test --lib p2p::shard_queue::loom_model` with the cfg set).
+// ---------------------------------------------------------------------------
+#[cfg(all(test, loom))]
+mod loom_model {
+    use super::ShardedQueue;
+    use loom::sync::{Arc, Mutex};
+    use loom::thread;
+
+    /// Two pushers on distinct shards racing one another: the quiet after
+    /// both joins must deliver both entries and retire both.
+    #[test]
+    fn two_pushers_nothing_lost() {
+        loom::model(|| {
+            let q = Arc::new(ShardedQueue::<u32>::new(2));
+            let q1 = Arc::clone(&q);
+            let t = thread::spawn(move || {
+                q1.push(0, 1, 4);
+            });
+            q.push(1, 2, 4);
+            t.join().unwrap();
+            let mut got = Vec::new();
+            q.quiet(&mut |items| got.extend(items));
+            got.sort_unstable();
+            assert_eq!(got, vec![1, 2], "an entry was lost or duplicated");
+            assert_eq!(q.pending(), 0, "quiet must retire everything it delivered");
+        });
+    }
+
+    /// A push racing a quiet: whichever way the interleaving falls, the
+    /// entry is delivered exactly once (by the racing quiet or the final
+    /// one) and the accounting converges to zero — the Release/Acquire
+    /// pairing between the push's CAS and the drain's swap.
+    #[test]
+    fn push_racing_quiet_exactly_once() {
+        loom::model(|| {
+            let q = Arc::new(ShardedQueue::<u8>::new(1));
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let q1 = Arc::clone(&q);
+            let t = thread::spawn(move || {
+                q1.push(0, 7u8, 1);
+            });
+            let l = Arc::clone(&log);
+            q.quiet(&mut |items| l.lock().unwrap().extend(items));
+            t.join().unwrap();
+            let l = Arc::clone(&log);
+            q.quiet(&mut |items| l.lock().unwrap().extend(items));
+            assert_eq!(&*log.lock().unwrap(), &[7u8], "lost or double-delivered");
+            assert_eq!(q.pending(), 0);
+        });
+    }
+
+    /// Two concurrent quiets over one pre-filled shard: the drain lock +
+    /// swap guarantee each entry is delivered exactly once and in FIFO
+    /// order, and the two retirements sum to exactly the delivered count.
+    #[test]
+    fn concurrent_quiets_no_double_drain() {
+        loom::model(|| {
+            let q = Arc::new(ShardedQueue::<u8>::new(1));
+            q.push(0, 1, 1);
+            q.push(0, 2, 1);
+            let log = Arc::new(Mutex::new(Vec::new()));
+            let (qa, la) = (Arc::clone(&q), Arc::clone(&log));
+            let t = thread::spawn(move || qa.quiet(&mut |items| la.lock().unwrap().extend(items)));
+            let l = Arc::clone(&log);
+            q.quiet(&mut |items| l.lock().unwrap().extend(items));
+            t.join().unwrap();
+            assert_eq!(&*log.lock().unwrap(), &[1, 2], "must stay FIFO, exactly once");
+            assert_eq!(q.pending(), 0);
+        });
+    }
+
+    /// Drop with a racing pusher that finished before the drop: nothing
+    /// leaks, nothing double-frees (loom tracks the allocations).
+    #[test]
+    fn drop_after_push_frees_nodes() {
+        loom::model(|| {
+            let q = Arc::new(ShardedQueue::<Vec<u8>>::new(1));
+            let q1 = Arc::clone(&q);
+            let t = thread::spawn(move || {
+                q1.push(0, vec![1, 2, 3], 3);
+            });
+            t.join().unwrap();
+            drop(q);
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Default-harness tests: the same schedules, replayed deterministically via
+// join ordering, plus multi-thread hammers. These run under plain
+// `cargo test`, under Miri (provenance/leak checking of the raw-pointer
+// stack), and under ThreadSanitizer in CI.
+// ---------------------------------------------------------------------------
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn drain_all(q: &ShardedQueue<u64>) -> Vec<u64> {
+        let mut got = Vec::new();
+        q.quiet(&mut |items| got.extend(items));
+        got
+    }
+
+    #[test]
+    fn fifo_per_slot_and_accounting() {
+        let q = ShardedQueue::<u64>::new(4);
+        for v in [10, 11, 12] {
+            q.push(0, v, 8);
+        }
+        assert_eq!(q.pending(), 3);
+        assert_eq!(drain_all(&q), vec![10, 11, 12], "push order must be delivery order");
+        assert_eq!(q.pending(), 0);
+        // Empty quiet is a no-op.
+        assert_eq!(drain_all(&q), Vec::<u64>::new());
+        assert_eq!(q.pending(), 0);
+    }
+
+    /// Loom schedule A, deterministically: push completes before the first
+    /// quiet (join first), the quiet delivers it, the second quiet is empty.
+    #[test]
+    fn schedule_push_then_quiet() {
+        let q = Arc::new(ShardedQueue::<u64>::new(1));
+        let q1 = Arc::clone(&q);
+        std::thread::spawn(move || {
+            q1.push(0, 7, 1);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(drain_all(&q), vec![7]);
+        assert_eq!(drain_all(&q), Vec::<u64>::new());
+        assert_eq!(q.pending(), 0);
+    }
+
+    /// Loom schedule B, deterministically: the quiet runs before the push
+    /// (delivering nothing and retiring nothing of it); the entry is still
+    /// pending afterwards and the second quiet delivers it — a racing quiet
+    /// can never count away an undelivered op.
+    #[test]
+    fn schedule_quiet_then_push() {
+        let q = Arc::new(ShardedQueue::<u64>::new(1));
+        assert_eq!(drain_all(&q), Vec::<u64>::new());
+        let q1 = Arc::clone(&q);
+        std::thread::spawn(move || {
+            q1.push(0, 9, 1);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(q.pending(), 1, "op issued after the quiet stays pending");
+        assert_eq!(drain_all(&q), vec![9]);
+        assert_eq!(q.pending(), 0);
+    }
+
+    /// Many concurrent pushers, one final quiet: every entry arrives
+    /// exactly once, and each thread's own entries arrive in its program
+    /// order (same thread ⇒ same shard ⇒ FIFO).
+    #[test]
+    fn concurrent_pushers_nothing_lost_or_reordered() {
+        const THREADS: usize = 4;
+        let per_thread: u64 = if cfg!(miri) { 25 } else { 2000 };
+        // One shard per thread slot: each delivered batch is one thread's
+        // FIFO stream.
+        let q = Arc::new(ShardedQueue::<u64>::new(THREADS));
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        // Encode (thread, seq) so the check below can split
+                        // the streams back out.
+                        q.push(t, ((t as u64) << 32) | i, 8);
+                    }
+                });
+            }
+        });
+        assert_eq!(q.pending(), THREADS as u64 * per_thread);
+        let mut batches = Vec::new();
+        q.quiet(&mut |items| batches.push(items));
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, THREADS * per_thread as usize, "lost or duplicated entries");
+        for batch in &batches {
+            // A batch is one shard = one thread here: consecutive sequence
+            // numbers, single owner.
+            let owner = batch[0] >> 32;
+            let first = batch[0] & 0xFFFF_FFFF;
+            for (k, &v) in batch.iter().enumerate() {
+                assert_eq!(v >> 32, owner, "shard mixing across slots");
+                assert_eq!(v & 0xFFFF_FFFF, first + k as u64, "per-thread FIFO violated");
+            }
+        }
+        assert_eq!(q.pending(), 0);
+    }
+
+    /// Pushers racing quiet-ers: across all interleavings, the union of
+    /// everything delivered is exactly the set pushed, and the final
+    /// pending count is zero.
+    #[test]
+    fn pushers_racing_quiets_exactly_once() {
+        const PUSHERS: usize = 2;
+        let per_thread: u64 = if cfg!(miri) { 20 } else { 1000 };
+        let q = Arc::new(ShardedQueue::<u64>::new(2));
+        let delivered = Arc::new(std::sync::Mutex::new(Vec::new()));
+        std::thread::scope(|s| {
+            for t in 0..PUSHERS {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    for i in 0..per_thread {
+                        q.push(t, ((t as u64) << 32) | i, 8);
+                    }
+                });
+            }
+            for _ in 0..2 {
+                let q = Arc::clone(&q);
+                let delivered = Arc::clone(&delivered);
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        q.quiet(&mut |items| delivered.lock().unwrap().extend(items));
+                    }
+                });
+            }
+        });
+        let q = Arc::clone(&q);
+        q.quiet(&mut |items| delivered.lock().unwrap().extend(items));
+        let mut all = delivered.lock().unwrap().clone();
+        all.sort_unstable();
+        let mut want: Vec<u64> = (0..PUSHERS as u64)
+            .flat_map(|t| (0..per_thread).map(move |i| (t << 32) | i))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(all, want, "racing quiets lost or double-delivered an entry");
+        assert_eq!(q.pending(), 0);
+    }
+
+    /// Eager (already-delivered) ops retire only at a quiet, exactly once.
+    #[test]
+    fn eager_ops_retire_at_quiet() {
+        let q = ShardedQueue::<u64>::new(2);
+        q.note_eager();
+        q.note_eager();
+        assert_eq!(q.pending(), 2, "eager ops count until a quiet");
+        drain_all(&q);
+        assert_eq!(q.pending(), 0);
+        drain_all(&q);
+        assert_eq!(q.pending(), 0, "no double retirement");
+    }
+
+    /// The fence path delivers but keeps the accounting pending; the next
+    /// quiet retires it without re-delivering.
+    #[test]
+    fn fence_drain_delivers_but_keeps_pending() {
+        let q = ShardedQueue::<u64>::new(2);
+        q.push(0, 5, 8);
+        q.push(1, 6, 8);
+        let mut got = Vec::new();
+        q.drain(&mut |items| got.extend(items));
+        got.sort_unstable();
+        assert_eq!(got, vec![5, 6], "fence must deliver everything queued");
+        assert_eq!(q.pending(), 2, "fences never retire");
+        assert_eq!(drain_all(&q), Vec::<u64>::new(), "no re-delivery at the quiet");
+        assert_eq!(q.pending(), 0, "quiet retires the fence-delivered ops");
+    }
+
+    /// The inline-cap path: drain one slot only, pending preserved.
+    #[test]
+    fn drain_slot_is_scoped_and_pending_preserved() {
+        let q = ShardedQueue::<u64>::new(2);
+        q.push(0, 1, 8);
+        q.push(1, 2, 8);
+        let mut got = Vec::new();
+        q.drain_slot(0, &mut |items| got.extend(items));
+        assert_eq!(got, vec![1], "only slot 0's shard drains");
+        assert_eq!(q.pending(), 2);
+        assert_eq!(drain_all(&q), vec![2]);
+        assert_eq!(q.pending(), 0);
+    }
+
+    /// Push returns the shard's queued bytes (the inline-drain trigger).
+    #[test]
+    fn push_reports_shard_bytes() {
+        let q = ShardedQueue::<u64>::new(2);
+        assert_eq!(q.push(0, 1, 100), 100);
+        assert_eq!(q.push(0, 2, 50), 150);
+        assert_eq!(q.push(1, 3, 7), 7, "byte caps are per shard");
+        drain_all(&q);
+        assert_eq!(q.push(0, 4, 10), 10, "drain resets the shard's byte count");
+        drain_all(&q);
+    }
+
+    /// Dropping a queue with entries still queued frees them (Miri checks
+    /// for leaks and double-frees of the raw-pointer stack).
+    #[test]
+    fn drop_frees_queued_entries() {
+        let q = ShardedQueue::<Vec<u8>>::new(3);
+        for slot in 0..5 {
+            q.push(slot, vec![slot as u8; 32], 32);
+        }
+        drop(q);
+    }
+
+    /// Distinct threads get distinct slots; a thread's slot is stable.
+    #[test]
+    fn thread_slots_are_stable_and_distinct() {
+        let here = thread_slot();
+        assert_eq!(here, thread_slot());
+        let other = std::thread::spawn(thread_slot).join().unwrap();
+        assert_ne!(here, other);
+    }
+}

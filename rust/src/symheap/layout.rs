@@ -163,6 +163,14 @@ pub struct TeamCell {
     pub sync_flags: [AtomicU64; MAX_SYNC_ROUNDS],
     /// This member's completed-sync epoch on this slot (monotone).
     pub sync_epoch: AtomicU64,
+    /// Re-entrancy guard for `SHMEM_THREAD_MULTIPLE`: CAS'd 0→1 when this
+    /// PE enters a sync/barrier on the slot, stored back to 0 on exit. Two
+    /// threads of one PE entering the same team's sync concurrently is a
+    /// program error (the spec forbids it even at `MULTIPLE`); without the
+    /// guard it silently loses an arrival and hangs the team — with it, the
+    /// second entry panics at the call site. Lives in what was padding, so
+    /// the pinned 256-byte cell size is unchanged.
+    pub entry_guard: AtomicU64,
 }
 
 /// The header at offset 0 of every symmetric-heap segment.
@@ -305,9 +313,13 @@ mod tests {
         assert_eq!(off(cell, &cell.sync_flags), 56);
         assert_eq!(off(cell, &cell.sync_flags[1]), 64);
         assert_eq!(off(cell, &cell.sync_epoch), 56 + 8 * MAX_SYNC_ROUNDS);
+        // The entry guard fills the first padding word after the epoch; the
+        // cell must NOT grow for it.
+        assert_eq!(off(cell, &cell.entry_guard), 64 + 8 * MAX_SYNC_ROUNDS);
 
-        // 7 descriptor/linear words + MAX_SYNC_ROUNDS mailboxes + the epoch,
-        // rounded up to the 128-byte alignment: exactly 256 bytes today.
+        // 7 descriptor/linear words + MAX_SYNC_ROUNDS mailboxes + the epoch
+        // + the entry guard, rounded up to the 128-byte alignment: exactly
+        // 256 bytes today.
         assert_eq!(std::mem::size_of::<TeamCell>(), 256);
         assert_eq!(std::mem::align_of::<TeamCell>(), 128);
         // Consecutive slots are contiguous (no inter-element padding).

@@ -53,7 +53,14 @@ impl Ctx {
         }
         match self.config().barrier {
             BarrierKind::Dissemination => {
-                self.team_sync_dissemination(&ActiveSet::world(n), WORLD_TEAM_SLOT)
+                // Same re-entrancy guard as `team_sync_cells`: this arm
+                // reaches the world slot's mailboxes directly, so it must
+                // claim the slot itself (a second thread of this PE in a
+                // concurrent `sync_all`/`barrier_all` would consume this
+                // epoch's signals and hang both).
+                self.coll_entry_guard_acquire(WORLD_TEAM_SLOT);
+                self.team_sync_dissemination(&ActiveSet::world(n), WORLD_TEAM_SLOT);
+                self.coll_entry_guard_release(WORLD_TEAM_SLOT);
             }
             BarrierKind::Central => self.barrier_central(),
         }

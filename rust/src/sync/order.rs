@@ -32,6 +32,17 @@
 //! independently instead of serialising through one global `mfence`, and a
 //! context's pending ops are *provably* still pending after a sibling's
 //! quiet (see the flag-after-data conformance tests).
+//!
+//! **Threads** (`SHMEM_THREAD_MULTIPLE`): an explicit context's quiet is
+//! thread-safe without a queue-wide lock. The drain sweeps the batch's
+//! per-thread shards one at a time (each shard swap is `Acquire`, pairing
+//! with the issuing thread's `Release` push), performs the copies, and then
+//! publishes everything with a **single** `Release` fence — one fence per
+//! quiet, not one per shard. Concurrent quiets on one context are safe and
+//! each retires exactly the operations it shipped; a quiet on one
+//! [`crate::ctx::CommCtx`] still never completes, fences for, or retires a
+//! sibling context's traffic, even when that sibling lives on another
+//! thread (pinned by `tests/stress_threads.rs`).
 
 use crate::p2p::nbi::NbiDomain;
 use crate::pe::Ctx;
@@ -62,11 +73,12 @@ impl Ctx {
                 self.quiet();
                 self.nbi_retire(domain);
             }
-            // Explicit domain: batched drain + release publication + retire,
-            // as one critical section on the batch (a racing put_nbi from a
-            // sibling thread is either drained or counted after the retire).
-            // The drain copies synchronously, so no global completion fence
-            // is needed — and deliberately none is issued.
+            // Explicit domain: sharded drain + one release publication +
+            // retire-what-shipped (a racing put_nbi from a sibling thread
+            // is either taken by the drain's Acquire swap or stays queued
+            // with its count intact). The drain copies synchronously, so no
+            // global completion fence is needed — and deliberately none is
+            // issued.
             NbiDomain::Explicit(batch) => self.nbi_quiet_batch(batch),
         }
     }

@@ -23,9 +23,23 @@
 //! teams give collectives.
 
 use crate::collectives::ActiveSet;
+use crate::ctx::{CommCtx, CtxOptions};
 use crate::pe::Ctx;
 use crate::symheap::layout::MAX_TEAMS;
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::thread::ThreadId;
+
+/// Per-thread communication-context pool of one [`Team`] handle: lazily
+/// builds (and caches) a private `SERIALIZED` [`CommCtx`] per calling
+/// thread, so `SHMEM_THREAD_MULTIPLE` programs get per-thread completion
+/// state — one thread's `quiet` never drains, fences for, or stalls a
+/// sibling's — without managing contexts by hand.
+#[derive(Debug, Default)]
+pub(crate) struct CtxPool {
+    by_thread: Mutex<HashMap<ThreadId, Arc<CommCtx>>>,
+}
 
 /// The reserved sync-cell slot of the world team.
 pub const WORLD_TEAM_SLOT: usize = 0;
@@ -61,6 +75,10 @@ pub struct Team {
     /// it against the header so a stale clone fails loudly instead of
     /// touching a recycled slot.
     gen: u64,
+    /// Lazily-populated per-thread context pool ([`Team::ctx_for_thread`]).
+    /// Shared by clones of this handle (an `Arc`), so every clone hands a
+    /// given thread the same cached context.
+    pool: Arc<CtxPool>,
 }
 
 impl Team {
@@ -74,6 +92,7 @@ impl Team {
             my_idx: Some(ctx.my_pe()),
             slot: TeamSlot::Reserved(WORLD_TEAM_SLOT),
             gen: 0,
+            pool: Arc::new(CtxPool::default()),
         }
     }
 
@@ -90,6 +109,7 @@ impl Team {
             set,
             slot: TeamSlot::Legacy,
             gen: 0,
+            pool: Arc::new(CtxPool::default()),
         }
     }
 
@@ -232,6 +252,7 @@ impl Team {
             cell.sync_epoch.store(0, Ordering::Relaxed);
             cell.sync_count.store(0, Ordering::Relaxed);
             cell.sync_sense.store(0, Ordering::Relaxed);
+            cell.entry_guard.store(0, Ordering::Relaxed);
             cell.start.store(child_set.start as u64, Ordering::Release);
             cell.stride.store(child_set.stride as u64, Ordering::Release);
             cell.size.store(child_set.size as u64, Ordering::Release);
@@ -264,6 +285,7 @@ impl Team {
             my_idx: Some(i),
             slot: TeamSlot::Reserved(slot),
             gen: my_gen,
+            pool: Arc::new(CtxPool::default()),
         })
     }
 
@@ -351,6 +373,35 @@ impl Team {
     /// (`shmem_team_create_ctx`).
     pub fn create_ctx(&self, opts: crate::ctx::CtxOptions) -> crate::ctx::CommCtx {
         crate::ctx::CommCtx::create(self, opts)
+    }
+
+    /// The calling thread's pooled communication context on this team —
+    /// the `SHMEM_THREAD_MULTIPLE` fast path. The first call from a thread
+    /// creates a private `SERIALIZED` context (only this thread uses it, so
+    /// the promise holds by construction) and caches it; later calls from
+    /// the same thread — through this handle or any clone of it — return
+    /// the same `Arc`. Distinct threads get distinct contexts, hence
+    /// distinct ordering domains: one thread's `quiet` completes only its
+    /// own stream and provably does not drain or stall a sibling's (pinned
+    /// by `tests/stress_threads.rs`).
+    ///
+    /// Hot loops should call this once and keep the `Arc` rather than
+    /// re-looking it up per operation (the lookup takes the pool's map
+    /// lock). Pooled contexts live until every handle to the team *and* the
+    /// returned `Arc`s drop; each quiesces its own domain on drop.
+    pub fn ctx_for_thread(&self) -> Arc<CommCtx> {
+        let mut map = self.pool.by_thread.lock().unwrap();
+        map.entry(std::thread::current().id())
+            .or_insert_with(|| {
+                // Build the pooled context from a detached clone of this
+                // team handle (fresh empty pool): the context must not hold
+                // an `Arc` back into the pool that stores it, or the pair
+                // would leak as a reference cycle.
+                let mut team = self.clone();
+                team.pool = Arc::new(CtxPool::default());
+                Arc::new(CommCtx::create(&team, CtxOptions::new().serialized().private()))
+            })
+            .clone()
     }
 
     // -----------------------------------------------------------------
@@ -574,6 +625,28 @@ mod tests {
             let stale = t.clone();
             t.destroy();
             stale.destroy(); // must panic, not corrupt a recycled slot
+        });
+    }
+
+    #[test]
+    fn ctx_pool_caches_per_thread() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let team = ctx.team_world();
+            let a = team.ctx_for_thread();
+            let again = team.ctx_for_thread();
+            assert!(Arc::ptr_eq(&a, &again), "same thread must get the cached context");
+            let through_clone = team.clone().ctx_for_thread();
+            assert!(Arc::ptr_eq(&a, &through_clone), "clones share the pool");
+            assert!(a.options().serialized && a.options().private);
+            std::thread::scope(|s| {
+                let team = &team;
+                let a = a.clone();
+                s.spawn(move || {
+                    let b = team.ctx_for_thread();
+                    assert!(!Arc::ptr_eq(&a, &b), "distinct threads get distinct contexts");
+                });
+            });
         });
     }
 

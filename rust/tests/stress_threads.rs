@@ -1,0 +1,290 @@
+//! Multi-threaded stress & conformance suite for the `SHMEM_THREAD_MULTIPLE`
+//! hot paths: the sharded lock-free NBI queue, per-thread context pools, and
+//! the per-context quiet/fence isolation guarantees.
+//!
+//! Every test runs 8 worker threads per PE hammering `put_nbi`/`get`/
+//! `quiet`/`fence` concurrently, with flag-after-data oracles so a lost or
+//! torn delivery is an assertion failure, not a silent corruption. The
+//! guarantees pinned here are stated in `docs/memory_model.md` §"Thread
+//! levels":
+//!
+//! * per-thread contexts from [`Team::ctx_for_thread`] never share
+//!   completion state — one thread's quiet neither stalls nor drains a
+//!   sibling's pending operations;
+//! * a single shared context driven by many threads concurrently is sound:
+//!   the issue path is lock-free (per-thread shards), concurrent quiets each
+//!   retire exactly what they deliver, and per-thread program order is
+//!   preserved (last-writer-wins within a thread's own slice);
+//! * bulk (eager) puts issued from many threads are accounted exactly.
+//!
+//! Iteration counts scale down in debug builds so the default `cargo test`
+//! stays quick; the CI release job runs the full counts.
+
+use posh::ctx::CtxOptions;
+use posh::pe::{PoshConfig, TeamBarrierKind, World};
+use posh::sync::CmpOp;
+use posh::util::prng::Rng;
+
+/// Release-build iteration count, scaled down 8× for debug builds.
+fn iters(release: usize) -> usize {
+    if cfg!(debug_assertions) {
+        (release / 8).max(1)
+    } else {
+        release
+    }
+}
+
+/// Worker threads per PE.
+const THREADS: usize = 8;
+/// Elements (u64) in each thread's private slice of the data buffer.
+const ELEMS: usize = 64;
+
+/// A value unique per (writer PE, writer thread, round) — any lost, stale,
+/// or cross-thread-torn delivery lands a wrong stamp in the verify step.
+fn stamp(pe: usize, t: usize, round: u64) -> u64 {
+    ((pe as u64 + 1) << 56) ^ ((t as u64 + 1) << 40) ^ (round << 8)
+}
+
+/// The flagship hammer: 2 PEs × 8 threads, each thread owning a private
+/// context from [`Team::ctx_for_thread`] and a disjoint 64-element slice of
+/// the peer's data buffer. Per round, each thread writes its slice in
+/// randomly-sized `put_nbi` chunks, fences, raises a per-thread flag,
+/// quiets, then verifies the symmetric incoming slice element-by-element
+/// against the peer's stamp — lost and torn deliveries both fail loudly.
+/// Every 8th round the thread `get`s its own outgoing slice back and
+/// cross-checks it. An ack cell closes each round so a writer can never
+/// overwrite data its reader has not verified.
+fn per_thread_ctx_hammer(kind: TeamBarrierKind) {
+    let rounds = iters(200) as u64;
+    let mut cfg = PoshConfig::small();
+    cfg.team_barrier = Some(kind);
+    let w = World::threads(2, cfg).unwrap();
+    w.run(|ctx| {
+        let data = ctx.shmalloc_n::<u64>(THREADS * ELEMS).unwrap();
+        let flags = ctx.shmalloc_n::<u64>(THREADS).unwrap();
+        let acks = ctx.shmalloc_n::<u64>(THREADS).unwrap();
+        unsafe {
+            ctx.local_mut(data).fill(0);
+            ctx.local_mut(flags).fill(0);
+            ctx.local_mut(acks).fill(0);
+        }
+        ctx.barrier_all();
+        let me = ctx.my_pe();
+        let peer = 1 - me;
+        let team = ctx.team_world();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let ctx = ctx.clone();
+                let team = team.clone();
+                s.spawn(move || {
+                    let c = team.ctx_for_thread();
+                    let mut rng = Rng::for_pe(0xC0FFEE + t as u64, me);
+                    let base = t * ELEMS;
+                    for round in 1..=rounds {
+                        // Write my slice of the peer's buffer in random
+                        // chunks, all deferred (512 B ≪ NBI_DEFER_MAX_BYTES).
+                        let vals: Vec<u64> =
+                            (0..ELEMS as u64).map(|i| stamp(me, t, round) + i).collect();
+                        let mut off = 0;
+                        while off < ELEMS {
+                            let len = rng.usize_in(1, ELEMS - off + 1);
+                            c.put_nbi(data.slice(base + off, len), &vals[off..off + len], peer);
+                            off += len;
+                        }
+                        // Flag-after-data: fence orders the drain before the
+                        // flag, quiet completes the round.
+                        c.fence();
+                        c.put_one(flags.at(t), round, peer);
+                        c.quiet();
+                        // Wait for the peer thread's matching write to me,
+                        // then verify every element of my incoming slice.
+                        ctx.wait_until(flags.at(t), CmpOp::Ge, round);
+                        let seen = unsafe { ctx.local(data.slice(base, ELEMS)) };
+                        for (i, &v) in seen.iter().enumerate() {
+                            assert_eq!(
+                                v,
+                                stamp(peer, t, round) + i as u64,
+                                "PE {me} thread {t} round {round}: lost/torn delivery at {i}"
+                            );
+                        }
+                        if round % 8 == 0 {
+                            // Read my own outgoing slice back from the peer:
+                            // my quiet completed it, so it must match.
+                            let mut back = vec![0u64; ELEMS];
+                            c.get(&mut back, data.slice(base, ELEMS), peer);
+                            assert_eq!(back, vals, "PE {me} thread {t} round {round}: get");
+                        }
+                        // Ack so the peer may overwrite; wait for ours.
+                        c.put_one(acks.at(t), round, peer);
+                        c.quiet();
+                        ctx.wait_until(acks.at(t), CmpOp::Ge, round);
+                    }
+                });
+            }
+        });
+        team.sync(); // the engine under test (kind) on the world slot
+        ctx.barrier_all();
+    });
+}
+
+#[test]
+fn per_thread_ctx_hammer_dissemination() {
+    per_thread_ctx_hammer(TeamBarrierKind::Dissemination);
+}
+
+#[test]
+fn per_thread_ctx_hammer_linear_fanin() {
+    per_thread_ctx_hammer(TeamBarrierKind::LinearFanin);
+}
+
+/// One context, no promises, shared by 8 threads concurrently — the
+/// `SHMEM_THREAD_MULTIPLE` contract. The issue path must be lock-free-safe
+/// under contention, interleaved quiets/fences from arbitrary threads must
+/// retire exactly what they deliver, and per-thread program order must hold:
+/// after the final quiet each thread's slice carries its **last** round's
+/// values (the sharded queue keeps one thread's puts FIFO, so last-writer
+/// -wins within a slice is guaranteed even though rounds raced).
+#[test]
+fn shared_multiple_ctx_concurrent_put_nbi() {
+    let rounds = iters(300) as u64;
+    let w = World::threads(2, PoshConfig::small()).unwrap();
+    w.run(|ctx| {
+        let data = ctx.shmalloc_n::<u64>(THREADS * ELEMS).unwrap();
+        unsafe { ctx.local_mut(data).fill(0) };
+        ctx.barrier_all();
+        let me = ctx.my_pe();
+        let peer = 1 - me;
+        let world = ctx.team_world();
+        let shared = world.create_ctx(CtxOptions::new());
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let shared = &shared;
+                s.spawn(move || {
+                    let mut rng = Rng::for_pe(0xBEEF + t as u64, me);
+                    let base = t * ELEMS;
+                    for round in 1..=rounds {
+                        let vals: Vec<u64> =
+                            (0..ELEMS as u64).map(|i| stamp(me, t, round) + i).collect();
+                        let mut off = 0;
+                        while off < ELEMS {
+                            let len = rng.usize_in(1, ELEMS - off + 1);
+                            shared.put_nbi(
+                                data.slice(base + off, len),
+                                &vals[off..off + len],
+                                peer,
+                            );
+                            off += len;
+                        }
+                        // Arbitrary threads quiet and fence the shared
+                        // context mid-stream; neither may lose or duplicate
+                        // a sibling's queued operations.
+                        if round % 16 == 0 {
+                            shared.quiet();
+                        }
+                        if round % 7 == 0 {
+                            shared.fence();
+                        }
+                    }
+                });
+            }
+        });
+        shared.quiet();
+        assert_eq!(shared.pending_nbi(), 0, "quiet must retire everything issued");
+        ctx.barrier_all();
+        for t in 0..THREADS {
+            let seen = unsafe { ctx.local(data.slice(t * ELEMS, ELEMS)) };
+            for (i, &v) in seen.iter().enumerate() {
+                assert_eq!(
+                    v,
+                    stamp(peer, t, rounds) + i as u64,
+                    "thread {t} elem {i}: per-thread FIFO / last-writer-wins violated"
+                );
+            }
+        }
+        shared.destroy();
+        ctx.barrier_all();
+    });
+}
+
+/// Per-thread completion isolation, the [`Team::ctx_for_thread`] guarantee:
+/// a sibling thread's quiet completes **its own** context only — it neither
+/// delivers nor retires (nor waits for) another thread's deferred puts.
+#[test]
+fn thread_quiet_does_not_stall_or_drain_siblings() {
+    let w = World::threads(1, PoshConfig::small()).unwrap();
+    w.run(|ctx| {
+        let buf = ctx.shmalloc_n::<u64>(4).unwrap();
+        unsafe { ctx.local_mut(buf).fill(0) };
+        let team = ctx.team_world();
+        let a = team.ctx_for_thread();
+        a.put_nbi(buf.slice(0, 2), &[7, 8], 0);
+        assert_eq!(a.pending_nbi(), 1);
+        std::thread::scope(|s| {
+            let team = team.clone();
+            let a_handle = a.clone();
+            s.spawn(move || {
+                let b = team.ctx_for_thread();
+                assert!(
+                    !std::sync::Arc::ptr_eq(&a_handle, &b),
+                    "a spawned thread must get its own pooled context"
+                );
+                b.put_nbi(buf.slice(2, 2), &[9, 10], 0);
+                b.quiet();
+                assert_eq!(b.pending_nbi(), 0, "B's quiet retires B");
+                assert_eq!(
+                    a_handle.pending_nbi(),
+                    1,
+                    "B's quiet must not retire A's pending op"
+                );
+            });
+        });
+        // B's quiet delivered B's data — and provably did not drain A's.
+        assert_eq!(unsafe { ctx.local(buf) }, &[0, 0, 9, 10][..]);
+        assert_eq!(a.pending_nbi(), 1);
+        a.quiet();
+        assert_eq!(a.pending_nbi(), 0);
+        assert_eq!(unsafe { ctx.local(buf) }, &[7, 8, 9, 10][..]);
+    });
+}
+
+/// Bulk puts (above the deferral cap) are issued eagerly but still counted
+/// on the issuing context; 8 threads × eager traffic on one shared context
+/// must leave the accounting exactly balanced — no lost increments, no
+/// double retirement from concurrent quiets.
+#[test]
+fn bulk_eager_threads_accounting() {
+    let nelems = posh::p2p::nbi::NBI_DEFER_MAX_BYTES / std::mem::size_of::<u64>() + 1;
+    let rounds = iters(40) as u64;
+    let w = World::threads(1, PoshConfig::small()).unwrap();
+    w.run(|ctx| {
+        let buf = ctx.shmalloc_n::<u64>(THREADS * nelems).unwrap();
+        let team = ctx.team_world();
+        let shared = team.create_ctx(CtxOptions::new());
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let shared = &shared;
+                s.spawn(move || {
+                    for round in 1..=rounds {
+                        let vals = vec![stamp(0, t, round); nelems];
+                        shared.put_nbi(buf.slice(t * nelems, nelems), &vals, 0);
+                        if round % 4 == 0 {
+                            shared.quiet();
+                        }
+                    }
+                    shared.quiet();
+                });
+            }
+        });
+        shared.quiet();
+        assert_eq!(shared.pending_nbi(), 0, "eager accounting must balance");
+        for t in 0..THREADS {
+            let seen = unsafe { ctx.local(buf.slice(t * nelems, nelems)) };
+            assert!(
+                seen.iter().all(|&v| v == stamp(0, t, rounds)),
+                "thread {t}: bulk data lost or stale"
+            );
+        }
+        shared.destroy();
+        ctx.shfree(buf).unwrap();
+    });
+}
