@@ -4,7 +4,7 @@
 //! alongside for the shape comparison.
 
 use posh::bench::{ascii_plot, auto_batch, measure, write_series_csv, Series};
-use posh::mem::copy::global_impl;
+use posh::mem::copy::dispatch_name;
 use posh::model::machines::paper_machines;
 use posh::model::CostModel;
 use posh::pe::{PoshConfig, World};
@@ -15,7 +15,7 @@ fn main() {
     let mut cfg = PoshConfig::default();
     cfg.heap_size = MAX_SIZE + (8 << 20);
     let world = World::threads(2, cfg).unwrap();
-    println!("Figure 3 sweep: put/get, 8 B .. 64 MiB, copy impl {}", global_impl().name());
+    println!("Figure 3 sweep: put/get, 8 B .. 64 MiB, copy dispatch {}", dispatch_name());
 
     let samples: Vec<Vec<(usize, f64, f64)>> = world.run_collect(|ctx| {
         let buf = ctx.shmalloc_n::<u8>(MAX_SIZE).unwrap();
@@ -73,8 +73,14 @@ fn main() {
     let get_model = CostModel::fit(&samples.iter().map(|&(s, _, g)| (s, g)).collect::<Vec<_>>());
     println!("\nfitted: put {put_model}");
     println!("fitted: get {get_model}");
-    assert!(put_model.r2 > 0.98, "put must follow T(n)=α+n/β (R² {})", put_model.r2);
-    assert!(get_model.r2 > 0.98, "get must follow T(n)=α+n/β (R² {})", get_model.r2);
+    // Under planned dispatch the sweep crosses engine boundaries (stock →
+    // temporal vector → NT streaming), so a *single* affine fit is looser
+    // than it was with one pinned engine — each regime alone is tight (the
+    // piecewise model in `oshrun calibrate` shows per-range R²), but one
+    // α/β across regimes absorbs the β steps. 0.9 still rejects any
+    // non-affine shape while tolerating the plan's β discontinuities.
+    assert!(put_model.r2 > 0.9, "put must follow T(n)=α+n/β (R² {})", put_model.r2);
+    assert!(get_model.r2 > 0.9, "get must follow T(n)=α+n/β (R² {})", get_model.r2);
     // Figure-3 shape: monotone latency, bandwidth saturating at large sizes
     // (final point within 3x of peak; small sizes latency-bound).
     let last = samples.last().unwrap();

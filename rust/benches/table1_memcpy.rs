@@ -1,30 +1,80 @@
 //! **Table 1** — "Comparison of the performance observed with various memcpy
 //! implementations": latency (ns) and bandwidth (Gb/s) per copy
-//! implementation.
+//! implementation — extended into the copy-plan regression gate.
 //!
 //! The paper's rows are five 2010-era machines; ours are (a) this container,
 //! measured, and (b) the five paper machines *replayed from their fitted
 //! cost models* (DESIGN.md §1 substitution) so the table shape is directly
 //! comparable. The paper's columns memcpy/MMX/MMX2/SSE map to
-//! stock/unrolled64/nontemporal/sse2 (+ avx2, today's continuation).
+//! stock/unrolled64/nontemporal/sse2 (+ avx2/avx512/avx512nt, today's
+//! continuation), plus a `planned` column: the size-aware
+//! [`CopyPlan`](posh::mem::plan::CopyPlan) dispatch.
+//!
+//! Beyond the paper's two operating points (latency at 8 B, bandwidth at
+//! 64 MiB) this bench sweeps the full size range and **gates** the plan:
+//! at every swept size the planned dispatch must land within 10% (plus
+//! 1 ns of absolute grace for the timer floor) of the best fixed engine
+//! (one noise retry; `POSH_BENCH_NO_ASSERT=1` demotes the gate to a
+//! report). Results land in `bench_out/BENCH_table1.json` next to the
+//! ablation CSVs.
 //!
 //! Protocol = §5: 20 reps after warm-up; latency at 8 B, bandwidth at 64 MiB.
 
 use posh::bench::{auto_batch, measure, Table};
-use posh::mem::copy::{copy_bytes_with, CopyImpl};
+use posh::mem::copy::{
+    copy_bytes, copy_bytes_with, dispatch_name, set_global_impl, set_global_planned, CopyImpl,
+};
 use posh::model::machines::paper_machines;
 
 const LAT_SIZE: usize = 8;
 const BW_SIZE: usize = 64 << 20;
 
+/// Swept copy sizes: spans all three plan ranges (small / temporal /
+/// non-temporal) on any plausible threshold placement.
+const SWEEP: [usize; 11] = [
+    8,
+    64,
+    256,
+    1 << 10,
+    4 << 10,
+    64 << 10,
+    256 << 10,
+    1 << 20,
+    4 << 20,
+    16 << 20,
+    64 << 20,
+];
+
+/// Bandwidth of a `size`-byte copy *as deployed*: through [`copy_bytes`]
+/// dispatch, with either a forced engine or planned mode installed — so the
+/// gate compares real configurations, dispatch cost included, not raw
+/// engine calls.
+fn bw_at(size: usize, dst: &mut [u8], src: &[u8], imp: Option<CopyImpl>) -> f64 {
+    match imp {
+        Some(imp) => set_global_impl(imp),
+        None => set_global_planned(),
+    }
+    let batch = auto_batch(30.0 + size as f64 / 8.0);
+    let m = measure(size, batch, || unsafe {
+        copy_bytes(dst.as_mut_ptr(), src.as_ptr(), size);
+    });
+    set_global_planned();
+    m.bandwidth_gbps()
+}
+
 fn main() {
+    // The bench owns its process: measure the planned column through real
+    // planned dispatch even if a copy-* feature pinned a default engine.
+    set_global_planned();
     let impls = CopyImpl::available();
-    let names: Vec<&str> = impls.iter().map(|i| i.name()).collect();
+    let mut names: Vec<&str> = impls.iter().map(|i| i.name()).collect();
+    names.push("planned");
+    println!("copy dispatch: {}", dispatch_name());
 
     let mut lat = Table::new("Table 1a: memory copy latency", "ns", &names);
     let mut bw = Table::new("Table 1b: memory copy bandwidth", "Gb/s", &names);
 
-    // --- Measured row: this machine.
+    // --- Measured rows: this machine.
     let src = vec![0xA5u8; BW_SIZE];
     let mut dst = vec![0u8; BW_SIZE];
     let mut lat_row = Vec::new();
@@ -39,6 +89,15 @@ fn main() {
         });
         bw_row.push(m.bandwidth_gbps());
     }
+    // Planned column.
+    let m = measure(LAT_SIZE, auto_batch(30.0), || unsafe {
+        copy_bytes(dst.as_mut_ptr(), src.as_ptr(), LAT_SIZE);
+    });
+    lat_row.push(m.latency_ns());
+    let m = measure(BW_SIZE, 1, || unsafe {
+        copy_bytes(dst.as_mut_ptr(), src.as_ptr(), BW_SIZE);
+    });
+    bw_row.push(m.bandwidth_gbps());
     lat.row("this-machine", lat_row.clone());
     bw.row("this-machine", bw_row.clone());
 
@@ -46,8 +105,8 @@ fn main() {
     // (stock memcpy + best tuned copy; the dead ISAs have no modern meaning,
     // so replay fills only the columns that map).
     for m in paper_machines() {
-        let mut l = vec![0.0; impls.len()];
-        let mut b = vec![0.0; impls.len()];
+        let mut l = vec![0.0; names.len()];
+        let mut b = vec![0.0; names.len()];
         for (i, imp) in impls.iter().enumerate() {
             match imp {
                 CopyImpl::Stock => {
@@ -70,9 +129,95 @@ fn main() {
     lat.write_csv("table1_latency").unwrap();
     bw.write_csv("table1_bandwidth").unwrap();
 
-    // --- Shape checks (the claims Table 1 supports in the paper).
+    // --- The plan gate: sweep all sizes, planned vs every fixed engine.
+    let strict = std::env::var("POSH_BENCH_NO_ASSERT").map_or(true, |v| v != "1");
     let stock_idx = impls.iter().position(|i| *i == CopyImpl::Stock).unwrap();
-    let best_bw = bw_row.iter().cloned().fold(f64::MIN, f64::max);
+    let mut sweep_table = Table::new("Copy-plan sweep", "Gb/s", &names);
+    let mut json = String::from("{\n  \"sizes\": [\n");
+    let mut worst: (f64, usize) = (0.0, 0); // (plan slowdown ratio, size)
+    for (si, &size) in SWEEP.iter().enumerate() {
+        let mut row: Vec<f64> = impls
+            .iter()
+            .map(|&imp| bw_at(size, &mut dst, &src, Some(imp)))
+            .collect();
+        let mut planned = bw_at(size, &mut dst, &src, None);
+        let (mut best_i, mut best) = (0usize, f64::MIN);
+        for (i, &g) in row.iter().enumerate() {
+            if g > best {
+                best = g;
+                best_i = i;
+            }
+        }
+        // Gate: planned within 10% of the best fixed engine, plus 1 ns of
+        // absolute grace — at 8 B a copy is a few ns and one extra
+        // predicted load shows up as tens of percent while meaning nothing.
+        let ns_of = |gbps: f64| size as f64 * 8.0 / gbps.max(1e-9);
+        let over = |planned: f64, best: f64| ns_of(planned) > ns_of(best) * 1.10 + 1.0;
+        if over(planned, best) {
+            // One retry: re-measure both contenders, keep the better run
+            // of each (median-of-20 is still occasionally noisy at 8 B).
+            planned = planned.max(bw_at(size, &mut dst, &src, None));
+            row[best_i] = row[best_i].max(bw_at(size, &mut dst, &src, Some(impls[best_i])));
+            best = row[best_i];
+        }
+        let ratio = best / planned;
+        if ratio > worst.0 {
+            worst = (ratio, size);
+        }
+        println!(
+            "  {:>9} B  planned {:>7.2} Gb/s  best {:>7.2} ({})  plan/best {:.3}",
+            size,
+            planned,
+            best,
+            impls[best_i].name(),
+            planned / best
+        );
+        row.push(planned);
+        sweep_table.row(&format!("{size}B"), row.clone());
+        let engines_json: Vec<String> = impls
+            .iter()
+            .zip(&row)
+            .map(|(imp, g)| format!("\"{}\": {:.4}", imp.name(), g))
+            .collect();
+        json.push_str(&format!(
+            "    {{\"bytes\": {}, \"engines\": {{{}}}, \"planned_gbps\": {:.4}, \
+             \"best_engine\": \"{}\", \"best_gbps\": {:.4}, \"plan_over_best\": {:.4}, \
+             \"best_over_stock\": {:.4}}}{}\n",
+            size,
+            engines_json.join(", "),
+            planned,
+            impls[best_i].name(),
+            best,
+            planned / best,
+            best / row[stock_idx].max(1e-9),
+            if si + 1 == SWEEP.len() { "" } else { "," }
+        ));
+        if strict {
+            assert!(
+                !over(planned, best),
+                "planned dispatch is {:.1}% slower than {} at {} B \
+                 (gate: ≤10% + 1 ns; POSH_BENCH_NO_ASSERT=1 to record anyway)",
+                (ratio - 1.0) * 100.0,
+                impls[best_i].name(),
+                size
+            );
+        } else if over(planned, best) {
+            println!(
+                "  WARN: plan {:.1}% behind {} at {} B (gate disabled)",
+                (ratio - 1.0) * 100.0,
+                impls[best_i].name(),
+                size
+            );
+        }
+    }
+    json.push_str("  ]\n}\n");
+    sweep_table.print();
+    sweep_table.write_csv("table1_sweep").unwrap();
+    std::fs::create_dir_all("bench_out").unwrap();
+    std::fs::write("bench_out/BENCH_table1.json", json).unwrap();
+
+    // --- Shape checks (the claims Table 1 supports in the paper).
+    let best_bw = bw_row[..impls.len()].iter().cloned().fold(f64::MIN, f64::max);
     assert!(
         bw_row[stock_idx] >= 0.5 * best_bw,
         "stock memcpy must be within 2x of the best copy (paper: 'the stock \
@@ -81,10 +226,16 @@ fn main() {
         best_bw
     );
     println!(
-        "\nshape check OK: stock {:.1} Gb/s vs best {:.1} Gb/s (ratio {:.2})",
+        "\nshape check OK: stock {:.1} Gb/s vs best {:.1} Gb/s (ratio {:.2}); \
+         plan gate worst ratio {:.3} at {} B",
         bw_row[stock_idx],
         best_bw,
-        bw_row[stock_idx] / best_bw
+        bw_row[stock_idx] / best_bw,
+        worst.0,
+        worst.1
     );
-    println!("csv: bench_out/table1_latency.csv, bench_out/table1_bandwidth.csv");
+    println!(
+        "csv: bench_out/table1_latency.csv, bench_out/table1_bandwidth.csv, \
+         bench_out/table1_sweep.csv; json: bench_out/BENCH_table1.json"
+    );
 }

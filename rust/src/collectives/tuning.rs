@@ -17,9 +17,15 @@
 //! 1. `POSH_ALPHA_NS` + `POSH_BETA_GBPS` (or `PoshConfig::cost_model`) —
 //!    postulated constants, no measurement;
 //! 2. a fast α/β micro-calibration over the shm channel
-//!    ([`calibrate`] — on a shared-memory node a put *is* a copy by the
-//!    origin core, so timing the configured copy engine over a size sweep
-//!    *is* measuring the channel), run once per process;
+//!    ([`calibrate_piecewise`] — on a shared-memory node a put *is* a copy
+//!    by the origin core, so timing the size-aware copy dispatch over a
+//!    size sweep *is* measuring the channel), run once per process. The
+//!    calibration fits one α/β **per size regime** (L1/L2/LLC/DRAM buckets,
+//!    boundaries from [`CacheInfo::detect`]) plus the pooled whole-sweep
+//!    fit; [`Tuning::select`] prices candidates with the bucket that
+//!    governs the payload ([`Tuning::coll_model_at`]), so an L1-regime flag
+//!    exchange and a DRAM-regime broadcast can argmin to different
+//!    algorithms;
 //! 3. if the calibration fit is degenerate
 //!    ([`crate::model::CostModel::is_degenerate`]) or too noisy, the
 //!    paper's postulated constants ([`POSTULATED_ALPHA_NS`] /
@@ -43,6 +49,8 @@
 //! `docs/tuning.md`.
 
 use super::algorithm::AlgoKind;
+use crate::mem::plan::CacheInfo;
+use crate::model::piecewise::{PiecewiseModel, RangeModel};
 use crate::model::CostModel;
 use crate::pe::TeamBarrierKind;
 use crate::sync::barrier::ceil_log2;
@@ -168,13 +176,28 @@ pub const MIN_CALIBRATION_R2: f64 = 0.5;
 #[derive(Clone, Copy, Debug)]
 pub struct Tuning {
     model: CostModel,
+    pw: PiecewiseModel,
     source: TuningSource,
 }
 
 impl Tuning {
-    /// Build an engine from an explicit model.
+    /// Build an engine from a single explicit model: every size regime is
+    /// priced by the same α/β (the piecewise view is
+    /// [`PiecewiseModel::uniform`]).
     pub fn new(model: CostModel, source: TuningSource) -> Tuning {
-        Tuning { model, source }
+        Tuning {
+            model,
+            pw: PiecewiseModel::uniform(model),
+            source,
+        }
+    }
+
+    /// Build an engine from a per-range calibration: `model` is the
+    /// whole-sweep affine fit (display, the coalescing `n₁/₂`, legacy wire
+    /// adopters), `pw` the per-regime fits that [`Tuning::select`] prices
+    /// with.
+    pub fn new_piecewise(model: CostModel, pw: PiecewiseModel, source: TuningSource) -> Tuning {
+        Tuning { model, pw, source }
     }
 
     /// Convenience: an engine postulated from α (ns) and bandwidth (Gb/s) —
@@ -183,9 +206,19 @@ impl Tuning {
         Tuning::new(CostModel::from_alpha_gbps(alpha_ns, gbps), TuningSource::Postulated)
     }
 
-    /// The underlying point-to-point model.
+    /// The whole-sweep point-to-point model.
     pub fn model(&self) -> &CostModel {
         &self.model
+    }
+
+    /// The per-size-regime channel model.
+    pub fn piecewise(&self) -> &PiecewiseModel {
+        &self.pw
+    }
+
+    /// The α/β governing a `bytes`-sized payload (the regime bucket's fit).
+    pub fn model_for(&self, bytes: usize) -> &CostModel {
+        self.pw.model_for(bytes)
     }
 
     /// Where the model came from.
@@ -236,23 +269,59 @@ impl Tuning {
     /// | alltoall | linear-put | `(n−1)·m(s) + α` |
     /// | barrier | (see [`Tuning::select_barrier`]) | dissemination `L·2α` vs linear fan-in `2(n−1)·α` |
     pub fn coll_model(&self, op: CollOp, algo: AlgoKind, team_size: usize) -> CostModel {
-        let a = self.model.alpha_ns;
+        self.compose(&self.model, op, algo, team_size, 0)
+    }
+
+    /// [`Tuning::coll_model`] priced with the regime that governs a
+    /// `bytes`-sized payload ([`Tuning::model_for`]): the per-range α/β is
+    /// substituted as the point-to-point base model, so an L1-resident flag
+    /// exchange and a DRAM-streaming broadcast compose different costs —
+    /// and can argmin to different algorithms.
+    pub fn coll_model_at(
+        &self,
+        op: CollOp,
+        algo: AlgoKind,
+        team_size: usize,
+        bytes: usize,
+    ) -> CostModel {
+        self.compose(self.pw.model_for(bytes), op, algo, team_size, bytes)
+    }
+
+    /// The shared composition: `base` is the point-to-point model to build
+    /// on (whole-sweep or one regime's fit), `bytes` only feeds the
+    /// `Adaptive` re-selection arm.
+    fn compose(
+        &self,
+        base: &CostModel,
+        op: CollOp,
+        algo: AlgoKind,
+        team_size: usize,
+        bytes: usize,
+    ) -> CostModel {
+        let a = base.alpha_ns;
         // ns per byte of one copy; 0 when the base model is degenerate
         // (β = ∞) so the composition degrades to pure latency comparison.
-        let c = if self.model.beta_bytes_per_ns.is_finite() {
-            1.0 / self.model.beta_bytes_per_ns
+        let c = if base.beta_bytes_per_ns.is_finite() {
+            1.0 / base.beta_bytes_per_ns
         } else {
             0.0
         };
+        let r2 = base.r2;
         let n1 = team_size.saturating_sub(1) as f64;
         let n = team_size as f64;
         let l = ceil_log2(team_size.max(1)) as f64;
         let (base, slope) = match (op, algo) {
             // `Adaptive` is a selector, not a schedule; its "model" is the
-            // latency-regime argmin's (select never returns Adaptive, so
+            // argmin's at this payload (select never returns Adaptive, so
             // this cannot recurse).
             (_, AlgoKind::Adaptive) => {
-                return self.coll_model(op, self.select(op, team_size, 0), team_size);
+                return self.compose(
+                    base,
+                    op,
+                    self.select(op, team_size, bytes),
+                    team_size,
+                    bytes,
+                );
             }
             (CollOp::Broadcast, AlgoKind::LinearPut) => (n1 * a + a, n1 * c),
             (CollOp::Broadcast, AlgoKind::Tree | AlgoKind::RecursiveDoubling) => {
@@ -273,23 +342,29 @@ impl Tuning {
         CostModel {
             alpha_ns: base,
             beta_bytes_per_ns: if slope > 0.0 { 1.0 / slope } else { f64::INFINITY },
-            r2: self.model.r2,
+            r2,
         }
     }
 
     /// Pick the algorithm the model predicts fastest for `op` moving
     /// `bytes` per member over a team of `team_size` — the argmin of
-    /// [`Tuning::coll_model`] over [`Tuning::candidates`], ties broken by
+    /// [`Tuning::coll_model_at`] over [`Tuning::candidates`], ties broken by
     /// candidate order. Never returns [`AlgoKind::Adaptive`].
+    ///
+    /// Pricing goes through the piecewise model: the regime bucket of
+    /// `bytes` supplies the α/β the candidates are composed from, so the
+    /// same operation can resolve differently in the L1 and DRAM regimes.
+    /// (With a single-model engine every bucket is identical and this is
+    /// exactly the classic whole-sweep argmin.)
     pub fn select(&self, op: CollOp, team_size: usize, bytes: usize) -> AlgoKind {
         let cands = Self::candidates(op, team_size);
         let mut best = cands[0];
         if team_size <= 1 {
             return best; // degenerate team: nothing to schedule
         }
-        let mut best_ns = self.coll_model(op, best, team_size).predict_ns(bytes);
+        let mut best_ns = self.coll_model_at(op, best, team_size, bytes).predict_ns(bytes);
         for &c in &cands[1..] {
-            let ns = self.coll_model(op, c, team_size).predict_ns(bytes);
+            let ns = self.coll_model_at(op, c, team_size, bytes).predict_ns(bytes);
             if ns < best_ns {
                 best = c;
                 best_ns = ns;
@@ -362,28 +437,113 @@ pub fn calibrate() -> CostModel {
     let max = *SIZES.last().unwrap();
     let src = vec![0x5Au8; max];
     let mut dst = vec![0u8; max];
-    let imp = crate::mem::copy::global_impl();
     let mut samples = Vec::with_capacity(SIZES.len());
     for &s in &SIZES {
-        // Batch so one repetition is ≥ ~10 µs (amortises the clock read).
-        let batch = (128 << 10) / s.max(1);
-        let batch = batch.clamp(1, 4096);
-        let mut best = f64::MAX;
-        for rep in 0..=REPS {
-            let t0 = std::time::Instant::now();
-            for _ in 0..batch {
-                crate::mem::copy::copy_slice_with(imp, &mut dst[..s], &src[..s]);
-                std::hint::black_box(&dst);
-            }
-            let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
-            if rep > 0 {
-                // rep 0 is the warm-up (page faults, cache training)
-                best = best.min(ns);
-            }
-        }
-        samples.push((s, best));
+        samples.push((s, time_copy_ns(&mut dst, &src, s, REPS)));
     }
     CostModel::fit(&samples)
+}
+
+/// Time one `s`-byte copy through the engine planned dispatch resolves for
+/// that size (or the forced engine when one is configured): minimum over
+/// `reps` batched repetitions, in ns per copy. Minima are robust against
+/// scheduler preemption; rep 0 is the warm-up (page faults, cache
+/// training). The batch keeps one repetition ≥ ~10 µs so the clock read
+/// amortises.
+fn time_copy_ns(dst: &mut [u8], src: &[u8], s: usize, reps: usize) -> f64 {
+    let imp = crate::mem::copy::engine_for(s);
+    let batch = ((128 << 10) / s.max(1)).clamp(1, 4096);
+    let mut best = f64::MAX;
+    for rep in 0..=reps {
+        let t0 = std::time::Instant::now();
+        for _ in 0..batch {
+            crate::mem::copy::copy_slice_with(imp, &mut dst[..s], &src[..s]);
+            std::hint::black_box(&dst);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / batch as f64;
+        if rep > 0 {
+            best = best.min(ns);
+        }
+    }
+    best
+}
+
+/// Cap on any single calibration copy: keeps the startup budget bounded on
+/// machines with very large LLCs (where the DRAM regime would otherwise ask
+/// for hundreds-of-MiB buffers). Ranges whose sample sizes all fall outside
+/// their bucket after capping simply reuse the whole-sweep fit.
+const MAX_CAL_BYTES: usize = 32 << 20;
+
+/// Extend [`calibrate`] into a per-range fit: one α/β per L1/L2/LLC/DRAM
+/// bucket (boundaries from [`CacheInfo::detect`]), each fitted from 2–4
+/// samples inside its bucket, measured through the same size-aware copy
+/// dispatch the data path uses. Returns the whole-sweep fit (all samples
+/// pooled — the legacy single-model view) plus the piecewise model.
+///
+/// Robustness rules, per range: fewer than two in-bucket samples (the
+/// bucket collapsed under [`MAX_CAL_BYTES`] capping or an exotic topology)
+/// or a degenerate in-bucket fit ⇒ that range reuses the whole-sweep fit.
+/// Budget: ~10–40 ms once per process, dominated by the DRAM samples.
+pub fn calibrate_piecewise() -> (CostModel, PiecewiseModel) {
+    const REPS: usize = 3;
+    let cache = CacheInfo::detect();
+    let bounds = PiecewiseModel::bounds(&cache);
+    // Candidate sizes per bucket: log-ish spacing anchored at the bucket
+    // edges, clamped to (lo, hi] ∩ [64, MAX_CAL_BYTES].
+    let lo_of = |i: usize| if i == 0 { 0 } else { bounds[i - 1] };
+    let mut range_sizes: [Vec<usize>; 4] = Default::default();
+    for (i, sizes) in range_sizes.iter_mut().enumerate() {
+        let lo = lo_of(i);
+        let hi = bounds[i];
+        let cands: [usize; 6] = if hi == usize::MAX {
+            [lo.saturating_mul(2), lo.saturating_mul(4), 0, 0, 0, 0]
+        } else {
+            [64, lo.saturating_mul(2), hi / 4, hi / 2, hi, hi.min(MAX_CAL_BYTES)]
+        };
+        for s in cands {
+            if s > lo && s <= hi && s >= 64 && s <= MAX_CAL_BYTES && !sizes.contains(&s) {
+                sizes.push(s);
+            }
+        }
+        sizes.sort_unstable();
+    }
+    let max = range_sizes
+        .iter()
+        .flatten()
+        .copied()
+        .max()
+        .unwrap_or(1 << 20);
+    let src = vec![0x5Au8; max];
+    let mut dst = vec![0u8; max];
+    let mut all = Vec::new();
+    let mut per_range: [Vec<(usize, f64)>; 4] = Default::default();
+    for (i, sizes) in range_sizes.iter().enumerate() {
+        for &s in sizes {
+            let t = time_copy_ns(&mut dst, &src, s, REPS);
+            all.push((s, t));
+            per_range[i].push((s, t));
+        }
+    }
+    let whole = CostModel::fit(&all);
+    let model_of = |i: usize| -> CostModel {
+        let rs = &per_range[i];
+        if rs.len() >= 2 {
+            let fit = CostModel::fit(rs);
+            if !fit.is_degenerate() {
+                return fit;
+            }
+        }
+        whole
+    };
+    let pw = PiecewiseModel {
+        ranges: [
+            RangeModel { hi: bounds[0], model: model_of(0) },
+            RangeModel { hi: bounds[1], model: model_of(1) },
+            RangeModel { hi: bounds[2], model: model_of(2) },
+            RangeModel { hi: bounds[3], model: model_of(3) },
+        ],
+    };
+    (whole, pw)
 }
 
 /// The model `POSH_ALPHA_NS`/`POSH_BETA_GBPS` postulate, when both are set
@@ -406,7 +566,7 @@ pub fn process_engine() -> &'static Tuning {
         if let Some(cm) = env_model() {
             return Tuning::new(cm, TuningSource::Postulated);
         }
-        let fit = calibrate();
+        let (fit, pw) = calibrate_piecewise();
         if fit.is_degenerate() || fit.r2 < MIN_CALIBRATION_R2 {
             eprintln!(
                 "posh: shm-channel calibration unusable ({fit}); falling back to the \
@@ -419,7 +579,7 @@ pub fn process_engine() -> &'static Tuning {
                 TuningSource::Fallback,
             )
         } else {
-            Tuning::new(fit, TuningSource::Calibrated)
+            Tuning::new_piecewise(fit, pw, TuningSource::Calibrated)
         }
     })
 }
@@ -648,6 +808,110 @@ mod tests {
                 ctx.shfree(src).unwrap();
             }
         });
+    }
+
+    /// The PR's acceptance bar: with a piecewise engine, an L1-regime
+    /// payload and a DRAM-regime payload resolve to *different* α/β and can
+    /// argmin to *different* algorithms for the same (op, team size).
+    #[test]
+    fn piecewise_regimes_argmin_differently() {
+        // L1 bucket: huge per-message latency, fat pipe ⇒ minimise message
+        // count ⇒ LinearPut. DRAM bucket: negligible latency, thin pipe ⇒
+        // minimise serialized bytes ⇒ LinearGet (slope c vs n1·c).
+        let l1 = CostModel {
+            alpha_ns: 1000.0,
+            beta_bytes_per_ns: 100.0,
+            r2: 1.0,
+        };
+        let dram = CostModel {
+            alpha_ns: 10.0,
+            beta_bytes_per_ns: 0.1,
+            r2: 1.0,
+        };
+        let pw = PiecewiseModel {
+            ranges: [
+                RangeModel { hi: 32 << 10, model: l1 },
+                RangeModel { hi: 256 << 10, model: l1 },
+                RangeModel { hi: 8 << 20, model: l1 },
+                RangeModel { hi: usize::MAX, model: dram },
+            ],
+        };
+        let whole = CostModel::fit(&[(64, 1000.0), (64 << 20, 1e9)]);
+        let t = Tuning::new_piecewise(whole, pw, TuningSource::Calibrated);
+
+        // The regimes resolve different base models…
+        assert_eq!(t.model_for(8).alpha_ns, 1000.0);
+        assert_eq!(t.model_for(64 << 20).alpha_ns, 10.0);
+        assert_ne!(
+            t.model_for(8).beta_bytes_per_ns,
+            t.model_for(64 << 20).beta_bytes_per_ns
+        );
+
+        // …and the same (op, team) argmins differently per regime.
+        let n = 8;
+        assert_eq!(t.select(CollOp::Broadcast, n, 8), AlgoKind::LinearPut);
+        assert_eq!(t.select(CollOp::Broadcast, n, 64 << 20), AlgoKind::LinearGet);
+
+        // Each decision is the argmin of the governing bucket's composition.
+        for bytes in [8usize, 64 << 20] {
+            let cands = Tuning::candidates(CollOp::Broadcast, n);
+            let oracle = cands
+                .iter()
+                .copied()
+                .min_by(|&x, &y| {
+                    t.coll_model_at(CollOp::Broadcast, x, n, bytes)
+                        .predict_ns(bytes)
+                        .total_cmp(
+                            &t.coll_model_at(CollOp::Broadcast, y, n, bytes).predict_ns(bytes),
+                        )
+                })
+                .unwrap();
+            assert_eq!(t.select(CollOp::Broadcast, n, bytes), oracle, "bytes={bytes}");
+        }
+    }
+
+    /// A single-model engine prices every bucket identically: `select`'s
+    /// piecewise rewiring must be invisible for postulated engines.
+    #[test]
+    fn uniform_engine_coll_model_at_matches_coll_model() {
+        let t = Tuning::postulated(100.0, 80.0);
+        for op in [CollOp::Broadcast, CollOp::Reduce, CollOp::Fcollect] {
+            for n in [2usize, 8, 64] {
+                for bytes in [0usize, 8, 4096, 1 << 20, 64 << 20] {
+                    for &algo in Tuning::candidates(op, n) {
+                        assert_eq!(
+                            t.coll_model_at(op, algo, n, bytes),
+                            t.coll_model(op, algo, n),
+                            "{op:?} {algo:?} n={n} bytes={bytes}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn piecewise_calibration_is_well_formed() {
+        let (whole, pw) = calibrate_piecewise();
+        // The pooled fit obeys the same contract as calibrate().
+        if !whole.is_degenerate() {
+            assert!(whole.alpha_ns >= 0.0);
+            assert!(whole.beta_bytes_per_ns > 0.0);
+        }
+        // Bucket bounds are ascending and end open.
+        assert_eq!(pw.ranges[3].hi, usize::MAX);
+        for w in pw.ranges.windows(2) {
+            assert!(w[0].hi <= w[1].hi);
+        }
+        // Every per-range model is either a healthy in-bucket fit or the
+        // whole-sweep fallback — never an untagged degenerate.
+        for r in &pw.ranges {
+            assert!(
+                !r.model.is_degenerate() || r.model == whole,
+                "range hi={} carries a degenerate non-fallback model",
+                r.hi
+            );
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use posh::preparser;
 use posh::rte::gateway::Gateway;
+use posh::shm::Segment as _;
 use posh::rte::launcher::{JobSpec, Launcher};
 use posh::rte::monitor;
 
@@ -29,7 +30,9 @@ USAGE:
 OPTIONS (launch):
   -np N               number of PEs (required)
   --heap SIZE         symmetric heap per PE (e.g. 64M, 1G)
-  --copy IMPL         memcpy|unrolled64|sse2|avx2|nontemporal
+  --copy IMPL         planned|memcpy|unrolled64|sse2|avx2|nontemporal|
+                      avx512|avx512nt (planned = size-aware dispatch over
+                      the machine's CopyPlan, the default)
   --coll-algo ALGO    adaptive|linear-put|linear-get|tree|recdbl
                       (adaptive = per-call cost-model selection, the
                       default; --coll is an alias; see docs/tuning.md)
@@ -39,8 +42,9 @@ OPTIONS (launch):
   --debug-wait        each PE waits for a debugger at start-up (§4.7)
 
 calibrate: fit T(n) = α + n/β over the shm channel with the configured
-copy engine and print α/β/R² plus the adaptive crossover table; --csv
-archives the fit for the ablation trajectory.
+copy engine — one whole-sweep fit plus a piecewise per-range fit (one
+α/β per L1/L2/LLC/DRAM regime) — and print the models plus the adaptive
+crossover table; --csv archives both fits for the ablation trajectory.
 "
     );
     std::process::exit(2);
@@ -92,6 +96,30 @@ fn calibrate_cmd(args: &[String]) {
     println!("  r2                : {:.5}", m.r2);
     println!("  n_half_bytes      : {:.0}", m.n_half());
     println!("  coalesce_bytes    : {}", t.coalesce_threshold_bytes());
+    let cache = posh::mem::plan::CacheInfo::detect();
+    println!(
+        "\nper-range channel model (L1/L2/LLC/DRAM regimes; cache bounds from {}):",
+        cache.source
+    );
+    println!(
+        "  {:>12} {:>12} {:>10} {:>10} {:>8}  engine",
+        "lo_bytes", "hi_bytes", "alpha_ns", "beta_B/ns", "r2"
+    );
+    let mut lo = 0usize;
+    for r in &t.piecewise().ranges {
+        let hi = if r.hi == usize::MAX { "inf".to_string() } else { r.hi.to_string() };
+        println!(
+            "  {:>12} {:>12} {:>10.2} {:>10.3} {:>8.4}  {}",
+            lo,
+            hi,
+            r.model.alpha_ns,
+            r.model.beta_bytes_per_ns,
+            r.model.r2,
+            posh::mem::copy::engine_for(range_rep(lo, r.hi)).name()
+        );
+        lo = r.hi;
+    }
+    println!("copy dispatch: {}", posh::mem::copy::dispatch_name());
     println!("\nadaptive selection (payload bytes per member → algorithm):");
     let probe_sizes = [64usize, 1024, 8192, 65536, 1 << 20];
     for op in [CollOp::Broadcast, CollOp::Reduce, CollOp::Fcollect] {
@@ -112,6 +140,25 @@ fn calibrate_cmd(args: &[String]) {
         out.push_str(&format!("r2,{}\n", m.r2));
         out.push_str(&format!("n_half_bytes,{}\n", m.n_half()));
         out.push_str(&format!("coalesce_threshold_bytes,{}\n", t.coalesce_threshold_bytes()));
+        let mut lo = 0usize;
+        for (i, r) in t.piecewise().ranges.iter().enumerate() {
+            out.push_str(&format!("range{i}_lo_bytes,{lo}\n"));
+            out.push_str(&format!(
+                "range{i}_hi_bytes,{}\n",
+                if r.hi == usize::MAX { "inf".to_string() } else { r.hi.to_string() }
+            ));
+            out.push_str(&format!("range{i}_alpha_ns,{}\n", r.model.alpha_ns));
+            out.push_str(&format!(
+                "range{i}_beta_bytes_per_ns,{}\n",
+                r.model.beta_bytes_per_ns
+            ));
+            out.push_str(&format!("range{i}_r2,{}\n", r.model.r2));
+            out.push_str(&format!(
+                "range{i}_engine,{}\n",
+                posh::mem::copy::engine_for(range_rep(lo, r.hi)).name()
+            ));
+            lo = r.hi;
+        }
         for op in [CollOp::Broadcast, CollOp::Reduce] {
             for n in [2usize, 4, 8, 16] {
                 for pair in [
@@ -153,15 +200,53 @@ fn info() {
             .collect::<Vec<_>>()
             .join(", ")
     );
+    println!("copy dispatch             : {}", posh::mem::copy::dispatch_name());
+    let cache = posh::mem::plan::CacheInfo::detect();
+    println!(
+        "cache hierarchy ({})   : L1d {} / L2 {} / LLC {}",
+        cache.source,
+        fmt_bytes(cache.l1d),
+        fmt_bytes(cache.l2),
+        fmt_bytes(cache.llc)
+    );
     println!(
         "collective algo default   : {} (see `oshrun calibrate`)",
         posh::collectives::AlgoKind::default_algo().name()
     );
     println!("safe mode (compile)       : {}", cfg!(feature = "safe-mode"));
     println!("page size                 : {}", posh::shm::inproc::page_size());
+    let heap = posh::prelude::PoshConfig::default().from_env().heap_size;
+    match posh::shm::create_inproc(heap) {
+        Ok(seg) => println!(
+            "heap huge pages           : {} ({} heap probe)",
+            seg.huge_pages(),
+            fmt_bytes(heap)
+        ),
+        Err(e) => println!("heap huge pages           : probe failed ({e})"),
+    }
     match posh::runtime::client::platform_info() {
         Ok(info) => println!("PJRT                      : {info}"),
         Err(e) => println!("PJRT                      : unavailable ({e})"),
+    }
+}
+
+/// A payload size that the dispatcher routes inside the regime `(lo, hi]`.
+fn range_rep(lo: usize, hi: usize) -> usize {
+    if hi == usize::MAX {
+        lo.saturating_mul(2).max(1)
+    } else {
+        hi
+    }
+}
+
+/// Human-readable byte count (exact powers only — cache sizes are).
+fn fmt_bytes(n: usize) -> String {
+    if n >= 1 << 20 && n % (1 << 20) == 0 {
+        format!("{}M", n >> 20)
+    } else if n >= 1 << 10 && n % (1 << 10) == 0 {
+        format!("{}K", n >> 10)
+    } else {
+        format!("{n}B")
     }
 }
 

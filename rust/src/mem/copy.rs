@@ -24,6 +24,11 @@ pub enum CopyImpl {
     Avx2 = 3,
     /// 128-bit non-temporal (streaming) stores — the MMX2 `movnt` trick.
     NonTemporal = 4,
+    /// 512-bit AVX-512F loads/stores — the widest temporal vector path.
+    Avx512 = 5,
+    /// 512-bit AVX-512F non-temporal (streaming) stores — the cache-bypass
+    /// engine for copies past the LLC.
+    Avx512Nt = 6,
 }
 
 impl CopyImpl {
@@ -38,8 +43,30 @@ impl CopyImpl {
                 v.push(CopyImpl::Avx2);
             }
             v.push(CopyImpl::NonTemporal);
+            if std::arch::is_x86_feature_detected!("avx512f") {
+                v.push(CopyImpl::Avx512);
+                v.push(CopyImpl::Avx512Nt);
+            }
         }
         v
+    }
+
+    /// Decode a stored discriminant. Exhaustive by construction: every
+    /// variant decodes to itself, everything else is `None` — so a future
+    /// variant added without updating this function shows up as a loud
+    /// fallback at the caller instead of silently becoming some other
+    /// engine (the historical `_ => NonTemporal` bug).
+    pub fn from_u8(v: u8) -> Option<CopyImpl> {
+        match v {
+            0 => Some(CopyImpl::Stock),
+            1 => Some(CopyImpl::Unrolled64),
+            2 => Some(CopyImpl::Sse2),
+            3 => Some(CopyImpl::Avx2),
+            4 => Some(CopyImpl::NonTemporal),
+            5 => Some(CopyImpl::Avx512),
+            6 => Some(CopyImpl::Avx512Nt),
+            _ => None,
+        }
     }
 
     /// The compile-time default (paper §4.4: one impl is activated by a
@@ -83,6 +110,8 @@ impl CopyImpl {
             CopyImpl::Sse2 => "sse2",
             CopyImpl::Avx2 => "avx2",
             CopyImpl::NonTemporal => "nontemporal",
+            CopyImpl::Avx512 => "avx512",
+            CopyImpl::Avx512Nt => "avx512nt",
         }
     }
 
@@ -94,42 +123,102 @@ impl CopyImpl {
             "sse" | "sse2" => Some(CopyImpl::Sse2),
             "avx" | "avx2" => Some(CopyImpl::Avx2),
             "nt" | "nontemporal" | "mmx2" => Some(CopyImpl::NonTemporal),
+            "avx512" | "avx512f" => Some(CopyImpl::Avx512),
+            "avx512nt" | "ntavx512" => Some(CopyImpl::Avx512Nt),
             _ => None,
         }
     }
 }
 
-/// Process-wide selected implementation (runtime dispatch). Initialised to
-/// the compile-time default; `set_global_impl` may override it once at
-/// start-up (e.g. from `POSH_COPY=sse2`), after which the hot path reads it
-/// with a relaxed load — one predictable branch-free indirect call, matching
-/// the paper's "no conditional branches on the data path" goal.
-static GLOBAL_IMPL: AtomicU8 = AtomicU8::new(CopyImpl::default_impl() as u8);
+/// Sentinel stored in [`GLOBAL_IMPL`] when no engine is forced: the copy
+/// path then dispatches per size through the global [`super::plan::CopyPlan`].
+const PLANNED_SENTINEL: u8 = u8::MAX;
 
-/// Install the process-wide copy implementation.
+/// Raw start-up value of the dispatch word: a `copy-*` cargo feature pins
+/// its engine exactly as the paper's `-D_MEMCPY_*` switches did; with no
+/// feature the default is size-aware planned dispatch.
+const fn default_raw() -> u8 {
+    #[cfg(any(
+        feature = "copy-avx2",
+        feature = "copy-sse2",
+        feature = "copy-unrolled",
+        feature = "copy-nontemporal"
+    ))]
+    {
+        return CopyImpl::default_impl() as u8;
+    }
+    #[allow(unreachable_code)]
+    PLANNED_SENTINEL
+}
+
+/// Process-wide dispatch state (runtime dispatch). Either a forced engine
+/// discriminant (compile-time feature or `POSH_COPY=`/`set_global_impl`) or
+/// [`PLANNED_SENTINEL`], in which case every copy resolves its engine per
+/// size class through the global [`super::plan::CopyPlan`]. The hot path
+/// reads it with a relaxed load — one predictable branch, matching the
+/// paper's "no conditional branches on the data path" goal as closely as a
+/// size switch allows.
+static GLOBAL_IMPL: AtomicU8 = AtomicU8::new(default_raw());
+
+/// Force one process-wide copy implementation for every size (the paper's
+/// compile-time model, relocated to start-up).
 pub fn set_global_impl(imp: CopyImpl) {
     GLOBAL_IMPL.store(imp as u8, Ordering::Relaxed);
 }
 
-/// Read the process-wide copy implementation.
+/// Restore size-aware planned dispatch (undoes [`set_global_impl`]).
+pub fn set_global_planned() {
+    GLOBAL_IMPL.store(PLANNED_SENTINEL, Ordering::Relaxed);
+}
+
+/// The forced process-wide engine, if one is installed. `None` means
+/// size-aware planned dispatch (the default), and — by the exhaustive
+/// [`CopyImpl::from_u8`] decode — also any unknown discriminant, so a
+/// corrupted or future value degrades to the plan, never to a silently
+/// wrong fixed engine.
+#[inline]
+pub fn forced_impl() -> Option<CopyImpl> {
+    CopyImpl::from_u8(GLOBAL_IMPL.load(Ordering::Relaxed))
+}
+
+/// Read the process-wide copy implementation a size-less caller would get.
+///
+/// Decodes the dispatch word exhaustively via [`CopyImpl::from_u8`] and
+/// falls back to [`CopyImpl::Stock`] — under planned dispatch (no forced
+/// engine) there *is* no single engine, and stock is the honest size-less
+/// answer. Size-carrying callers should use [`engine_for`] instead.
 #[inline]
 pub fn global_impl() -> CopyImpl {
-    match GLOBAL_IMPL.load(Ordering::Relaxed) {
-        0 => CopyImpl::Stock,
-        1 => CopyImpl::Unrolled64,
-        2 => CopyImpl::Sse2,
-        3 => CopyImpl::Avx2,
-        _ => CopyImpl::NonTemporal,
+    forced_impl().unwrap_or(CopyImpl::Stock)
+}
+
+/// The engine a `len`-byte copy dispatches to right now: the forced engine
+/// when one is installed, otherwise the global plan's size class.
+#[inline]
+pub fn engine_for(len: usize) -> CopyImpl {
+    match forced_impl() {
+        Some(imp) => imp,
+        None => super::plan::planned_engine_for(len),
     }
 }
 
-/// Copy `len` bytes with the process-wide implementation.
+/// Human-readable description of the current dispatch mode (bench headers,
+/// `oshrun info`).
+pub fn dispatch_name() -> String {
+    match forced_impl() {
+        Some(imp) => imp.name().to_string(),
+        None => format!("planned[{}]", super::plan::global_plan()),
+    }
+}
+
+/// Copy `len` bytes with the process-wide dispatch (forced engine or the
+/// size-aware plan).
 ///
 /// # Safety
 /// Same contract as `memcpy`: non-overlapping, both valid for `len`.
 #[inline]
 pub unsafe fn copy_bytes(dst: *mut u8, src: *const u8, len: usize) {
-    copy_bytes_with(global_impl(), dst, src, len)
+    copy_bytes_with(engine_for(len), dst, src, len)
 }
 
 /// Copy `len` bytes with an explicit implementation (bench sweeps).
@@ -147,6 +236,10 @@ pub unsafe fn copy_bytes_with(imp: CopyImpl, dst: *mut u8, src: *const u8, len: 
         CopyImpl::Avx2 => copy_avx2(dst, src, len),
         #[cfg(target_arch = "x86_64")]
         CopyImpl::NonTemporal => copy_nontemporal(dst, src, len),
+        #[cfg(target_arch = "x86_64")]
+        CopyImpl::Avx512 => copy_avx512(dst, src, len),
+        #[cfg(target_arch = "x86_64")]
+        CopyImpl::Avx512Nt => copy_avx512_nt(dst, src, len),
         #[cfg(not(target_arch = "x86_64"))]
         _ => std::ptr::copy_nonoverlapping(src, dst, len),
     }
@@ -301,6 +394,11 @@ unsafe fn copy_avx2_inner(mut dst: *mut u8, mut src: *const u8, mut len: usize) 
 /// re-read. Only profitable for large copies; the put/get engine never picks
 /// it for small messages.
 ///
+/// The `sfence` comes **after every store of the copy, including the byte
+/// tail** — the quiet/fence guarantee ("all of this put is visible") must
+/// never depend on the tail happening to be strongly-ordered plain stores;
+/// see docs/memory_model.md.
+///
 /// # Safety
 /// `memcpy` contract.
 #[cfg(target_arch = "x86_64")]
@@ -332,14 +430,126 @@ pub unsafe fn copy_nontemporal(mut dst: *mut u8, mut src: *const u8, mut len: us
         src = src.add(16);
         len -= 16;
     }
-    // Streaming stores are weakly ordered; fence before anyone reads them.
-    _mm_sfence();
     while len > 0 {
         *dst = *src;
         dst = dst.add(1);
         src = src.add(1);
         len -= 1;
     }
+    // Streaming stores are weakly ordered; fence after ALL stores (vector
+    // body and byte tail alike) so the copy is globally visible before any
+    // subsequent signal/flag store.
+    _mm_sfence();
+}
+
+/// 512-bit AVX-512F loop (temporal). Falls back to AVX2 (which itself falls
+/// back to SSE2) when AVX-512F is absent.
+///
+/// # Safety
+/// `memcpy` contract.
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn copy_avx512(dst: *mut u8, src: *const u8, len: usize) {
+    if std::arch::is_x86_feature_detected!("avx512f") {
+        copy_avx512_inner(dst, src, len);
+    } else {
+        copy_avx2(dst, src, len);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn copy_avx512_inner(mut dst: *mut u8, mut src: *const u8, mut len: usize) {
+    use std::arch::x86_64::*;
+    while len > 0 && (dst as usize) & 63 != 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+    while len >= 256 {
+        let v0 = _mm512_loadu_si512(src as *const _);
+        let v1 = _mm512_loadu_si512(src.add(64) as *const _);
+        let v2 = _mm512_loadu_si512(src.add(128) as *const _);
+        let v3 = _mm512_loadu_si512(src.add(192) as *const _);
+        _mm512_store_si512(dst as *mut _, v0);
+        _mm512_store_si512(dst.add(64) as *mut _, v1);
+        _mm512_store_si512(dst.add(128) as *mut _, v2);
+        _mm512_store_si512(dst.add(192) as *mut _, v3);
+        dst = dst.add(256);
+        src = src.add(256);
+        len -= 256;
+    }
+    while len >= 64 {
+        let v = _mm512_loadu_si512(src as *const _);
+        _mm512_store_si512(dst as *mut _, v);
+        dst = dst.add(64);
+        src = src.add(64);
+        len -= 64;
+    }
+    while len > 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+}
+
+/// 512-bit AVX-512F streaming (non-temporal) stores + trailing sfence — the
+/// cache-bypass engine for copies past the LLC. Falls back to the 128-bit
+/// non-temporal loop when AVX-512F is absent.
+///
+/// Same fence obligation as [`copy_nontemporal`]: the `sfence` is issued
+/// after **all** stores, tail included.
+///
+/// # Safety
+/// `memcpy` contract.
+#[cfg(target_arch = "x86_64")]
+pub unsafe fn copy_avx512_nt(dst: *mut u8, src: *const u8, len: usize) {
+    if std::arch::is_x86_feature_detected!("avx512f") {
+        copy_avx512_nt_inner(dst, src, len);
+    } else {
+        copy_nontemporal(dst, src, len);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn copy_avx512_nt_inner(mut dst: *mut u8, mut src: *const u8, mut len: usize) {
+    use std::arch::x86_64::*;
+    while len > 0 && (dst as usize) & 63 != 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+    while len >= 256 {
+        let v0 = _mm512_loadu_si512(src as *const _);
+        let v1 = _mm512_loadu_si512(src.add(64) as *const _);
+        let v2 = _mm512_loadu_si512(src.add(128) as *const _);
+        let v3 = _mm512_loadu_si512(src.add(192) as *const _);
+        _mm512_stream_si512(dst as *mut _, v0);
+        _mm512_stream_si512(dst.add(64) as *mut _, v1);
+        _mm512_stream_si512(dst.add(128) as *mut _, v2);
+        _mm512_stream_si512(dst.add(192) as *mut _, v3);
+        dst = dst.add(256);
+        src = src.add(256);
+        len -= 256;
+    }
+    while len >= 64 {
+        let v = _mm512_loadu_si512(src as *const _);
+        _mm512_stream_si512(dst as *mut _, v);
+        dst = dst.add(64);
+        src = src.add(64);
+        len -= 64;
+    }
+    while len > 0 {
+        *dst = *src;
+        dst = dst.add(1);
+        src = src.add(1);
+        len -= 1;
+    }
+    // Fence after ALL stores — see copy_nontemporal.
+    _mm_sfence();
 }
 
 /// Safe wrapper: copy between slices (must be same length, non-overlapping by
@@ -404,6 +614,31 @@ mod tests {
         check_impl(CopyImpl::NonTemporal);
     }
 
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_correct() {
+        check_impl(CopyImpl::Avx512); // falls back to avx2 when unavailable
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_nt_correct() {
+        check_impl(CopyImpl::Avx512Nt); // falls back to nontemporal when unavailable
+    }
+
+    #[test]
+    fn from_u8_exhaustive() {
+        // Every advertised engine decodes back to itself...
+        for imp in CopyImpl::available() {
+            assert_eq!(CopyImpl::from_u8(imp as u8), Some(imp));
+        }
+        // ...and every unknown discriminant decodes to None (never silently
+        // to NonTemporal, which was the old catch-all bug).
+        for raw in 7u8..=255 {
+            assert_eq!(CopyImpl::from_u8(raw), None, "raw={raw}");
+        }
+    }
+
     #[test]
     fn available_contains_baselines() {
         let avail = CopyImpl::available();
@@ -420,12 +655,37 @@ mod tests {
         assert_eq!(CopyImpl::parse("bogus"), None);
     }
 
+    // One test owns all GLOBAL_IMPL mutation: the harness runs tests in
+    // parallel threads, so splitting these into separate #[test] fns would
+    // race on the process-wide dispatch state.
     #[test]
-    fn global_impl_roundtrip() {
-        let before = global_impl();
+    fn global_dispatch_states() {
+        let _guard = super::super::plan::TEST_DISPATCH_LOCK.lock().unwrap();
+        let before = forced_impl();
+
+        // Forced-engine mode round-trips.
         set_global_impl(CopyImpl::Unrolled64);
         assert_eq!(global_impl(), CopyImpl::Unrolled64);
-        set_global_impl(before);
+        assert_eq!(forced_impl(), Some(CopyImpl::Unrolled64));
+        assert_eq!(dispatch_name(), "unrolled64");
+
+        // Planned mode: no forced engine; global_impl() reports the
+        // conservative Stock fallback while engine_for() consults the
+        // size-class plan.
+        set_global_planned();
+        assert_eq!(forced_impl(), None);
+        assert_eq!(global_impl(), CopyImpl::Stock);
+        let plan = super::super::plan::global_plan();
+        for &len in &[0usize, 1, 64, 4096, 1 << 20, 64 << 20] {
+            assert_eq!(engine_for(len), plan.engine_for(len), "len={len}");
+        }
+        assert!(dispatch_name().starts_with("planned["));
+
+        // Restore exactly, including the "planned" (no forced engine) state.
+        match before {
+            Some(imp) => set_global_impl(imp),
+            None => set_global_planned(),
+        }
     }
 
     #[test]

@@ -14,12 +14,23 @@
 //! * [`copy::CopyImpl::Sse2`] — 128-bit vector loop (the paper's SSE path);
 //! * [`copy::CopyImpl::Avx2`] — 256-bit vector loop (what SSE grew into);
 //! * [`copy::CopyImpl::NonTemporal`] — 128-bit streaming stores (the paper's
-//!   MMX2 `movntq` trick: bypass the cache for large one-shot copies).
+//!   MMX2 `movntq` trick: bypass the cache for large one-shot copies);
+//! * [`copy::CopyImpl::Avx512`] — 512-bit vector loop (runtime
+//!   `avx512f`-gated, the widest temporal path);
+//! * [`copy::CopyImpl::Avx512Nt`] — 512-bit streaming stores (the
+//!   cache-bypass engine for copies past the LLC).
 //!
 //! The compile-time default is chosen by cargo feature (`copy-sse2`, …) as in
-//! the paper; on top of that a *runtime* dispatcher — a function pointer
-//! resolved once — lets a single binary run the Table-1 sweep.
+//! the paper. On top of that sits *size-aware planned dispatch*
+//! ([`plan::CopyPlan`], the default when no engine is forced): tiny copies go
+//! to `ptr::copy`, cache-resident copies to the widest temporal vector, and
+//! past-LLC copies to non-temporal streaming stores, with the LLC crossover
+//! detected from sysfs ([`plan::CacheInfo`]). `POSH_COPY=<engine>` or the
+//! `copy-*` features still force one engine for every size, which is how the
+//! Table-1 sweep measures each row.
 
 pub mod copy;
+pub mod plan;
 
 pub use copy::{copy_bytes, copy_bytes_with, CopyImpl};
+pub use plan::{CacheInfo, CopyPlan};

@@ -1,0 +1,451 @@
+//! Size-aware copy dispatch: the [`CopyPlan`].
+//!
+//! The paper selects ONE memcpy implementation per build (§4.4) because on
+//! 2014 hardware the ranking was stable across sizes. On modern cores it is
+//! not: temporal vector copies win while the working set fits in cache, and
+//! non-temporal streaming stores win once a copy is larger than the LLC
+//! (past that point every temporal store costs a read-for-ownership plus an
+//! eventual writeback of a line nobody will re-read). Tiny copies are won by
+//! plain `ptr::copy` — the vector loops' alignment prologue is pure overhead
+//! at 8–256 bytes.
+//!
+//! A [`CopyPlan`] captures that piecewise ranking as two thresholds and
+//! three engines:
+//!
+//! ```text
+//!   len ≤ small_max          → small engine (stock memcpy)
+//!   small_max < len < nt_min → mid engine   (widest temporal vector)
+//!   len ≥ nt_min             → large engine (widest non-temporal vector)
+//! ```
+//!
+//! `nt_min` is derived from the LLC size ([`CacheInfo::detect`], sysfs with
+//! paper-constant fallback): ¾·LLC with a 1 MiB floor, so NT stores only
+//! engage when a copy genuinely overflows cache. The process-wide plan is
+//! consulted by [`super::copy::copy_bytes`] whenever no engine is forced.
+
+use super::copy::CopyImpl;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::Once;
+
+/// Where a [`CacheInfo`] came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheSource {
+    /// Read from `/sys/devices/system/cpu/cpu0/cache`.
+    Sysfs,
+    /// Paper-era defaults (sysfs absent or unparsable).
+    PaperDefault,
+}
+
+impl std::fmt::Display for CacheSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheSource::Sysfs => write!(f, "sysfs"),
+            CacheSource::PaperDefault => write!(f, "paper-default"),
+        }
+    }
+}
+
+/// Per-core cache hierarchy sizes in bytes, used to place both the copy
+/// plan's NT threshold and the piecewise cost-model bucket boundaries
+/// (`collectives::tuning`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheInfo {
+    /// L1 data cache size.
+    pub l1d: usize,
+    /// L2 (private) cache size.
+    pub l2: usize,
+    /// Last-level cache size (largest level reported).
+    pub llc: usize,
+    /// Whether the numbers came from sysfs or the paper-constant fallback.
+    pub source: CacheSource,
+}
+
+/// Paper-era fallback: the Nehalem-class machines of §5 (32 KiB L1d,
+/// 256 KiB L2, 8 MiB shared L3).
+pub const PAPER_L1D: usize = 32 << 10;
+/// See [`PAPER_L1D`].
+pub const PAPER_L2: usize = 256 << 10;
+/// See [`PAPER_L1D`].
+pub const PAPER_LLC: usize = 8 << 20;
+
+impl CacheInfo {
+    /// The paper-constant fallback hierarchy.
+    pub const fn paper_default() -> CacheInfo {
+        CacheInfo {
+            l1d: PAPER_L1D,
+            l2: PAPER_L2,
+            llc: PAPER_LLC,
+            source: CacheSource::PaperDefault,
+        }
+    }
+
+    /// Detect the cache hierarchy of cpu0 from sysfs, falling back to
+    /// [`CacheInfo::paper_default`] when sysfs is absent (non-Linux,
+    /// sandboxes) or yields nothing usable.
+    pub fn detect() -> CacheInfo {
+        Self::from_sysfs_root("/sys/devices/system/cpu/cpu0/cache")
+            .unwrap_or_else(CacheInfo::paper_default)
+    }
+
+    /// Parse `<root>/index*/{level,type,size}`. Returns `None` unless at
+    /// least an L1 data/unified cache was found.
+    fn from_sysfs_root(root: &str) -> Option<CacheInfo> {
+        let mut l1d = 0usize;
+        let mut l2 = 0usize;
+        let mut llc = 0usize;
+        let mut llc_level = 0u32;
+        for idx in 0..16 {
+            let dir = format!("{root}/index{idx}");
+            let read = |leaf: &str| std::fs::read_to_string(format!("{dir}/{leaf}")).ok();
+            let (level, ty, size) = match (read("level"), read("type"), read("size")) {
+                (Some(l), Some(t), Some(s)) => (l, t, s),
+                _ => continue,
+            };
+            let level: u32 = match level.trim().parse() {
+                Ok(l) => l,
+                Err(_) => continue,
+            };
+            let ty = ty.trim().to_ascii_lowercase();
+            if ty == "instruction" {
+                continue;
+            }
+            let size = match crate::pe::config::parse_size(size.trim()) {
+                Some(s) if s > 0 => s,
+                _ => continue,
+            };
+            if level == 1 {
+                l1d = l1d.max(size);
+            }
+            if level == 2 {
+                l2 = l2.max(size);
+            }
+            if level > llc_level || (level == llc_level && size > llc) {
+                llc_level = level;
+                llc = size;
+            }
+        }
+        if l1d == 0 {
+            return None;
+        }
+        if l2 == 0 {
+            l2 = l1d.max(PAPER_L2.min(llc.max(l1d)));
+        }
+        if llc < l2 {
+            llc = l2;
+        }
+        Some(CacheInfo {
+            l1d,
+            l2,
+            llc,
+            source: CacheSource::Sysfs,
+        })
+    }
+}
+
+/// Default small-copy cutoff: below this, `ptr::copy` (which compilers lower
+/// to tuned inline sequences / `rep movsb`) beats every explicit vector loop
+/// with its alignment prologue.
+pub const DEFAULT_SMALL_MAX: usize = 256;
+
+/// Floor for the NT threshold: never stream below 1 MiB even on tiny-LLC
+/// machines — the sfence + cache-bypass tax needs a long copy to amortise.
+pub const NT_MIN_FLOOR: usize = 1 << 20;
+
+/// A per-size-class copy engine selection. See the module docs for the
+/// three-range layout and threshold semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CopyPlan {
+    /// Copies of `len <= small_max` use [`CopyPlan::small`].
+    pub small_max: usize,
+    /// Copies of `len >= nt_min` use [`CopyPlan::large`]; in between,
+    /// [`CopyPlan::mid`].
+    pub nt_min: usize,
+    /// Engine for the small range (`ptr::copy`).
+    pub small: CopyImpl,
+    /// Engine for the cache-resident middle range (widest temporal vector).
+    pub mid: CopyImpl,
+    /// Engine for the past-LLC range (widest non-temporal vector).
+    pub large: CopyImpl,
+}
+
+impl CopyPlan {
+    /// Build the plan for this machine: thresholds from `cache`, engines
+    /// from what the CPU advertises. `POSH_PLAN_SMALL_MAX` /
+    /// `POSH_PLAN_NT_MIN` (size strings: `4096`, `1M`, …) override the
+    /// thresholds for experiments.
+    pub fn for_machine(cache: &CacheInfo) -> CopyPlan {
+        let mut small_max = DEFAULT_SMALL_MAX;
+        let mut nt_min = NT_MIN_FLOOR.max(cache.llc / 4 * 3);
+        if let Ok(v) = std::env::var("POSH_PLAN_SMALL_MAX") {
+            if let Some(n) = crate::pe::config::parse_size(&v) {
+                small_max = n;
+            }
+        }
+        if let Ok(v) = std::env::var("POSH_PLAN_NT_MIN") {
+            if let Some(n) = crate::pe::config::parse_size(&v) {
+                nt_min = n;
+            }
+        }
+        // Keep the ranges well-ordered whatever the overrides say.
+        nt_min = nt_min.max(small_max + 1);
+
+        let (mid, large);
+        #[cfg(target_arch = "x86_64")]
+        {
+            mid = if std::arch::is_x86_feature_detected!("avx512f") {
+                CopyImpl::Avx512
+            } else if std::arch::is_x86_feature_detected!("avx2") {
+                CopyImpl::Avx2
+            } else {
+                CopyImpl::Sse2
+            };
+            large = if std::arch::is_x86_feature_detected!("avx512f") {
+                CopyImpl::Avx512Nt
+            } else {
+                CopyImpl::NonTemporal
+            };
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            // No vector/NT engines off x86_64: one engine everywhere.
+            mid = CopyImpl::Unrolled64;
+            large = CopyImpl::Unrolled64;
+        }
+        CopyPlan {
+            small_max,
+            nt_min,
+            small: CopyImpl::Stock,
+            mid,
+            large,
+        }
+    }
+
+    /// The engine this plan dispatches a `len`-byte copy to.
+    #[inline]
+    pub fn engine_for(&self, len: usize) -> CopyImpl {
+        if len <= self.small_max {
+            self.small
+        } else if len < self.nt_min {
+            self.mid
+        } else {
+            self.large
+        }
+    }
+}
+
+impl std::fmt::Display for CopyPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}<={}B; {}<{}B; {}>={}B",
+            self.small.name(),
+            self.small_max,
+            self.mid.name(),
+            self.nt_min,
+            self.large.name(),
+            self.nt_min
+        )
+    }
+}
+
+// Process-wide plan storage. Plain atomics (no lock on the copy hot path);
+// a torn read across fields is benign because every engine is byte-correct
+// for every size — the plan only affects speed, never correctness.
+static PLAN_SMALL_MAX: AtomicUsize = AtomicUsize::new(DEFAULT_SMALL_MAX);
+static PLAN_NT_MIN: AtomicUsize = AtomicUsize::new(usize::MAX);
+static PLAN_SMALL: AtomicU8 = AtomicU8::new(CopyImpl::Stock as u8);
+static PLAN_MID: AtomicU8 = AtomicU8::new(CopyImpl::Stock as u8);
+static PLAN_LARGE: AtomicU8 = AtomicU8::new(CopyImpl::Stock as u8);
+static PLAN_INIT: Once = Once::new();
+
+fn store_plan(plan: &CopyPlan) {
+    PLAN_SMALL_MAX.store(plan.small_max, Ordering::Relaxed);
+    PLAN_NT_MIN.store(plan.nt_min, Ordering::Relaxed);
+    PLAN_SMALL.store(plan.small as u8, Ordering::Relaxed);
+    PLAN_MID.store(plan.mid as u8, Ordering::Relaxed);
+    PLAN_LARGE.store(plan.large as u8, Ordering::Relaxed);
+}
+
+/// Install `plan` as the process-wide dispatch plan (start-up, tests,
+/// benches). Overrides the lazily-detected machine default.
+pub fn install_global_plan(plan: &CopyPlan) {
+    // Claim the Once so a later global_plan() can't clobber us with the
+    // detected default.
+    PLAN_INIT.call_once(|| {});
+    store_plan(plan);
+}
+
+/// Serialises tests that mutate process-wide dispatch state (the global
+/// plan here, the forced engine in `copy.rs`) — the test harness runs tests
+/// on parallel threads.
+#[cfg(test)]
+pub(crate) static TEST_DISPATCH_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn ensure_plan() {
+    PLAN_INIT.call_once(|| {
+        let plan = CopyPlan::for_machine(&CacheInfo::detect());
+        store_plan(&plan);
+    });
+}
+
+/// The current process-wide [`CopyPlan`]. First use detects the machine
+/// ([`CacheInfo::detect`] + [`CopyPlan::for_machine`]) unless
+/// [`install_global_plan`] ran earlier.
+pub fn global_plan() -> CopyPlan {
+    ensure_plan();
+    let decode = |a: &AtomicU8| {
+        CopyImpl::from_u8(a.load(Ordering::Relaxed)).unwrap_or(CopyImpl::Stock)
+    };
+    CopyPlan {
+        small_max: PLAN_SMALL_MAX.load(Ordering::Relaxed),
+        nt_min: PLAN_NT_MIN.load(Ordering::Relaxed),
+        small: decode(&PLAN_SMALL),
+        mid: decode(&PLAN_MID),
+        large: decode(&PLAN_LARGE),
+    }
+}
+
+/// Hot-path resolve: the engine the global plan dispatches a `len`-byte
+/// copy to, touching only the two threshold words and one engine byte
+/// (cheaper than materialising the whole [`CopyPlan`] per copy).
+#[inline]
+pub fn planned_engine_for(len: usize) -> CopyImpl {
+    ensure_plan();
+    let cell = if len <= PLAN_SMALL_MAX.load(Ordering::Relaxed) {
+        &PLAN_SMALL
+    } else if len < PLAN_NT_MIN.load(Ordering::Relaxed) {
+        &PLAN_MID
+    } else {
+        &PLAN_LARGE
+    };
+    CopyImpl::from_u8(cell.load(Ordering::Relaxed)).unwrap_or(CopyImpl::Stock)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::copy::copy_bytes_with;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn paper_default_is_ordered() {
+        let c = CacheInfo::paper_default();
+        assert!(c.l1d < c.l2 && c.l2 < c.llc);
+        assert_eq!(c.source, CacheSource::PaperDefault);
+    }
+
+    #[test]
+    fn detect_is_sane() {
+        // Whatever the box (sysfs present or not), detection must yield a
+        // usable, ordered hierarchy.
+        let c = CacheInfo::detect();
+        assert!(c.l1d > 0);
+        assert!(c.l2 >= c.l1d);
+        assert!(c.llc >= c.l2);
+    }
+
+    #[test]
+    fn machine_plan_is_well_formed() {
+        let plan = CopyPlan::for_machine(&CacheInfo::detect());
+        assert!(plan.small_max < plan.nt_min);
+        assert!(plan.nt_min >= NT_MIN_FLOOR.min(plan.small_max + 1));
+        let avail = CopyImpl::available();
+        assert!(avail.contains(&plan.small));
+        assert!(avail.contains(&plan.mid));
+        assert!(avail.contains(&plan.large));
+    }
+
+    #[test]
+    fn dispatch_boundaries() {
+        let plan = CopyPlan {
+            small_max: 256,
+            nt_min: 4096,
+            small: CopyImpl::Stock,
+            mid: CopyImpl::Unrolled64,
+            large: CopyImpl::NonTemporal,
+        };
+        assert_eq!(plan.engine_for(0), CopyImpl::Stock);
+        assert_eq!(plan.engine_for(255), CopyImpl::Stock);
+        assert_eq!(plan.engine_for(256), CopyImpl::Stock);
+        assert_eq!(plan.engine_for(257), CopyImpl::Unrolled64);
+        assert_eq!(plan.engine_for(4095), CopyImpl::Unrolled64);
+        assert_eq!(plan.engine_for(4096), CopyImpl::NonTemporal);
+        assert_eq!(plan.engine_for(4097), CopyImpl::NonTemporal);
+        assert_eq!(plan.engine_for(usize::MAX), CopyImpl::NonTemporal);
+    }
+
+    /// The canary battery from `copy.rs`, pointed at planned dispatch:
+    /// every size-class boundary ±1 of a realistic plan must deliver
+    /// byte-exact copies with no over/underwrite, through whichever engine
+    /// the plan resolves.
+    #[test]
+    fn planned_boundaries_byte_exact() {
+        // Small thresholds so the test exercises all three engines without
+        // hundred-MiB allocations; engines are the real machine ones.
+        let machine = CopyPlan::for_machine(&CacheInfo::detect());
+        let plan = CopyPlan {
+            small_max: 256,
+            nt_min: 8192,
+            ..machine
+        };
+        let mut rng = Rng::new(0x504C414E); // "PLAN"
+        let mut lens = vec![0usize, 1];
+        for b in [plan.small_max, plan.nt_min] {
+            lens.extend_from_slice(&[b - 1, b, b + 1]);
+        }
+        lens.push(plan.nt_min * 4);
+        for &len in &lens {
+            for &(doff, soff) in &[(0usize, 0usize), (1, 0), (0, 1), (3, 5), (7, 9)] {
+                let imp = plan.engine_for(len);
+                let mut src = vec![0u8; len + soff];
+                rng.fill_bytes(&mut src);
+                let mut dst = vec![0xAAu8; len + doff + 1];
+                let canary_idx = len + doff;
+                dst[canary_idx] = 0x5C;
+                unsafe {
+                    copy_bytes_with(imp, dst.as_mut_ptr().add(doff), src.as_ptr().add(soff), len);
+                }
+                assert_eq!(
+                    &dst[doff..doff + len],
+                    &src[soff..soff + len],
+                    "{imp:?} len={len} doff={doff} soff={soff}"
+                );
+                assert_eq!(dst[canary_idx], 0x5C, "{imp:?} overwrote past end (len={len})");
+                assert!(
+                    dst[..doff].iter().all(|&b| b == 0xAA),
+                    "{imp:?} underwrote (len={len})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn global_plan_install_roundtrip() {
+        let _guard = TEST_DISPATCH_LOCK.lock().unwrap();
+        let before = global_plan();
+        let custom = CopyPlan {
+            small_max: 128,
+            nt_min: 1 << 21,
+            small: CopyImpl::Stock,
+            mid: CopyImpl::Unrolled64,
+            large: CopyImpl::Unrolled64,
+        };
+        install_global_plan(&custom);
+        assert_eq!(global_plan(), custom);
+        // The hot-path resolve agrees with the materialised plan.
+        for len in [0usize, 127, 128, 129, (1 << 21) - 1, 1 << 21, 1 << 22] {
+            assert_eq!(planned_engine_for(len), custom.engine_for(len), "len={len}");
+        }
+        install_global_plan(&before);
+        assert_eq!(global_plan(), before);
+    }
+
+    #[test]
+    fn display_lists_all_ranges() {
+        let plan = CopyPlan::for_machine(&CacheInfo::paper_default());
+        let s = plan.to_string();
+        assert!(s.contains(plan.small.name()));
+        assert!(s.contains(plan.mid.name()));
+        assert!(s.contains(plan.large.name()));
+    }
+}

@@ -10,9 +10,14 @@
 //!   "paper-predicted" columns next to measured ones (we cannot fabricate a
 //!   2006 Opteron, but we can replay its fitted model — the DESIGN.md §1
 //!   substitution).
+//! * [`piecewise`] — the per-size-regime extension: one α/β per
+//!   L1/L2/LLC/DRAM bucket, because a single affine fit misprices exactly
+//!   the regimes the paper's Figure 3 sweeps.
 
 pub mod costmodel;
 pub mod machines;
+pub mod piecewise;
 
 pub use costmodel::CostModel;
 pub use machines::MachineProfile;
+pub use piecewise::{PiecewiseModel, RangeModel};

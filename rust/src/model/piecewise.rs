@@ -1,0 +1,232 @@
+//! Piecewise per-range Hockney model.
+//!
+//! One affine `T(n) = α + n/β` cannot describe a cache hierarchy: an
+//! L1-resident copy and a DRAM-streaming copy differ by an order of
+//! magnitude in effective β, and a single least-squares fit over the whole
+//! sweep lands somewhere unhelpful in between — which is exactly the regime
+//! mix the paper's Figure 3 sweeps. The piecewise model keeps one
+//! [`CostModel`] per size regime (L1 / L2 / LLC / DRAM, boundaries from
+//! [`crate::mem::plan::CacheInfo`]) and answers "which α/β applies to *this*
+//! payload" ([`PiecewiseModel::model_for`]), so the collective tuning engine
+//! prices an 8-byte flag exchange and a 64-MiB broadcast with different
+//! channels.
+
+use super::costmodel::CostModel;
+use crate::mem::plan::CacheInfo;
+
+/// Number of size regimes: L1, L2, LLC, DRAM.
+pub const N_RANGES: usize = 4;
+
+/// Number of `u64` words in the heap-header wire encoding
+/// ([`PiecewiseModel::to_wire`]): 4 ranges × (hi, α, β, R²).
+pub const WIRE_WORDS: usize = N_RANGES * 4;
+
+/// One size regime: payloads `≤ hi` bytes (and above the previous range's
+/// `hi`) are priced by `model`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RangeModel {
+    /// Inclusive upper bound of this range in bytes (`usize::MAX` for the
+    /// open DRAM range).
+    pub hi: usize,
+    /// The affine fit governing this range.
+    pub model: CostModel,
+}
+
+/// A per-size-regime channel model: [`N_RANGES`] contiguous ranges covering
+/// `0..=usize::MAX`, each with its own α/β/R².
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PiecewiseModel {
+    /// The ranges, ascending by `hi`; the last `hi` is `usize::MAX`.
+    pub ranges: [RangeModel; N_RANGES],
+}
+
+impl PiecewiseModel {
+    /// The L1/L2/LLC bucket boundaries for `cache` (the DRAM range is
+    /// open). Forced strictly ascending even on degenerate topologies
+    /// (e.g. a VM reporting L2 = LLC): adopters of a published model treat
+    /// non-ascending bounds as corrupt, and rank 0 and its peers must
+    /// decode the same model or collective selections diverge.
+    pub fn bounds(cache: &CacheInfo) -> [usize; N_RANGES] {
+        let b0 = cache.l1d.max(1);
+        let b1 = cache.l2.max(b0 + 1);
+        let b2 = cache.llc.max(b1 + 1);
+        [b0, b1, b2, usize::MAX]
+    }
+
+    /// A piecewise model where every range carries the same `model` —
+    /// how postulated (and fallback) single-α/β engines embed. Boundaries
+    /// are the paper-default hierarchy: with identical models per range they
+    /// are never observable.
+    pub fn uniform(model: CostModel) -> PiecewiseModel {
+        Self::uniform_with(&CacheInfo::paper_default(), model)
+    }
+
+    /// [`PiecewiseModel::uniform`] with explicit cache boundaries.
+    pub fn uniform_with(cache: &CacheInfo, model: CostModel) -> PiecewiseModel {
+        let b = Self::bounds(cache);
+        PiecewiseModel {
+            ranges: [
+                RangeModel { hi: b[0], model },
+                RangeModel { hi: b[1], model },
+                RangeModel { hi: b[2], model },
+                RangeModel { hi: b[3], model },
+            ],
+        }
+    }
+
+    /// Index of the range governing a `bytes`-sized payload.
+    #[inline]
+    pub fn bucket_for(&self, bytes: usize) -> usize {
+        for (i, r) in self.ranges.iter().enumerate() {
+            if bytes <= r.hi {
+                return i;
+            }
+        }
+        N_RANGES - 1
+    }
+
+    /// The α/β model governing a `bytes`-sized payload.
+    #[inline]
+    pub fn model_for(&self, bytes: usize) -> &CostModel {
+        &self.ranges[self.bucket_for(bytes)].model
+    }
+
+    /// Predicted time of an `n`-byte operation under the range that governs
+    /// it, in ns.
+    pub fn predict_ns(&self, n: usize) -> f64 {
+        self.model_for(n).predict_ns(n)
+    }
+
+    /// `true` when any range's model is unusable
+    /// ([`CostModel::is_degenerate`]) or the ranges are not ascending —
+    /// adopters of a published wire model check this before trusting it.
+    pub fn is_degenerate(&self) -> bool {
+        if self.ranges.iter().any(|r| r.model.is_degenerate()) {
+            return true;
+        }
+        self.ranges.windows(2).any(|w| w[0].hi >= w[1].hi)
+    }
+
+    /// Heap-header wire encoding: per range `(hi, α bits, β bits, R² bits)`,
+    /// ranges in order. Decoded by [`PiecewiseModel::from_wire`].
+    pub fn to_wire(&self) -> [u64; WIRE_WORDS] {
+        let mut w = [0u64; WIRE_WORDS];
+        for (i, r) in self.ranges.iter().enumerate() {
+            w[i * 4] = r.hi as u64;
+            w[i * 4 + 1] = r.model.alpha_ns.to_bits();
+            w[i * 4 + 2] = r.model.beta_bytes_per_ns.to_bits();
+            w[i * 4 + 3] = r.model.r2.to_bits();
+        }
+        w
+    }
+
+    /// Decode [`PiecewiseModel::to_wire`].
+    pub fn from_wire(w: &[u64; WIRE_WORDS]) -> PiecewiseModel {
+        let range = |i: usize| RangeModel {
+            hi: w[i * 4] as usize,
+            model: CostModel {
+                alpha_ns: f64::from_bits(w[i * 4 + 1]),
+                beta_bytes_per_ns: f64::from_bits(w[i * 4 + 2]),
+                r2: f64::from_bits(w[i * 4 + 3]),
+            },
+        };
+        PiecewiseModel {
+            ranges: [range(0), range(1), range(2), range(3)],
+        }
+    }
+}
+
+impl std::fmt::Display for PiecewiseModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut lo = 0usize;
+        for (i, r) in self.ranges.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            if r.hi == usize::MAX {
+                write!(f, "({lo}, ∞): {}", r.model)?;
+            } else {
+                write!(f, "({lo}, {}]: {}", r.hi, r.model)?;
+            }
+            lo = r.hi;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_regime() -> PiecewiseModel {
+        let fast = CostModel {
+            alpha_ns: 10.0,
+            beta_bytes_per_ns: 50.0,
+            r2: 1.0,
+        };
+        let slow = CostModel {
+            alpha_ns: 100.0,
+            beta_bytes_per_ns: 5.0,
+            r2: 1.0,
+        };
+        PiecewiseModel {
+            ranges: [
+                RangeModel { hi: 32 << 10, model: fast },
+                RangeModel { hi: 256 << 10, model: fast },
+                RangeModel { hi: 8 << 20, model: slow },
+                RangeModel { hi: usize::MAX, model: slow },
+            ],
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_inclusive() {
+        let pw = two_regime();
+        assert_eq!(pw.bucket_for(0), 0);
+        assert_eq!(pw.bucket_for(32 << 10), 0);
+        assert_eq!(pw.bucket_for((32 << 10) + 1), 1);
+        assert_eq!(pw.bucket_for(256 << 10), 1);
+        assert_eq!(pw.bucket_for((256 << 10) + 1), 2);
+        assert_eq!(pw.bucket_for(8 << 20), 2);
+        assert_eq!(pw.bucket_for((8 << 20) + 1), 3);
+        assert_eq!(pw.bucket_for(usize::MAX), 3);
+    }
+
+    #[test]
+    fn model_for_resolves_per_regime() {
+        let pw = two_regime();
+        assert_eq!(pw.model_for(64).beta_bytes_per_ns, 50.0);
+        assert_eq!(pw.model_for(64 << 20).beta_bytes_per_ns, 5.0);
+        assert!(pw.predict_ns(64) < pw.predict_ns(64 << 20));
+    }
+
+    #[test]
+    fn uniform_is_the_whole_model_everywhere() {
+        let m = CostModel::from_alpha_gbps(100.0, 80.0);
+        let pw = PiecewiseModel::uniform(m);
+        for n in [0usize, 1, 4096, 1 << 20, 1 << 30] {
+            assert_eq!(*pw.model_for(n), m);
+            assert_eq!(pw.predict_ns(n), m.predict_ns(n));
+        }
+        assert!(!pw.is_degenerate());
+    }
+
+    #[test]
+    fn wire_roundtrip_exact() {
+        let pw = two_regime();
+        assert_eq!(PiecewiseModel::from_wire(&pw.to_wire()), pw);
+        let u = PiecewiseModel::uniform(CostModel::from_alpha_gbps(38.4, 76.15));
+        assert_eq!(PiecewiseModel::from_wire(&u.to_wire()), u);
+    }
+
+    #[test]
+    fn degenerate_detection() {
+        let mut pw = two_regime();
+        assert!(!pw.is_degenerate());
+        pw.ranges[2].model.beta_bytes_per_ns = f64::INFINITY;
+        assert!(pw.is_degenerate());
+        let mut pw2 = two_regime();
+        pw2.ranges[1].hi = pw2.ranges[0].hi; // non-ascending bounds
+        assert!(pw2.is_degenerate());
+    }
+}

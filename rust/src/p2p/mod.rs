@@ -14,7 +14,7 @@ pub mod ptr;
 pub(crate) mod shard_queue;
 pub mod strided;
 
-use crate::mem::copy::{copy_bytes_with, global_impl, CopyImpl};
+use crate::mem::copy::{copy_bytes, copy_bytes_with, CopyImpl};
 use crate::pe::Ctx;
 use crate::symheap::SymPtr;
 
@@ -36,9 +36,22 @@ impl Ctx {
     }
 
     /// `shmem_put`: copy `src` into the symmetric object `dest` on PE `pe`.
+    ///
+    /// Dispatches through the process-wide copy state: a forced engine when
+    /// one is configured (`POSH_COPY`, `copy-*` features), otherwise the
+    /// size-aware [`crate::mem::plan::CopyPlan`] picks per payload size.
     #[inline]
     pub fn put<T: Copy>(&self, dest: SymPtr<T>, src: &[T], pe: usize) {
-        self.put_with(global_impl(), dest, src, pe)
+        self.check_p2p(dest, src.len(), pe);
+        // SAFETY: handle in-bounds (checked), src is a live slice, regions
+        // cannot overlap (private stack/heap vs mapped segment).
+        unsafe {
+            copy_bytes(
+                self.remote_addr(dest, pe) as *mut u8,
+                src.as_ptr() as *const u8,
+                std::mem::size_of_val(src),
+            );
+        }
     }
 
     /// `put` with an explicit copy implementation (bench sweeps, Table 2).
@@ -58,9 +71,19 @@ impl Ctx {
     }
 
     /// `shmem_get`: copy the symmetric object `src` on PE `pe` into `dest`.
+    ///
+    /// Same size-aware dispatch as [`Ctx::put`].
     #[inline]
     pub fn get<T: Copy>(&self, dest: &mut [T], src: SymPtr<T>, pe: usize) {
-        self.get_with(global_impl(), dest, src, pe)
+        self.check_p2p(src, dest.len(), pe);
+        // SAFETY: as `put`, directions reversed.
+        unsafe {
+            copy_bytes(
+                dest.as_mut_ptr() as *mut u8,
+                self.remote_addr(src, pe) as *const u8,
+                std::mem::size_of_val(dest),
+            );
+        }
     }
 
     /// `get` with an explicit copy implementation.

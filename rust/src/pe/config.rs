@@ -46,7 +46,9 @@ pub struct PoshConfig {
     pub heap_size: usize,
     /// Statics area size per PE (§4.2 pre-parser placements).
     pub statics_size: usize,
-    /// Copy implementation; `None` keeps the compile-time default.
+    /// Forced copy implementation for every size; `None` keeps the default
+    /// dispatch — size-aware planned ([`crate::mem::plan::CopyPlan`]) unless
+    /// a `copy-*` cargo feature pins an engine.
     pub copy_impl: Option<CopyImpl>,
     /// Default collective algorithm; `None` keeps the compile-time default
     /// (which is [`AlgoKind::Adaptive`] unless a `coll-*` feature pins it).
@@ -109,7 +111,15 @@ impl PoshConfig {
             }
         }
         if let Ok(v) = std::env::var("POSH_COPY") {
-            self.copy_impl = CopyImpl::parse(&v);
+            match v.to_ascii_lowercase().as_str() {
+                // Explicitly restore size-aware planned dispatch (undoes a
+                // forced engine from earlier in the process).
+                "planned" | "plan" | "auto" => {
+                    self.copy_impl = None;
+                    crate::mem::copy::set_global_planned();
+                }
+                _ => self.copy_impl = CopyImpl::parse(&v),
+            }
         }
         if let Ok(v) = std::env::var("POSH_COLL_ALGO") {
             self.coll_algo = AlgoKind::parse(&v);

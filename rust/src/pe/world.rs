@@ -141,6 +141,12 @@ impl World {
             hdr0.tuning_beta_bits
                 .store(t.model().beta_bytes_per_ns.to_bits(), Ordering::Relaxed);
             hdr0.tuning_r2_bits.store(t.model().r2.to_bits(), Ordering::Relaxed);
+            // The piecewise regime fits ride the same release fence: all 16
+            // words land before tuning_ready flips.
+            let wire = t.piecewise().to_wire();
+            for (cell, w) in hdr0.tuning_pw.iter().zip(wire) {
+                cell.store(w, Ordering::Relaxed);
+            }
             hdr0.tuning_ready.store(t.source().to_wire(), Ordering::Release);
             t
         } else {
@@ -163,7 +169,20 @@ impl World {
                 ),
                 r2: f64::from_bits(hdr0.tuning_r2_bits.load(Ordering::Relaxed)),
             };
-            Tuning::new(model, TuningSource::from_wire(wire))
+            let mut pw_wire = [0u64; crate::model::piecewise::WIRE_WORDS];
+            for (w, cell) in pw_wire.iter_mut().zip(hdr0.tuning_pw.iter()) {
+                *w = cell.load(Ordering::Relaxed);
+            }
+            let pw = crate::model::PiecewiseModel::from_wire(&pw_wire);
+            let source = TuningSource::from_wire(wire);
+            if pw.is_degenerate() {
+                // All-zero (legacy publisher) or corrupt regime words:
+                // adopt the scalar model uniformly — identical selections
+                // to a pre-piecewise job.
+                Tuning::new(model, source)
+            } else {
+                Tuning::new_piecewise(model, pw, source)
+            }
         };
         let bases = table.bases();
         Ok(World {

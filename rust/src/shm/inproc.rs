@@ -1,15 +1,27 @@
 //! Anonymous in-process segments (thread-mode worlds, tests, benches).
 
-use super::Segment;
+use super::{HugePageStatus, Segment};
 use crate::Result;
 use anyhow::bail;
+
+/// Size of an x86-64 huge page; segments at least this large attempt
+/// huge-page backing.
+pub const HUGE_PAGE_BYTES: usize = 2 << 20;
 
 /// A private anonymous `mmap` region. Page-aligned like the POSIX variant so
 /// both modes see identical alignment behaviour (Fact 1 depends on heap bases
 /// being equally aligned everywhere).
+///
+/// Segments of [`HUGE_PAGE_BYTES`] or more first try an explicit
+/// `MAP_HUGETLB` mapping (guaranteed huge pages, but requires a pre-reserved
+/// hugetlb pool — usually absent); failing that they fall back to an ordinary
+/// mapping with `madvise(MADV_HUGEPAGE)` so the kernel's THP machinery can
+/// promote it. Either way the caller gets zeroed page-aligned memory; only
+/// [`Segment::huge_pages`] differs.
 pub struct InProcSegment {
     base: *mut u8,
     len: usize,
+    huge: HugePageStatus,
 }
 
 // SAFETY: the mapping is plain memory; cross-thread access discipline is the
@@ -25,6 +37,32 @@ impl InProcSegment {
         }
         let page = page_size();
         let len = crate::util::align_up(len, page);
+        if len >= HUGE_PAGE_BYTES {
+            // Explicit huge pages need a length that is a multiple of the
+            // huge-page size; the handful of extra bytes is invisible to
+            // callers (len() reports the mapped size either way).
+            let hlen = crate::util::align_up(len, HUGE_PAGE_BYTES);
+            // SAFETY: anonymous mapping; MAP_HUGETLB fails cleanly (ENOMEM)
+            // when no hugetlb pool is reserved.
+            let ptr = unsafe {
+                libc::mmap(
+                    std::ptr::null_mut(),
+                    hlen,
+                    libc::PROT_READ | libc::PROT_WRITE,
+                    libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_HUGETLB,
+                    -1,
+                    0,
+                )
+            };
+            if ptr != libc::MAP_FAILED {
+                return Ok(Self {
+                    base: ptr as *mut u8,
+                    len: hlen,
+                    huge: HugePageStatus::Explicit,
+                });
+            }
+            // No pool (the common case) — fall through to ordinary pages.
+        }
         // SAFETY: standard anonymous mapping.
         let ptr = unsafe {
             libc::mmap(
@@ -43,9 +81,22 @@ impl InProcSegment {
                 std::io::Error::last_os_error()
             );
         }
+        let huge = if len >= HUGE_PAGE_BYTES {
+            // SAFETY: advising our own fresh mapping; failure (THP compiled
+            // out, or `transparent_hugepage=never`) leaves plain pages.
+            let rc = unsafe { libc::madvise(ptr, len, libc::MADV_HUGEPAGE) };
+            if rc == 0 {
+                HugePageStatus::Transparent
+            } else {
+                HugePageStatus::None
+            }
+        } else {
+            HugePageStatus::None
+        };
         Ok(Self {
             base: ptr as *mut u8,
             len,
+            huge,
         })
     }
 }
@@ -56,6 +107,9 @@ impl Segment for InProcSegment {
     }
     fn len(&self) -> usize {
         self.len
+    }
+    fn huge_pages(&self) -> HugePageStatus {
+        self.huge
     }
 }
 
@@ -124,6 +178,32 @@ mod tests {
     fn page_aligned_base() {
         let seg = InProcSegment::new(1).unwrap();
         assert_eq!(seg.base() as usize % page_size(), 0);
+    }
+
+    #[test]
+    fn small_segments_never_claim_huge_pages() {
+        let seg = InProcSegment::new(4096).unwrap();
+        assert_eq!(seg.huge_pages(), HugePageStatus::None);
+    }
+
+    #[test]
+    fn large_segment_usable_whatever_the_backing() {
+        // Whichever of the three outcomes the kernel grants, the segment
+        // must behave identically: zeroed, writable, size-preserving.
+        let seg = InProcSegment::new(HUGE_PAGE_BYTES + 1).unwrap();
+        assert!(seg.len() >= HUGE_PAGE_BYTES + 1);
+        let status = seg.huge_pages();
+        assert!(!format!("{status}").is_empty());
+        if status == HugePageStatus::Explicit {
+            // Explicit mappings are rounded to whole huge pages.
+            assert_eq!(seg.len() % HUGE_PAGE_BYTES, 0);
+            assert_eq!(seg.base() as usize % HUGE_PAGE_BYTES, 0);
+        }
+        unsafe {
+            assert_eq!(*seg.base(), 0);
+            *seg.base().add(seg.len() - 1) = 0x7E;
+            assert_eq!(*seg.base().add(seg.len() - 1), 0x7E);
+        }
     }
 
     #[test]

@@ -22,6 +22,35 @@ pub mod posix;
 
 use crate::Result;
 
+/// How a segment's backing pages relate to huge pages. The symmetric heap
+/// is the hottest mapping in the job — every put/get walks it — so TLB
+/// reach matters for the DRAM-regime copies the streaming engines target.
+/// Segments *attempt* huge-page backing and report what they got; nothing
+/// fails if the machine has no huge pages (`oshrun info` surfaces the
+/// outcome).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HugePageStatus {
+    /// The mapping was created with `MAP_HUGETLB` — pages come from the
+    /// pre-reserved hugetlb pool and are guaranteed huge.
+    Explicit,
+    /// The mapping is ordinary but `madvise(MADV_HUGEPAGE)` succeeded —
+    /// the kernel's THP machinery *may* back it with huge pages.
+    Transparent,
+    /// Ordinary pages only (small segment, or the kernel refused both
+    /// mechanisms).
+    None,
+}
+
+impl std::fmt::Display for HugePageStatus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            HugePageStatus::Explicit => "explicit (MAP_HUGETLB)",
+            HugePageStatus::Transparent => "transparent (MADV_HUGEPAGE)",
+            HugePageStatus::None => "none",
+        })
+    }
+}
+
 /// A mapped region of memory that other PEs may also have mapped.
 ///
 /// # Safety-relevant contract
@@ -36,6 +65,11 @@ pub trait Segment: Send + Sync {
     /// in-process segments do not).
     fn name(&self) -> Option<&str> {
         None
+    }
+    /// Huge-page backing the segment ended up with (best effort; see
+    /// [`HugePageStatus`]).
+    fn huge_pages(&self) -> HugePageStatus {
+        HugePageStatus::None
     }
     /// Byte slice view. Unsafe because aliasing across PEs is the caller's
     /// (i.e. the SHMEM memory model's) responsibility.
@@ -66,5 +100,6 @@ mod tests {
         assert_eq!(seg.len(), 4096);
         assert!(!seg.base().is_null());
         assert!(seg.name().is_none());
+        assert_eq!(seg.huge_pages(), HugePageStatus::None);
     }
 }

@@ -9,19 +9,25 @@
 //!   ([`crate::pe::remote_table`]) — creating them is expensive, looking
 //!   them up is not.
 
-use super::Segment;
+use super::{HugePageStatus, Segment};
 use crate::Result;
 use anyhow::{bail, Context};
 use std::ffi::CString;
 use std::time::{Duration, Instant};
 
 /// A named shared-memory segment backed by `/dev/shm`.
+///
+/// `MAP_HUGETLB` does not apply to `shm_open` objects (it needs a hugetlbfs
+/// fd), so large segments request transparent huge pages instead via
+/// `madvise(MADV_HUGEPAGE)` — effective when the kernel runs with
+/// `shmem_enabled=advise` (or `always`), harmless otherwise.
 pub struct PosixShmSegment {
     base: *mut u8,
     len: usize,
     name: String,
     /// Only the creator unlinks the name on drop.
     owner: bool,
+    huge: HugePageStatus,
 }
 
 // SAFETY: plain shared bytes; the SHMEM memory model governs access.
@@ -65,7 +71,7 @@ impl PosixShmSegment {
             }
             bail!("ftruncate({name}, {len}) failed: {e}");
         }
-        let base = map_fd(fd, len)?;
+        let (base, huge) = map_fd(fd, len)?;
         // SAFETY: fd no longer needed after mmap.
         unsafe {
             libc::close(fd);
@@ -75,6 +81,7 @@ impl PosixShmSegment {
             len,
             name: name.to_string(),
             owner: true,
+            huge,
         })
     }
 
@@ -95,7 +102,7 @@ impl PosixShmSegment {
                 // SAFETY: valid fd and out-pointer.
                 let rc = unsafe { libc::fstat(fd, &mut st) };
                 if rc == 0 && (st.st_size as usize) >= len {
-                    let base = map_fd(fd, len)?;
+                    let (base, huge) = map_fd(fd, len)?;
                     unsafe {
                         libc::close(fd);
                     }
@@ -104,6 +111,7 @@ impl PosixShmSegment {
                         len,
                         name: name.to_string(),
                         owner: false,
+                        huge,
                     });
                 }
                 unsafe {
@@ -129,7 +137,7 @@ impl PosixShmSegment {
     }
 }
 
-fn map_fd(fd: libc::c_int, len: usize) -> Result<*mut u8> {
+fn map_fd(fd: libc::c_int, len: usize) -> Result<(*mut u8, HugePageStatus)> {
     // SAFETY: mapping a valid fd MAP_SHARED.
     let ptr = unsafe {
         libc::mmap(
@@ -144,7 +152,18 @@ fn map_fd(fd: libc::c_int, len: usize) -> Result<*mut u8> {
     if ptr == libc::MAP_FAILED {
         bail!("mmap failed: {}", std::io::Error::last_os_error());
     }
-    Ok(ptr as *mut u8)
+    let huge = if len >= super::inproc::HUGE_PAGE_BYTES {
+        // SAFETY: advising our own fresh mapping; refusal leaves plain pages.
+        let rc = unsafe { libc::madvise(ptr, len, libc::MADV_HUGEPAGE) };
+        if rc == 0 {
+            HugePageStatus::Transparent
+        } else {
+            HugePageStatus::None
+        }
+    } else {
+        HugePageStatus::None
+    };
+    Ok((ptr as *mut u8, huge))
 }
 
 impl Segment for PosixShmSegment {
@@ -156,6 +175,9 @@ impl Segment for PosixShmSegment {
     }
     fn name(&self) -> Option<&str> {
         Some(&self.name)
+    }
+    fn huge_pages(&self) -> HugePageStatus {
+        self.huge
     }
 }
 
@@ -230,6 +252,17 @@ mod tests {
         }
         assert!(std::path::Path::new(&format!("/dev/shm{name}")).exists());
         drop(seg);
+    }
+
+    #[test]
+    fn large_segment_reports_huge_status() {
+        let name = uniq("huge");
+        let seg =
+            PosixShmSegment::create(&name, super::super::inproc::HUGE_PAGE_BYTES * 2).unwrap();
+        // shm objects can only ever get THP (or nothing) — never MAP_HUGETLB.
+        assert_ne!(seg.huge_pages(), HugePageStatus::Explicit);
+        let small = PosixShmSegment::create(&uniq("small"), 4096).unwrap();
+        assert_eq!(small.huge_pages(), HugePageStatus::None);
     }
 
     #[test]

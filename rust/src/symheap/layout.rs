@@ -210,9 +210,16 @@ pub struct HeapHeader {
     pub tuning_beta_bits: AtomicU64,
     /// Published tuning model, fit R² as `f64::to_bits`.
     pub tuning_r2_bits: AtomicU64,
+    /// Published piecewise channel model: 4 regime ranges × (upper bound,
+    /// α bits, β bits, R² bits) — the wire form of
+    /// [`crate::model::PiecewiseModel`]. Written by rank 0 before the
+    /// `tuning_ready` release store; all-zero means "whole-sweep model
+    /// only" (a legacy publisher), in which case adopters fall back to a
+    /// uniform piecewise view of the three scalar words.
+    pub tuning_pw: [AtomicU64; crate::model::piecewise::WIRE_WORDS],
     /// 0 until the model is published; then the wire encoding of its
     /// [`crate::collectives::TuningSource`]. Peers spin on this before
-    /// reading the three `tuning_*_bits` words.
+    /// reading the three `tuning_*_bits` words and `tuning_pw`.
     pub tuning_ready: AtomicU64,
     /// Per-team sync cells and membership descriptors (OpenSHMEM 1.4 teams).
     pub teams: [TeamCell; MAX_TEAMS],

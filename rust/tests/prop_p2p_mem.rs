@@ -4,6 +4,7 @@
 
 use posh::baseline::upc::{Consistency, UpcWorld};
 use posh::mem::copy::{copy_slice_with, CopyImpl};
+use posh::mem::plan::{CacheInfo, CopyPlan};
 use posh::pe::{PoshConfig, World};
 use posh::util::quickcheck::{forall, Gen};
 
@@ -21,6 +22,34 @@ fn all_engines_agree_with_stock() {
             if dst != src {
                 return Err(format!("{imp:?} corrupted {} bytes (head {head})", src.len()));
             }
+        }
+        Ok(())
+    });
+}
+
+/// Size-aware planned dispatch is byte-identical to the stock copy for
+/// random plans (random thresholds over the machine's real engines) and
+/// random lengths/alignments — the plan may only ever change speed, never
+/// bytes. Plans are built locally (not installed globally) so the property
+/// runs in parallel with the rest of the battery.
+#[test]
+fn planned_dispatch_matches_stock() {
+    let machine = CopyPlan::for_machine(&CacheInfo::detect());
+    forall("planned == stock", 120, |g: &mut Gen| {
+        let small_max = g.usize_in(0..4096);
+        let nt_min = (small_max + 1).max(g.usize_in(1..40_000));
+        let plan = CopyPlan { small_max, nt_min, ..machine };
+        let data = g.bytes(0..40_000);
+        let head = g.usize_in(0..16.min(data.len() + 1));
+        let src = &data[head..];
+        let imp = plan.engine_for(src.len());
+        let mut dst = vec![0u8; src.len()];
+        copy_slice_with(imp, &mut dst, src);
+        if dst != src {
+            return Err(format!(
+                "plan(small_max={small_max}, nt_min={nt_min}) -> {imp:?} corrupted {} bytes",
+                src.len()
+            ));
         }
         Ok(())
     });
