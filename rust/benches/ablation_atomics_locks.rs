@@ -76,6 +76,80 @@ fn ctx_threads_rates(threads: usize, ops_per_thread: usize) -> (f64, f64) {
     )
 }
 
+/// Contended-tier worker: every thread on every PE hammers the SAME
+/// symmetric cell (`atomic_fadd`) and then the SAME named lock, both homed
+/// on PE 0 — the worst case for the spec's ticket locks, whose `serving`
+/// word bounces between every contender's cache. This is the data feeding
+/// the ROADMAP decision on local-spin MCS queue locks: if lock ns/op grows
+/// superlinearly in `pes × threads` while fadd stays near-linear, the
+/// ticket design (not raw atomic bandwidth) is the bottleneck.
+///
+/// Returns `(fadd_ns, lock_ns)` per-op costs from PE 0's view. The fadd
+/// tier self-checks: the cell must equal the op count at the end.
+fn contended_rates(
+    pes: usize,
+    threads: usize,
+    fadd_iters: usize,
+    lock_iters: usize,
+) -> (f64, f64) {
+    let fadd_bits = AtomicU64::new(0);
+    let lock_bits = AtomicU64::new(0);
+    let w = World::threads(pes, PoshConfig::small()).unwrap();
+    w.run(|ctx| {
+        let cell = ctx.shmalloc_n::<i64>(1).unwrap();
+        if ctx.my_pe() == 0 {
+            ctx.put_one(cell, 0, 0);
+        }
+        ctx.barrier_all();
+
+        // Tier A: same-cell fetch-add from every thread of every PE.
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let ctx = ctx.clone();
+                s.spawn(move || {
+                    for _ in 0..fadd_iters {
+                        ctx.atomic_fadd(cell, 1, 0);
+                    }
+                });
+            }
+        });
+        let fadd_elapsed = t0.elapsed();
+        ctx.barrier_all();
+        let expect = (pes * threads * fadd_iters) as i64;
+        let got = ctx.get_one(cell, 0);
+        assert_eq!(got, expect, "contended fadd lost updates: {got} != {expect}");
+
+        // Tier B: same named lock (ticket lock homed on PE 0) from every
+        // thread of every PE. Empty critical section — the cost measured is
+        // pure acquire + release under contention.
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let ctx = ctx.clone();
+                s.spawn(move || {
+                    for _ in 0..lock_iters {
+                        let _g = ctx.named_lock("c-contend", 0);
+                    }
+                });
+            }
+        });
+        let lock_elapsed = t0.elapsed();
+        ctx.barrier_all();
+
+        if ctx.my_pe() == 0 {
+            let fadd_ns = fadd_elapsed.as_nanos() as f64 / (threads * fadd_iters) as f64;
+            let lock_ns = lock_elapsed.as_nanos() as f64 / (threads * lock_iters) as f64;
+            fadd_bits.store(fadd_ns.to_bits(), Ordering::Relaxed);
+            lock_bits.store(lock_ns.to_bits(), Ordering::Relaxed);
+        }
+    });
+    (
+        f64::from_bits(fadd_bits.load(Ordering::Relaxed)),
+        f64::from_bits(lock_bits.load(Ordering::Relaxed)),
+    )
+}
+
 fn main() {
     // --- Single-PE atomic op costs (no contention). The table is built and
     // printed inside the PE body (measurement happens on the PE's thread).
@@ -157,6 +231,23 @@ fn main() {
     t2.print();
     t2.write_csv("ablationC_locks").unwrap();
 
+    // --- C1/C2 contended tiers: 2/4/8 threads per PE, all PEs, one target
+    // cell and one target lock. CSV feeds the ROADMAP MCS-lock decision
+    // (see fn contended_rates docs).
+    let mut tc = Table::new(
+        "Ablation C contended tiers: same-cell fadd / same-lock acquire, all threads x all PEs",
+        "ns/op (PE 0's view)",
+        &["fadd", "named-lock"],
+    );
+    for &pes in &[1usize, 2, 4] {
+        for &threads in &[2usize, 4, 8] {
+            let (fadd_ns, lock_ns) = contended_rates(pes, threads, 20_000, 150);
+            tc.row(&format!("{pes} PE x {threads} thr"), vec![fadd_ns, lock_ns]);
+        }
+    }
+    tc.print();
+    tc.write_csv("ablationC_contended").unwrap();
+
     // --- C3: SHMEM_THREAD_MULTIPLE scaling — one shared SERIALIZED
     // context (mutex-funnelled) vs a per-thread context pool. The ≥2×
     // acceptance gate at 8 threads pins the point of `ctx_for_thread`:
@@ -190,6 +281,6 @@ fn main() {
     t3.write_csv("ablationC_ctx_threads").unwrap();
     println!(
         "\ncsv: bench_out/ablationC_atomics.csv, bench_out/ablationC_locks.csv, \
-         bench_out/ablationC_ctx_threads.csv"
+         bench_out/ablationC_contended.csv, bench_out/ablationC_ctx_threads.csv"
     );
 }

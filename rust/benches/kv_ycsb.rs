@@ -1,0 +1,25 @@
+//! **KV YCSB** — throughput scaling of the `posh-kv` subsystem (docs/kv.md).
+//!
+//! Sweeps PE count × threads-per-PE × read/write mix over a zipfian (or
+//! uniform) key-popularity distribution, YCSB-style: mixes A (50/50),
+//! B (95/5), C (read-only) plus the write-heavy W (5/95) stressor that
+//! exercises the NBI defer/drain knobs (docs/tuning.md §NBI re-derivation).
+//! Worker threads drive remote writes through their pooled per-thread
+//! contexts (`Team::ctx_for_thread`), so the thread axis doubles as a
+//! `SHMEM_THREAD_MULTIPLE` scaling probe.
+//!
+//! All logic lives in `posh::kv::driver` so `oshrun kv-bench` runs the
+//! identical sweep. Results: throughput table on stdout,
+//! `bench_out/kv_ycsb.csv`, `bench_out/BENCH_kv.json`. Self-check gates
+//! demote to warnings with `POSH_BENCH_NO_ASSERT=1`.
+//!
+//! Flags: `--smoke`, `--dist uniform|zipfian`, `--mix A[,B,...]`,
+//! `--keys N`, `--ops N`, `--seed N`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = posh::kv::driver::run_cli(&args) {
+        eprintln!("kv_ycsb: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -410,7 +410,7 @@ impl Tuning {
     /// models still coalesce flag-sized puts and never pin unbounded runs.
     pub fn coalesce_threshold_bytes(&self) -> usize {
         let n_half = self.model.n_half();
-        let cap = crate::p2p::nbi::NBI_DEFER_MAX_BYTES;
+        let cap = crate::p2p::nbi::nbi_defer_max_bytes();
         if !n_half.is_finite() {
             return cap;
         }

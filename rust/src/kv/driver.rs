@@ -1,0 +1,420 @@
+//! The YCSB bench driver behind `oshrun kv-bench` and `benches/kv_ycsb.rs`.
+//!
+//! Sweeps PE count × threads-per-PE × mix over a seed-deterministic
+//! workload (see [`super::ycsb`]), reports ops/sec scaling as a
+//! paper-shaped table, and archives machine-readable results in
+//! `bench_out/BENCH_kv.json`. Worker threads drive the store through their
+//! pooled per-thread contexts ([`crate::team::Team::ctx_for_thread`] via
+//! [`super::KvStore::put`]), so the sweep doubles as a
+//! `SHMEM_THREAD_MULTIPLE` scaling probe.
+//!
+//! Self-checks (demote to warnings with `POSH_BENCH_NO_ASSERT=1`): every
+//! read must hit (the load phase populates the whole key space), sampled
+//! values must match the per-key oracle bytes (writers all write the same
+//! deterministic value for a key, so *any* committed version is correct
+//! content), and the final key count must equal the key-space size
+//! (overwrites never grow it).
+
+use super::ycsb::{key_of, Distribution, Mix, Op, Workload, MIX_A, MIX_B, MIX_C, MIX_W};
+use super::{KvConfig, KvStore};
+use crate::bench::Table;
+use crate::pe::{PoshConfig, World};
+use crate::util::prng::Rng;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::time::Instant;
+
+/// Everything one `kv-bench` invocation sweeps and how.
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// PE counts to sweep (each gets its own thread-mode [`World`]).
+    pub pe_counts: Vec<usize>,
+    /// Worker threads per PE to sweep.
+    pub thread_counts: Vec<usize>,
+    /// Read/write mixes to run.
+    pub mixes: Vec<Mix>,
+    /// Key-popularity distribution.
+    pub dist: Distribution,
+    /// Distinct keys (all loaded before the timed phase).
+    pub n_keys: usize,
+    /// Timed operations per worker thread.
+    pub ops_per_thread: usize,
+    /// Value payload size in bytes.
+    pub value_bytes: usize,
+    /// Per-shard arena size handed to [`KvConfig`].
+    pub arena_bytes: usize,
+    /// Workload seed (PE/thread streams are derived from it).
+    pub seed: u64,
+    /// Write `bench_out/BENCH_kv.json` (off for in-test mini runs).
+    pub emit_json: bool,
+}
+
+impl DriverConfig {
+    /// The full sweep: 1/2/4 PEs × 1/4 threads × A/B/C/W, zipfian.
+    pub fn full() -> DriverConfig {
+        DriverConfig {
+            pe_counts: vec![1, 2, 4],
+            thread_counts: vec![1, 4],
+            mixes: vec![MIX_A, MIX_B, MIX_C, MIX_W],
+            dist: Distribution::Zipfian,
+            n_keys: 16 * 1024,
+            ops_per_thread: 20_000,
+            value_bytes: 128,
+            arena_bytes: 4 << 20,
+            seed: 0x00C0_FFEE,
+            emit_json: true,
+        }
+    }
+
+    /// CI-sized smoke: the acceptance shape (4 PEs, 4 threads, zipfian)
+    /// at a fraction of the op count.
+    pub fn smoke() -> DriverConfig {
+        DriverConfig {
+            pe_counts: vec![4],
+            thread_counts: vec![4],
+            mixes: vec![MIX_A],
+            n_keys: 4 * 1024,
+            ops_per_thread: 2_000,
+            arena_bytes: 1 << 20,
+            ..DriverConfig::full()
+        }
+    }
+}
+
+/// One (mix, PEs, threads) cell of the sweep.
+#[derive(Clone, Debug)]
+struct CellResult {
+    mix: &'static str,
+    read_fraction: f64,
+    pes: usize,
+    threads: usize,
+    ops: u64,
+    reads: u64,
+    writes: u64,
+    /// Slowest PE's timed-phase wall time — the honest job duration.
+    elapsed_s: f64,
+    kops_per_s: f64,
+}
+
+/// Deterministic oracle value for key index `idx`: every writer writes
+/// these bytes for the key, so any committed version must equal them.
+fn value_for(idx: usize, bytes: usize, seed: u64) -> Vec<u8> {
+    let mut r = Rng::new(seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut v = vec![0u8; bytes];
+    r.fill_bytes(&mut v);
+    v
+}
+
+/// Independent stream seed for (PE, thread).
+fn stream_seed(seed: u64, pe: usize, thread: usize) -> u64 {
+    seed ^ (pe as u64).wrapping_mul(0xA24B_AED4_963E_E407)
+        ^ (thread as u64).wrapping_mul(0x9E6D_62D0_6F6A_9A9B)
+}
+
+/// Run one sweep cell: build a world, load the key space, hammer it from
+/// `threads` workers per PE, and aggregate.
+fn run_cell(mix: Mix, pes: usize, threads: usize, dc: &DriverConfig, strict: bool) -> Result<CellResult> {
+    let w = World::threads(pes, PoshConfig::default())
+        .with_context(|| format!("kv-bench: world of {pes} PEs"))?;
+    let kv_cfg = KvConfig {
+        shards_per_pe: 8,
+        arena_bytes: dc.arena_bytes,
+        max_key_len: 64,
+        max_val_len: dc.value_bytes.max(64),
+    };
+    let keys: Vec<String> = (0..dc.n_keys).map(key_of).collect();
+    let vals: Vec<Vec<u8>> = (0..dc.n_keys).map(|i| value_for(i, dc.value_bytes, dc.seed)).collect();
+    let (keys, vals, dc_ref) = (&keys, &vals, dc);
+
+    // (elapsed_s, reads, misses, writes, global key count as seen by the PE)
+    let per_pe = w.run_collect(move |ctx| {
+        let kv = KvStore::create(&ctx, kv_cfg.clone()).expect("kv-bench: store creation");
+        let my_pe = ctx.my_pe();
+        let n_pes = ctx.n_pes();
+        // Load phase: PEs split the key space round-robin; routing scatters
+        // the actual writes over owners, so this warms both access planes.
+        for i in (my_pe..dc_ref.n_keys).step_by(n_pes) {
+            kv.put(keys[i].as_bytes(), &vals[i]).expect("kv-bench: load put");
+        }
+        ctx.barrier_all();
+
+        let t0 = Instant::now();
+        let kv_ref = &kv;
+        let (reads, misses, writes) = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    s.spawn(move || {
+                        let mut wl = Workload::new(
+                            dc_ref.dist,
+                            mix,
+                            dc_ref.n_keys,
+                            stream_seed(dc_ref.seed, my_pe, t),
+                        );
+                        let (mut reads, mut misses, mut writes) = (0u64, 0u64, 0u64);
+                        for _ in 0..dc_ref.ops_per_thread {
+                            match wl.next_op() {
+                                Op::Read(k) => {
+                                    reads += 1;
+                                    if kv_ref.get(keys[k].as_bytes()).is_none() {
+                                        misses += 1;
+                                    }
+                                }
+                                Op::Write(k) => {
+                                    writes += 1;
+                                    kv_ref
+                                        .put(keys[k].as_bytes(), &vals[k])
+                                        .expect("kv-bench: timed put");
+                                }
+                            }
+                        }
+                        (reads, misses, writes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("kv worker panicked")).fold(
+                (0u64, 0u64, 0u64),
+                |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
+            )
+        });
+        let elapsed = t0.elapsed().as_secs_f64();
+        ctx.barrier_all();
+
+        // Post-run content spot-check against the per-key oracle bytes.
+        let mut r = Rng::for_pe(dc_ref.seed ^ 0x5EED, my_pe);
+        let mut bad = 0u64;
+        for _ in 0..64 {
+            let k = r.usize_in(0, dc_ref.n_keys);
+            match kv.get(keys[k].as_bytes()) {
+                Some(v) if v == vals[k] => {}
+                _ => bad += 1,
+            }
+        }
+        let total_keys = kv.len();
+        ctx.barrier_all();
+        kv.destroy().expect("kv-bench: destroy");
+        (elapsed, reads, misses, writes, bad, total_keys)
+    });
+
+    let elapsed_s = per_pe.iter().map(|r| r.0).fold(0.0f64, f64::max);
+    let reads: u64 = per_pe.iter().map(|r| r.1).sum();
+    let misses: u64 = per_pe.iter().map(|r| r.2).sum();
+    let writes: u64 = per_pe.iter().map(|r| r.3).sum();
+    let bad: u64 = per_pe.iter().map(|r| r.4).sum();
+    let keys_seen = per_pe[0].5;
+    let ops = reads + writes;
+
+    let complain = |msg: String| -> Result<()> {
+        if strict {
+            bail!("{msg} (POSH_BENCH_NO_ASSERT=1 to record anyway)");
+        }
+        println!("  WARN: {msg} (gate disabled)");
+        Ok(())
+    };
+    if ops != (pes * threads * dc.ops_per_thread) as u64 {
+        complain(format!("op count {ops} != scheduled {}", pes * threads * dc.ops_per_thread))?;
+    }
+    if misses != 0 {
+        complain(format!("{misses}/{reads} reads missed on a fully-loaded key space"))?;
+    }
+    if bad != 0 {
+        complain(format!("{bad} sampled values diverged from the key oracle"))?;
+    }
+    if keys_seen != dc.n_keys as u64 {
+        complain(format!("key count {keys_seen} != loaded {} (overwrites must not grow it)", dc.n_keys))?;
+    }
+
+    Ok(CellResult {
+        mix: mix.name,
+        read_fraction: mix.read_fraction,
+        pes,
+        threads,
+        ops,
+        reads,
+        writes,
+        elapsed_s,
+        kops_per_s: ops as f64 / elapsed_s.max(1e-9) / 1e3,
+    })
+}
+
+/// Run the whole sweep: per-mix throughput tables on stdout,
+/// `bench_out/kv_ycsb.csv` + `bench_out/BENCH_kv.json` on disk.
+pub fn run(dc: &DriverConfig) -> Result<()> {
+    let strict = std::env::var("POSH_BENCH_NO_ASSERT").map_or(true, |v| v != "1");
+    let dist_name = match dc.dist {
+        Distribution::Uniform => "uniform",
+        Distribution::Zipfian => "zipfian",
+    };
+    println!(
+        "kv-bench: {} keys, {} B values, {} ops/thread, {dist_name}, seed {:#x}",
+        dc.n_keys, dc.value_bytes, dc.ops_per_thread, dc.seed
+    );
+
+    let mut cells = Vec::new();
+    for &mix_ in &dc.mixes {
+        for &pes in &dc.pe_counts {
+            for &threads in &dc.thread_counts {
+                let c = run_cell(mix_, pes, threads, dc, strict)?;
+                println!(
+                    "  mix {} {:>2} PE x {:>2} thr: {:>10.1} Kops/s  ({} ops in {:.3}s)",
+                    c.mix, c.pes, c.threads, c.kops_per_s, c.ops, c.elapsed_s
+                );
+                cells.push(c);
+            }
+        }
+    }
+
+    // Table: rows = mix/PEs, columns = thread counts.
+    let col_names: Vec<String> = dc.thread_counts.iter().map(|t| format!("{t} thr")).collect();
+    let cols: Vec<&str> = col_names.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("KV YCSB throughput", "Kops/s", &cols);
+    for &mix_ in &dc.mixes {
+        for &pes in &dc.pe_counts {
+            let row: Vec<f64> = dc
+                .thread_counts
+                .iter()
+                .map(|&t| {
+                    cells
+                        .iter()
+                        .find(|c| c.mix == mix_.name && c.pes == pes && c.threads == t)
+                        .map_or(0.0, |c| c.kops_per_s)
+                })
+                .collect();
+            table.row(&format!("{}/{}pe", mix_.name, pes), row);
+        }
+    }
+    table.print();
+    table.write_csv("kv_ycsb").context("kv-bench: csv")?;
+
+    if dc.emit_json {
+        let mut json = format!(
+            "{{\n  \"workload\": {{\"dist\": \"{dist_name}\", \"n_keys\": {}, \
+             \"value_bytes\": {}, \"ops_per_thread\": {}, \"seed\": {}, \
+             \"shards_per_pe\": 8, \"arena_bytes\": {}}},\n  \"results\": [\n",
+            dc.n_keys, dc.value_bytes, dc.ops_per_thread, dc.seed, dc.arena_bytes
+        );
+        for (i, c) in cells.iter().enumerate() {
+            json.push_str(&format!(
+                "    {{\"mix\": \"{}\", \"read_fraction\": {}, \"pes\": {}, \
+                 \"threads\": {}, \"ops\": {}, \"reads\": {}, \"writes\": {}, \
+                 \"elapsed_s\": {:.6}, \"kops_per_s\": {:.3}}}{}\n",
+                c.mix,
+                c.read_fraction,
+                c.pes,
+                c.threads,
+                c.ops,
+                c.reads,
+                c.writes,
+                c.elapsed_s,
+                c.kops_per_s,
+                if i + 1 == cells.len() { "" } else { "," }
+            ));
+        }
+        json.push_str("  ]\n}\n");
+        std::fs::create_dir_all("bench_out").context("kv-bench: bench_out")?;
+        std::fs::write("bench_out/BENCH_kv.json", json).context("kv-bench: json")?;
+        println!("csv: bench_out/kv_ycsb.csv; json: bench_out/BENCH_kv.json");
+    }
+    Ok(())
+}
+
+/// CLI entry shared by `oshrun kv-bench` and the `kv_ycsb` bench binary.
+///
+/// Flags: `--smoke` (CI-sized run), `--dist uniform|zipfian`,
+/// `--mix A[,B,...]`, `--keys N`, `--ops N` (per thread), `--seed N`.
+pub fn run_cli(args: &[String]) -> Result<()> {
+    let mut dc = DriverConfig::full();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--smoke" => {
+                let emit = dc.emit_json;
+                dc = DriverConfig { emit_json: emit, ..DriverConfig::smoke() };
+            }
+            "--dist" => {
+                let v = it.next().context("--dist needs a value")?;
+                dc.dist = Distribution::parse(v)
+                    .with_context(|| format!("unknown distribution {v:?} (uniform|zipfian)"))?;
+            }
+            "--mix" => {
+                let v = it.next().context("--mix needs a value (e.g. A,B)")?;
+                let mixes: Option<Vec<Mix>> = v.split(',').map(Mix::by_name).collect();
+                dc.mixes = mixes.with_context(|| format!("unknown mix in {v:?} (A|B|C|W)"))?;
+            }
+            "--keys" => {
+                let v = it.next().context("--keys needs a value")?;
+                dc.n_keys = v.parse().with_context(|| format!("bad --keys {v:?}"))?;
+            }
+            "--ops" => {
+                let v = it.next().context("--ops needs a value")?;
+                dc.ops_per_thread = v.parse().with_context(|| format!("bad --ops {v:?}"))?;
+            }
+            "--seed" => {
+                let v = it.next().context("--seed needs a value")?;
+                dc.seed = v.parse().with_context(|| format!("bad --seed {v:?}"))?;
+            }
+            other => bail!("kv-bench: unknown flag {other:?}"),
+        }
+    }
+    anyhow::ensure!(dc.n_keys > 0 && dc.ops_per_thread > 0, "kv-bench: empty workload");
+    run(&dc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mini_sweep_runs_clean() {
+        // A full driver pass at toy scale, strict gates active: 2 PEs,
+        // 2 threads, both planes exercised, no JSON side effects.
+        let dc = DriverConfig {
+            pe_counts: vec![2],
+            thread_counts: vec![2],
+            mixes: vec![MIX_A],
+            dist: Distribution::Zipfian,
+            n_keys: 256,
+            ops_per_thread: 200,
+            value_bytes: 32,
+            arena_bytes: 128 * 1024,
+            seed: 7,
+            emit_json: false,
+        };
+        // Force strictness regardless of ambient env: run_cell directly.
+        let c = run_cell(MIX_A, 2, 2, &dc, true).expect("mini sweep");
+        assert_eq!(c.ops, 2 * 2 * 200);
+        assert!(c.kops_per_s > 0.0);
+        assert_eq!(c.reads + c.writes, c.ops);
+    }
+
+    #[test]
+    fn cli_parses_flags() {
+        let args: Vec<String> =
+            ["--smoke", "--dist", "uniform", "--mix", "b,c", "--keys", "100", "--ops", "50", "--seed", "9"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        // Parse-only check: rebuild the config the way run_cli does, but
+        // don't run the sweep (that's the smoke step's job).
+        let mut dc = DriverConfig::full();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--smoke" => dc = DriverConfig::smoke(),
+                "--dist" => dc.dist = Distribution::parse(it.next().unwrap()).unwrap(),
+                "--mix" => {
+                    dc.mixes = it.next().unwrap().split(',').map(|m| Mix::by_name(m).unwrap()).collect()
+                }
+                "--keys" => dc.n_keys = it.next().unwrap().parse().unwrap(),
+                "--ops" => dc.ops_per_thread = it.next().unwrap().parse().unwrap(),
+                "--seed" => dc.seed = it.next().unwrap().parse().unwrap(),
+                _ => unreachable!(),
+            }
+        }
+        assert_eq!(dc.dist, Distribution::Uniform);
+        assert_eq!(dc.mixes.len(), 2);
+        assert_eq!(dc.n_keys, 100);
+        assert_eq!(dc.ops_per_thread, 50);
+        assert_eq!(dc.seed, 9);
+        assert!(Mix::by_name("w").is_some());
+    }
+}

@@ -1,0 +1,148 @@
+//! `posh-kv` — a PE-sharded key-value store living entirely in the PGAS
+//! symmetric heap.
+//!
+//! The paper's thesis is that a shared-memory symmetric heap serves
+//! one-sided traffic at memcpy speed; `posh-kv` is the first subsystem in
+//! this repo that treats the heap as a *serving substrate* rather than a
+//! bandwidth testbed. Every byte of store state — skiplist nodes, value
+//! blobs, shard headers — lives in symmetric memory, so any PE can read any
+//! shard with one-sided operations and no server loop.
+//!
+//! Architecture (docs/kv.md has the full write-up):
+//!
+//! * **Sharding** — a key hashes to an *owner PE* (low hash bits) and a
+//!   *shard index* on that PE (high hash bits). Each PE owns
+//!   [`KvConfig::shards_per_pe`] shards; a shard is one bump arena
+//!   allocated from the symmetric heap by a collective
+//!   [`KvStore::create`]. By Fact 1 the arena handles are identical on
+//!   every PE, so shard `s` of PE `p` is addressable from anywhere.
+//! * **Memtable** — each shard holds a skiplist over its arena with a
+//!   **fixed node layout** and arena-relative `u32` links, so a remote PE
+//!   can walk it with nothing but `shmem_get`-style copies of the arena.
+//!   Node heights are derived from the key hash — deterministic, no RNG
+//!   state to keep symmetric.
+//! * **Local fast path** — a PE operating on its own shard (or any shard,
+//!   in shared-memory reach) resolves the arena base once via
+//!   [`crate::pe::Ctx`]'s `shmem_ptr` and walks with plain loads/stores.
+//! * **Remote reads** — copies through the size-aware planned copy
+//!   dispatch ([`crate::pe::Ctx::get`]); no locks taken.
+//! * **Remote updates** — bulk bytes travel as NBI puts on the calling
+//!   thread's pooled context ([`crate::team::Team::ctx_for_thread`]);
+//!   writers serialise on a per-shard [`crate::locks::named`] lock homed
+//!   on the owner heap, and publication is flag-after-data: data puts,
+//!   quiet, link/value words, quiet, *then* the shard version bump.
+//! * **Consistency** — last-writer-wins per key. [`KvStore::put`] returns
+//!   the shard-monotonic sequence number assigned under the shard lock;
+//!   within a shard, seq order *is* the write order, which makes the LWW
+//!   oracle in `tests/kv_store.rs` exact.
+//!
+//! Values are immutable blobs: an overwrite appends a fresh blob and swings
+//! the node's packed value word (one atomic `u64`), so readers never see a
+//! torn value. Deletions and arena compaction are out of scope for this
+//! slice (the YCSB A/B/C mixes need neither); an exhausted arena makes
+//! `put` return an error rather than corrupt state.
+
+mod shard;
+mod store;
+
+pub mod driver;
+pub mod ycsb;
+
+pub use store::{KvStats, KvStore};
+
+/// Configuration of a [`KvStore`] (symmetric across PEs — every PE must
+/// pass an identical config to the collective [`KvStore::create`]).
+#[derive(Clone, Debug)]
+pub struct KvConfig {
+    /// Shards owned by each PE. More shards mean more writer concurrency
+    /// (one named lock per shard) and shorter skiplists.
+    pub shards_per_pe: usize,
+    /// Bytes per shard arena (allocated from the symmetric heap). Must fit
+    /// the working set: nodes, keys, and every value version ever written.
+    pub arena_bytes: usize,
+    /// Maximum key length in bytes (fits the fixed node layout's `u16`).
+    pub max_key_len: usize,
+    /// Maximum value length in bytes.
+    pub max_val_len: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        Self {
+            shards_per_pe: 8,
+            arena_bytes: 1 << 20,
+            max_key_len: 64,
+            max_val_len: 1024,
+        }
+    }
+}
+
+impl KvConfig {
+    /// The default configuration (8 shards/PE, 1 MiB arenas).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A small footprint for tests: 4 shards/PE, 128 KiB arenas — fits the
+    /// `PoshConfig::small()` 4 MiB heap comfortably.
+    pub fn small() -> Self {
+        Self { shards_per_pe: 4, arena_bytes: 128 * 1024, ..Self::default() }
+    }
+}
+
+/// FNV-1a of the key — the routing hash (also feeds node heights).
+pub(crate) fn key_hash(key: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Route a key hash: owner PE from the low hash bits, shard index on that
+/// PE from the high bits (independent enough under FNV mixing that shard
+/// load stays balanced even when `n_pes` divides `2^32`).
+pub(crate) fn route(hash: u64, n_pes: usize, shards_per_pe: usize) -> (usize, usize) {
+    let pe = (hash & 0xFFFF_FFFF) as usize % n_pes;
+    let shard = (hash >> 32) as usize % shards_per_pe;
+    (pe, shard)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        for n_pes in [1usize, 2, 3, 8] {
+            for shards in [1usize, 4, 8] {
+                for k in 0..200u32 {
+                    let key = k.to_le_bytes();
+                    let h = key_hash(&key);
+                    let (pe, s) = route(h, n_pes, shards);
+                    assert!(pe < n_pes && s < shards);
+                    assert_eq!((pe, s), route(h, n_pes, shards));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routing_spreads_keys() {
+        // 4 PEs × 4 shards, 4096 keys: no shard should be empty and none
+        // should hold more than ~4× its fair share.
+        let mut counts = [[0usize; 4]; 4];
+        for k in 0..4096u32 {
+            let (pe, s) = route(key_hash(&k.to_le_bytes()), 4, 4);
+            counts[pe][s] += 1;
+        }
+        let fair = 4096 / 16;
+        for row in &counts {
+            for &c in row {
+                assert!(c > 0, "empty shard");
+                assert!(c < 4 * fair, "shard holds {c} of 4096 (fair {fair})");
+            }
+        }
+    }
+}

@@ -1,0 +1,551 @@
+//! Shard internals: a skiplist memtable with a **fixed on-heap layout**,
+//! readable and writable through either a direct pointer (local fast path)
+//! or one-sided copies (remote path) — the same bytes, two access planes.
+//!
+//! # Arena layout
+//!
+//! A shard is one `u8` arena from the symmetric heap. All offsets below are
+//! arena-relative; link words are `u32` arena offsets, so an arena must be
+//! smaller than 4 GiB. Offset `0` is the header, which conveniently makes
+//! `0` the null link.
+//!
+//! ```text
+//! 0   bump cursor        u64   next free byte (starts at ARENA_HDR)
+//! 8   version            u64   publication flag; last committed seq
+//! 16  key count          u64   distinct keys in the shard
+//! 24  (pad)
+//! 32  head links         u32 × MAX_HEIGHT
+//! 80  = ARENA_HDR        nodes and value blobs, bump-allocated
+//! ```
+//!
+//! # Node layout (at an 8-aligned arena offset)
+//!
+//! ```text
+//! 0   key length         u16 LE
+//! 2   height             u8      (1..=MAX_HEIGHT, derived from the key hash)
+//! 3   (pad to 8)
+//! 8   value word         u64     (value offset << 32) | value length
+//! 16  seq                u64     last-writer-wins sequence number
+//! 24  links              u32 × height
+//! 24 + 4·height  key bytes
+//! ```
+//!
+//! Value blobs are immutable: an overwrite appends a new blob and swings the
+//! node's value word (one 8-byte store), so a reader can never observe a
+//! torn value. Node heights come from the key hash — deterministic, so no
+//! per-shard RNG state needs to live in the arena.
+//!
+//! # Concurrency contract
+//!
+//! *Writers* hold the shard's named lock, so the structure is single-writer.
+//! *Readers* are lock-free and may race the writer; safety comes from
+//! publication order (enforced by [`ShardView::flush_data`] before any link
+//! or value word becomes visible): a node's bytes are fully delivered before
+//! any link points at it, links splice bottom-up, and blobs are written
+//! before the value word swings. A racing reader sees the old state or the
+//! new state of each word, never garbage.
+
+use crate::ctx::CommCtx;
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+use crate::util::align_up;
+use crate::Result;
+use anyhow::bail;
+use std::sync::atomic::{fence, AtomicU32, AtomicU64, Ordering};
+
+/// Maximum skiplist height (p = 1/4 ⇒ comfortable up to ~16M keys/shard).
+pub(crate) const MAX_HEIGHT: usize = 12;
+
+/// Header field offsets (see module docs).
+pub(crate) const OFF_BUMP: usize = 0;
+pub(crate) const OFF_VERSION: usize = 8;
+pub(crate) const OFF_COUNT: usize = 16;
+pub(crate) const OFF_HEAD: usize = 32;
+/// First byte available to the bump allocator (16-aligned).
+pub(crate) const ARENA_HDR: usize = 80;
+
+/// Node field offsets (node-relative).
+const NODE_VAL: usize = 8;
+const NODE_SEQ: usize = 16;
+const NODE_LINKS: usize = 24;
+
+/// One shard, seen either through a direct pointer (shared-memory reach —
+/// the `shmem_ptr` fast path) or through one-sided copies addressed by the
+/// arena handle (the portable remote plane).
+pub(crate) enum ShardView<'a> {
+    /// Direct load/store access to the arena base in this address space.
+    Local {
+        /// Arena base pointer (resolved once via `shmem_ptr`).
+        base: *mut u8,
+    },
+    /// One-sided access: reads via `get`/`get_one`, bulk writes as NBI puts
+    /// on `comm` (the calling thread's pooled context), word writes as
+    /// immediate `put_one`s.
+    Remote {
+        /// The calling PE's context (carries the remote-heap table).
+        ctx: &'a Ctx,
+        /// Owner PE of the shard (world rank == world-team rank).
+        pe: usize,
+        /// The shard arena handle (identical on every PE by Fact 1).
+        arena: SymPtr<u8>,
+        /// NBI domain for bulk writes; `None` on read-only paths.
+        comm: Option<&'a CommCtx>,
+    },
+}
+
+impl ShardView<'_> {
+    /// Read `dst.len()` bytes starting at arena offset `off`.
+    pub(crate) fn read_bytes(&self, off: usize, dst: &mut [u8]) {
+        match self {
+            ShardView::Local { base } => {
+                // SAFETY: callers stay within the arena (offsets come from
+                // bump-allocated records; bounds guaranteed by `put`).
+                unsafe {
+                    std::ptr::copy_nonoverlapping(base.add(off), dst.as_mut_ptr(), dst.len());
+                }
+            }
+            ShardView::Remote { ctx, pe, arena, .. } => {
+                ctx.get(dst, arena.slice(off, dst.len()), *pe);
+            }
+        }
+    }
+
+    /// Atomic read of the `u32` at arena offset `off` (4-aligned).
+    fn read_u32(&self, off: usize) -> u32 {
+        debug_assert_eq!(off % 4, 0);
+        match self {
+            ShardView::Local { base } => {
+                // SAFETY: in-arena, 4-aligned (layout invariant).
+                unsafe { (*(base.add(off) as *const AtomicU32)).load(Ordering::Acquire) }
+            }
+            ShardView::Remote { ctx, pe, arena, .. } => {
+                ctx.get_one(SymPtr::<u32>::from_raw(arena.offset() + off, 1), *pe)
+            }
+        }
+    }
+
+    /// Atomic read of the `u64` at arena offset `off` (8-aligned).
+    pub(crate) fn read_u64(&self, off: usize) -> u64 {
+        debug_assert_eq!(off % 8, 0);
+        match self {
+            ShardView::Local { base } => {
+                // SAFETY: in-arena, 8-aligned (layout invariant).
+                unsafe { (*(base.add(off) as *const AtomicU64)).load(Ordering::Acquire) }
+            }
+            ShardView::Remote { ctx, pe, arena, .. } => {
+                ctx.get_one(SymPtr::<u64>::from_raw(arena.offset() + off, 1), *pe)
+            }
+        }
+    }
+
+    /// Bulk write (node bytes, value blobs). Remote: an NBI put on the
+    /// thread's context — *not yet delivered*; call [`Self::flush_data`]
+    /// before publishing anything that points at these bytes.
+    fn write_bytes(&self, off: usize, src: &[u8]) {
+        match self {
+            ShardView::Local { base } => {
+                // SAFETY: in-arena; region is unpublished bump space, so no
+                // reader can be looking at it yet.
+                unsafe {
+                    std::ptr::copy_nonoverlapping(src.as_ptr(), base.add(off), src.len());
+                }
+            }
+            ShardView::Remote { ctx, pe, arena, comm } => {
+                let dest = arena.slice(off, src.len());
+                match comm {
+                    Some(c) => c.put_nbi(dest, src, *pe),
+                    None => ctx.put(dest, src, *pe),
+                }
+            }
+        }
+    }
+
+    /// Publishing write of the `u32` at `off` (a skiplist link). Immediate
+    /// on both planes — remote uses `put_one`, which is a direct volatile
+    /// store through the mapped segment, not an NBI.
+    fn write_u32(&self, off: usize, v: u32) {
+        debug_assert_eq!(off % 4, 0);
+        match self {
+            ShardView::Local { base } => {
+                // SAFETY: in-arena, 4-aligned.
+                unsafe { (*(base.add(off) as *const AtomicU32)).store(v, Ordering::Release) }
+            }
+            ShardView::Remote { ctx, pe, arena, .. } => {
+                ctx.put_one(SymPtr::<u32>::from_raw(arena.offset() + off, 1), v, *pe);
+            }
+        }
+    }
+
+    /// Publishing write of the `u64` at `off` (value word, seq, header
+    /// fields). Immediate on both planes.
+    fn write_u64(&self, off: usize, v: u64) {
+        debug_assert_eq!(off % 8, 0);
+        match self {
+            ShardView::Local { base } => {
+                // SAFETY: in-arena, 8-aligned.
+                unsafe { (*(base.add(off) as *const AtomicU64)).store(v, Ordering::Release) }
+            }
+            ShardView::Remote { ctx, pe, arena, .. } => {
+                ctx.put_one(SymPtr::<u64>::from_raw(arena.offset() + off, 1), v, *pe);
+            }
+        }
+    }
+
+    /// Complete all [`Self::write_bytes`] traffic: flag-after-data's "data"
+    /// half. Local: a release fence. Remote: quiet the thread's NBI context
+    /// so every deferred put is delivered before the caller publishes.
+    fn flush_data(&self) {
+        match self {
+            ShardView::Local { .. } => fence(Ordering::Release),
+            ShardView::Remote { ctx, comm, .. } => match comm {
+                Some(c) => c.quiet(),
+                None => ctx.quiet(),
+            },
+        }
+    }
+
+    /// Order the link/word publications before the version bump (the "flag"
+    /// half of flag-after-data).
+    fn publish_fence(&self) {
+        match self {
+            ShardView::Local { .. } => fence(Ordering::Release),
+            ShardView::Remote { ctx, .. } => ctx.quiet(),
+        }
+    }
+}
+
+/// Pack (blob offset, blob length) into a node's value word.
+fn pack_val(off: usize, len: usize) -> u64 {
+    debug_assert!(off <= u32::MAX as usize && len <= u32::MAX as usize);
+    ((off as u64) << 32) | len as u64
+}
+
+/// Unpack a node's value word.
+fn unpack_val(word: u64) -> (usize, usize) {
+    ((word >> 32) as usize, (word & 0xFFFF_FFFF) as usize)
+}
+
+/// Deterministic node height from the key hash: p = 1/4 per extra level.
+/// The hash is remixed first so the height bits are independent of the
+/// routing bits (which consume the raw low/high halves).
+pub(crate) fn height_of(hash: u64) -> u8 {
+    let mut bits = hash.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 16;
+    let mut h: u8 = 1;
+    while (h as usize) < MAX_HEIGHT && bits & 3 == 0 {
+        h += 1;
+        bits >>= 2;
+    }
+    h
+}
+
+/// Initialise a freshly allocated arena: zero the header (heap memory may
+/// be recycled) and point the bump cursor past it. Must run on the owner's
+/// local view before any PE touches the shard.
+pub(crate) fn init_header(view: &ShardView<'_>) {
+    view.write_bytes(0, &[0u8; ARENA_HDR]);
+    view.flush_data();
+    view.write_u64(OFF_BUMP, ARENA_HDR as u64);
+}
+
+/// Arena offset of the level-`lvl` link cell of `pred` (`0` = the head).
+fn link_off(pred: u32, lvl: usize) -> usize {
+    if pred == 0 {
+        OFF_HEAD + 4 * lvl
+    } else {
+        pred as usize + NODE_LINKS + 4 * lvl
+    }
+}
+
+/// Read a node's (key length, height) header.
+fn node_meta(view: &ShardView<'_>, node: u32) -> (usize, usize) {
+    let mut hdr = [0u8; 4];
+    view.read_bytes(node as usize, &mut hdr);
+    let klen = u16::from_le_bytes([hdr[0], hdr[1]]) as usize;
+    let height = hdr[2] as usize;
+    debug_assert!(height >= 1 && height <= MAX_HEIGHT, "corrupt node at {node:#x}");
+    (klen, height)
+}
+
+/// Compare `node`'s key against `key` byte-lexicographically. `buf` is a
+/// caller-provided scratch buffer (reused across the nodes of one descent
+/// so the remote path doesn't allocate per visited node).
+fn cmp_node_key(
+    view: &ShardView<'_>,
+    node: u32,
+    key: &[u8],
+    buf: &mut Vec<u8>,
+) -> std::cmp::Ordering {
+    let (klen, height) = node_meta(view, node);
+    buf.clear();
+    buf.resize(klen, 0);
+    view.read_bytes(node as usize + NODE_LINKS + 4 * height, buf);
+    buf.as_slice().cmp(key)
+}
+
+/// Skiplist descent. Returns the node holding `key` (if present) and, per
+/// level, the arena offset of the link cell to splice a new node into —
+/// i.e. the level-`lvl` link of the rightmost element with key `< key`.
+fn search(view: &ShardView<'_>, key: &[u8]) -> (Option<u32>, [usize; MAX_HEIGHT]) {
+    let mut update = [0usize; MAX_HEIGHT];
+    let mut buf = Vec::with_capacity(64);
+    let mut pred: u32 = 0;
+    for lvl in (0..MAX_HEIGHT).rev() {
+        loop {
+            let next = view.read_u32(link_off(pred, lvl));
+            if next == 0 || cmp_node_key(view, next, key, &mut buf) != std::cmp::Ordering::Less {
+                break;
+            }
+            pred = next;
+        }
+        update[lvl] = link_off(pred, lvl);
+    }
+    let next = view.read_u32(link_off(pred, 0));
+    let found = (next != 0 && cmp_node_key(view, next, key, &mut buf) == std::cmp::Ordering::Equal)
+        .then_some(next);
+    (found, update)
+}
+
+/// Insert or overwrite `key` → `value`. **Caller must hold the shard's
+/// named lock** — this routine is single-writer. Returns the sequence
+/// number assigned to the write (shard-monotonic: within one shard, a
+/// larger seq means a strictly later commit).
+///
+/// Publication order (safe against lock-free readers):
+/// 1. node bytes + value blob into unpublished bump space,
+/// 2. [`ShardView::flush_data`] — everything delivered,
+/// 3. links spliced bottom-up / value word swung (single-word stores),
+/// 4. [`ShardView::publish_fence`], then the header version ← seq.
+pub(crate) fn put(
+    view: &ShardView<'_>,
+    arena_bytes: usize,
+    key: &[u8],
+    value: &[u8],
+    hash: u64,
+) -> Result<u64> {
+    let seq = view.read_u64(OFF_VERSION) + 1;
+    let (found, update) = search(view, key);
+    let bump = view.read_u64(OFF_BUMP) as usize;
+    let vlen_pad = align_up(value.len(), 8);
+
+    match found {
+        Some(node) => {
+            // Overwrite: append a fresh blob, swing the value word.
+            let val_off = align_up(bump, 8);
+            if val_off + vlen_pad > arena_bytes {
+                bail!(
+                    "kv shard arena exhausted: need {} value bytes at {val_off}, arena is {arena_bytes}",
+                    vlen_pad
+                );
+            }
+            if !value.is_empty() {
+                view.write_bytes(val_off, value);
+            }
+            view.write_u64(OFF_BUMP, (val_off + vlen_pad) as u64);
+            view.flush_data();
+            view.write_u64(node as usize + NODE_VAL, pack_val(val_off, value.len()));
+            view.write_u64(node as usize + NODE_SEQ, seq);
+        }
+        None => {
+            // Fresh key: node, then blob, laid out back to back.
+            let height = height_of(hash) as usize;
+            let node_off = align_up(bump, 8);
+            let node_size = align_up(NODE_LINKS + 4 * height + key.len(), 8);
+            let val_off = node_off + node_size;
+            if val_off + vlen_pad > arena_bytes {
+                bail!(
+                    "kv shard arena exhausted: need {} bytes at {node_off}, arena is {arena_bytes}",
+                    node_size + vlen_pad
+                );
+            }
+            let mut node_bytes = vec![0u8; node_size];
+            node_bytes[0..2].copy_from_slice(&(key.len() as u16).to_le_bytes());
+            node_bytes[2] = height as u8;
+            node_bytes[NODE_VAL..NODE_VAL + 8]
+                .copy_from_slice(&pack_val(val_off, value.len()).to_le_bytes());
+            node_bytes[NODE_SEQ..NODE_SEQ + 8].copy_from_slice(&seq.to_le_bytes());
+            for (lvl, link) in update.iter().enumerate().take(height) {
+                let succ = view.read_u32(*link);
+                node_bytes[NODE_LINKS + 4 * lvl..NODE_LINKS + 4 * lvl + 4]
+                    .copy_from_slice(&succ.to_le_bytes());
+            }
+            let koff = NODE_LINKS + 4 * height;
+            node_bytes[koff..koff + key.len()].copy_from_slice(key);
+
+            view.write_bytes(node_off, &node_bytes);
+            if !value.is_empty() {
+                view.write_bytes(val_off, value);
+            }
+            view.write_u64(OFF_BUMP, (val_off + vlen_pad) as u64);
+            view.flush_data();
+            // Splice bottom-up: a concurrent reader may briefly miss the
+            // node at upper levels (a slow path, never a wrong answer).
+            for link in update.iter().take(height) {
+                view.write_u32(*link, node_off as u32);
+            }
+            let count = view.read_u64(OFF_COUNT);
+            view.write_u64(OFF_COUNT, count + 1);
+        }
+    }
+    view.publish_fence();
+    view.write_u64(OFF_VERSION, seq);
+    Ok(seq)
+}
+
+/// Look up `key`; lock-free. Returns `(seq, value)` of a committed version,
+/// or `None` if the key is absent. Racing a concurrent overwrite, the seq
+/// and value are each individually valid but may belong to adjacent
+/// versions; on a quiescent shard they always match.
+pub(crate) fn get(view: &ShardView<'_>, key: &[u8]) -> Option<(u64, Vec<u8>)> {
+    let (found, _) = search(view, key);
+    let node = found? as usize;
+    let seq = view.read_u64(node + NODE_SEQ);
+    let (off, len) = unpack_val(view.read_u64(node + NODE_VAL));
+    let mut value = vec![0u8; len];
+    if len > 0 {
+        view.read_bytes(off, &mut value);
+    }
+    Some((seq, value))
+}
+
+/// Number of distinct keys committed to the shard.
+pub(crate) fn key_count(view: &ShardView<'_>) -> u64 {
+    view.read_u64(OFF_COUNT)
+}
+
+/// Bytes of the arena consumed by the bump allocator (header included).
+pub(crate) fn used_bytes(view: &ShardView<'_>) -> u64 {
+    view.read_u64(OFF_BUMP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ARENA: usize = 64 * 1024;
+
+    /// An 8-aligned scratch arena standing in for a symmetric-heap shard.
+    fn mk_arena(bytes: usize) -> Vec<u64> {
+        vec![0u64; bytes / 8]
+    }
+
+    fn hash(key: &[u8]) -> u64 {
+        super::super::key_hash(key)
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_overwrite() {
+        let mut buf = mk_arena(ARENA);
+        let view = ShardView::Local { base: buf.as_mut_ptr() as *mut u8 };
+        init_header(&view);
+        // Insert in a scrambled order so the skiplist actually branches.
+        for i in (0..100u32).map(|i| (i * 37) % 100) {
+            let key = format!("user{i:08}");
+            let val = format!("value-{i}-{}", "x".repeat((i % 13) as usize));
+            put(&view, ARENA, key.as_bytes(), val.as_bytes(), hash(key.as_bytes())).unwrap();
+        }
+        assert_eq!(key_count(&view), 100);
+        for i in 0..100u32 {
+            let key = format!("user{i:08}");
+            let (_, v) = get(&view, key.as_bytes()).expect("key present");
+            assert_eq!(v, format!("value-{i}-{}", "x".repeat((i % 13) as usize)).as_bytes());
+        }
+        // Overwrites bump seq, not the key count.
+        let k = b"user00000042";
+        let (s1, _) = get(&view, k).unwrap();
+        let s2 = put(&view, ARENA, k, b"fresh", hash(k)).unwrap();
+        assert!(s2 > s1);
+        assert_eq!(key_count(&view), 100);
+        let (s3, v) = get(&view, k).unwrap();
+        assert_eq!(s3, s2);
+        assert_eq!(v, b"fresh");
+        assert_eq!(view.read_u64(OFF_VERSION), s2);
+    }
+
+    #[test]
+    fn level0_chain_is_sorted() {
+        let mut buf = mk_arena(ARENA);
+        let view = ShardView::Local { base: buf.as_mut_ptr() as *mut u8 };
+        init_header(&view);
+        for i in (0..64u32).rev() {
+            let key = format!("k{:04}", (i * 29) % 64);
+            put(&view, ARENA, key.as_bytes(), b"v", hash(key.as_bytes())).unwrap();
+        }
+        let mut node = view.read_u32(OFF_HEAD);
+        let mut prev: Option<Vec<u8>> = None;
+        let mut seen = 0;
+        while node != 0 {
+            let (klen, h) = node_meta(&view, node);
+            let mut key = vec![0u8; klen];
+            view.read_bytes(node as usize + NODE_LINKS + 4 * h, &mut key);
+            if let Some(p) = &prev {
+                assert!(p < &key, "chain out of order");
+            }
+            prev = Some(key);
+            node = view.read_u32(link_off(node, 0));
+            seen += 1;
+        }
+        assert_eq!(seen, 64);
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let mut buf = mk_arena(ARENA);
+        let view = ShardView::Local { base: buf.as_mut_ptr() as *mut u8 };
+        init_header(&view);
+        assert!(get(&view, b"nope").is_none());
+        put(&view, ARENA, b"aa", b"1", hash(b"aa")).unwrap();
+        assert!(get(&view, b"ab").is_none());
+        assert!(get(&view, b"a").is_none());
+        assert!(get(&view, b"aaa").is_none());
+    }
+
+    #[test]
+    fn empty_value_roundtrips() {
+        let mut buf = mk_arena(ARENA);
+        let view = ShardView::Local { base: buf.as_mut_ptr() as *mut u8 };
+        init_header(&view);
+        put(&view, ARENA, b"key", b"", hash(b"key")).unwrap();
+        let (_, v) = get(&view, b"key").unwrap();
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn exhaustion_errors_and_preserves_existing() {
+        let small = 512;
+        let mut buf = mk_arena(small);
+        let view = ShardView::Local { base: buf.as_mut_ptr() as *mut u8 };
+        init_header(&view);
+        let mut stored = vec![];
+        let mut failed = false;
+        for i in 0..64u32 {
+            let key = format!("key{i:03}");
+            match put(&view, small, key.as_bytes(), &[i as u8; 48], hash(key.as_bytes())) {
+                Ok(_) => stored.push((key, i as u8)),
+                Err(_) => {
+                    failed = true;
+                    break;
+                }
+            }
+        }
+        assert!(failed, "a 512-byte arena cannot hold 64 writes");
+        assert!(!stored.is_empty(), "at least one write must fit");
+        for (key, b) in &stored {
+            let (_, v) = get(&view, key.as_bytes()).expect("pre-exhaustion key lost");
+            assert_eq!(v, vec![*b; 48]);
+        }
+    }
+
+    #[test]
+    fn heights_deterministic_and_geometric() {
+        let mut counts = [0usize; MAX_HEIGHT + 1];
+        for i in 0..10_000u64 {
+            let h = height_of(i.wrapping_mul(0x243F_6A88_85A3_08D3));
+            assert!((1..=MAX_HEIGHT as u8).contains(&h));
+            assert_eq!(h, height_of(i.wrapping_mul(0x243F_6A88_85A3_08D3)));
+            counts[h as usize] += 1;
+        }
+        // p = 1/4: height 1 should hold roughly 3/4 of keys.
+        assert!(counts[1] > 6_000, "height-1 share too small: {counts:?}");
+        assert!(counts[2] > 1_000, "height-2 share too small: {counts:?}");
+    }
+}

@@ -1,0 +1,343 @@
+//! The store facade: routing, per-shard writer locks, and the two access
+//! planes (local pointer vs one-sided copies) behind one `put`/`get` API.
+
+use super::shard::{self, ShardView, ARENA_HDR};
+use super::{key_hash, route, KvConfig};
+use crate::ctx::CommCtx;
+use crate::pe::Ctx;
+use crate::symheap::SymPtr;
+use crate::team::Team;
+use crate::Result;
+use anyhow::ensure;
+
+/// A PE-sharded key-value store on the symmetric heap. Cheap to use from
+/// many threads of one PE concurrently (`&self` everywhere; remote writes
+/// ride the calling thread's pooled [`CommCtx`]).
+///
+/// Create with the collective [`KvStore::create`]; every PE must
+/// participate with an identical [`KvConfig`]. Tear down with the
+/// collective [`KvStore::destroy`].
+pub struct KvStore {
+    ctx: Ctx,
+    team: Team,
+    cfg: KvConfig,
+    /// One handle per shard index. By Fact 1 the handle is identical on
+    /// every PE, so `arenas[s]` resolved against PE `p`'s base *is* shard
+    /// `s` of PE `p` — the store needs `shards_per_pe` handles, not
+    /// `n_pes × shards_per_pe`.
+    arenas: Vec<SymPtr<u8>>,
+}
+
+/// Point-in-time statistics of the calling PE's own shards (remote shards
+/// belong to their owners; aggregate with a reduction if needed).
+#[derive(Clone, Debug)]
+pub struct KvStats {
+    /// Shards owned by this PE.
+    pub shards: usize,
+    /// Distinct keys across this PE's shards.
+    pub keys: u64,
+    /// Arena bytes consumed by nodes, blobs, and headers.
+    pub used_bytes: u64,
+    /// Total arena capacity of this PE's shards.
+    pub capacity_bytes: u64,
+}
+
+impl KvStore {
+    /// Collective constructor: allocates `shards_per_pe` symmetric arenas
+    /// (each allocation is itself collective, preserving Fact 1), formats
+    /// the local shard headers, and barriers so no PE can observe an
+    /// unformatted shard.
+    pub fn create(ctx: &Ctx, cfg: KvConfig) -> Result<KvStore> {
+        ensure!(cfg.shards_per_pe >= 1, "kv: need at least one shard per PE");
+        ensure!(
+            cfg.arena_bytes >= ARENA_HDR + 256,
+            "kv: arena_bytes {} below the {}+256 floor",
+            cfg.arena_bytes,
+            ARENA_HDR
+        );
+        ensure!(
+            cfg.arena_bytes < u32::MAX as usize,
+            "kv: arena_bytes {} overflows the u32 link words",
+            cfg.arena_bytes
+        );
+        ensure!(
+            cfg.max_key_len >= 1 && cfg.max_key_len <= u16::MAX as usize,
+            "kv: max_key_len {} outside 1..=65535",
+            cfg.max_key_len
+        );
+        ensure!(
+            cfg.max_val_len < u32::MAX as usize,
+            "kv: max_val_len {} overflows the value word",
+            cfg.max_val_len
+        );
+        let mut arenas = Vec::with_capacity(cfg.shards_per_pe);
+        for _ in 0..cfg.shards_per_pe {
+            arenas.push(ctx.shmalloc_n::<u8>(cfg.arena_bytes)?);
+        }
+        // Format this PE's shards through the direct pointer (heap memory
+        // may be recycled and must not leak a stale header).
+        for a in &arenas {
+            let base = ctx.shmem_ptr(*a, ctx.my_pe()).expect("own PE is accessible");
+            shard::init_header(&ShardView::Local { base });
+        }
+        ctx.barrier_all();
+        Ok(KvStore { ctx: ctx.clone(), team: ctx.team_world(), cfg, arenas })
+    }
+
+    /// The store's configuration.
+    pub fn config(&self) -> &KvConfig {
+        &self.cfg
+    }
+
+    /// Which `(owner PE, shard index)` a key routes to.
+    pub fn owner_of(&self, key: &[u8]) -> (usize, usize) {
+        route(key_hash(key), self.ctx.n_pes(), self.cfg.shards_per_pe)
+    }
+
+    /// The named-lock name of shard `s` (identical on every PE: derived
+    /// from the first arena's Fact-1-symmetric offset, so two coexisting
+    /// stores never share locks).
+    fn lock_name(&self, shard: usize) -> String {
+        format!("posh-kv/{:x}/{shard}", self.arenas[0].offset())
+    }
+
+    /// A view of shard `s` on PE `pe`: the calling PE's own shards go
+    /// through the `shmem_ptr` direct plane, everything else through
+    /// one-sided copies (with `comm` carrying bulk writes, when given).
+    fn view_for<'a>(&'a self, pe: usize, shard: usize, comm: Option<&'a CommCtx>) -> ShardView<'a> {
+        if pe == self.ctx.my_pe() {
+            let base = self.ctx.shmem_ptr(self.arenas[shard], pe).expect("own PE is accessible");
+            ShardView::Local { base }
+        } else {
+            ShardView::Remote { ctx: &self.ctx, pe, arena: self.arenas[shard], comm }
+        }
+    }
+
+    /// Insert or overwrite `key` → `value`. Routes to the owner shard,
+    /// serialises on that shard's named lock (homed on the owner's heap
+    /// header, paper §4.6), and publishes flag-after-data. Returns the
+    /// write's sequence number — shard-monotonic, so for one key a larger
+    /// seq is the later write (the LWW winner).
+    pub fn put(&self, key: &[u8], value: &[u8]) -> Result<u64> {
+        ensure!(!key.is_empty(), "kv: empty keys are not supported");
+        ensure!(
+            key.len() <= self.cfg.max_key_len,
+            "kv: key length {} exceeds max_key_len {}",
+            key.len(),
+            self.cfg.max_key_len
+        );
+        ensure!(
+            value.len() <= self.cfg.max_val_len,
+            "kv: value length {} exceeds max_val_len {}",
+            value.len(),
+            self.cfg.max_val_len
+        );
+        let hash = key_hash(key);
+        let (pe, s) = route(hash, self.ctx.n_pes(), self.cfg.shards_per_pe);
+        let name = self.lock_name(s);
+        if pe == self.ctx.my_pe() {
+            let _g = self.ctx.named_lock(&name, pe);
+            shard::put(&self.view_for(pe, s, None), self.cfg.arena_bytes, key, value, hash)
+        } else {
+            // Thread-private NBI domain for the bulk bytes: this thread's
+            // flush cannot stall (or be stalled by) a sibling thread's.
+            let comm = self.team.ctx_for_thread();
+            let _g = self.ctx.named_lock(&name, pe);
+            shard::put(&self.view_for(pe, s, Some(&comm)), self.cfg.arena_bytes, key, value, hash)
+        }
+    }
+
+    /// Look up `key`. Lock-free on both planes; a remote get is a pure
+    /// one-sided walk of the owner's arena. `None` if absent.
+    pub fn get(&self, key: &[u8]) -> Option<Vec<u8>> {
+        self.get_versioned(key).map(|(_, v)| v)
+    }
+
+    /// [`KvStore::get`] plus the stored sequence number. On a quiescent
+    /// store the pair is exact; racing a concurrent overwrite of the same
+    /// key, seq and value may belong to adjacent versions (each is
+    /// individually committed — the value is never torn).
+    pub fn get_versioned(&self, key: &[u8]) -> Option<(u64, Vec<u8>)> {
+        let (pe, s) = route(key_hash(key), self.ctx.n_pes(), self.cfg.shards_per_pe);
+        shard::get(&self.view_for(pe, s, None), key)
+    }
+
+    /// Total distinct keys across **all** PEs' shards (one-sided header
+    /// reads; exact when writers are quiescent).
+    pub fn len(&self) -> u64 {
+        let mut total = 0;
+        for pe in 0..self.ctx.n_pes() {
+            for s in 0..self.cfg.shards_per_pe {
+                total += shard::key_count(&self.view_for(pe, s, None));
+            }
+        }
+        total
+    }
+
+    /// `true` if no PE's shard holds a key.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Statistics of the calling PE's own shards.
+    pub fn stats(&self) -> KvStats {
+        let mut keys = 0;
+        let mut used = 0;
+        let me = self.ctx.my_pe();
+        for s in 0..self.cfg.shards_per_pe {
+            let view = self.view_for(me, s, None);
+            keys += shard::key_count(&view);
+            used += shard::used_bytes(&view);
+        }
+        KvStats {
+            shards: self.cfg.shards_per_pe,
+            keys,
+            used_bytes: used,
+            capacity_bytes: (self.cfg.shards_per_pe * self.cfg.arena_bytes) as u64,
+        }
+    }
+
+    /// Collective destructor: frees the arenas (each `shfree` barriers).
+    /// Every PE must call it; no PE may touch the store afterwards.
+    pub fn destroy(self) -> Result<()> {
+        for a in &self.arenas {
+            self.ctx.shfree(*a)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for KvStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KvStore{{shards_per_pe={}, arena_bytes={}, pes={}}}",
+            self.cfg.shards_per_pe,
+            self.cfg.arena_bytes,
+            self.ctx.n_pes()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{PoshConfig, World};
+
+    fn bail_if(r: Result<KvStore>) -> KvStore {
+        r.expect("store creation")
+    }
+
+    #[test]
+    fn put_get_across_pes() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let kv = bail_if(KvStore::create(&ctx, KvConfig::small()));
+            // Each PE writes 50 disjoint keys; routing scatters them over
+            // both PEs, so this exercises local and remote puts.
+            for i in 0..50u32 {
+                let key = format!("pe{}/k{i:04}", ctx.my_pe());
+                let val = format!("pe{}-val-{i}", ctx.my_pe());
+                kv.put(key.as_bytes(), val.as_bytes()).unwrap();
+            }
+            ctx.barrier_all();
+            // Everyone reads everything (local + remote gets).
+            for pe in 0..2 {
+                for i in 0..50u32 {
+                    let key = format!("pe{pe}/k{i:04}");
+                    let got = kv.get(key.as_bytes()).expect("key present");
+                    assert_eq!(got, format!("pe{pe}-val-{i}").as_bytes());
+                }
+            }
+            assert_eq!(kv.len(), 100);
+            assert!(!kv.is_empty());
+            ctx.barrier_all();
+            kv.destroy().unwrap();
+        });
+    }
+
+    #[test]
+    fn overwrite_is_lww_by_seq() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let kv = bail_if(KvStore::create(&ctx, KvConfig::small()));
+            let key = b"contended-key";
+            // Phase 1: PE 0 writes; phase 2: PE 1 overwrites. Barriers make
+            // the order deterministic; seqs must be strictly increasing and
+            // the final value must be PE 1's.
+            let mut s0 = 0;
+            if ctx.my_pe() == 0 {
+                s0 = kv.put(key, b"first").unwrap();
+            }
+            ctx.barrier_all();
+            if ctx.my_pe() == 1 {
+                let s1 = kv.put(key, b"second").unwrap();
+                assert!(s1 >= 2, "overwrite seq {s1} must follow the first write");
+            }
+            ctx.barrier_all();
+            let (seq, v) = kv.get_versioned(key).expect("key present");
+            assert_eq!(v, b"second");
+            if ctx.my_pe() == 0 {
+                assert!(seq > s0);
+            }
+            assert_eq!(kv.len(), 1, "overwrites must not grow the key count");
+            ctx.barrier_all();
+            kv.destroy().unwrap();
+        });
+    }
+
+    #[test]
+    fn missing_keys_and_validation() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let kv = bail_if(KvStore::create(&ctx, KvConfig::small()));
+            assert!(kv.get(b"absent").is_none());
+            assert!(kv.put(b"", b"x").is_err(), "empty key must be rejected");
+            let long_key = vec![b'k'; kv.config().max_key_len + 1];
+            assert!(kv.put(&long_key, b"x").is_err());
+            let long_val = vec![0u8; kv.config().max_val_len + 1];
+            assert!(kv.put(b"k", &long_val).is_err());
+            // Max-size key and value are accepted.
+            let key = vec![b'k'; kv.config().max_key_len];
+            let val = vec![7u8; kv.config().max_val_len];
+            kv.put(&key, &val).unwrap();
+            assert_eq!(kv.get(&key).unwrap(), val);
+            kv.destroy().unwrap();
+        });
+    }
+
+    #[test]
+    fn stats_track_usage() {
+        let w = World::threads(2, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let kv = bail_if(KvStore::create(&ctx, KvConfig::small()));
+            let empty = kv.stats();
+            assert_eq!(empty.keys, 0);
+            assert_eq!(empty.shards, kv.config().shards_per_pe);
+            for i in 0..40u32 {
+                kv.put(format!("sk{i}").as_bytes(), &[1u8; 64]).unwrap();
+            }
+            ctx.barrier_all();
+            let st = kv.stats();
+            let peer: u64 = kv.len() - st.keys;
+            assert_eq!(st.keys + peer, 40);
+            assert!(st.used_bytes > empty.used_bytes || st.keys == 0);
+            assert!(st.used_bytes <= st.capacity_bytes);
+            ctx.barrier_all();
+            kv.destroy().unwrap();
+        });
+    }
+
+    #[test]
+    fn create_rejects_bad_configs() {
+        let w = World::threads(1, PoshConfig::small()).unwrap();
+        w.run(|ctx| {
+            let bad = KvConfig { shards_per_pe: 0, ..KvConfig::small() };
+            assert!(KvStore::create(&ctx, bad).is_err());
+            let bad = KvConfig { arena_bytes: 64, ..KvConfig::small() };
+            assert!(KvStore::create(&ctx, bad).is_err());
+            let bad = KvConfig { max_key_len: 0, ..KvConfig::small() };
+            assert!(KvStore::create(&ctx, bad).is_err());
+        });
+    }
+}

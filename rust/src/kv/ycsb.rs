@@ -1,0 +1,260 @@
+//! YCSB-style workload generation for the KV bench: key-popularity
+//! distributions (uniform, zipfian) and the standard read/write mixes.
+//!
+//! The zipfian generator is Gray et al.'s rejection-free construction (the
+//! one the original YCSB `ZipfianGenerator` uses): draw `u ∈ [0,1)`, map it
+//! through the closed form of the generalised-harmonic CDF with
+//! `θ = 0.99`. Raw zipfian ranks make *low indices* popular, which would
+//! let popular keys cluster in one shard; like YCSB's
+//! `ScrambledZipfianGenerator` we scatter ranks over the key space with an
+//! FNV-style remix, so hot keys land on uniformly-random PEs while keeping
+//! the zipfian popularity profile.
+//!
+//! Everything is seed-deterministic ([`crate::util::prng::Rng`]): PE `p`
+//! thread `t` regenerates its exact operation stream from `(seed, p, t)`,
+//! which is what lets the LWW oracle replay a run without logging keys.
+
+use crate::util::prng::Rng;
+
+/// Key-popularity distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    /// Every key equally likely.
+    Uniform,
+    /// Zipfian with the YCSB-standard constant θ = 0.99, rank-scrambled.
+    Zipfian,
+}
+
+impl Distribution {
+    /// Parse a CLI token (`uniform` / `zipfian`).
+    pub fn parse(s: &str) -> Option<Distribution> {
+        match s {
+            "uniform" => Some(Distribution::Uniform),
+            "zipfian" => Some(Distribution::Zipfian),
+            _ => None,
+        }
+    }
+}
+
+/// A YCSB core-workload mix: the read fraction of the operation stream
+/// (the rest are writes/updates).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mix {
+    /// Short name (`A`, `B`, `C`, `W`) used in reports and JSON.
+    pub name: &'static str,
+    /// Fraction of operations that are reads, in `[0, 1]`.
+    pub read_fraction: f64,
+}
+
+/// YCSB-A: update-heavy, 50% reads / 50% writes.
+pub const MIX_A: Mix = Mix { name: "A", read_fraction: 0.50 };
+/// YCSB-B: read-mostly, 95% reads / 5% writes.
+pub const MIX_B: Mix = Mix { name: "B", read_fraction: 0.95 };
+/// YCSB-C: read-only.
+pub const MIX_C: Mix = Mix { name: "C", read_fraction: 1.0 };
+/// Write-heavy complement (5% reads / 95% writes) — not a YCSB core mix,
+/// but the stressor that exercises the NBI defer/drain knobs
+/// (docs/tuning.md §NBI re-derivation).
+pub const MIX_W: Mix = Mix { name: "W", read_fraction: 0.05 };
+
+/// All mixes the driver knows, in report order.
+pub const ALL_MIXES: [Mix; 4] = [MIX_A, MIX_B, MIX_C, MIX_W];
+
+impl Mix {
+    /// Look up a mix by its short name (case-insensitive).
+    pub fn by_name(name: &str) -> Option<Mix> {
+        ALL_MIXES.iter().find(|m| m.name.eq_ignore_ascii_case(name)).copied()
+    }
+}
+
+/// The standard YCSB key of index `i`: `"user"` + a fixed-width number, so
+/// every key is the same length (~20 bytes) and lexicographic order is
+/// index order.
+pub fn key_of(i: usize) -> String {
+    format!("user{i:016x}")
+}
+
+/// One operation of a generated stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Read the key with this index.
+    Read(usize),
+    /// Write the key with this index (the driver synthesises the value).
+    Write(usize),
+}
+
+/// A seed-deterministic stream of YCSB operations over `n_keys` keys.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    dist: Distribution,
+    mix: Mix,
+    n_keys: usize,
+    /// ζ(n, θ): the zipfian normaliser, precomputed once (O(n)).
+    zetan: f64,
+    /// Gray's closed-form constants.
+    theta: f64,
+    alpha: f64,
+    eta: f64,
+    rng: Rng,
+}
+
+/// The YCSB-standard zipfian skew constant.
+const THETA: f64 = 0.99;
+
+/// Generalised harmonic number ζ(n, θ) = Σ_{i=1..n} 1/i^θ.
+fn zeta(n: usize, theta: f64) -> f64 {
+    let mut z = 0.0;
+    for i in 1..=n {
+        z += 1.0 / (i as f64).powf(theta);
+    }
+    z
+}
+
+impl Workload {
+    /// Build a stream. `seed` should incorporate PE and thread identity
+    /// (e.g. via [`Rng::for_pe`]-style mixing) so streams are independent.
+    pub fn new(dist: Distribution, mix: Mix, n_keys: usize, seed: u64) -> Workload {
+        assert!(n_keys > 0, "workload over an empty key space");
+        let theta = THETA;
+        let zetan = zeta(n_keys, theta);
+        let zeta2 = zeta(2.min(n_keys), theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n_keys as f64).powf(1.0 - theta)) / (1.0 - zeta2 / zetan);
+        Workload { dist, mix, n_keys, zetan, theta, alpha, eta, rng: Rng::new(seed) }
+    }
+
+    /// The number of distinct keys in the key space.
+    pub fn n_keys(&self) -> usize {
+        self.n_keys
+    }
+
+    /// The mix this stream was built with.
+    pub fn mix(&self) -> Mix {
+        self.mix
+    }
+
+    /// Zipfian *rank* in `[0, n)` — rank 0 is the most popular.
+    fn zipf_rank(&mut self) -> usize {
+        let u = self.rng.f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let r = (self.n_keys as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as usize;
+        r.min(self.n_keys - 1)
+    }
+
+    /// Next key index under the configured distribution.
+    pub fn next_key(&mut self) -> usize {
+        match self.dist {
+            Distribution::Uniform => self.rng.usize_in(0, self.n_keys),
+            Distribution::Zipfian => {
+                // Scramble the rank so popular keys scatter across shards.
+                let rank = self.zipf_rank() as u64;
+                let h = rank
+                    .wrapping_mul(0x100000001b3)
+                    .wrapping_add(0xcbf29ce484222325)
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                ((h >> 16) % self.n_keys as u64) as usize
+            }
+        }
+    }
+
+    /// Next operation of the stream.
+    pub fn next_op(&mut self) -> Op {
+        let read = self.rng.f64() < self.mix.read_fraction;
+        let k = self.next_key();
+        if read {
+            Op::Read(k)
+        } else {
+            Op::Write(k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn streams_are_deterministic() {
+        let mut a = Workload::new(Distribution::Zipfian, MIX_A, 1000, 42);
+        let mut b = Workload::new(Distribution::Zipfian, MIX_A, 1000, 42);
+        for _ in 0..500 {
+            assert_eq!(a.next_op(), b.next_op());
+        }
+        let mut c = Workload::new(Distribution::Zipfian, MIX_A, 1000, 43);
+        let same = (0..500).filter(|_| a.next_op() == c.next_op()).count();
+        assert!(same < 100, "distinct seeds produced near-identical streams");
+    }
+
+    #[test]
+    fn keys_stay_in_range() {
+        for dist in [Distribution::Uniform, Distribution::Zipfian] {
+            for n in [1usize, 2, 10, 4096] {
+                let mut w = Workload::new(dist, MIX_C, n, 7);
+                for _ in 0..2000 {
+                    assert!(w.next_key() < n, "{dist:?} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zipfian_is_skewed_uniform_is_not() {
+        let n = 1000;
+        let draws = 100_000;
+        let top_share = |dist: Distribution| {
+            let mut w = Workload::new(dist, MIX_C, n, 11);
+            let mut counts = vec![0usize; n];
+            for _ in 0..draws {
+                counts[w.next_key()] += 1;
+            }
+            counts.sort_unstable_by(|a, b| b.cmp(a));
+            counts[..10].iter().sum::<usize>() as f64 / draws as f64
+        };
+        let zipf = top_share(Distribution::Zipfian);
+        let unif = top_share(Distribution::Uniform);
+        // θ=0.99 over 1000 keys: the hottest 10 keys draw a large share
+        // (~35–50%); uniform gives them ~1%.
+        assert!(zipf > 0.20, "zipfian top-10 share only {zipf}");
+        assert!(unif < 0.05, "uniform top-10 share {unif}");
+    }
+
+    #[test]
+    fn mix_fractions_hold() {
+        for mix in ALL_MIXES {
+            let mut w = Workload::new(Distribution::Uniform, mix, 100, 5);
+            let reads = (0..20_000)
+                .filter(|_| matches!(w.next_op(), Op::Read(_)))
+                .count() as f64
+                / 20_000.0;
+            assert!(
+                (reads - mix.read_fraction).abs() < 0.02,
+                "mix {} read fraction {reads} (want {})",
+                mix.name,
+                mix.read_fraction
+            );
+        }
+    }
+
+    #[test]
+    fn mix_lookup_and_parse() {
+        assert_eq!(Mix::by_name("a").unwrap().name, "A");
+        assert_eq!(Mix::by_name("C").unwrap().read_fraction, 1.0);
+        assert!(Mix::by_name("z").is_none());
+        assert_eq!(Distribution::parse("zipfian"), Some(Distribution::Zipfian));
+        assert_eq!(Distribution::parse("uniform"), Some(Distribution::Uniform));
+        assert!(Distribution::parse("pareto").is_none());
+    }
+
+    #[test]
+    fn key_of_is_fixed_width_and_ordered() {
+        assert_eq!(key_of(0).len(), 20);
+        assert_eq!(key_of(usize::MAX).len(), 20);
+        assert!(key_of(3) < key_of(10));
+    }
+}

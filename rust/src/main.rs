@@ -4,6 +4,7 @@
 //! oshrun -np N [options] -- program [args...]   launch a parallel job
 //! oshrun preparse FILE.c [-o OUT.c]             run the §4.2 pre-parser
 //! oshrun calibrate [--csv PATH]                 fit the shm-channel α/β model
+//! oshrun kv-bench [--smoke] [flags]             YCSB sweep over posh-kv
 //! oshrun clean                                  sweep stale /dev/shm segments
 //! oshrun info                                   platform + config report
 //! ```
@@ -24,6 +25,7 @@ USAGE:
   oshrun -np N [options] -- PROGRAM [ARGS...]
   oshrun preparse FILE.c [-o OUT.c] [--manifest OUT.manifest]
   oshrun calibrate [--csv PATH]
+  oshrun kv-bench [--smoke] [--dist D] [--mix M] [--keys N] [--ops N] [--seed N]
   oshrun clean
   oshrun info
 
@@ -40,6 +42,11 @@ OPTIONS (launch):
   --team-barrier KIND adaptive|dissemination|linear (team-sync engine A/B)
   --safe              enable run-time checking (paper _SAFE mode)
   --debug-wait        each PE waits for a debugger at start-up (§4.7)
+
+kv-bench: YCSB-style throughput sweep of the posh-kv store (docs/kv.md):
+PE count x threads-per-PE x mix (A 50/50, B 95/5, C read-only, W 5/95)
+over a zipfian or uniform key distribution. --smoke is the CI-sized run.
+Emits bench_out/kv_ycsb.csv and bench_out/BENCH_kv.json.
 
 calibrate: fit T(n) = α + n/β over the shm channel with the configured
 copy engine — one whole-sweep fit plus a piecewise per-range fit (one
@@ -66,6 +73,12 @@ fn main() {
         "info" => info(),
         "preparse" => preparse(&args[1..]),
         "calibrate" => calibrate_cmd(&args[1..]),
+        "kv-bench" => {
+            if let Err(e) = posh::kv::driver::run_cli(&args[1..]) {
+                eprintln!("oshrun kv-bench: {e:#}");
+                std::process::exit(1);
+            }
+        }
         _ => launch(&args),
     }
 }
@@ -227,6 +240,59 @@ fn info() {
     match posh::runtime::client::platform_info() {
         Ok(info) => println!("PJRT                      : {info}"),
         Err(e) => println!("PJRT                      : unavailable ({e})"),
+    }
+    alloc_info(heap);
+}
+
+/// Allocator report: slab configuration plus a [`FreeList::stats`] snapshot
+/// of a probe heap after a mixed alloc/free round (so the size-class and
+/// fragmentation numbers are exercised, not all-zero).
+fn alloc_info(heap_size: usize) {
+    use posh::symheap::alloc::{FreeList, SLAB_CLASSES, SLAB_MAX_BYTES, SLAB_PAGE_BYTES};
+    println!(
+        "slab size classes         : {} (page {}, cutover >{})",
+        SLAB_CLASSES.iter().map(|c| fmt_bytes(*c)).collect::<Vec<_>>().join(", "),
+        fmt_bytes(SLAB_PAGE_BYTES),
+        fmt_bytes(SLAB_MAX_BYTES)
+    );
+    let mut fl = FreeList::new(heap_size);
+    // One allocation per class plus two map-path blocks; free every other
+    // one so live/free/fragmentation are all non-trivial.
+    let mut offs = Vec::new();
+    for &c in &SLAB_CLASSES {
+        if let Ok(o) = fl.alloc(c, 1) {
+            offs.push(o);
+        }
+    }
+    for size in [4096usize, 64 * 1024] {
+        if let Ok(o) = fl.alloc(size, 64) {
+            offs.push(o);
+        }
+    }
+    for o in offs.iter().step_by(2) {
+        let _ = fl.free(*o);
+    }
+    let st = fl.stats();
+    println!(
+        "allocator probe ({} heap) : {} live / {}B allocated (peak {}B), \
+         free map {} block(s) / {}, fragmentation {:.1}%",
+        fmt_bytes(heap_size),
+        st.live_blocks,
+        st.allocated,
+        st.peak,
+        st.free_list_len,
+        fmt_bytes(st.free_bytes),
+        st.fragmentation_pct
+    );
+    for c in st.classes.iter().filter(|c| c.pages > 0) {
+        println!(
+            "  class {:>5} : {} page(s), {} live / {} free block(s), occupancy {:.1}%",
+            fmt_bytes(c.block),
+            c.pages,
+            c.live_blocks,
+            c.free_blocks,
+            c.occupancy_pct
+        );
     }
 }
 

@@ -60,12 +60,57 @@ use std::cell::Cell;
 /// anything bigger is issued eagerly (and still counted). Small enough that
 /// a batch of control-plane puts stays cache-resident, large enough to
 /// cover every flag/descriptor-sized message.
-pub const NBI_DEFER_MAX_BYTES: usize = 16 * 1024;
+///
+/// Default re-derived from the archived Ablation-B/calibration trajectory
+/// and the KV write-heavy mix (docs/tuning.md §"NBI batching knobs"): with
+/// the fitted channel at α ≈ 40 ns, β ≈ 10 B/ns the coalescing break-even
+/// `n₁/₂ = α·β` sits near 400 B, so a deferral cap of ~20·n₁/₂ captures
+/// every control-plane run that can profit from coalescing while keeping a
+/// full batch inside L1. The previous 16 KiB cap bought no extra merges
+/// (runs are clamped to `n₁/₂` anyway) and doubled staging-copy residency.
+/// Override at run time with `POSH_NBI_DEFER_MAX` (e.g. `16K`).
+pub const NBI_DEFER_MAX_BYTES: usize = 8 * 1024;
 
 /// Queued bytes **per shard** at which a batch drains that shard inline
 /// (the ops are issued, the accounting stays pending until the next quiet)
 /// — bounds the memory one issuing thread can pin between quiets.
-pub const NBI_BATCH_DRAIN_BYTES: usize = 1 << 20;
+///
+/// Default re-derived alongside [`NBI_DEFER_MAX_BYTES`]: 256 KiB keeps a
+/// shard's staged bytes L2-resident on every calibrated machine (the
+/// per-range channel model shows β dropping ~3× past the L2 bound, so
+/// draining from L2 beats draining a megabyte from LLC/DRAM), while still
+/// amortising the drain's fence over ≥32 deferred puts at the cap. The
+/// KV write-heavy mix regressed under the old 1 MiB watermark for exactly
+/// that reason. Override at run time with `POSH_NBI_DRAIN_BYTES`.
+pub const NBI_BATCH_DRAIN_BYTES: usize = 256 * 1024;
+
+/// Effective deferral cap: [`NBI_DEFER_MAX_BYTES`] unless overridden by the
+/// `POSH_NBI_DEFER_MAX` environment variable (size-suffix syntax, e.g.
+/// `4K`, `16384`). Read once per process.
+pub fn nbi_defer_max_bytes() -> usize {
+    static CAP: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("POSH_NBI_DEFER_MAX")
+            .ok()
+            .and_then(|s| crate::pe::config::parse_size(&s))
+            .filter(|&n| n > 0)
+            .unwrap_or(NBI_DEFER_MAX_BYTES)
+    })
+}
+
+/// Effective per-shard drain watermark: [`NBI_BATCH_DRAIN_BYTES`] unless
+/// overridden by the `POSH_NBI_DRAIN_BYTES` environment variable. Read once
+/// per process.
+pub fn nbi_batch_drain_bytes() -> usize {
+    static CAP: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("POSH_NBI_DRAIN_BYTES")
+            .ok()
+            .and_then(|s| crate::pe::config::parse_size(&s))
+            .filter(|&n| n > 0)
+            .unwrap_or(NBI_BATCH_DRAIN_BYTES)
+    })
+}
 
 /// Shard count of every explicit domain's deferred-put queue. Each issuing
 /// thread maps to `thread_slot() % NBI_SHARDS`, so up to this many threads
@@ -215,7 +260,7 @@ impl Ctx {
             }
             NbiDomain::Explicit(batch) => {
                 let nbytes = std::mem::size_of_val(src);
-                if nbytes > NBI_DEFER_MAX_BYTES {
+                if nbytes > nbi_defer_max_bytes() {
                     // Eager: delivered by the time put() returns, so a
                     // concurrent quiet retiring it early is still truthful.
                     self.put(dest, src, pe);
@@ -251,7 +296,7 @@ impl Ctx {
                         DeferredPut { dest_off: dest.offset(), bytes, pe },
                         nbytes,
                     );
-                    if shard_bytes > NBI_BATCH_DRAIN_BYTES {
+                    if shard_bytes > nbi_batch_drain_bytes() {
                         batch.queue.drain_slot(slot, &mut |run| self.nbi_deliver_run(run));
                     }
                 }

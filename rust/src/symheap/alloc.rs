@@ -1,4 +1,5 @@
-//! Deterministic first-fit free-list allocator for the symmetric heap.
+//! Deterministic allocator for the symmetric heap: size-class slabs in
+//! front of a first-fit free list.
 //!
 //! Determinism is the point: Fact 1 (same offsets on every PE) holds iff the
 //! allocator is a pure function of the call sequence. Boost's
@@ -8,7 +9,21 @@
 //! * free blocks live in a `BTreeMap<offset, size>` — iteration order is the
 //!   address order, so "first fit" is well-defined and stable;
 //! * splits always return the *low* part and keep the high remainder free;
-//! * frees coalesce with both neighbours immediately.
+//! * frees coalesce with both neighbours immediately;
+//! * small requests (≤ [`SLAB_MAX_BYTES`] at default alignment) are served
+//!   from **size-class slabs**: pages of [`SLAB_PAGE_BYTES`] carved from the
+//!   first-fit map and diced into equal blocks, with a LIFO free stack per
+//!   class. Stack order is a pure function of the call history, so the slab
+//!   layer preserves the determinism contract — the journal hash stays
+//!   symmetric across PEs for symmetric call sequences (pinned by
+//!   `tests/prop_symheap.rs`). A fully-freed page is reclaimed into the
+//!   coalescing free map immediately, so draining the heap still leaves one
+//!   maximal free block.
+//!
+//! The slab layer is the alloc-heavy-workload fix: a KV insert storm makes
+//! thousands of ~100-byte node/value allocations, and first-fit pays a
+//! linear scan over an increasingly shredded free list for each; a slab
+//! alloc is a stack pop.
 //!
 //! Metadata lives in private memory (not in the shared segment), which keeps
 //! the data area byte-exact symmetric and makes corruption-by-remote-write
@@ -22,23 +37,113 @@ use std::collections::BTreeMap;
 /// live at any allocation start.
 pub const MIN_ALIGN: usize = 16;
 
+/// Largest request (after rounding to [`MIN_ALIGN`]) served from a size
+/// class; bigger requests go straight to the first-fit map.
+pub const SLAB_MAX_BYTES: usize = 1024;
+
+/// Bytes per slab page. Pages are carved from the first-fit map at
+/// [`MIN_ALIGN`] alignment and diced into `SLAB_PAGE_BYTES / class` blocks;
+/// a page whose blocks are all free is returned to the map whole.
+pub const SLAB_PAGE_BYTES: usize = 16 * 1024;
+
+/// The size-class ladder: powers of two from [`MIN_ALIGN`] to
+/// [`SLAB_MAX_BYTES`]. A request maps to the smallest class that holds it.
+pub const SLAB_CLASSES: [usize; 7] = [16, 32, 64, 128, 256, 512, 1024];
+
+/// Index into [`SLAB_CLASSES`] of the smallest class holding `size` bytes,
+/// or `None` if the request is too big for the slab layer.
+fn class_of(size: usize) -> Option<usize> {
+    SLAB_CLASSES.iter().position(|&c| size <= c)
+}
+
 /// One entry of the allocation journal (safe mode / Fact-1 checking).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum JournalOp {
-    /// `alloc(size, align) -> offset`
+    /// `alloc(size, align) -> offset`. `size` is the caller's request
+    /// rounded to [`MIN_ALIGN`] (the symmetric-sequence fingerprint), not
+    /// the possibly-larger size class actually reserved.
     Alloc { size: usize, align: usize, offset: usize },
     /// `free(offset)`
     Free { offset: usize },
 }
 
-/// First-fit free list over a `[0, capacity)` offset space.
+/// Per-class bookkeeping: the block size and the LIFO free stack.
+#[derive(Debug)]
+struct SlabClass {
+    /// Block size in bytes (an entry of [`SLAB_CLASSES`]).
+    block: usize,
+    /// Free block offsets, popped LIFO. Order is deterministic: pages are
+    /// pushed in descending address order at carve time, frees push on top.
+    free: Vec<usize>,
+}
+
+/// Per-page bookkeeping, keyed by page offset in `FreeList::pages`.
+#[derive(Debug)]
+struct SlabPage {
+    /// Index into the class ladder this page is diced for.
+    class: usize,
+    /// Number of currently-free blocks; the page is reclaimed when this
+    /// reaches `SLAB_PAGE_BYTES / block`.
+    free_blocks: usize,
+}
+
+/// Allocator statistics snapshot (the `FreeList::stats()` surface shown by
+/// `oshrun info`).
+#[derive(Clone, Debug)]
+pub struct AllocStats {
+    /// Total managed bytes.
+    pub capacity: usize,
+    /// Bytes currently reserved by live allocations (slab blocks count at
+    /// their class size).
+    pub allocated: usize,
+    /// High-water mark of `allocated`.
+    pub peak: usize,
+    /// Number of live allocations.
+    pub live_blocks: usize,
+    /// Number of blocks on the first-fit free list.
+    pub free_list_len: usize,
+    /// Bytes on the first-fit free list.
+    pub free_bytes: usize,
+    /// Largest single first-fit free block.
+    pub largest_free_block: usize,
+    /// Bytes sitting on slab free stacks (carved but unallocated).
+    pub slab_free_bytes: usize,
+    /// External fragmentation of the first-fit map, percent:
+    /// `100·(1 − largest_free_block/free_bytes)`; 0 when nothing is free.
+    pub fragmentation_pct: f64,
+    /// Per-size-class occupancy, one entry per [`SLAB_CLASSES`] member.
+    pub classes: Vec<SlabClassStats>,
+}
+
+/// Occupancy of one size class (part of [`AllocStats`]).
+#[derive(Clone, Debug)]
+pub struct SlabClassStats {
+    /// Block size in bytes.
+    pub block: usize,
+    /// Pages currently carved for this class.
+    pub pages: usize,
+    /// Live (allocated) blocks of this class.
+    pub live_blocks: usize,
+    /// Free blocks on this class's stack.
+    pub free_blocks: usize,
+    /// `100·live/(live+free)`; 0 when the class has no pages.
+    pub occupancy_pct: f64,
+}
+
+/// Deterministic allocator over a `[0, capacity)` offset space: size-class
+/// slabs backed by a first-fit free list.
 #[derive(Debug)]
 pub struct FreeList {
     capacity: usize,
     /// offset -> size of each free block, keyed by offset (address order).
     free: BTreeMap<usize, usize>,
-    /// offset -> size of each live allocation.
+    /// offset -> reserved size of each live allocation (class size for slab
+    /// blocks, rounded request size for first-fit blocks).
     live: BTreeMap<usize, usize>,
+    /// Size-class free stacks, indexed as [`SLAB_CLASSES`].
+    classes: Vec<SlabClass>,
+    /// page offset -> page bookkeeping, for every currently-carved page.
+    pages: BTreeMap<usize, SlabPage>,
     /// FNV-1a running hash of the journal (cheap cross-PE symmetry check).
     journal_hash: u64,
     /// Full journal (kept only when `record_journal` is set).
@@ -72,6 +177,11 @@ impl FreeList {
             capacity,
             free,
             live: BTreeMap::new(),
+            classes: SLAB_CLASSES
+                .iter()
+                .map(|&block| SlabClass { block, free: Vec::new() })
+                .collect(),
+            pages: BTreeMap::new(),
             journal_hash: FNV_OFFSET,
             journal: Vec::new(),
             record_journal: cfg!(any(feature = "safe-mode", test)),
@@ -90,7 +200,8 @@ impl FreeList {
         self.live.len()
     }
 
-    /// Size of the live allocation at `offset`, if any.
+    /// Size of the live allocation at `offset`, if any. For slab blocks this
+    /// is the reserved class size, which may exceed the request.
     pub fn size_of(&self, offset: usize) -> Option<usize> {
         self.live.get(&offset).copied()
     }
@@ -106,17 +217,9 @@ impl FreeList {
         &self.journal
     }
 
-    /// Allocate `size` bytes at alignment `align` (power of two ≥ 1).
-    /// Returns the offset. First fit in address order; deterministic.
-    pub fn alloc(&mut self, size: usize, align: usize) -> Result<usize> {
-        if size == 0 {
-            bail!("alloc of size 0");
-        }
-        if !align.is_power_of_two() {
-            bail!("alignment {align} is not a power of two");
-        }
-        let align = align.max(MIN_ALIGN);
-        let size = crate::util::align_up(size, MIN_ALIGN);
+    /// Carve `size` bytes at alignment `align` out of the first-fit map.
+    /// Pure free-map surgery: no live/journal/counter updates.
+    fn take_first_fit(&mut self, size: usize, align: usize) -> Result<usize> {
         // First fit: lowest-offset free block that can hold an aligned start.
         let mut found: Option<(usize, usize, usize)> = None; // (blk_off, blk_sz, start)
         for (&boff, &bsz) in &self.free {
@@ -146,25 +249,12 @@ impl FreeList {
         if bend > end {
             self.free.insert(end, bend - end);
         }
-        self.live.insert(start, size);
-        self.allocated += size;
-        self.peak = self.peak.max(self.allocated);
-        self.journal_hash = fnv_step(self.journal_hash, 0x11);
-        self.journal_hash = fnv_step(self.journal_hash, size as u64);
-        self.journal_hash = fnv_step(self.journal_hash, align as u64);
-        self.journal_hash = fnv_step(self.journal_hash, start as u64);
-        if self.record_journal {
-            self.journal.push(JournalOp::Alloc { size, align, offset: start });
-        }
         Ok(start)
     }
 
-    /// Free the allocation starting at `offset`; coalesces with neighbours.
-    pub fn free(&mut self, offset: usize) -> Result<()> {
-        let Some(size) = self.live.remove(&offset) else {
-            bail!("free of unallocated offset {offset}");
-        };
-        self.allocated -= size;
+    /// Return `[offset, offset+size)` to the first-fit map, coalescing with
+    /// both neighbours.
+    fn release_range(&mut self, offset: usize, size: usize) {
         let mut off = offset;
         let mut sz = size;
         // Coalesce with the block immediately before…
@@ -181,6 +271,106 @@ impl FreeList {
             sz += nsz;
         }
         self.free.insert(off, sz);
+    }
+
+    /// Pop a block of class `ci`, carving a fresh page from the first-fit
+    /// map if the stack is empty. `None` when no page fits (the caller falls
+    /// back to first-fit — still deterministic: the fallback is a pure
+    /// function of the same state).
+    fn alloc_slab(&mut self, ci: usize) -> Option<usize> {
+        if self.classes[ci].free.is_empty() {
+            let block = self.classes[ci].block;
+            let page = self.take_first_fit(SLAB_PAGE_BYTES, MIN_ALIGN).ok()?;
+            let n = SLAB_PAGE_BYTES / block;
+            // Push in descending address order so blocks pop ascending.
+            for k in (0..n).rev() {
+                self.classes[ci].free.push(page + k * block);
+            }
+            self.pages.insert(page, SlabPage { class: ci, free_blocks: n });
+        }
+        let off = self.classes[ci].free.pop().expect("freshly filled class stack");
+        let (&poff, _) = self
+            .pages
+            .range(..=off)
+            .next_back()
+            .expect("slab block belongs to a carved page");
+        debug_assert!(off < poff + SLAB_PAGE_BYTES);
+        self.pages.get_mut(&poff).expect("page present").free_blocks -= 1;
+        Some(off)
+    }
+
+    /// Allocate `size` bytes at alignment `align` (power of two ≥ 1).
+    /// Returns the offset. Small default-aligned requests are served from
+    /// size-class slabs, everything else first-fit in address order; both
+    /// paths are deterministic.
+    pub fn alloc(&mut self, size: usize, align: usize) -> Result<usize> {
+        if size == 0 {
+            bail!("alloc of size 0");
+        }
+        if !align.is_power_of_two() {
+            bail!("alignment {align} is not a power of two");
+        }
+        let align = align.max(MIN_ALIGN);
+        let size = crate::util::align_up(size, MIN_ALIGN);
+        // Slab path: default alignment, small request, and a page (or a
+        // free block) available. Stricter alignments skip the slabs — class
+        // blocks only guarantee MIN_ALIGN.
+        let slab_class = if align == MIN_ALIGN { class_of(size) } else { None };
+        let (offset, reserved) = match slab_class.and_then(|ci| {
+            self.alloc_slab(ci).map(|off| (off, SLAB_CLASSES[ci]))
+        }) {
+            Some(hit) => hit,
+            None => (self.take_first_fit(size, align)?, size),
+        };
+        self.live.insert(offset, reserved);
+        self.allocated += reserved;
+        self.peak = self.peak.max(self.allocated);
+        // The journal records the *request* (rounded size + align) and the
+        // resulting offset: the fingerprint of the symmetric call sequence.
+        // Reserving a bigger class block is a local, deterministic detail.
+        self.journal_hash = fnv_step(self.journal_hash, 0x11);
+        self.journal_hash = fnv_step(self.journal_hash, size as u64);
+        self.journal_hash = fnv_step(self.journal_hash, align as u64);
+        self.journal_hash = fnv_step(self.journal_hash, offset as u64);
+        if self.record_journal {
+            self.journal.push(JournalOp::Alloc { size, align, offset });
+        }
+        Ok(offset)
+    }
+
+    /// Free the allocation starting at `offset`. Slab blocks return to
+    /// their class stack (and reclaim the whole page into the coalescing
+    /// map once it is entirely free); first-fit blocks coalesce with both
+    /// neighbours immediately.
+    pub fn free(&mut self, offset: usize) -> Result<()> {
+        let Some(size) = self.live.remove(&offset) else {
+            bail!("free of unallocated offset {offset}");
+        };
+        self.allocated -= size;
+        // A live offset inside a carved page is a slab block by
+        // construction (pages are carved whole from the free map, so
+        // first-fit allocations can never land inside one).
+        let containing_page = match self.pages.range(..=offset).next_back() {
+            Some((&poff, page)) if offset < poff + SLAB_PAGE_BYTES => Some((poff, page.class)),
+            _ => None,
+        };
+        if let Some((poff, ci)) = containing_page {
+            debug_assert_eq!(size, self.classes[ci].block);
+            self.classes[ci].free.push(offset);
+            let blocks_per_page = SLAB_PAGE_BYTES / self.classes[ci].block;
+            let page = self.pages.get_mut(&poff).expect("page present");
+            page.free_blocks += 1;
+            if page.free_blocks == blocks_per_page {
+                // Whole page free: reclaim it so the space can serve other
+                // classes and big allocations (and full drains coalesce).
+                self.pages.remove(&poff);
+                let end = poff + SLAB_PAGE_BYTES;
+                self.classes[ci].free.retain(|&b| b < poff || b >= end);
+                self.release_range(poff, SLAB_PAGE_BYTES);
+            }
+        } else {
+            self.release_range(offset, size);
+        }
         self.journal_hash = fnv_step(self.journal_hash, 0x22);
         self.journal_hash = fnv_step(self.journal_hash, offset as u64);
         if self.record_journal {
@@ -189,31 +379,88 @@ impl FreeList {
         Ok(())
     }
 
-    /// Internal consistency check used by tests: free + live blocks tile the
-    /// space exactly, with no overlap and no gaps.
+    /// Statistics snapshot: live/free block counts, fragmentation, and
+    /// per-size-class occupancy (the `oshrun info` allocator report).
+    pub fn stats(&self) -> AllocStats {
+        let free_bytes: usize = self.free.values().sum();
+        let largest_free_block = self.free.values().copied().max().unwrap_or(0);
+        let fragmentation_pct = if free_bytes == 0 {
+            0.0
+        } else {
+            100.0 * (1.0 - largest_free_block as f64 / free_bytes as f64)
+        };
+        let mut slab_free_bytes = 0usize;
+        let classes = self
+            .classes
+            .iter()
+            .enumerate()
+            .map(|(ci, c)| {
+                let pages = self.pages.values().filter(|p| p.class == ci).count();
+                let total = pages * (SLAB_PAGE_BYTES / c.block);
+                let free_blocks = c.free.len();
+                let live_blocks = total - free_blocks;
+                slab_free_bytes += free_blocks * c.block;
+                SlabClassStats {
+                    block: c.block,
+                    pages,
+                    live_blocks,
+                    free_blocks,
+                    occupancy_pct: if total == 0 {
+                        0.0
+                    } else {
+                        100.0 * live_blocks as f64 / total as f64
+                    },
+                }
+            })
+            .collect();
+        AllocStats {
+            capacity: self.capacity,
+            allocated: self.allocated,
+            peak: self.peak,
+            live_blocks: self.live.len(),
+            free_list_len: self.free.len(),
+            free_bytes,
+            largest_free_block,
+            slab_free_bytes,
+            fragmentation_pct,
+            classes,
+        }
+    }
+
+    /// Internal consistency check used by tests: free-map blocks, live
+    /// allocations, and slab free blocks tile the space exactly, with no
+    /// overlap and no gaps; per-page free counts match the stacks.
     pub fn check_invariants(&self) -> Result<()> {
-        let mut regions: Vec<(usize, usize, bool)> = Vec::new();
+        const LIVE: u8 = 0;
+        const FREE_MAP: u8 = 1;
+        const SLAB_FREE: u8 = 2;
+        let mut regions: Vec<(usize, usize, u8)> = Vec::new();
         for (&o, &s) in &self.free {
-            regions.push((o, s, true));
+            regions.push((o, s, FREE_MAP));
         }
         for (&o, &s) in &self.live {
-            regions.push((o, s, false));
+            regions.push((o, s, LIVE));
+        }
+        for c in &self.classes {
+            for &o in &c.free {
+                regions.push((o, c.block, SLAB_FREE));
+            }
         }
         regions.sort();
         let mut cursor = 0usize;
-        let mut prev_free = false;
-        for (o, s, is_free) in regions {
+        let mut prev_kind = LIVE;
+        for (o, s, kind) in regions {
             if o != cursor {
                 bail!("gap or overlap at offset {cursor} (next region at {o})");
             }
-            if is_free && prev_free {
+            if kind == FREE_MAP && prev_kind == FREE_MAP {
                 bail!("adjacent free blocks not coalesced at {o}");
             }
             if s == 0 {
                 bail!("zero-size region at {o}");
             }
             cursor = o + s;
-            prev_free = is_free;
+            prev_kind = kind;
         }
         if cursor != self.capacity {
             bail!("regions end at {cursor}, capacity {}", self.capacity);
@@ -221,6 +468,27 @@ impl FreeList {
         let live_sum: usize = self.live.values().sum();
         if live_sum != self.allocated {
             bail!("allocated counter {} != live sum {live_sum}", self.allocated);
+        }
+        // Per-page accounting: stack entries within each page must equal the
+        // page's free count, and no page may linger fully free (those are
+        // reclaimed eagerly).
+        for (&poff, page) in &self.pages {
+            let end = poff + SLAB_PAGE_BYTES;
+            let on_stack = self.classes[page.class]
+                .free
+                .iter()
+                .filter(|&&b| b >= poff && b < end)
+                .count();
+            if on_stack != page.free_blocks {
+                bail!(
+                    "page {poff}: stack holds {on_stack} free blocks, page counter says {}",
+                    page.free_blocks
+                );
+            }
+            let blocks_per_page = SLAB_PAGE_BYTES / self.classes[page.class].block;
+            if page.free_blocks >= blocks_per_page {
+                bail!("page {poff}: fully free but not reclaimed");
+            }
         }
         Ok(())
     }
@@ -242,7 +510,8 @@ mod tests {
         fl.free(b).unwrap();
         fl.check_invariants().unwrap();
         assert_eq!(fl.allocated, 0);
-        // After freeing everything the space must be one coalesced block.
+        // After freeing everything the space must be one coalesced block
+        // (slab pages are reclaimed once fully free).
         assert_eq!(fl.free.len(), 1);
     }
 
@@ -260,6 +529,7 @@ mod tests {
     #[test]
     fn exhaustion_errors() {
         let mut fl = FreeList::new(1024);
+        // Too small for a slab page: the class path falls back to first-fit.
         let _a = fl.alloc(1000, 1).unwrap();
         assert!(fl.alloc(1000, 1).is_err());
     }
@@ -282,6 +552,70 @@ mod tests {
     fn zero_size_rejected() {
         let mut fl = FreeList::new(4096);
         assert!(fl.alloc(0, 1).is_err());
+    }
+
+    #[test]
+    fn slab_blocks_come_from_one_page() {
+        let mut fl = FreeList::new(1 << 20);
+        // 64-byte class: successive allocations walk one page contiguously.
+        let offs: Vec<usize> = (0..8).map(|_| fl.alloc(50, 1).unwrap()).collect();
+        for w in offs.windows(2) {
+            assert_eq!(w[1], w[0] + 64, "consecutive slab blocks are adjacent");
+        }
+        fl.check_invariants().unwrap();
+        for o in offs {
+            fl.free(o).unwrap();
+        }
+        fl.check_invariants().unwrap();
+        assert_eq!(fl.free.len(), 1, "page reclaimed after full drain");
+    }
+
+    #[test]
+    fn slab_free_is_lifo_reused() {
+        let mut fl = FreeList::new(1 << 20);
+        let a = fl.alloc(100, 1).unwrap(); // 128-class
+        let b = fl.alloc(100, 1).unwrap();
+        fl.free(a).unwrap();
+        // LIFO: the freed block is the next one handed out.
+        let c = fl.alloc(100, 1).unwrap();
+        assert_eq!(c, a);
+        fl.free(b).unwrap();
+        fl.free(c).unwrap();
+        fl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn strict_alignment_skips_slabs() {
+        let mut fl = FreeList::new(1 << 20);
+        let _pad = fl.alloc(100, 1).unwrap(); // occupies a slab page
+        let o = fl.alloc(100, 4096).unwrap();
+        assert_eq!(o % 4096, 0);
+        // A 4 KiB-aligned block can never be a 128-byte slab block at an
+        // interior page offset; invariants confirm consistency either way.
+        fl.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn stats_report_classes_and_fragmentation() {
+        let mut fl = FreeList::new(1 << 20);
+        let a = fl.alloc(100, 1).unwrap(); // 128-class page carved
+        let big = fl.alloc(8192, 1).unwrap(); // first-fit
+        let s = fl.stats();
+        assert_eq!(s.live_blocks, 2);
+        assert_eq!(s.allocated, 128 + 8192);
+        let c128 = s.classes.iter().find(|c| c.block == 128).unwrap();
+        assert_eq!(c128.pages, 1);
+        assert_eq!(c128.live_blocks, 1);
+        assert_eq!(c128.free_blocks, SLAB_PAGE_BYTES / 128 - 1);
+        assert!(c128.occupancy_pct > 0.0 && c128.occupancy_pct < 100.0);
+        assert!(s.slab_free_bytes >= c128.free_blocks * 128);
+        fl.free(a).unwrap();
+        fl.free(big).unwrap();
+        let s = fl.stats();
+        assert_eq!(s.allocated, 0);
+        assert_eq!(s.free_list_len, 1);
+        assert_eq!(s.fragmentation_pct, 0.0);
+        assert_eq!(s.largest_free_block, s.free_bytes);
     }
 
     #[test]
@@ -319,6 +653,52 @@ mod tests {
                 return Err("journal hashes diverged".into());
             }
             a.check_invariants().map_err(|e| e.to_string())?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn slab_heavy_determinism() {
+        // The same property with the workload biased into the size classes
+        // (the KV node/value profile the slab layer exists for).
+        forall("slab determinism", 100, |g: &mut Gen| {
+            let mut a = FreeList::new(1 << 20);
+            let mut b = FreeList::new(1 << 20);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..g.usize_in(1..200) {
+                if !live.is_empty() && g.bool(0.45) {
+                    let idx = g.usize_in(0..live.len());
+                    let off = live.swap_remove(idx);
+                    a.free(off).map_err(|e| e.to_string())?;
+                    b.free(off).map_err(|e| e.to_string())?;
+                } else {
+                    // Mostly class-sized, occasionally just over SLAB_MAX to
+                    // interleave first-fit blocks between pages.
+                    let size = if g.bool(0.9) {
+                        g.usize_in(1..SLAB_MAX_BYTES + 1)
+                    } else {
+                        g.usize_in(SLAB_MAX_BYTES + 1..4 * SLAB_MAX_BYTES)
+                    };
+                    let x = a.alloc(size, 1).map_err(|e| e.to_string())?;
+                    let y = b.alloc(size, 1).map_err(|e| e.to_string())?;
+                    if x != y {
+                        return Err(format!("offsets diverged: {x} vs {y}"));
+                    }
+                    live.push(x);
+                }
+                a.check_invariants().map_err(|e| e.to_string())?;
+            }
+            if a.journal_hash() != b.journal_hash() {
+                return Err("journal hashes diverged".into());
+            }
+            for off in live {
+                a.free(off).map_err(|e| e.to_string())?;
+                b.free(off).map_err(|e| e.to_string())?;
+            }
+            a.check_invariants().map_err(|e| e.to_string())?;
+            if a.free.len() != 1 {
+                return Err("full drain did not reclaim every page".into());
+            }
             Ok(())
         });
     }

@@ -181,6 +181,12 @@ impl SymHeap {
         self.alloc.lock().unwrap().allocated
     }
 
+    /// Allocator statistics snapshot: live/free block counts, fragmentation,
+    /// per-size-class occupancy (surfaced by `oshrun info`).
+    pub fn alloc_stats(&self) -> super::alloc::AllocStats {
+        self.alloc.lock().unwrap().stats()
+    }
+
     /// Number of live dynamic allocations.
     pub fn live_allocations(&self) -> usize {
         self.alloc.lock().unwrap().live_count()

@@ -27,5 +27,6 @@ pub mod handle;
 pub mod heap;
 pub mod layout;
 
+pub use alloc::{AllocStats, SlabClassStats};
 pub use handle::SymPtr;
 pub use heap::SymHeap;

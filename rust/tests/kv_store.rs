@@ -1,0 +1,191 @@
+//! Integration tests for the posh-kv subsystem (docs/kv.md).
+//!
+//! * **LWW oracle** — under a concurrent multi-PE, multi-thread mixed
+//!   read/write workload, the final value of every key must be the one
+//!   written by the put that committed with the highest shard sequence
+//!   number. Shard sequences are allocated under the shard writer lock, so
+//!   they totally order all writes to a key; replaying every thread's
+//!   `(key, seq, value)` log against the quiescent store checks the whole
+//!   publication protocol (flag-after-data, quiet-before-version-bump).
+//! * **Torn reads** — lock-free readers hammering one hot key while every
+//!   PE overwrites it must only ever observe complete, well-formed values
+//!   (value blobs are immutable; the value word swings atomically).
+//! * **Routing** — `owner_of` must agree across PEs, since routing is what
+//!   makes a key's home shard the same from everywhere.
+//!
+//! The same oracle runs in process mode in `tests/proc_mode.rs`.
+
+use posh::kv::{KvConfig, KvStore};
+use posh::pe::{PoshConfig, World};
+use posh::util::prng::Rng;
+
+fn cfg() -> KvConfig {
+    KvConfig { shards_per_pe: 4, arena_bytes: 256 * 1024, max_key_len: 32, max_val_len: 64 }
+}
+
+/// 4 PEs × 4 threads, 80/20 put/get over a 64-key universe, then replay
+/// the merged write logs: max-seq entry per key must equal what every PE
+/// reads back from the quiescent store.
+#[test]
+fn lww_oracle_concurrent_mixed_workload() {
+    const PES: usize = 4;
+    const THREADS: usize = 4;
+    const OPS: usize = 200;
+    const KEYS: usize = 64;
+    let w = World::threads(PES, PoshConfig::small()).unwrap();
+    let per_pe = w.run_collect(move |ctx| {
+        let kv = KvStore::create(&ctx, cfg()).unwrap();
+        ctx.barrier_all();
+        let mut logs: Vec<(usize, u64, Vec<u8>)> = Vec::new();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let kv = &kv;
+                    let ctx = &ctx;
+                    s.spawn(move || {
+                        let mut rng =
+                            Rng::new(0x51ab_0000 + (ctx.my_pe() * THREADS + t) as u64);
+                        let mut log = Vec::new();
+                        for i in 0..OPS {
+                            let k = rng.usize_in(0, KEYS);
+                            let key = format!("k{k:03}");
+                            if rng.bool(0.8) {
+                                let val = format!("{key}#{}.{t}.{i}", ctx.my_pe());
+                                let seq = kv.put(key.as_bytes(), val.as_bytes()).unwrap();
+                                log.push((k, seq, val.into_bytes()));
+                            } else if let Some(v) = kv.get(key.as_bytes()) {
+                                assert!(
+                                    v.starts_with(key.as_bytes()),
+                                    "mid-run read of {key} returned a foreign blob: {v:?}"
+                                );
+                            }
+                        }
+                        log
+                    })
+                })
+                .collect();
+            for h in handles {
+                logs.extend(h.join().unwrap());
+            }
+        });
+        ctx.barrier_all();
+        // Quiescent: every write is published, every lock released. Each PE
+        // reads every key (local fast path for its own shards, one-sided
+        // copies for the rest).
+        let finals: Vec<Option<(u64, Vec<u8>)>> = (0..KEYS)
+            .map(|k| kv.get_versioned(format!("k{k:03}").as_bytes()))
+            .collect();
+        ctx.barrier_all();
+        kv.destroy().unwrap();
+        (logs, finals)
+    });
+
+    let mut winner: Vec<Option<(u64, Vec<u8>)>> = vec![None; KEYS];
+    for (logs, _) in &per_pe {
+        for (k, seq, val) in logs {
+            if winner[*k].as_ref().map_or(true, |(ws, _)| seq > ws) {
+                winner[*k] = Some((*seq, val.clone()));
+            }
+        }
+    }
+    let total_writes: usize = per_pe.iter().map(|(l, _)| l.len()).sum();
+    assert!(total_writes > 0, "workload generated no writes");
+    for (pe, (_, finals)) in per_pe.iter().enumerate() {
+        for k in 0..KEYS {
+            assert_eq!(
+                finals[k], winner[k],
+                "PE {pe}: final read of key k{k:03} disagrees with the LWW oracle"
+            );
+        }
+    }
+}
+
+/// One hot key, every PE overwriting it while dedicated reader threads spin
+/// on `get`: every observed value must be complete and well-formed
+/// (`hot#<pe>.<i>` with in-range fields) — a torn or stale-length read
+/// would fail the parse.
+#[test]
+fn hot_key_never_tears() {
+    const PES: usize = 4;
+    const WRITES: usize = 300;
+    const READS: usize = 600;
+    let w = World::threads(PES, PoshConfig::small()).unwrap();
+    let observed = w.run_collect(move |ctx| {
+        let kv = KvStore::create(&ctx, cfg()).unwrap();
+        ctx.barrier_all();
+        let mut seen = 0usize;
+        std::thread::scope(|s| {
+            let writer = {
+                let kv = &kv;
+                let ctx = &ctx;
+                s.spawn(move || {
+                    for i in 0..WRITES {
+                        let val = format!("hot#{}.{i}", ctx.my_pe());
+                        kv.put(b"hot", val.as_bytes()).unwrap();
+                    }
+                })
+            };
+            let readers: Vec<_> = (0..2)
+                .map(|_| {
+                    let kv = &kv;
+                    s.spawn(move || {
+                        let mut seen = 0usize;
+                        for _ in 0..READS {
+                            if let Some(v) = kv.get(b"hot") {
+                                let s = std::str::from_utf8(&v)
+                                    .expect("torn read: value is not UTF-8");
+                                let rest = s
+                                    .strip_prefix("hot#")
+                                    .unwrap_or_else(|| panic!("torn read: {s:?}"));
+                                let (pe, i) = rest
+                                    .split_once('.')
+                                    .unwrap_or_else(|| panic!("torn read: {s:?}"));
+                                let pe: usize = pe.parse().expect("torn read: bad pe");
+                                let i: usize = i.parse().expect("torn read: bad index");
+                                assert!(pe < PES && i < WRITES, "impossible value {s:?}");
+                                seen += 1;
+                            }
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            writer.join().unwrap();
+            for r in readers {
+                seen += r.join().unwrap();
+            }
+        });
+        ctx.barrier_all();
+        kv.destroy().unwrap();
+        seen
+    });
+    // The hot key exists after the first write; readers must have actually
+    // observed values, or the test proved nothing.
+    assert!(observed.iter().sum::<usize>() > PES * READS / 2, "readers mostly missed");
+}
+
+/// Key routing is pure in (hash, n_pes, shards): every PE must compute the
+/// same owner for every key, and a modest key set must touch every PE.
+#[test]
+fn routing_agrees_across_pes() {
+    const PES: usize = 3;
+    let w = World::threads(PES, PoshConfig::small()).unwrap();
+    let views = w.run_collect(|ctx| {
+        let kv = KvStore::create(&ctx, cfg()).unwrap();
+        let owners: Vec<(usize, usize)> =
+            (0..200).map(|i| kv.owner_of(format!("key-{i}").as_bytes())).collect();
+        ctx.barrier_all();
+        kv.destroy().unwrap();
+        owners
+    });
+    assert!(
+        views.windows(2).all(|w| w[0] == w[1]),
+        "PEs disagree on key ownership"
+    );
+    for pe in 0..PES {
+        assert!(
+            views[0].iter().any(|&(p, _)| p == pe),
+            "200 keys never routed to PE {pe}"
+        );
+    }
+}

@@ -110,6 +110,83 @@ fn pe_body() {
         t.destroy();
     }
 
+    // posh-kv across processes: deterministic cross-PE reads over the real
+    // shm segments, then a concurrent same-key LWW race resolved through a
+    // symmetric seq array (the process-mode half of tests/kv_store.rs).
+    {
+        use posh::kv::{KvConfig, KvStore};
+        let kv = KvStore::create(
+            &ctx,
+            KvConfig {
+                shards_per_pe: 4,
+                arena_bytes: 128 * 1024,
+                max_key_len: 32,
+                max_val_len: 64,
+            },
+        )
+        .unwrap();
+        ctx.barrier_all();
+        // Deterministic phase: each PE writes its own keys; every PE reads
+        // every key (local fast path for its own, one-sided for the rest).
+        for i in 0..16 {
+            let key = format!("p{me}-{i}");
+            let val = format!("{key}={}", i * 7 + me);
+            kv.put(key.as_bytes(), val.as_bytes()).unwrap();
+        }
+        ctx.barrier_all();
+        for pe in 0..n {
+            for i in 0..16 {
+                let key = format!("p{pe}-{i}");
+                let want = format!("{key}={}", i * 7 + pe);
+                assert_eq!(
+                    kv.get(key.as_bytes()).as_deref(),
+                    Some(want.as_bytes()),
+                    "PE {me}: kv read of {key} across processes"
+                );
+            }
+        }
+        assert_eq!(kv.len(), (16 * n) as u64);
+
+        // LWW race: two threads per PE hammer one hot key. Each PE
+        // publishes its highest committed shard seq into a symmetric
+        // array; the final stored seq must be the global max, and the PE
+        // that committed it checks the stored value is its own.
+        let (a, b) = std::thread::scope(|s| {
+            let hammer = |t: usize| {
+                let kv = &kv;
+                move || {
+                    let mut best = (0u64, String::new());
+                    for i in 0..200 {
+                        let val = format!("hot#{me}.{t}.{i}");
+                        let seq = kv.put(b"hot", val.as_bytes()).unwrap();
+                        if seq > best.0 {
+                            best = (seq, val);
+                        }
+                    }
+                    best
+                }
+            };
+            let ha = s.spawn(hammer(0));
+            let hb = s.spawn(hammer(1));
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+        let my_best = if a.0 >= b.0 { a } else { b };
+        let seqs = ctx.shmalloc_n::<i64>(n).unwrap();
+        for pe in 0..n {
+            ctx.put_one(seqs.at(me), my_best.0 as i64, pe);
+        }
+        ctx.barrier_all();
+        let all: Vec<i64> = (0..n).map(|i| ctx.get_one(seqs.at(i), me)).collect();
+        let gmax = *all.iter().max().unwrap() as u64;
+        let (fseq, fval) = kv.get_versioned(b"hot").expect("hot key exists");
+        assert_eq!(fseq, gmax, "PE {me}: final hot-key seq is not the global max");
+        if my_best.0 == gmax {
+            assert_eq!(fval, my_best.1.into_bytes(), "LWW winner value mismatch");
+        }
+        ctx.barrier_all();
+        kv.destroy().unwrap();
+    }
+
     ctx.barrier_all();
     println!("PE {me}: process-mode workout OK");
 }

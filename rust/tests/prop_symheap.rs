@@ -158,6 +158,88 @@ fn lemma1_temporaries_restore_symmetry() {
     });
 }
 
+/// Fact 1 through the slab layer: programs biased toward size-class
+/// requests (the sizes posh-kv issues for nodes and small values) must
+/// keep offset traces AND journal hashes symmetric — slab page carving,
+/// per-class free lists, and whole-page reclamation are all deterministic
+/// allocator state, so identical call sequences must reproduce them bit
+/// for bit on every PE.
+#[test]
+fn fact1_slab_biased_programs() {
+    use posh::symheap::alloc::{SLAB_CLASSES, SLAB_MAX_BYTES};
+    forall("fact1-slab", 30, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..5);
+        #[derive(Clone)]
+        enum Op {
+            Alloc { size: usize, align: usize },
+            Free { idx: usize },
+        }
+        let n_ops = g.usize_in(4..60);
+        let mut script = Vec::new();
+        let mut live = 0usize;
+        for _ in 0..n_ops {
+            if live > 0 && g.bool(0.4) {
+                script.push(Op::Free { idx: g.usize_in(0..live) });
+                live -= 1;
+            } else {
+                // 80% slab-ladder sizes: an exact class, one under, or one
+                // over (one over the top class deliberately spills to the
+                // first-fit map path). 20% clearly-map-path sizes.
+                let size = if g.bool(0.8) {
+                    let c = g.pick(&SLAB_CLASSES);
+                    match g.usize_in(0..3) {
+                        0 => c,
+                        1 => c - 1,
+                        _ => c + 1,
+                    }
+                } else {
+                    g.usize_in(SLAB_MAX_BYTES + 1..8192)
+                };
+                script.push(Op::Alloc { size, align: 1 << g.usize_in(0..6) });
+                live += 1;
+            }
+        }
+        let w = World::threads(n_pes, PoshConfig::small()).unwrap();
+        let script = std::sync::Arc::new(script);
+        let traces = w.run_collect({
+            let script = std::sync::Arc::clone(&script);
+            move |ctx| {
+                let mut handles = Vec::new();
+                let mut trace = Vec::new();
+                for op in script.iter() {
+                    match op {
+                        Op::Alloc { size, align } => {
+                            let p = ctx.shmemalign_n::<u8>(*align, *size).unwrap();
+                            trace.push(p.offset());
+                            handles.push(p);
+                        }
+                        Op::Free { idx } => {
+                            let p = handles.remove(*idx);
+                            ctx.shfree(p).unwrap();
+                        }
+                    }
+                }
+                // Drain the rest so page reclamation runs too, then record
+                // the journal hash over the whole history.
+                for p in handles {
+                    ctx.shfree(p).unwrap();
+                }
+                trace.push(ctx.heap().journal_hash() as usize);
+                trace
+            }
+        });
+        for pe in 1..n_pes {
+            if traces[pe] != traces[0] {
+                return Err(format!(
+                    "slab Fact 1 violated with {n_pes} PEs: PE {pe} trace {:?} != PE 0 trace {:?}",
+                    traces[pe], traces[0]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 /// The statics area (§4.2) obeys Fact 1 too: same manifest ⇒ same offsets.
 #[test]
 fn statics_placement_symmetric() {
