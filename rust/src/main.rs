@@ -40,6 +40,9 @@ OPTIONS (launch):
                       default; --coll is an alias; see docs/tuning.md)
   --barrier KIND      dissemination|central
   --team-barrier KIND adaptive|dissemination|linear (team-sync engine A/B)
+  --shm-engine ENG    posix|memfd segment substrate (default: auto —
+                      posix when /dev/shm is writable, memfd otherwise;
+                      memfd fds are brokered to the PEs by the launcher)
   --safe              enable run-time checking (paper _SAFE mode)
   --debug-wait        each PE waits for a debugger at start-up (§4.7)
 
@@ -228,6 +231,21 @@ fn info() {
     );
     println!("safe mode (compile)       : {}", cfg!(feature = "safe-mode"));
     println!("page size                 : {}", posh::shm::inproc::page_size());
+    println!(
+        "shm engines               : /dev/shm {}, memfd {}; auto-select: {}",
+        if posh::shm::dev_shm_writable() { "writable" } else { "UNWRITABLE" },
+        if posh::shm::memfd::memfd_supported() { "available" } else { "unavailable" },
+        posh::shm::ShmEngine::resolve().name()
+    );
+    println!(
+        "remote-table mapping cap  : {} (POSH_MAX_MAPPED_SEGS; eager map: {})",
+        match posh::prelude::PoshConfig::default().from_env().max_mapped_segs {
+            Some(n) => n.to_string(),
+            None => "unlimited".to_string(),
+        },
+        if posh::prelude::PoshConfig::default().from_env().eager_map { "on" } else { "off" }
+    );
+    remote_table_probe();
     let heap = posh::prelude::PoshConfig::default().from_env().heap_size;
     match posh::shm::create_inproc(heap) {
         Ok(seg) => println!(
@@ -242,6 +260,51 @@ fn info() {
         Err(e) => println!("PJRT                      : unavailable ({e})"),
     }
     alloc_info(heap);
+}
+
+/// Demand-mapping smoke probe: build an 8-PE remote-heap table over
+/// in-process memfd segments, touch two peers, and report the mapping
+/// stats — the same counters a real process-mode job exposes through
+/// `Ctx::remote_table_stats`. Lazy mapping is visible directly: mapped
+/// stays far below the world size until peers are touched.
+fn remote_table_probe() {
+    use posh::pe::remote_table::{RemoteTable, TableOpts};
+    use posh::shm::memfd::{memfd_supported, MemfdSegment};
+    if !memfd_supported() {
+        println!("remote-table demand probe : skipped (memfd_create unavailable)");
+        return;
+    }
+    let n = 8usize;
+    let len = 64 << 10;
+    let mut segs = Vec::with_capacity(n);
+    for r in 0..n {
+        match MemfdSegment::create(&format!("posh.info.probe.{r}"), len) {
+            Ok(s) => segs.push(s),
+            Err(e) => {
+                println!("remote-table demand probe : failed ({e})");
+                return;
+            }
+        }
+    }
+    let fds: Vec<_> = segs.iter().map(|s| s.fd()).collect();
+    let opts = TableOpts {
+        timeout: std::time::Duration::from_millis(200),
+        ..Default::default()
+    };
+    let table = match RemoteTable::with_memfds(fds, 0, segs[0].base(), len, opts) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("remote-table demand probe : failed ({e})");
+            return;
+        }
+    };
+    let _ = table.base_of(3);
+    let _ = table.base_of(5);
+    println!(
+        "remote-table demand probe : {} after touching 2 of {} peers",
+        table.stats(),
+        n - 1
+    );
 }
 
 /// Allocator report: slab configuration plus a [`FreeList::stats`] snapshot
@@ -403,6 +466,13 @@ fn launch(args: &[String]) {
             "--team-barrier" => {
                 env.push((
                     "POSH_TEAM_BARRIER".into(),
+                    args.get(i + 1).cloned().unwrap_or_default(),
+                ));
+                i += 2;
+            }
+            "--shm-engine" => {
+                env.push((
+                    "POSH_SHM_ENGINE".into(),
                     args.get(i + 1).cloned().unwrap_or_default(),
                 ));
                 i += 2;

@@ -67,6 +67,15 @@ pub struct PoshConfig {
     /// Run-time safe mode (§4.5.5 checks). The `safe-mode` cargo feature
     /// forces this on.
     pub safe: bool,
+    /// LRU cap on concurrently mapped peer segments in the process-mode
+    /// remote-heap table (`POSH_MAX_MAPPED_SEGS`; `None` = unlimited).
+    /// See [`crate::pe::remote_table::TableOpts::max_mapped`] for the
+    /// THREAD_MULTIPLE safety caveat.
+    pub max_mapped_segs: Option<usize>,
+    /// Map every peer's segment eagerly at attach (`POSH_EAGER_MAP=1`) —
+    /// the paper's original start-up shape, now opt-in. Default is demand
+    /// mapping: peers map on first access.
+    pub eager_map: bool,
 }
 
 impl Default for PoshConfig {
@@ -80,6 +89,8 @@ impl Default for PoshConfig {
             team_barrier: None,
             cost_model: None,
             safe: cfg!(feature = "safe-mode"),
+            max_mapped_segs: None,
+            eager_map: false,
         }
     }
 }
@@ -142,6 +153,13 @@ impl PoshConfig {
         }
         if let Ok(v) = std::env::var("POSH_SAFE") {
             self.safe = v == "1" || v.eq_ignore_ascii_case("true");
+        }
+        if let Ok(v) = std::env::var("POSH_MAX_MAPPED_SEGS") {
+            // 0 / "unlimited" / unparsable all mean "no cap".
+            self.max_mapped_segs = v.parse::<usize>().ok().filter(|&n| n > 0);
+        }
+        if let Ok(v) = std::env::var("POSH_EAGER_MAP") {
+            self.eager_map = v == "1" || v.eq_ignore_ascii_case("true");
         }
         self
     }

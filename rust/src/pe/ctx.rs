@@ -82,11 +82,23 @@ impl Ctx {
     }
 
     /// Base address of PE `pe`'s heap **in this address space** — the cached
-    /// remote-table lookup of §4.1.1.
+    /// remote-table lookup of §4.1.1. In process mode the table demand-maps
+    /// the peer's segment on first access (one `Acquire` load once mapped);
+    /// thread mode keeps the flat world vector.
     #[inline]
     pub fn base_of(&self, pe: usize) -> *mut u8 {
         debug_assert!(pe < self.shared.n_pes);
-        self.shared.bases[pe].0
+        match &self.shared.remote {
+            Some(table) => table.base_of(pe),
+            None => self.shared.bases[pe].0,
+        }
+    }
+
+    /// Mapping-activity counters of the process-mode remote-heap table
+    /// (`None` in thread mode, where no demand mapping happens). What
+    /// `oshrun info` and the lazy-mapping tests read.
+    pub fn remote_table_stats(&self) -> Option<super::remote_table::RemoteTableStats> {
+        self.shared.remote.as_ref().map(|t| t.stats())
     }
 
     /// Header of PE `pe`'s heap.

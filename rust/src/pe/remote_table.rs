@@ -1,18 +1,44 @@
-//! The remote-heap table (paper §4.1.1).
+//! The remote-heap table (paper §4.1.1) — now a demand-mapping cache.
 //!
 //! "Building the remote heap's name and the corresponding shared object is
 //! quite expensive […] As a consequence, they are all created at
 //! startup-time and cached in a local structure (a table)."
 //!
-//! In process mode every PE maps every peer's segment once at start-up and
-//! keeps the mapping here; the data path then costs one vector index. In
-//! thread mode the "table" is just the world's heap vector — same shape.
+//! Eager creation is the paper's answer at 8 PEs; at the hundreds-to-
+//! thousands of PEs the ROADMAP targets, O(n) mappings per PE (O(n²)
+//! job-wide) is exactly what stops process mode from scaling. So the table
+//! now maps a peer on *first access* instead:
+//!
+//! * **fast path** — [`RemoteTable::base_of`] is one `Acquire` load of an
+//!   atomic base-pointer array plus a null check. A mapped peer costs the
+//!   same vector index it always did.
+//! * **slow path** — a null base takes a per-PE lock, re-checks (exactly one
+//!   thread maps a cold peer; racers block and reuse its mapping), opens
+//!   the segment through the engine-specific source (named POSIX object or
+//!   launcher-inherited memfd), optionally waits for the peer's heap header
+//!   `ready` flag, and publishes the base with `Release`.
+//! * **optional LRU cap** — `POSH_MAX_MAPPED_SEGS` bounds resident peer
+//!   mappings; mapping past the cap unmaps the coldest peer (last-touch
+//!   stamps). Off by default: with no cap, a published base is immutable
+//!   and the fast path is wait-free forever. With a cap, an addresses
+//!   handed out *before* an eviction may dangle — see the safety note on
+//!   [`TableOpts::max_mapped`].
+//!
+//! Start-up may still want the old behaviour (e.g. to smoke-test a world);
+//! [`RemoteTable::prefault_all`] maps everyone under **one shared
+//! deadline** — not one full timeout per absent peer — and its error names
+//! the ranks that never appeared.
 
+use crate::shm::memfd::MemfdSegment;
 use crate::shm::naming::heap_segment_name;
 use crate::shm::posix::PosixShmSegment;
-use crate::shm::Segment;
+use crate::shm::{BoxedSegment, Segment};
 use crate::Result;
-use std::time::Duration;
+use anyhow::bail;
+use std::os::unix::io::RawFd;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// A `*mut u8` that may cross threads. The pointee is a shared segment whose
 /// access discipline is the SHMEM memory model's responsibility.
@@ -22,19 +48,211 @@ pub struct SendPtr(pub *mut u8);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
-/// Start-up-time cache of peer segment mappings (process mode).
+/// Per-attempt slice of the shared deadline used by
+/// [`RemoteTable::prefault_all`]: each round gives each still-absent peer at
+/// most this long before moving on, so one slow peer cannot starve the
+/// others' retries.
+const PREFAULT_SLICE: Duration = Duration::from_millis(50);
+
+/// Tuning knobs for a [`RemoteTable`].
+#[derive(Clone, Copy, Debug)]
+pub struct TableOpts {
+    /// Deadline for a peer's segment to appear (demand path: per first
+    /// touch; [`RemoteTable::prefault_all`]: shared across the whole
+    /// world). Mirrors `POSH_ATTACH_TIMEOUT_S`.
+    pub timeout: Duration,
+    /// LRU cap on concurrently mapped *peer* segments (`None` =
+    /// unlimited, the default — every published base then stays valid for
+    /// the table's lifetime).
+    ///
+    /// # Safety note
+    /// With a cap, an eviction `munmap`s a peer segment while raw
+    /// addresses previously returned by [`RemoteTable::base_of`] may still
+    /// be held by in-flight operations on other threads. Single-threaded
+    /// PEs (and `SHMEM_THREAD_SINGLE`/`SERIALIZED` jobs) are safe; under
+    /// `THREAD_MULTIPLE` a capped table requires the application to quiesce
+    /// concurrent ops to evictable peers. `oshrun info` and docs/tuning.md
+    /// carry the same warning.
+    pub max_mapped: Option<usize>,
+    /// Spin for the peer's heap-header `ready` flag after mapping (the
+    /// start-up handshake a real world needs; raw-segment tests leave it
+    /// off because nothing ever raises the flag).
+    pub wait_ready: bool,
+}
+
+impl Default for TableOpts {
+    fn default() -> Self {
+        TableOpts {
+            timeout: Duration::from_secs(30),
+            max_mapped: None,
+            wait_ready: false,
+        }
+    }
+}
+
+/// How peer segments are reached — the engine-specific half of the table.
+enum PeerSource {
+    /// Rebuild the §4.7 name from the rank and `shm_open` it.
+    Posix {
+        /// Job id the segment names are keyed by.
+        job_id: u64,
+    },
+    /// `mmap` the launcher-inherited memfd for that rank.
+    Memfd {
+        /// Rank-indexed fds (from [`crate::shm::memfd::SEGFDS_ENV`]).
+        fds: Vec<RawFd>,
+    },
+}
+
+/// Per-PE slow-path state, guarded by the slot mutex.
+struct Slot {
+    /// The live mapping (owns the `munmap`). `None` when unmapped and for
+    /// my own rank (the local heap owns that mapping).
+    seg: Option<BoxedSegment>,
+    /// Whether this PE was ever LRU-evicted (a later map counts as a
+    /// *remap* in the stats).
+    evicted: bool,
+}
+
+/// Counters describing a [`RemoteTable`]'s mapping activity (surfaced by
+/// `oshrun info`).
+#[derive(Clone, Copy, Debug)]
+pub struct RemoteTableStats {
+    /// World size the table covers.
+    pub n_pes: usize,
+    /// Segments currently resolvable without mapping work (peers + self;
+    /// 0 after [`RemoteTable::clear`]).
+    pub mapped: usize,
+    /// High-water mark of `mapped`.
+    pub peak_mapped: usize,
+    /// Peer mappings ever created (first maps + remaps).
+    pub mapped_total: u64,
+    /// LRU evictions performed.
+    pub evicted: u64,
+    /// Maps of a peer that had previously been evicted.
+    pub remapped: u64,
+}
+
+impl std::fmt::Display for RemoteTableStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mapped {}/{} (peak {}, {} mapped total, {} evicted, {} remapped)",
+            self.mapped, self.n_pes, self.peak_mapped, self.mapped_total, self.evicted,
+            self.remapped
+        )
+    }
+}
+
+/// Demand-mapping cache of peer segment mappings (process mode).
 pub struct RemoteTable {
-    /// `segs[pe]` is `None` for my own rank (the local heap owns that
-    /// mapping) and `Some(mapping)` for every peer.
-    segs: Vec<Option<PosixShmSegment>>,
-    /// Resolved base addresses, one per PE, including my own.
-    bases: Vec<SendPtr>,
+    my_pe: usize,
+    n_pes: usize,
+    seg_len: usize,
+    opts: TableOpts,
+    source: PeerSource,
+    /// `bases[pe]` is null until PE `pe`'s segment is mapped; then the base
+    /// address of that mapping in this address space. The lock-free fast
+    /// path of [`RemoteTable::base_of`].
+    bases: Vec<AtomicPtr<u8>>,
+    /// Per-PE once-lock for the map/unmap slow path.
+    slots: Vec<Mutex<Slot>>,
+    /// Last-touch stamps (LRU clock ticks; only maintained under a cap).
+    stamps: Vec<AtomicU64>,
+    /// Monotonic touch clock feeding `stamps`.
+    clock: AtomicU64,
+    /// Poison flag: raised by [`RemoteTable::clear`], checked by the slow
+    /// path so post-clear resolution fails by name instead of returning a
+    /// dangling pointer.
+    cleared: AtomicBool,
+    /// Currently mapped *peer* segments (excludes my own rank).
+    peers_mapped: AtomicUsize,
+    peak_mapped: AtomicUsize,
+    mapped_total: AtomicU64,
+    evicted_n: AtomicU64,
+    remapped_n: AtomicU64,
 }
 
 impl RemoteTable {
-    /// Map every peer's heap segment. `my_base` is the local heap's base;
-    /// `seg_len` must match the common segment layout. Retries while peers
-    /// are still starting up (the paper's "wait a little bit and try again").
+    /// Demand-mapping table over named POSIX segments: peers are reached by
+    /// rebuilding `heap_segment_name(job_id, pe)`. Nothing is mapped yet
+    /// except my own heap (`my_base`).
+    pub fn new_posix(
+        job_id: u64,
+        my_pe: usize,
+        n_pes: usize,
+        my_base: *mut u8,
+        seg_len: usize,
+        opts: TableOpts,
+    ) -> Result<Self> {
+        Self::with_source(PeerSource::Posix { job_id }, my_pe, n_pes, my_base, seg_len, opts)
+    }
+
+    /// Demand-mapping table over launcher-inherited memfds: `fds[pe]` is
+    /// the backing fd of PE `pe`'s heap (world size = `fds.len()`). The
+    /// fds are borrowed, not owned — the fd-table entries must outlive the
+    /// table (they do: they are inherited process state).
+    pub fn with_memfds(
+        fds: Vec<RawFd>,
+        my_pe: usize,
+        my_base: *mut u8,
+        seg_len: usize,
+        opts: TableOpts,
+    ) -> Result<Self> {
+        let n_pes = fds.len();
+        Self::with_source(PeerSource::Memfd { fds }, my_pe, n_pes, my_base, seg_len, opts)
+    }
+
+    fn with_source(
+        source: PeerSource,
+        my_pe: usize,
+        n_pes: usize,
+        my_base: *mut u8,
+        seg_len: usize,
+        opts: TableOpts,
+    ) -> Result<Self> {
+        if n_pes == 0 {
+            bail!("remote-heap table needs at least one PE");
+        }
+        if my_pe >= n_pes {
+            bail!("rank {my_pe} out of range for {n_pes} PEs");
+        }
+        if my_base.is_null() {
+            bail!("my_base must be the local heap's (non-null) base");
+        }
+        let table = RemoteTable {
+            my_pe,
+            n_pes,
+            seg_len,
+            opts,
+            source,
+            bases: (0..n_pes).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+            slots: (0..n_pes)
+                .map(|_| {
+                    Mutex::new(Slot {
+                        seg: None,
+                        evicted: false,
+                    })
+                })
+                .collect(),
+            stamps: (0..n_pes).map(|_| AtomicU64::new(0)).collect(),
+            clock: AtomicU64::new(0),
+            cleared: AtomicBool::new(false),
+            peers_mapped: AtomicUsize::new(0),
+            peak_mapped: AtomicUsize::new(1),
+            mapped_total: AtomicU64::new(0),
+            evicted_n: AtomicU64::new(0),
+            remapped_n: AtomicU64::new(0),
+        };
+        // My own heap is resolvable from the start (the local SymHeap owns
+        // the mapping; the table never evicts it).
+        table.bases[my_pe].store(my_base, Ordering::Release);
+        Ok(table)
+    }
+
+    /// Eager-compat constructor: build a POSIX table and map every peer up
+    /// front under one shared `timeout`. Kept for callers that want the
+    /// paper's original start-up shape (and for the seed tests).
     pub fn build(
         job_id: u64,
         my_pe: usize,
@@ -43,49 +261,276 @@ impl RemoteTable {
         seg_len: usize,
         timeout: Duration,
     ) -> Result<Self> {
-        let mut segs = Vec::with_capacity(n_pes);
-        let mut bases = Vec::with_capacity(n_pes);
-        for pe in 0..n_pes {
-            if pe == my_pe {
-                segs.push(None);
-                bases.push(SendPtr(my_base));
-            } else {
-                let name = heap_segment_name(job_id, pe);
-                let seg = PosixShmSegment::open_existing(&name, seg_len, timeout)?;
-                bases.push(SendPtr(seg.base()));
-                segs.push(Some(seg));
-            }
-        }
-        Ok(Self { segs, bases })
+        let table = Self::new_posix(
+            job_id,
+            my_pe,
+            n_pes,
+            my_base,
+            seg_len,
+            TableOpts {
+                timeout,
+                ..TableOpts::default()
+            },
+        )?;
+        table.prefault_all()?;
+        Ok(table)
     }
 
-    /// Base address of PE `pe`'s heap in this address space (O(1) — the
-    /// cached-table lookup of §4.1.1).
+    /// Base address of PE `pe`'s heap in this address space, mapping the
+    /// segment on first access. Mapped peers cost one `Acquire` load (the
+    /// cached-table lookup of §4.1.1); cold peers take the slow path.
+    ///
+    /// # Panics
+    /// On resolution failure — peer never appeared within the deadline, or
+    /// the table was [`RemoteTable::clear`]ed. The data path (`Ctx`) has no
+    /// error channel on loads/stores; use [`RemoteTable::try_base_of`]
+    /// where an error is handleable.
     #[inline]
     pub fn base_of(&self, pe: usize) -> *mut u8 {
-        self.bases[pe].0
+        match self.try_base_of(pe) {
+            Ok(p) => p,
+            Err(e) => panic!("posh remote-heap table: cannot resolve PE {pe}'s heap: {e:#}"),
+        }
     }
 
-    /// All bases (used to build the world's flat view).
-    pub fn bases(&self) -> Vec<SendPtr> {
-        self.bases.clone()
+    /// Fallible twin of [`RemoteTable::base_of`].
+    #[inline]
+    pub fn try_base_of(&self, pe: usize) -> Result<*mut u8> {
+        let p = self.bases[pe].load(Ordering::Acquire);
+        if !p.is_null() {
+            self.touch(pe);
+            return Ok(p);
+        }
+        self.map_slow(pe, self.opts.timeout)
+    }
+
+    /// Record an LRU touch (no-op without a cap, keeping the fast path
+    /// store-free in the default configuration).
+    #[inline]
+    fn touch(&self, pe: usize) {
+        if self.opts.max_mapped.is_some() {
+            let t = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+            self.stamps[pe].store(t, Ordering::Relaxed);
+        }
+    }
+
+    /// Map a cold peer under its slot lock. `budget` bounds how long the
+    /// POSIX open retries (the paper's "wait a little bit and try again");
+    /// memfd opens are non-blocking, so any failure there is immediate.
+    fn map_slow(&self, pe: usize, budget: Duration) -> Result<*mut u8> {
+        if pe >= self.n_pes {
+            bail!("PE {pe} out of range for {} PEs", self.n_pes);
+        }
+        if self.cleared.load(Ordering::Acquire) {
+            bail!(
+                "remote-heap table used after clear(): PE {pe}'s base was \
+                 invalidated and will not be remapped"
+            );
+        }
+        let mut slot = self.slots[pe].lock().expect("remote-table slot lock poisoned");
+        // Double-check: a racer may have mapped it while we waited for the
+        // lock — both threads then see the one mapping.
+        let cur = self.bases[pe].load(Ordering::Acquire);
+        if !cur.is_null() {
+            self.touch(pe);
+            return Ok(cur);
+        }
+        // Make room under the LRU cap (best effort: contended victims are
+        // skipped rather than waited on).
+        if let Some(cap) = self.opts.max_mapped {
+            let cap = cap.max(1);
+            while self.peers_mapped.load(Ordering::Relaxed) >= cap {
+                if !self.evict_coldest(pe) {
+                    break;
+                }
+            }
+        }
+        let seg = self.open_peer(pe, budget)?;
+        let base = seg.base();
+        if self.opts.wait_ready {
+            // Wait *before* publishing: nobody may see a base whose heap
+            // header is still being initialised by the peer.
+            self.wait_heap_ready(pe, base)?;
+        }
+        let was_evicted = slot.evicted;
+        slot.seg = Some(seg);
+        self.bases[pe].store(base, Ordering::Release);
+        let peers = self.peers_mapped.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_mapped.fetch_max(peers + 1, Ordering::Relaxed);
+        self.mapped_total.fetch_add(1, Ordering::Relaxed);
+        if was_evicted {
+            self.remapped_n.fetch_add(1, Ordering::Relaxed);
+        }
+        self.touch(pe);
+        Ok(base)
+    }
+
+    /// Open PE `pe`'s segment through the table's source.
+    fn open_peer(&self, pe: usize, budget: Duration) -> Result<BoxedSegment> {
+        match &self.source {
+            PeerSource::Posix { job_id } => {
+                let name = heap_segment_name(*job_id, pe);
+                let seg = PosixShmSegment::open_existing(&name, self.seg_len, budget)?;
+                Ok(Box::new(seg))
+            }
+            PeerSource::Memfd { fds } => {
+                let seg = MemfdSegment::map_existing(fds[pe], self.seg_len)?;
+                Ok(Box::new(seg))
+            }
+        }
+    }
+
+    /// Spin until PE `pe`'s heap header raises its `ready` flag.
+    fn wait_heap_ready(&self, pe: usize, base: *mut u8) -> Result<()> {
+        // SAFETY: `base` is a live mapping of at least a header-sized
+        // segment (open_peer validated the length).
+        let hdr = unsafe { crate::symheap::layout::HeapHeader::at(base) };
+        let deadline = Instant::now() + self.opts.timeout;
+        while hdr.ready.load(Ordering::Acquire) == 0 {
+            if Instant::now() > deadline {
+                bail!("PE {pe} heap header not ready within {:?}", self.opts.timeout);
+            }
+            std::hint::spin_loop();
+            std::thread::yield_now();
+        }
+        Ok(())
+    }
+
+    /// Unmap the least-recently-touched mapped peer (never my own rank,
+    /// never `exclude`). Returns `false` when there is no evictable victim
+    /// — all candidates unmapped, or the coldest one's slot is contended.
+    fn evict_coldest(&self, exclude: usize) -> bool {
+        let mut best: Option<(usize, u64)> = None;
+        for pe in 0..self.n_pes {
+            if pe == self.my_pe || pe == exclude {
+                continue;
+            }
+            if self.bases[pe].load(Ordering::Acquire).is_null() {
+                continue;
+            }
+            let s = self.stamps[pe].load(Ordering::Relaxed);
+            let colder = match best {
+                None => true,
+                Some((_, bs)) => s < bs,
+            };
+            if colder {
+                best = Some((pe, s));
+            }
+        }
+        let Some((victim, _)) = best else {
+            return false;
+        };
+        // try_lock, not lock: the victim's slot may be held by a thread
+        // mapping it right now; skipping keeps the eviction path
+        // deadlock-free (we already hold `exclude`'s slot lock).
+        let Ok(mut vslot) = self.slots[victim].try_lock() else {
+            return false;
+        };
+        if self.bases[victim].load(Ordering::Acquire).is_null() {
+            return false;
+        }
+        // Unpublish before unmapping so no new fast-path reader acquires
+        // the dying address.
+        self.bases[victim].store(std::ptr::null_mut(), Ordering::Release);
+        vslot.seg = None; // munmap
+        vslot.evicted = true;
+        self.peers_mapped.fetch_sub(1, Ordering::Relaxed);
+        self.evicted_n.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Map every peer now, under **one shared deadline** (`opts.timeout`
+    /// total, not per peer — a dead world fails in one timeout, not n).
+    /// The error names every rank that never appeared.
+    pub fn prefault_all(&self) -> Result<()> {
+        if self.cleared.load(Ordering::Acquire) {
+            bail!("remote-heap table used after clear(): cannot prefault");
+        }
+        let deadline = Instant::now() + self.opts.timeout;
+        let mut pending: Vec<usize> = (0..self.n_pes)
+            .filter(|&pe| self.bases[pe].load(Ordering::Acquire).is_null())
+            .collect();
+        let mut last_err = None;
+        while !pending.is_empty() {
+            let mut still = Vec::new();
+            for &pe in &pending {
+                let now = Instant::now();
+                let budget = if now >= deadline {
+                    // Past the deadline each peer gets exactly one
+                    // non-blocking attempt before we give up on it.
+                    Duration::ZERO
+                } else {
+                    (deadline - now).min(PREFAULT_SLICE)
+                };
+                match self.map_slow(pe, budget) {
+                    Ok(_) => {}
+                    Err(e) => {
+                        // memfd opens never block: an error there is a hard
+                        // fault (bad/closed fd), not a peer still starting.
+                        if matches!(self.source, PeerSource::Memfd { .. }) {
+                            return Err(e);
+                        }
+                        last_err = Some(e);
+                        still.push(pe);
+                    }
+                }
+            }
+            if Instant::now() >= deadline && !still.is_empty() {
+                let detail = match last_err {
+                    Some(e) => format!(" (last error: {e:#})"),
+                    None => String::new(),
+                };
+                bail!(
+                    "PEs {still:?} did not appear within the shared attach \
+                     deadline of {:?}{detail}",
+                    self.opts.timeout
+                );
+            }
+            pending = still;
+        }
+        Ok(())
     }
 
     /// Number of PEs covered.
     pub fn len(&self) -> usize {
-        self.bases.len()
+        self.n_pes
     }
 
     /// True if the table is empty.
     pub fn is_empty(&self) -> bool {
-        self.bases.is_empty()
+        self.n_pes == 0
     }
 
-    /// Drop all remote mappings explicitly (also happens on drop).
-    pub fn clear(&mut self) {
-        for s in self.segs.iter_mut() {
-            *s = None;
+    /// Mapping-activity counters (see [`RemoteTableStats`]).
+    pub fn stats(&self) -> RemoteTableStats {
+        let cleared = self.cleared.load(Ordering::Acquire);
+        let peers = self.peers_mapped.load(Ordering::Relaxed);
+        RemoteTableStats {
+            n_pes: self.n_pes,
+            mapped: if cleared { 0 } else { peers + 1 },
+            peak_mapped: self.peak_mapped.load(Ordering::Relaxed),
+            mapped_total: self.mapped_total.load(Ordering::Relaxed),
+            evicted: self.evicted_n.load(Ordering::Relaxed),
+            remapped: self.remapped_n.load(Ordering::Relaxed),
         }
+    }
+
+    /// Drop all remote mappings and **poison the table**: every base
+    /// (including my own rank's) is invalidated, and any later
+    /// [`RemoteTable::base_of`] fails with a named "used after clear()"
+    /// error instead of returning a dangling pointer.
+    pub fn clear(&mut self) {
+        // Raise the poison flag first so concurrent slow paths that have
+        // not yet mapped bail instead of racing the teardown.
+        self.cleared.store(true, Ordering::Release);
+        for base in &self.bases {
+            base.store(std::ptr::null_mut(), Ordering::Release);
+        }
+        for slot in &self.slots {
+            let mut s = slot.lock().expect("remote-table slot lock poisoned");
+            s.seg = None;
+        }
+        self.peers_mapped.store(0, Ordering::Relaxed);
     }
 }
 
@@ -114,6 +559,8 @@ mod tests {
             assert_eq!(*table.base_of(1).add(100), 77);
         }
         assert_ne!(table.base_of(1), seg1.base());
+        // Eager build maps the world up front.
+        assert_eq!(table.stats().mapped, 2);
     }
 
     #[test]
@@ -123,5 +570,83 @@ mod tests {
         let seg0 = PosixShmSegment::create(&heap_segment_name(job, 0), len).unwrap();
         let r = RemoteTable::build(job, 0, 3, seg0.base(), len, Duration::from_millis(50));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn build_deadline_is_shared_and_names_missing_pes() {
+        // 5 missing peers, 100 ms timeout: the old per-peer retry would
+        // take ≥500 ms; the shared deadline must stay close to one timeout
+        // and the error must say *which* ranks never appeared.
+        let job = fresh_job_id();
+        let len = 16 << 10;
+        let seg0 = PosixShmSegment::create(&heap_segment_name(job, 0), len).unwrap();
+        let t0 = Instant::now();
+        let r = RemoteTable::build(job, 0, 6, seg0.base(), len, Duration::from_millis(100));
+        let elapsed = t0.elapsed();
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(
+            elapsed < Duration::from_millis(400),
+            "shared deadline regressed to per-peer stacking: {elapsed:?}"
+        );
+        for pe in 1..6 {
+            assert!(msg.contains(&pe.to_string()), "error must name PE {pe}: {msg}");
+        }
+    }
+
+    #[test]
+    fn demand_table_maps_lazily() {
+        let job = fresh_job_id();
+        let len = 16 << 10;
+        let seg0 = PosixShmSegment::create(&heap_segment_name(job, 0), len).unwrap();
+        let seg1 = PosixShmSegment::create(&heap_segment_name(job, 1), len).unwrap();
+        let seg2 = PosixShmSegment::create(&heap_segment_name(job, 2), len).unwrap();
+        unsafe {
+            *seg2.base().add(8) = 0x5A;
+        }
+        let table = RemoteTable::new_posix(
+            job,
+            0,
+            3,
+            seg0.base(),
+            len,
+            TableOpts {
+                timeout: Duration::from_millis(200),
+                ..TableOpts::default()
+            },
+        )
+        .unwrap();
+        // Nothing mapped yet but my own heap.
+        assert_eq!(table.stats().mapped, 1);
+        assert_eq!(table.stats().mapped_total, 0);
+        // First touch maps exactly that peer.
+        unsafe {
+            assert_eq!(*table.base_of(2).add(8), 0x5A);
+        }
+        assert_eq!(table.stats().mapped, 2);
+        assert_eq!(table.stats().mapped_total, 1);
+        // Second touch is the cached fast path (no new mapping).
+        let _ = table.base_of(2);
+        assert_eq!(table.stats().mapped_total, 1);
+        drop(seg1);
+    }
+
+    #[test]
+    fn clear_poisons_bases() {
+        let job = fresh_job_id();
+        let len = 16 << 10;
+        let seg0 = PosixShmSegment::create(&heap_segment_name(job, 0), len).unwrap();
+        let seg1 = PosixShmSegment::create(&heap_segment_name(job, 1), len).unwrap();
+        let mut table =
+            RemoteTable::build(job, 0, 2, seg0.base(), len, Duration::from_millis(200)).unwrap();
+        assert!(!table.base_of(1).is_null());
+        table.clear();
+        assert_eq!(table.stats().mapped, 0);
+        // Post-clear resolution must fail by name — not return the old
+        // (now dangling) pointer.
+        let err = format!("{:#}", table.try_base_of(1).unwrap_err());
+        assert!(err.contains("after clear"), "unexpected error: {err}");
+        let self_err = format!("{:#}", table.try_base_of(0).unwrap_err());
+        assert!(self_err.contains("after clear"), "self base must be poisoned too");
+        drop(seg1);
     }
 }

@@ -2,11 +2,13 @@
 
 use super::config::{Mode, PoshConfig};
 use super::ctx::Ctx;
-use super::remote_table::{RemoteTable, SendPtr};
+use super::remote_table::{RemoteTable, SendPtr, TableOpts};
 use crate::collectives::tuning::{self, Tuning, TuningSource};
 use crate::model::CostModel;
-use crate::shm::naming::{fresh_job_id, heap_segment_name};
+use crate::shm::memfd::{self, MemfdSegment};
+use crate::shm::naming::{fresh_job_id, heap_segment_name, memfd_debug_name};
 use crate::shm::posix::PosixShmSegment;
+use crate::shm::ShmEngine;
 use crate::symheap::layout::Layout;
 use crate::symheap::SymHeap;
 use crate::Result;
@@ -28,8 +30,8 @@ pub struct WorldShared {
     pub(crate) bases: Vec<SendPtr>,
     /// Process mode: which PE this process is.
     pub(crate) my_pe_fixed: Option<usize>,
-    /// Keeps remote mappings alive in process mode.
-    #[allow(dead_code)]
+    /// Process mode: the demand-mapping remote-heap table every
+    /// `Ctx::base_of` routes through (`None` in thread mode).
     pub(crate) remote: Option<RemoteTable>,
     /// Raised when any PE panics (thread mode); spin loops poll it so one
     /// failing PE aborts the job instead of hanging the barrier.
@@ -92,9 +94,10 @@ impl World {
         })
     }
 
-    /// Process-mode world: create this rank's POSIX segment, then map every
-    /// peer's (retrying while they start up — §4.1.1), then wait for their
-    /// headers to become ready.
+    /// Process-mode world: create (or map, under the memfd engine) this
+    /// rank's segment, then build the demand-mapping remote-heap table —
+    /// peers' segments map on first access (§4.1.1's cache, without the
+    /// eager O(n) start-up cost; `POSH_EAGER_MAP=1` restores it).
     pub fn attach_process(
         job_id: u64,
         rank: usize,
@@ -108,32 +111,81 @@ impl World {
         if let Some(imp) = cfg.copy_impl {
             crate::mem::copy::set_global_impl(imp);
         }
-        let seg = PosixShmSegment::create(&heap_segment_name(job_id, rank), layout.total)?;
-        let heap = SymHeap::new(Box::new(seg), layout, rank)?;
         let timeout = Duration::from_secs(
             std::env::var("POSH_ATTACH_TIMEOUT_S")
                 .ok()
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(30),
         );
-        let table = RemoteTable::build(job_id, rank, n_pes, heap.base(), layout.total, timeout)?;
-        // Wait for each peer's header to be initialised (ready flag).
-        for pe in 0..n_pes {
-            let hdr = unsafe { crate::symheap::layout::HeapHeader::at(table.base_of(pe)) };
-            let deadline = std::time::Instant::now() + timeout;
-            while hdr.ready.load(Ordering::Acquire) == 0 {
-                if std::time::Instant::now() > deadline {
-                    bail!("PE {pe} header not ready within {timeout:?}");
-                }
-                std::hint::spin_loop();
-                std::thread::yield_now();
+        let opts = TableOpts {
+            timeout,
+            max_mapped: cfg.max_mapped_segs,
+            // Demand-mapping a peer must also wait out its header init:
+            // the eager start-up ready-loop this replaces did that for the
+            // whole world at once.
+            wait_ready: true,
+        };
+        let (heap, table) = match ShmEngine::resolve() {
+            ShmEngine::Posix => {
+                let seg =
+                    PosixShmSegment::create(&heap_segment_name(job_id, rank), layout.total)?;
+                let heap = SymHeap::new(Box::new(seg), layout, rank)?;
+                let table = RemoteTable::new_posix(
+                    job_id,
+                    rank,
+                    n_pes,
+                    heap.base(),
+                    layout.total,
+                    opts,
+                )?;
+                (heap, table)
             }
+            ShmEngine::Memfd => match memfd::handoff_fds_from_env()? {
+                Some(fds) => {
+                    if fds.len() != n_pes {
+                        bail!(
+                            "{} carries {} fds but the world has {n_pes} PEs \
+                             (launcher/PE world-size mismatch)",
+                            memfd::SEGFDS_ENV,
+                            fds.len()
+                        );
+                    }
+                    let seg = MemfdSegment::map_existing(fds[rank], layout.total)
+                        .with_context(|| format!("mapping my own heap (rank {rank})"))?;
+                    let heap = SymHeap::new(Box::new(seg), layout, rank)?;
+                    let table =
+                        RemoteTable::with_memfds(fds, rank, heap.base(), layout.total, opts)?;
+                    (heap, table)
+                }
+                // A 1-PE world has no peers to hand off: self-host the memfd.
+                None if n_pes == 1 => {
+                    let seg = MemfdSegment::create(&memfd_debug_name(job_id, rank), layout.total)?;
+                    let fd = seg.fd();
+                    let heap = SymHeap::new(Box::new(seg), layout, rank)?;
+                    let table =
+                        RemoteTable::with_memfds(vec![fd], rank, heap.base(), layout.total, opts)?;
+                    (heap, table)
+                }
+                None => bail!(
+                    "memfd shm engine needs the launcher's fd handoff ({}) for a \
+                     {n_pes}-PE world — run under oshrun, or set \
+                     POSH_SHM_ENGINE=posix on a machine with a writable /dev/shm",
+                    memfd::SEGFDS_ENV
+                ),
+            },
+        };
+        if cfg.eager_map {
+            // The paper's original start-up shape: map everyone now, under
+            // one shared deadline.
+            table.prefault_all()?;
         }
         // Agree on one tuning model job-wide: rank 0 resolves (config /
         // env / calibration) and publishes α, β, R² through its header;
         // everyone else adopts the published model, so the adaptive engine
         // selects identically on every PE — a per-PE calibration could
         // straddle a crossover threshold and deadlock mixed protocols.
+        // (For rank != 0 this is the table's first demand map: it blocks
+        // until PE 0's segment exists and its header is ready.)
         let hdr0 = unsafe { crate::symheap::layout::HeapHeader::at(table.base_of(0)) };
         let tuning = if rank == 0 {
             let t = resolve_tuning(&cfg);
@@ -184,7 +236,6 @@ impl World {
                 Tuning::new_piecewise(model, pw, source)
             }
         };
-        let bases = table.bases();
         Ok(World {
             shared: Arc::new(WorldShared {
                 cfg,
@@ -193,7 +244,9 @@ impl World {
                 mode: Mode::Processes,
                 layout,
                 local_heaps: vec![heap],
-                bases,
+                // Process mode resolves bases through the demand table;
+                // the flat vector is thread mode's path.
+                bases: Vec::new(),
                 my_pe_fixed: Some(rank),
                 remote: Some(table),
                 abort: AtomicBool::new(false),

@@ -6,8 +6,17 @@
 //! piped to the master and re-emitted line-by-line with a rank prefix
 //! (`[PE k] …`), each stream on its own forwarder thread so interleaving is
 //! line-granular, never byte-granular.
+//!
+//! Under the memfd shm engine the gateway also plays *segment broker*: it
+//! pre-creates one inheritable memfd per rank ([`SegmentHandoff`]) and
+//! publishes the fd numbers to the children, replacing the §4.7 name-based
+//! contact information that `/dev/shm`-less sandboxes cannot provide.
 
+use crate::shm::memfd::{create_handoff_fd, encode_fd_list, SEGFDS_ENV};
+use crate::shm::naming::memfd_debug_name;
+use crate::Result;
 use std::io::{BufRead, BufReader, Read, Write};
+use std::os::unix::io::RawFd;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 /// One forwarded line.
@@ -82,6 +91,61 @@ impl Gateway {
     }
 }
 
+/// The gateway-side half of the memfd fd handoff: one pre-created,
+/// pre-sized, inheritable (non-`CLOEXEC`) memfd per rank. Children inherit
+/// the fd-table entries across `fork`/`exec` and find the numbers in
+/// [`SEGFDS_ENV`]; the parent's copies close when this drops (each child
+/// owns independent entries, so dropping after spawn is safe).
+pub struct SegmentHandoff {
+    fds: Vec<RawFd>,
+}
+
+impl SegmentHandoff {
+    /// Create and size one heap memfd per rank. `seg_len` must equal the
+    /// children's `Layout::compute(..).total` — a PE validates the size
+    /// when mapping and fails loudly on mismatch.
+    pub fn create(job_id: u64, n_pes: usize, seg_len: usize) -> Result<SegmentHandoff> {
+        let mut fds = Vec::with_capacity(n_pes);
+        for rank in 0..n_pes {
+            match create_handoff_fd(&memfd_debug_name(job_id, rank), seg_len) {
+                Ok(fd) => fds.push(fd),
+                Err(e) => {
+                    for fd in fds {
+                        // SAFETY: fds we just created; best-effort cleanup.
+                        unsafe {
+                            libc::close(fd);
+                        }
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(SegmentHandoff { fds })
+    }
+
+    /// The `(key, value)` pair to put in every child's environment.
+    pub fn env(&self) -> (String, String) {
+        (SEGFDS_ENV.to_string(), encode_fd_list(&self.fds))
+    }
+
+    /// The rank-indexed fds (parent-side numbers == child-side numbers).
+    pub fn fds(&self) -> &[RawFd] {
+        &self.fds
+    }
+}
+
+impl Drop for SegmentHandoff {
+    fn drop(&mut self) {
+        for &fd in &self.fds {
+            // SAFETY: closing our own fd-table entries; children hold
+            // independent inherited copies.
+            unsafe {
+                libc::close(fd);
+            }
+        }
+    }
+}
+
 /// Fan a signal out to every child (the §4.7 signal-forwarding contract:
 /// "if the user sends a signal to the gateway process, this signal is sent
 /// to all the processes of the parallel application").
@@ -112,6 +176,26 @@ mod tests {
         assert!(text.contains("[PE 0] beta"));
         assert!(text.contains("[PE 1] gamma"));
         assert!(text.contains("[PE 1!] oops"));
+    }
+
+    #[test]
+    fn segment_handoff_creates_sized_inheritable_fds() {
+        use crate::shm::Segment as _;
+        if !crate::shm::memfd::memfd_supported() {
+            eprintln!("skipping: memfd_create unavailable");
+            return;
+        }
+        let h = SegmentHandoff::create(0xbeef, 3, 8192).unwrap();
+        assert_eq!(h.fds().len(), 3);
+        let (k, v) = h.env();
+        assert_eq!(k, SEGFDS_ENV);
+        assert_eq!(v.split(',').count(), 3);
+        // Each brokered fd maps at full size and is zeroed — exactly what a
+        // PE does with its own rank's entry.
+        let seg = crate::shm::memfd::MemfdSegment::map_existing(h.fds()[1], 8192).unwrap();
+        unsafe {
+            assert_eq!(*seg.base(), 0);
+        }
     }
 
     #[test]

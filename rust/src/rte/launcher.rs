@@ -1,6 +1,16 @@
 //! Process spawning and contact information (§4.7).
+//!
+//! Contact information is engine-dependent: under the POSIX engine a PE
+//! reaches any peer by rebuilding the segment name from `(job id, rank)`;
+//! under the memfd engine (auto-selected when `/dev/shm` is unwritable)
+//! the launcher pre-creates every heap segment and brokers the fds to the
+//! children (see [`crate::rte::gateway::SegmentHandoff`]).
 
+use super::gateway::SegmentHandoff;
+use crate::pe::config::parse_size;
 use crate::shm::naming::fresh_job_id;
+use crate::shm::ShmEngine;
+use crate::symheap::layout::Layout;
 use crate::Result;
 use anyhow::Context as _;
 use std::os::unix::process::CommandExt as _;
@@ -62,7 +72,26 @@ impl Launcher {
     /// threads is created: the workers thread group. Then each thread forks
     /// a process … the master thread then yields its slice of time and
     /// waits … eventually, the threads are joined."
+    ///
+    /// When the memfd engine is in play (forced via `POSH_SHM_ENGINE` in
+    /// the spec's env, or auto-selected because `/dev/shm` is unwritable),
+    /// the heap segments are created *here* and their fds brokered to every
+    /// child before any PE starts.
     pub fn spawn_all(&self) -> Result<Vec<PeProc>> {
+        let mut extra_env: Vec<(String, String)> = Vec::new();
+        // Keep the handoff (and so the parent-side fds) alive until every
+        // child has been spawned; children then own inherited copies.
+        let handoff = if self.resolve_engine() == ShmEngine::Memfd {
+            let h = SegmentHandoff::create(self.job_id, self.spec.n_pes, self.child_seg_len())?;
+            // Pin the children to the engine the fds were brokered for —
+            // a child must not re-probe /dev/shm and decide differently.
+            extra_env.push(("POSH_SHM_ENGINE".to_string(), "memfd".to_string()));
+            let (k, v) = h.env();
+            extra_env.push((k, v));
+            Some(h)
+        } else {
+            None
+        };
         let results: Arc<Mutex<Vec<Option<Result<PeProc>>>>> =
             Arc::new(Mutex::new((0..self.spec.n_pes).map(|_| None).collect()));
         std::thread::scope(|s| {
@@ -71,14 +100,16 @@ impl Launcher {
                 let results = Arc::clone(&results);
                 let spec = &self.spec;
                 let job_id = self.job_id;
+                let extra_env = &extra_env;
                 s.spawn(move || {
-                    let r = spawn_one(spec, job_id, rank);
+                    let r = spawn_one(spec, extra_env, job_id, rank);
                     results.lock().unwrap()[rank] = Some(r);
                 });
             }
             // Master yields while workers fork (sched_yield in the paper).
             std::thread::yield_now();
         }); // threads joined here
+        drop(handoff); // all children spawned: parent fd copies can close
         let collected = Arc::try_unwrap(results)
             .map_err(|_| anyhow::anyhow!("spawner results still shared"))?
             .into_inner()
@@ -91,9 +122,50 @@ impl Launcher {
         }
         Ok(pes)
     }
+
+    /// The shm engine this launch will use: an explicit `POSH_SHM_ENGINE`
+    /// in the job's env wins; otherwise the process-wide auto-selection
+    /// (which probes `/dev/shm`).
+    fn resolve_engine(&self) -> ShmEngine {
+        for (k, v) in &self.spec.env {
+            if k == "POSH_SHM_ENGINE" {
+                if v.eq_ignore_ascii_case("memfd") {
+                    return ShmEngine::Memfd;
+                }
+                if v.eq_ignore_ascii_case("posix") {
+                    return ShmEngine::Posix;
+                }
+            }
+        }
+        ShmEngine::resolve()
+    }
+
+    /// The segment length each child will compute — replayed here from the
+    /// same inputs the child sees (inherited env, then the spec's env
+    /// overrides) so the brokered memfds are sized exactly right.
+    fn child_seg_len(&self) -> usize {
+        let mut cfg = crate::pe::PoshConfig::default().from_env();
+        for (k, v) in &self.spec.env {
+            if k == "POSH_HEAP_SIZE" {
+                if let Some(n) = parse_size(v) {
+                    cfg.heap_size = n;
+                }
+            } else if k == "POSH_STATICS_SIZE" {
+                if let Some(n) = parse_size(v) {
+                    cfg.statics_size = n;
+                }
+            }
+        }
+        Layout::compute(cfg.heap_size, cfg.statics_size).total
+    }
 }
 
-fn spawn_one(spec: &JobSpec, job_id: u64, rank: usize) -> Result<PeProc> {
+fn spawn_one(
+    spec: &JobSpec,
+    extra_env: &[(String, String)],
+    job_id: u64,
+    rank: usize,
+) -> Result<PeProc> {
     let mut cmd = Command::new(&spec.program);
     cmd.args(&spec.args)
         // Contact information (§4.7): job id + rank + world size determine
@@ -113,6 +185,11 @@ fn spawn_one(spec: &JobSpec, job_id: u64, rank: usize) -> Result<PeProc> {
     cmd.process_group(0);
     if spec.debug_wait {
         cmd.env("POSH_DEBUG_WAIT", "1");
+    }
+    // Launcher-derived env (shm engine pin + fd handoff) first, so an
+    // explicit pair in the user's spec still wins.
+    for (k, v) in extra_env {
+        cmd.env(k, v);
     }
     for (k, v) in &spec.env {
         cmd.env(k, v);
@@ -169,6 +246,33 @@ mod tests {
         seen.sort();
         assert_eq!(seen[0], "rank=0 npes=3");
         assert_eq!(seen[2], "rank=2 npes=3");
+    }
+
+    #[test]
+    fn memfd_handoff_env_reaches_children() {
+        if !crate::shm::memfd::memfd_supported() {
+            eprintln!("skipping: memfd_create unavailable");
+            return;
+        }
+        // Force the memfd engine: the launcher must broker one fd per rank
+        // and the children must see the handoff variable (the fds
+        // themselves are exercised end-to-end by tests/proc_mode.rs).
+        let mut spec = JobSpec::new(2, "/bin/sh");
+        spec.args = vec![
+            "-c".into(),
+            "test -n \"$POSH_SEGFDS\" && echo engine=$POSH_SHM_ENGINE".into(),
+        ];
+        spec.env.push(("POSH_SHM_ENGINE".into(), "memfd".into()));
+        spec.env.push(("POSH_HEAP_SIZE".into(), "2M".into()));
+        spec.env.push(("POSH_STATICS_SIZE".into(), "64k".into()));
+        let l = Launcher::new(spec);
+        let pes = l.spawn_all().unwrap();
+        for pe in pes {
+            let out = pe.child.wait_with_output().unwrap();
+            assert!(out.status.success(), "child did not see the fd handoff");
+            let text = String::from_utf8_lossy(&out.stdout);
+            assert!(text.contains("engine=memfd"), "{text}");
+        }
     }
 
     #[test]

@@ -1,0 +1,349 @@
+//! `memfd_create`-backed segments — the shm-less fallback engine.
+//!
+//! POSIX `shm_open` segments (the paper's substrate) need a writable
+//! `/dev/shm`. Hardened sandboxes and some CI runners mount it read-only or
+//! not at all, which used to make process mode silently impossible. A memfd
+//! is an anonymous tmpfs file that lives entirely in the fd table — no
+//! filesystem name, no `/dev/shm` — so it works anywhere the kernel is
+//! ≥ 3.17.
+//!
+//! The catch is the paper's §4.7 "contact information" mechanism: a memfd
+//! has no *name* a peer can rebuild from a rank, so the segment cannot be
+//! opened by a stranger. Instead the RTE gateway (the `oshrun` launcher,
+//! which is every PE's parent) acts as the broker: it creates one
+//! *inheritable* memfd per rank before spawning, and publishes the fd
+//! numbers through [`SEGFDS_ENV`]. Children inherit the fd table entries
+//! across `fork`/`exec`, so `fds[rank]` is valid in every PE and the
+//! remote-heap table can demand-map any peer by `mmap`ing that fd — same
+//! [`Segment`] trait, same huge-page attempt, no `/dev/shm` anywhere.
+
+use super::{HugePageStatus, Segment};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::ffi::CString;
+use std::os::unix::io::RawFd;
+
+/// Environment variable carrying the comma-separated, rank-indexed memfd
+/// list from the launcher to every PE (e.g. `POSH_SEGFDS=12,13,14`).
+pub const SEGFDS_ENV: &str = "POSH_SEGFDS";
+
+/// `true` if this kernel/sandbox supports `memfd_create` (cached probe).
+pub fn memfd_supported() -> bool {
+    use std::sync::OnceLock;
+    static SUPPORTED: OnceLock<bool> = OnceLock::new();
+    *SUPPORTED.get_or_init(|| {
+        // SAFETY: FFI with a static NUL-terminated name; probe fd is closed
+        // immediately.
+        let fd = unsafe {
+            libc::memfd_create(
+                b"posh.probe\0".as_ptr() as *const libc::c_char,
+                libc::MFD_CLOEXEC,
+            )
+        };
+        if fd >= 0 {
+            // SAFETY: valid fd we just created.
+            unsafe {
+                libc::close(fd);
+            }
+            true
+        } else {
+            false
+        }
+    })
+}
+
+/// Create a bare, *inheritable* (no `CLOEXEC`) memfd of `len` bytes without
+/// mapping it — the launcher-side half of the fd handoff. The caller owns
+/// the fd and must `close` it (children keep their inherited copies).
+pub fn create_handoff_fd(name: &str, len: usize) -> Result<RawFd> {
+    create_fd(name, len, false)
+}
+
+fn create_fd(name: &str, len: usize, cloexec: bool) -> Result<RawFd> {
+    if len == 0 {
+        bail!("segment length must be > 0");
+    }
+    let len = crate::util::align_up(len, super::inproc::page_size());
+    let cname = CString::new(name).context("segment name contains NUL")?;
+    let flags = if cloexec { libc::MFD_CLOEXEC } else { 0 };
+    // SAFETY: FFI with a valid C string.
+    let fd = unsafe { libc::memfd_create(cname.as_ptr(), flags) };
+    if fd < 0 {
+        bail!(
+            "memfd_create({name}) failed: {}",
+            std::io::Error::last_os_error()
+        );
+    }
+    // SAFETY: valid fd.
+    let rc = unsafe { libc::ftruncate(fd, len as libc::off_t) };
+    if rc != 0 {
+        let e = std::io::Error::last_os_error();
+        // SAFETY: valid fd; best-effort cleanup.
+        unsafe {
+            libc::close(fd);
+        }
+        bail!("ftruncate(memfd {name}, {len}) failed: {e}");
+    }
+    Ok(fd)
+}
+
+/// Encode a rank-indexed fd list for [`SEGFDS_ENV`].
+pub fn encode_fd_list(fds: &[RawFd]) -> String {
+    fds.iter().map(|fd| fd.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Decode [`SEGFDS_ENV`] from this process's environment. `Ok(None)` means
+/// no handoff was published (not running under a memfd-brokering launcher);
+/// a present-but-garbled value is an error, never a silent fallback.
+pub fn handoff_fds_from_env() -> Result<Option<Vec<RawFd>>> {
+    let Ok(raw) = std::env::var(SEGFDS_ENV) else {
+        return Ok(None);
+    };
+    let mut fds = Vec::new();
+    for part in raw.split(',') {
+        let fd: RawFd = part
+            .trim()
+            .parse()
+            .with_context(|| format!("{SEGFDS_ENV} entry {part:?} is not an fd number"))?;
+        if fd < 0 {
+            bail!("{SEGFDS_ENV} entry {fd} is negative");
+        }
+        fds.push(fd);
+    }
+    if fds.is_empty() {
+        bail!("{SEGFDS_ENV} is set but empty");
+    }
+    Ok(Some(fds))
+}
+
+/// A shared mapping backed by a memfd. Plays the [`PosixShmSegment`] role
+/// when `/dev/shm` is unavailable: same [`Segment`] trait, same transparent
+/// huge-page attempt, but reachable through an inherited fd instead of a
+/// rebuildable name.
+///
+/// [`PosixShmSegment`]: super::posix::PosixShmSegment
+pub struct MemfdSegment {
+    base: *mut u8,
+    len: usize,
+    name: String,
+    fd: RawFd,
+    /// Creator-owned segments close their fd on drop; handoff views leave
+    /// the inherited fd table entry alone (other tables may still map it).
+    owns_fd: bool,
+    huge: HugePageStatus,
+}
+
+// SAFETY: plain shared bytes; the SHMEM memory model governs access.
+unsafe impl Send for MemfdSegment {}
+unsafe impl Sync for MemfdSegment {}
+
+impl MemfdSegment {
+    /// Create a segment of `len` bytes. The backing memfd is `CLOEXEC` (it
+    /// is not part of any handoff) and is closed when the segment drops.
+    pub fn create(name: &str, len: usize) -> Result<Self> {
+        let fd = create_fd(name, len, true)?;
+        let len = crate::util::align_up(len, super::inproc::page_size());
+        match super::map_shared_fd(fd, len) {
+            Ok((base, huge)) => Ok(Self {
+                base,
+                len,
+                name: name.to_string(),
+                fd,
+                owns_fd: true,
+                huge,
+            }),
+            Err(e) => {
+                // SAFETY: valid fd; best-effort cleanup.
+                unsafe {
+                    libc::close(fd);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// Map an existing memfd (an inherited handoff fd). Validates the fd is
+    /// live and large enough before mapping; does **not** take ownership of
+    /// the fd (the fd table entry outlives this view so peers — and a
+    /// remapping after LRU eviction — can map it again).
+    pub fn map_existing(fd: RawFd, len: usize) -> Result<Self> {
+        let len = crate::util::align_up(len, super::inproc::page_size());
+        // SAFETY: fstat with a valid out-pointer; a bad fd returns -1.
+        let mut st: libc::stat = unsafe { std::mem::zeroed() };
+        let rc = unsafe { libc::fstat(fd, &mut st) };
+        if rc != 0 {
+            bail!(
+                "fstat(segment fd {fd}) failed: {} (stale {SEGFDS_ENV} handoff?)",
+                std::io::Error::last_os_error()
+            );
+        }
+        if (st.st_size as usize) < len {
+            bail!(
+                "segment fd {fd} is {} bytes, expected >= {len} \
+                 (launcher/PE heap-size mismatch)",
+                st.st_size
+            );
+        }
+        let (base, huge) = super::map_shared_fd(fd, len)?;
+        Ok(Self {
+            base,
+            len,
+            name: format!("memfd:fd{fd}"),
+            fd,
+            owns_fd: false,
+            huge,
+        })
+    }
+
+    /// The backing fd (for handoff publication or re-mapping).
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+}
+
+impl Segment for MemfdSegment {
+    fn base(&self) -> *mut u8 {
+        self.base
+    }
+    fn len(&self) -> usize {
+        self.len
+    }
+    fn name(&self) -> Option<&str> {
+        Some(&self.name)
+    }
+    fn huge_pages(&self) -> HugePageStatus {
+        self.huge
+    }
+}
+
+impl Drop for MemfdSegment {
+    fn drop(&mut self) {
+        // SAFETY: we own this mapping (and the fd, when creator).
+        unsafe {
+            libc::munmap(self.base as *mut libc::c_void, self.len);
+            if self.owns_fd {
+                libc::close(self.fd);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_map_write_remap() {
+        if !memfd_supported() {
+            eprintln!("skipping: memfd_create unavailable");
+            return;
+        }
+        let seg = MemfdSegment::create("posh.test.cmwr", 8192).unwrap();
+        assert!(seg.len() >= 8192);
+        unsafe {
+            *seg.base() = 42;
+            *seg.base().add(100) = 43;
+        }
+        // A second mapping of the same fd sees the data (the demand-map
+        // path a peer PE takes).
+        let view = MemfdSegment::map_existing(seg.fd(), 8192).unwrap();
+        unsafe {
+            assert_eq!(*view.base(), 42);
+            assert_eq!(*view.base().add(100), 43);
+            *view.base().add(7) = 9;
+            assert_eq!(*seg.base().add(7), 9);
+        }
+        assert_ne!(view.base(), seg.base());
+        assert!(view.name().unwrap().starts_with("memfd:"));
+    }
+
+    #[test]
+    fn zeroed_and_page_aligned() {
+        if !memfd_supported() {
+            eprintln!("skipping: memfd_create unavailable");
+            return;
+        }
+        let seg = MemfdSegment::create("posh.test.zero", 10_000).unwrap();
+        assert_eq!(seg.base() as usize % super::super::inproc::page_size(), 0);
+        let bytes = unsafe { seg.bytes() };
+        assert!(bytes.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn zero_len_rejected() {
+        assert!(MemfdSegment::create("posh.test.empty", 0).is_err());
+    }
+
+    #[test]
+    fn map_existing_rejects_bad_fd() {
+        // An fd number far past anything open.
+        assert!(MemfdSegment::map_existing(1 << 20, 4096).is_err());
+    }
+
+    #[test]
+    fn map_existing_rejects_short_segment() {
+        if !memfd_supported() {
+            eprintln!("skipping: memfd_create unavailable");
+            return;
+        }
+        let seg = MemfdSegment::create("posh.test.short", 4096).unwrap();
+        let r = MemfdSegment::map_existing(seg.fd(), 1 << 20);
+        assert!(r.is_err(), "size mismatch must be a loud error");
+    }
+
+    /// `SEGFDS_ENV` is process-global and libtest runs tests concurrently;
+    /// every test that mutates it holds this lock.
+    static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn fd_list_roundtrip() {
+        let _g = ENV_LOCK.lock().unwrap();
+        let fds: Vec<RawFd> = vec![3, 17, 255];
+        let enc = encode_fd_list(&fds);
+        assert_eq!(enc, "3,17,255");
+        std::env::set_var(SEGFDS_ENV, &enc);
+        let dec = handoff_fds_from_env().unwrap().unwrap();
+        std::env::remove_var(SEGFDS_ENV);
+        assert_eq!(dec, fds);
+    }
+
+    #[test]
+    fn fd_list_garbage_is_error_not_fallback() {
+        let _g = ENV_LOCK.lock().unwrap();
+        std::env::set_var(SEGFDS_ENV, "3,banana");
+        let r = handoff_fds_from_env();
+        std::env::remove_var(SEGFDS_ENV);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn absent_env_is_none() {
+        let _g = ENV_LOCK.lock().unwrap();
+        std::env::remove_var(SEGFDS_ENV);
+        assert!(handoff_fds_from_env().unwrap().is_none());
+    }
+
+    #[test]
+    fn handoff_fd_is_bare_and_inheritable() {
+        if !memfd_supported() {
+            eprintln!("skipping: memfd_create unavailable");
+            return;
+        }
+        let fd = create_handoff_fd("posh.test.handoff", 4096).unwrap();
+        // No CLOEXEC: the flag word must not carry FD_CLOEXEC.
+        // SAFETY: valid fd.
+        let flags = unsafe { libc::fcntl(fd, libc::F_GETFD) };
+        assert!(flags >= 0);
+        assert_eq!(flags & libc::FD_CLOEXEC, 0, "handoff fds must survive exec");
+        let view = MemfdSegment::map_existing(fd, 4096).unwrap();
+        unsafe {
+            *view.base() = 7;
+            assert_eq!(*view.base(), 7);
+        }
+        drop(view);
+        // SAFETY: we own the bare fd.
+        unsafe {
+            libc::close(fd);
+        }
+    }
+}

@@ -12,15 +12,22 @@
 //! * [`inproc::InProcSegment`] — an anonymous private mapping. Thread-mode
 //!   worlds use it; unit tests and benches run on it without touching
 //!   `/dev/shm`.
+//! * [`memfd::MemfdSegment`] — an anonymous tmpfs file reached through an
+//!   inherited fd instead of a name. The automatic fallback when `/dev/shm`
+//!   is unwritable (hardened sandboxes, some CI runners); the `oshrun`
+//!   launcher brokers the fds (see [`memfd::SEGFDS_ENV`]).
 //!
-//! Both implement [`Segment`]; everything above this module (allocator,
-//! p2p engine, collectives) is generic over it.
+//! All implement [`Segment`]; everything above this module (allocator,
+//! p2p engine, collectives) is generic over it. [`ShmEngine::resolve`]
+//! picks between the two process-mode engines.
 
 pub mod inproc;
+pub mod memfd;
 pub mod naming;
 pub mod posix;
 
 use crate::Result;
+use anyhow::bail;
 
 /// How a segment's backing pages relate to huge pages. The symmetric heap
 /// is the hottest mapping in the job — every put/get walks it — so TLB
@@ -88,6 +95,98 @@ pub type BoxedSegment = Box<dyn Segment>;
 /// Create the segment kind appropriate for an execution mode.
 pub fn create_inproc(len: usize) -> Result<BoxedSegment> {
     Ok(Box::new(inproc::InProcSegment::new(len)?))
+}
+
+/// Which segment substrate process mode runs on.
+///
+/// Selection order ([`ShmEngine::resolve`]): an explicit `POSH_SHM_ENGINE`
+/// override wins; otherwise `/dev/shm` writability is probed and the POSIX
+/// engine is used when it passes, the memfd engine when it does not.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShmEngine {
+    /// Named `/dev/shm` objects (`shm_open`) — the paper's substrate.
+    /// Peers reach each other by rebuilding the name from the rank (§4.7).
+    Posix,
+    /// `memfd_create`-backed segments reached through launcher-inherited
+    /// fds — the shm-less fallback.
+    Memfd,
+}
+
+impl ShmEngine {
+    /// Pick the engine for this process. Honour `POSH_SHM_ENGINE`
+    /// (`posix`/`memfd`); otherwise auto-select on a `/dev/shm` probe.
+    pub fn resolve() -> Self {
+        match std::env::var("POSH_SHM_ENGINE") {
+            Ok(v) if v.eq_ignore_ascii_case("memfd") => ShmEngine::Memfd,
+            Ok(v) if v.eq_ignore_ascii_case("posix") => ShmEngine::Posix,
+            _ => {
+                if dev_shm_writable() {
+                    ShmEngine::Posix
+                } else {
+                    ShmEngine::Memfd
+                }
+            }
+        }
+    }
+
+    /// Short lowercase name (`"posix"` / `"memfd"`), matching what
+    /// `POSH_SHM_ENGINE` accepts.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShmEngine::Posix => "posix",
+            ShmEngine::Memfd => "memfd",
+        }
+    }
+}
+
+/// `true` if this process can create POSIX shm objects (cached probe:
+/// create-and-drop a tiny segment). `false` on runners where `/dev/shm` is
+/// read-only or absent — the case the memfd engine exists for.
+pub fn dev_shm_writable() -> bool {
+    use std::sync::OnceLock;
+    static WRITABLE: OnceLock<bool> = OnceLock::new();
+    *WRITABLE.get_or_init(|| {
+        let name = format!("/posh.probe.{}", std::process::id());
+        match posix::PosixShmSegment::create(&name, 4096) {
+            Ok(seg) => {
+                drop(seg); // owner drop unlinks the probe object
+                true
+            }
+            Err(_) => false,
+        }
+    })
+}
+
+/// Map `len` bytes of `fd` as `MAP_SHARED` and attempt transparent
+/// huge-page backing for large mappings — the shared tail of segment
+/// creation for every fd-backed engine (POSIX shm and memfd).
+pub(crate) fn map_shared_fd(fd: libc::c_int, len: usize) -> Result<(*mut u8, HugePageStatus)> {
+    // SAFETY: mapping a valid fd MAP_SHARED.
+    let ptr = unsafe {
+        libc::mmap(
+            std::ptr::null_mut(),
+            len,
+            libc::PROT_READ | libc::PROT_WRITE,
+            libc::MAP_SHARED,
+            fd,
+            0,
+        )
+    };
+    if ptr == libc::MAP_FAILED {
+        bail!("mmap failed: {}", std::io::Error::last_os_error());
+    }
+    let huge = if len >= inproc::HUGE_PAGE_BYTES {
+        // SAFETY: advising our own fresh mapping; refusal leaves plain pages.
+        let rc = unsafe { libc::madvise(ptr, len, libc::MADV_HUGEPAGE) };
+        if rc == 0 {
+            HugePageStatus::Transparent
+        } else {
+            HugePageStatus::None
+        }
+    } else {
+        HugePageStatus::None
+    };
+    Ok((ptr as *mut u8, huge))
 }
 
 #[cfg(test)]

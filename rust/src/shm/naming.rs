@@ -40,6 +40,16 @@ pub fn parse_heap_name(name: &str) -> Option<(u64, usize)> {
     Some((job, rank))
 }
 
+/// Debug label for the memfd backing PE `rank`'s heap in job `job_id`.
+/// Memfds have no reachable filesystem name — peers find them through the
+/// launcher's fd handoff, not this string — but the label shows up in
+/// `/proc/<pid>/fd` and error messages, so keep it structured like the
+/// POSIX names (minus the leading `/`, which memfd_create would reject in
+/// spirit: the kernel prefixes `memfd:` itself).
+pub fn memfd_debug_name(job_id: u64, rank: usize) -> String {
+    format!("{BASIS}.{job_id:x}.heap.{rank}")
+}
+
 /// A fresh job id: time-seeded plus pid so two jobs launched in the same
 /// nanosecond by different shells still diverge.
 pub fn fresh_job_id() -> u64 {

@@ -71,11 +71,20 @@ impl PosixShmSegment {
             }
             bail!("ftruncate({name}, {len}) failed: {e}");
         }
-        let (base, huge) = map_fd(fd, len)?;
-        // SAFETY: fd no longer needed after mmap.
+        let mapped = super::map_shared_fd(fd, len);
+        // SAFETY: fd no longer needed after mmap (or after a failed attempt).
         unsafe {
             libc::close(fd);
         }
+        let (base, huge) = match mapped {
+            Ok(v) => v,
+            Err(e) => {
+                unsafe {
+                    libc::shm_unlink(cname.as_ptr());
+                }
+                return Err(e);
+            }
+        };
         Ok(Self {
             base,
             len,
@@ -102,10 +111,11 @@ impl PosixShmSegment {
                 // SAFETY: valid fd and out-pointer.
                 let rc = unsafe { libc::fstat(fd, &mut st) };
                 if rc == 0 && (st.st_size as usize) >= len {
-                    let (base, huge) = map_fd(fd, len)?;
+                    let mapped = super::map_shared_fd(fd, len);
                     unsafe {
                         libc::close(fd);
                     }
+                    let (base, huge) = mapped?;
                     return Ok(Self {
                         base,
                         len,
@@ -135,35 +145,6 @@ impl PosixShmSegment {
             }
         }
     }
-}
-
-fn map_fd(fd: libc::c_int, len: usize) -> Result<(*mut u8, HugePageStatus)> {
-    // SAFETY: mapping a valid fd MAP_SHARED.
-    let ptr = unsafe {
-        libc::mmap(
-            std::ptr::null_mut(),
-            len,
-            libc::PROT_READ | libc::PROT_WRITE,
-            libc::MAP_SHARED,
-            fd,
-            0,
-        )
-    };
-    if ptr == libc::MAP_FAILED {
-        bail!("mmap failed: {}", std::io::Error::last_os_error());
-    }
-    let huge = if len >= super::inproc::HUGE_PAGE_BYTES {
-        // SAFETY: advising our own fresh mapping; refusal leaves plain pages.
-        let rc = unsafe { libc::madvise(ptr, len, libc::MADV_HUGEPAGE) };
-        if rc == 0 {
-            HugePageStatus::Transparent
-        } else {
-            HugePageStatus::None
-        }
-    } else {
-        HugePageStatus::None
-    };
-    Ok((ptr as *mut u8, huge))
 }
 
 impl Segment for PosixShmSegment {

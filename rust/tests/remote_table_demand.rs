@@ -1,0 +1,158 @@
+//! Demand-mapping behaviour of the process-mode remote-heap table
+//! (§4.1.1), driven directly over memfd segments so one test process can
+//! stand in for a whole world: each "PE heap" is a `MemfdSegment`, the
+//! table maps peers through the same fds a launcher handoff would broker.
+//!
+//! Covered here (tests/proc_mode.rs covers the real multi-process story):
+//! * lazy mapping at 32 PEs — nothing maps until first touch;
+//! * the `POSH_MAX_MAPPED_SEGS`-style LRU cap — eviction, bounded
+//!   residency, and correct remapping of an evicted peer;
+//! * concurrent first touch — two threads racing a cold PE agree on one
+//!   base and the peer is mapped exactly once.
+
+use posh::pe::remote_table::{RemoteTable, TableOpts};
+use posh::shm::memfd::{memfd_supported, MemfdSegment};
+use posh::shm::Segment as _;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+const SEG_LEN: usize = 64 * 1024;
+/// Offset of the per-PE marker byte each test plants (clear of anything a
+/// header would use — these segments are raw bytes, never a real heap).
+const MARK: usize = 128;
+
+/// Build an in-process "world": one memfd segment per rank, each stamped
+/// with a distinguishing byte, plus the rank-indexed fd list a launcher
+/// handoff would provide. `None` (with a loud note) where the kernel has no
+/// `memfd_create`.
+fn mk_world(n: usize) -> Option<(Vec<MemfdSegment>, Vec<RawFd>)> {
+    if !memfd_supported() {
+        eprintln!("skipping: memfd_create unavailable on this kernel");
+        return None;
+    }
+    let mut segs = Vec::with_capacity(n);
+    let mut fds = Vec::with_capacity(n);
+    for r in 0..n {
+        let seg = MemfdSegment::create(&format!("posh.test.demand.{r}"), SEG_LEN).unwrap();
+        // SAFETY: fresh private mapping, in bounds.
+        unsafe {
+            *seg.base().add(MARK) = r as u8 + 1;
+        }
+        fds.push(seg.fd());
+        segs.push(seg);
+    }
+    Some((segs, fds))
+}
+
+fn opts() -> TableOpts {
+    TableOpts {
+        timeout: Duration::from_millis(500),
+        ..TableOpts::default()
+    }
+}
+
+#[test]
+fn lazy_mapping_32() {
+    let n = 32;
+    let Some((segs, fds)) = mk_world(n) else { return };
+    let table = RemoteTable::with_memfds(fds, 0, segs[0].base(), SEG_LEN, opts()).unwrap();
+
+    // Construction maps nothing but self.
+    let s = table.stats();
+    assert_eq!(s.mapped, 1, "{s}");
+    assert_eq!(s.mapped_total, 0, "{s}");
+
+    // First touches map exactly the touched peers — and resolve to *their*
+    // segments (the marker byte distinguishes every rank).
+    for pe in [7usize, 19] {
+        let b = table.base_of(pe);
+        assert_eq!(unsafe { *b.add(MARK) }, pe as u8 + 1, "wrong segment for PE {pe}");
+    }
+    let s = table.stats();
+    assert_eq!(s.mapped, 3, "{s}");
+    assert_eq!(s.mapped_total, 2, "{s}");
+    assert!(s.mapped < n, "a 32-PE world must not be fully mapped by 2 touches");
+
+    // Re-touching costs no new mapping.
+    table.base_of(7);
+    assert_eq!(table.stats().mapped_total, 2);
+
+    // Touching everyone converges on the eager table's footprint.
+    for pe in 0..n {
+        let b = table.base_of(pe);
+        assert_eq!(unsafe { *b.add(MARK) }, pe as u8 + 1);
+    }
+    let s = table.stats();
+    assert_eq!(s.mapped, n, "{s}");
+    assert_eq!(s.mapped_total, (n - 1) as u64, "{s}");
+    assert_eq!(s.evicted, 0, "{s}");
+}
+
+#[test]
+fn lru_eviction_and_remap() {
+    let n = 12;
+    let cap = 4;
+    let Some((segs, fds)) = mk_world(n) else { return };
+    let table = RemoteTable::with_memfds(
+        fds,
+        0,
+        segs[0].base(),
+        SEG_LEN,
+        TableOpts {
+            max_mapped: Some(cap),
+            ..opts()
+        },
+    )
+    .unwrap();
+
+    // Touch far more peers than the cap admits; residency stays bounded at
+    // cap peers + self the whole way, and every touch still resolves the
+    // right segment.
+    for pe in 1..=10usize {
+        let b = table.base_of(pe);
+        assert_eq!(unsafe { *b.add(MARK) }, pe as u8 + 1, "wrong segment for PE {pe}");
+        let s = table.stats();
+        assert!(s.mapped <= cap + 1, "cap violated after touching PE {pe}: {s}");
+    }
+    let s = table.stats();
+    assert_eq!(s.mapped_total, 10, "{s}");
+    assert_eq!(s.evicted, (10 - cap) as u64, "{s}");
+    assert_eq!(s.remapped, 0, "{s}");
+    assert!(s.peak_mapped <= cap + 1, "{s}");
+
+    // PE 1 is long evicted; touching it again must transparently remap and
+    // read the same data (Fact 1: the offset-addressed content is
+    // mapping-independent — a remap changes the base, never the bytes).
+    let b = table.base_of(1);
+    assert_eq!(unsafe { *b.add(MARK) }, 2);
+    let s = table.stats();
+    assert!(s.remapped >= 1, "{s}");
+    assert_eq!(s.evicted, (10 - cap + 1) as u64, "{s}");
+    assert!(s.mapped <= cap + 1, "{s}");
+}
+
+#[test]
+fn concurrent_first_touch_maps_once() {
+    let n = 4;
+    let Some((segs, fds)) = mk_world(n) else { return };
+    let table = RemoteTable::with_memfds(fds, 0, segs[0].base(), SEG_LEN, opts()).unwrap();
+
+    // Two threads race the same cold peer: the per-PE once-lock must admit
+    // exactly one mapper, and both callers must see the same base.
+    let pe = 3usize;
+    let (a, b) = std::thread::scope(|s| {
+        let ta = s.spawn(|| table.base_of(pe) as usize);
+        let tb = s.spawn(|| table.base_of(pe) as usize);
+        (ta.join().unwrap(), tb.join().unwrap())
+    });
+    assert_eq!(a, b, "racing first-touchers must agree on the mapping");
+    assert_eq!(unsafe { *(a as *const u8).add(MARK) }, pe as u8 + 1);
+    let s = table.stats();
+    assert_eq!(s.mapped, 2, "{s}");
+    assert_eq!(s.mapped_total, 1, "double-mapped under a first-touch race: {s}");
+
+    // And the race leaves the table fully serviceable.
+    for other in 0..n {
+        assert_eq!(unsafe { *table.base_of(other).add(MARK) }, other as u8 + 1);
+    }
+}
