@@ -270,9 +270,11 @@ fn main() {
         if threads == 8 && std::env::var_os("POSH_BENCH_NO_ASSERT").is_none() {
             assert!(
                 speedup >= 2.0,
-                "ctx-per-thread must give >= 2x aggregate put_nbi throughput over a \
-                 shared SERIALIZED ctx at 8 threads (got {speedup:.2}x; set \
-                 POSH_BENCH_NO_ASSERT=1 to record anyway)"
+                "(op=put_nbi, size=64B, algo=ctx-per-thread) must give >= 2x \
+                 aggregate throughput over (op=put_nbi, size=64B, \
+                 algo=shared-serialized) at 8 threads: got {speedup:.2}x \
+                 ({b:.0} vs {a:.0} ops/s) after one noise retry; set \
+                 POSH_BENCH_NO_ASSERT=1 to record anyway"
             );
         }
         t3.row(&format!("{threads} threads"), vec![a / 1e6, b / 1e6, speedup]);

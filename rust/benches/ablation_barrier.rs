@@ -50,9 +50,15 @@ fn bench_set_barrier(n: usize) -> f64 {
 
 /// Team sync over the whole world team (reserved slot 0 cells), with the
 /// given engine — the dissemination-vs-linear-fan-in A/B column pair.
-fn bench_team_sync_world(n: usize, kind: TeamBarrierKind) -> f64 {
+/// `pps > 0` forces a synthetic `pps`-PEs-per-socket map so the
+/// hierarchical engine runs a real two-level sync (on a flat map it
+/// degenerates to the fan-in it is built from).
+fn bench_team_sync_world(n: usize, kind: TeamBarrierKind, pps: usize) -> f64 {
     let mut cfg = PoshConfig::small();
     cfg.team_barrier = Some(kind);
+    if pps > 0 {
+        cfg.pes_per_socket = Some(pps);
+    }
     let w = World::threads(n, cfg).unwrap();
     let ns = AtomicU64::new(0);
     w.run(|ctx| {
@@ -104,7 +110,15 @@ fn main() {
     let mut t = Table::new(
         "Ablation B: barrier latency",
         "ns/op",
-        &["dissemination", "central", "set-linear", "team-dissem", "team-linear", "team-half"],
+        &[
+            "dissemination",
+            "central",
+            "set-linear",
+            "team-dissem",
+            "team-linear",
+            "team-hier",
+            "team-half",
+        ],
     );
     for &n in &[2usize, 4, 8, 16] {
         t.row(
@@ -113,8 +127,9 @@ fn main() {
                 bench_barrier(n, BarrierKind::Dissemination),
                 bench_barrier(n, BarrierKind::Central),
                 bench_set_barrier(n),
-                bench_team_sync_world(n, TeamBarrierKind::Dissemination),
-                bench_team_sync_world(n, TeamBarrierKind::LinearFanin),
+                bench_team_sync_world(n, TeamBarrierKind::Dissemination, 0),
+                bench_team_sync_world(n, TeamBarrierKind::LinearFanin, 0),
+                bench_team_sync_world(n, TeamBarrierKind::Hierarchical, 2),
                 bench_team_sync_half(n),
             ],
         );
@@ -125,7 +140,11 @@ fn main() {
               scheduling; on a real multicore the dissemination engine's \
               log-n rounds separate from the linear fan-in's serial chain \
               as n grows — team-dissem vs team-linear is the direct A/B on \
-              identical cells. team-half synchronises n/2 PEs, so it should \
-              sit below the full-world columns)");
+              identical cells. team-hier forces a synthetic 2-per-socket \
+              map, so it runs the two-level sync: socket-local fan-in, \
+              leader dissemination, local release — on a real NUMA box it \
+              should undercut team-dissem once n spans sockets. team-half \
+              synchronises n/2 PEs, so it should sit below the full-world \
+              columns)");
     println!("csv: bench_out/ablationB_barrier.csv");
 }

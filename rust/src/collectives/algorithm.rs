@@ -41,10 +41,21 @@ pub enum AlgoKind {
     /// Recursive doubling: log₂(n) rounds, all PEs finish with the result
     /// (power-of-two set sizes; falls back to the linear variant otherwise).
     RecursiveDoubling,
+    /// Two-level socket hierarchy (NUMA-aware): socket-local reduce →
+    /// cross-socket leader exchange → socket-local broadcast, with the
+    /// leader staging buffers carved from the leaders' symmetric heaps
+    /// ([`crate::collectives::hierarchy`]). A candidate for the adaptive
+    /// selector only on multi-socket topologies; forcible everywhere
+    /// (degenerates to a single linear-put-shaped group on a flat map).
+    /// Deliberately not part of [`AlgoKind::all`]: the ablation sweeps
+    /// force it explicitly, in its own A/B column pair.
+    Hierarchical,
     /// Pick per call through the fitted cost model
     /// ([`crate::collectives::tuning::Tuning::select`]): linear-put below
     /// the latency crossover, tree/recursive-doubling above it, get-based
-    /// pull where bulk parallelism wins. The production default.
+    /// pull where bulk parallelism wins, and the two-level hierarchical
+    /// schedule where the cross-socket tier prices it cheaper. The
+    /// production default.
     Adaptive,
 }
 
@@ -78,6 +89,7 @@ impl AlgoKind {
             "linear-get" | "get" => Some(AlgoKind::LinearGet),
             "tree" | "binomial" => Some(AlgoKind::Tree),
             "recdbl" | "recursive-doubling" | "rd" => Some(AlgoKind::RecursiveDoubling),
+            "hier" | "hierarchical" | "numa" => Some(AlgoKind::Hierarchical),
             "adaptive" | "auto" | "model" => Some(AlgoKind::Adaptive),
             _ => None,
         }
@@ -90,13 +102,15 @@ impl AlgoKind {
             AlgoKind::LinearGet => "linear-get",
             AlgoKind::Tree => "tree",
             AlgoKind::RecursiveDoubling => "recdbl",
+            AlgoKind::Hierarchical => "hier",
             AlgoKind::Adaptive => "adaptive",
         }
     }
 
-    /// All *forced* families (ablation sweeps). [`AlgoKind::Adaptive`] is
-    /// deliberately absent: it is the selector over these, not a fifth
-    /// schedule.
+    /// All *forced* flat families (ablation sweeps). [`AlgoKind::Adaptive`]
+    /// is deliberately absent (it is the selector over these), and so is
+    /// [`AlgoKind::Hierarchical`] (topology-dependent; the ablation benches
+    /// force it in a dedicated hier-vs-flat column pair instead).
     pub fn all() -> [AlgoKind; 4] {
         [
             AlgoKind::LinearPut,
@@ -157,6 +171,11 @@ mod tests {
         }
         assert_eq!(AlgoKind::parse("adaptive"), Some(AlgoKind::Adaptive));
         assert_eq!(AlgoKind::parse(AlgoKind::Adaptive.name()), Some(AlgoKind::Adaptive));
+        assert_eq!(AlgoKind::parse("hier"), Some(AlgoKind::Hierarchical));
+        assert_eq!(
+            AlgoKind::parse(AlgoKind::Hierarchical.name()),
+            Some(AlgoKind::Hierarchical)
+        );
         assert_eq!(AlgoKind::parse("nope"), None);
     }
 
@@ -179,5 +198,6 @@ mod tests {
     fn all_is_the_forced_sweep() {
         assert_eq!(AlgoKind::all().len(), 4);
         assert!(!AlgoKind::all().contains(&AlgoKind::Adaptive));
+        assert!(!AlgoKind::all().contains(&AlgoKind::Hierarchical));
     }
 }

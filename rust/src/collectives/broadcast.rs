@@ -48,6 +48,9 @@ impl Ctx {
             super::AlgoKind::Tree | super::AlgoKind::RecursiveDoubling => {
                 self.bcast_tree(target, source, nelems, root_idx, set, idx)
             }
+            super::AlgoKind::Hierarchical => {
+                self.bcast_hier(target, source, nelems, root_idx, set, idx)
+            }
             super::AlgoKind::Adaptive => unreachable!("resolved by coll_algo_for"),
         }
         self.coll_exit(team);

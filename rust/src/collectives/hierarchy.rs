@@ -1,0 +1,383 @@
+//! NUMA-aware two-level collective schedules ([`AlgoKind::Hierarchical`]).
+//!
+//! The flat families treat every pair of PEs as equidistant; on a NUMA box
+//! they are not — §5's Magi10 (4 sockets) and Pastel (2 sockets) pay a
+//! 2–2.5× latency and ~40% bandwidth penalty for every cross-socket hop.
+//! The two-level schedules restructure broadcast / reduce / sync so that at
+//! most one payload crosses each socket link per direction:
+//!
+//! * **reduce**: socket-local fan-in on each socket's *leader* (Lemma-1
+//!   staging in the leader's heap), one partial per socket crosses to the
+//!   root's leader slot, the root combines and fans the result back — to
+//!   the other leaders first, who re-broadcast socket-locally.
+//! * **broadcast**: the root serves its own socket's members directly and
+//!   every other socket's leader once; leaders forward socket-locally.
+//! * **sync** ([`crate::pe::TeamBarrierKind::Hierarchical`]): members fan
+//!   in on their leader's counter, leaders on the root leader's, and the
+//!   release ripples back down through per-cell epoch flags.
+//!
+//! **Leader election is a pure function, not a protocol.** The job's
+//! PE→socket map is blocked (`socket = world_rank / pps`, with `pps` agreed
+//! job-wide at world creation — see [`crate::pe::Ctx::pes_per_socket`]) and
+//! a team's world ranks are strictly increasing in team rank, so each
+//! socket's members form a *contiguous interval* of team indices
+//! ([`socket_groups`]). Every member computes the same intervals from the
+//! same inputs; the leader is simply the interval's lowest index. No
+//! communication, nothing to disagree about — the property suite
+//! (`tests/prop_hierarchy.rs`) checks the derived [`descriptor`] is
+//! identical on every rank anyway.
+//!
+//! On a flat map (`pps == 0`, or one socket holding the whole team) there
+//! is a single interval and every schedule degenerates to its linear-put
+//! shape — correct anywhere, merely not faster. The adaptive selector
+//! ([`crate::collectives::Tuning::select`]) only picks these schedules
+//! where the two-tier cost model prices them cheaper.
+//!
+//! Combine order caveat: hierarchical grouping re-associates the reduction
+//! (socket partials first). For the wrapping-integer and order-independent
+//! operators this is unobservable; for floats it can differ from the flat
+//! engines by rounding — the same latitude OpenSHMEM grants any reduction.
+
+use super::reduce::{combine_into, ReduceElem, ReduceOp};
+use super::state::ActiveSet;
+use crate::pe::Ctx;
+use crate::symheap::layout::CollOpTag;
+use crate::symheap::SymPtr;
+use std::sync::atomic::Ordering;
+
+/// Partition a team's indices into contiguous per-socket intervals under
+/// the job's blocked map: members whose world rank lands on the same socket
+/// (`world_rank / pps`) share an interval. Returns half-open `(lo, hi)`
+/// pairs in ascending team-index order; `pps == 0` (flat) yields the single
+/// interval covering the whole team. Pure and deterministic — every member
+/// computes the same partition from the same `(set, pps)`.
+pub fn socket_groups(set: &ActiveSet, pps: usize) -> Vec<(usize, usize)> {
+    if pps == 0 || set.size == 0 {
+        return vec![(0, set.size)];
+    }
+    let mut groups = Vec::new();
+    let mut lo = 0usize;
+    let mut cur = set.rank_at(0) / pps;
+    for i in 1..set.size {
+        let s = set.rank_at(i) / pps;
+        if s != cur {
+            groups.push((lo, i));
+            lo = i;
+            cur = s;
+        }
+    }
+    groups.push((lo, set.size));
+    groups
+}
+
+/// The team's socket descriptor, as stamped into
+/// [`crate::symheap::layout::TeamCell::socket_desc`]: low 32 bits hold
+/// `pps + 1` (so 0 keeps meaning "unstamped"), high 32 bits the group
+/// count. A pure function of `(membership, pps)`, so every member stamps
+/// the same word — which is what the safe-mode split cross-check and the
+/// determinism property test rely on.
+pub fn descriptor(set: &ActiveSet, pps: usize) -> u64 {
+    let ngroups = socket_groups(set, pps).len() as u64;
+    (ngroups << 32) | (pps as u64 + 1)
+}
+
+/// Index of the interval containing team index `idx`.
+fn group_of(groups: &[(usize, usize)], idx: usize) -> usize {
+    groups
+        .iter()
+        .position(|&(lo, hi)| idx >= lo && idx < hi)
+        .expect("team index outside its own socket partition")
+}
+
+impl Ctx {
+    /// Two-level all-reduce: members deposit in their socket leader's
+    /// Lemma-1 staging buffer, one partial per socket crosses to the root,
+    /// the result fans back down through the leaders. Counter accounting
+    /// per PE: root absorbs `(gsz₀−1) + (ngroups−1)` deposits; a leader
+    /// `gsz−1` deposits then 1 root release; a member 1 leader release.
+    pub(crate) fn reduce_hier<T: ReduceElem>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nreduce: usize,
+        op: ReduceOp,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        let groups = socket_groups(set, self.pes_per_socket());
+        let ngroups = groups.len();
+        let g = group_of(&groups, idx);
+        let (lo, hi) = groups[g];
+        let gsz = hi - lo;
+        let gsz0 = groups[0].1 - groups[0].0;
+        let bytes = nreduce * std::mem::size_of::<T>();
+        let elem = std::mem::size_of::<T>();
+        let root_pe = set.root();
+        let me = self.my_pe();
+        if idx == 0 {
+            // Root leader. Staging layout: own group's members first (slot
+            // k ← team index k+1), then the other sockets' partials (slot
+            // gsz₀−1+g−1 ← group g's leader).
+            let slots = (gsz0 - 1) + (ngroups - 1);
+            let tmp = self
+                .heap()
+                .alloc_n::<T>(slots * nreduce)
+                .expect("hierarchical root scratch allocation");
+            self.coll_publish_buf(tmp);
+            self.coll_wait_count(slots as u64);
+            self.put_sym(target, me, source, me, nreduce);
+            // SAFETY: every depositor signalled after its quiet, so the
+            // staging buffer is quiescent; only we touch target.
+            unsafe {
+                let acc = self.local_mut(target);
+                let stage = self.local(tmp);
+                for k in 0..slots {
+                    combine_into(op, &mut acc[..nreduce], &stage[k * nreduce..(k + 1) * nreduce]);
+                }
+            }
+            self.heap().free(tmp).expect("freeing hierarchical root scratch");
+            // Fan out: the other leaders (who re-broadcast socket-locally)
+            // and my own socket's members. All of them have entered — their
+            // deposits are how we got here.
+            for i in (1..gsz0).chain(groups.iter().skip(1).map(|&(glo, _)| glo)) {
+                self.put_sym(target, set.rank_at(i), target, me, nreduce);
+            }
+            self.fence();
+            for i in (1..gsz0).chain(groups.iter().skip(1).map(|&(glo, _)| glo)) {
+                self.coll_signal(set.rank_at(i));
+            }
+        } else if idx == lo {
+            // Socket leader. Collect my members' contributions into target.
+            if gsz > 1 {
+                let tmp = self
+                    .heap()
+                    .alloc_n::<T>((gsz - 1) * nreduce)
+                    .expect("hierarchical leader scratch allocation");
+                self.coll_publish_buf(tmp);
+                self.coll_wait_count((gsz - 1) as u64);
+                self.put_sym(target, me, source, me, nreduce);
+                // SAFETY: as the root's combine — deposits counted, buffers
+                // quiescent, combine in ascending index order.
+                unsafe {
+                    let acc = self.local_mut(target);
+                    let stage = self.local(tmp);
+                    for k in 0..gsz - 1 {
+                        combine_into(
+                            op,
+                            &mut acc[..nreduce],
+                            &stage[k * nreduce..(k + 1) * nreduce],
+                        );
+                    }
+                }
+                self.heap().free(tmp).expect("freeing hierarchical leader scratch");
+            } else {
+                self.put_sym(target, me, source, me, nreduce);
+            }
+            // One cross-socket deposit: my socket's partial into the root's
+            // leader slot.
+            self.coll_check_peer(root_pe, CollOpTag::Reduce, bytes);
+            let tmp_off = self.coll_wait_buf(root_pe);
+            let slot: SymPtr<T> =
+                SymPtr::from_raw(tmp_off + ((gsz0 - 1) + (g - 1)) * nreduce * elem, nreduce);
+            self.put_sym(slot, root_pe, target, me, nreduce);
+            self.quiet();
+            self.coll_signal(root_pe);
+            // The root writes the final result straight into our target
+            // (safe: it only writes after our signal, and we only read
+            // target again after its release signal below).
+            self.coll_wait_count((gsz - 1) as u64 + 1);
+            // Re-broadcast socket-locally.
+            for i in lo + 1..hi {
+                self.put_sym(target, set.rank_at(i), target, me, nreduce);
+            }
+            self.fence();
+            for i in lo + 1..hi {
+                self.coll_signal(set.rank_at(i));
+            }
+        } else {
+            // Member: deposit in my leader's staging buffer, await the
+            // result in target.
+            let leader_pe = set.rank_at(lo);
+            self.coll_check_peer(leader_pe, CollOpTag::Reduce, bytes);
+            let tmp_off = self.coll_wait_buf(leader_pe);
+            let slot: SymPtr<T> =
+                SymPtr::from_raw(tmp_off + (idx - lo - 1) * nreduce * elem, nreduce);
+            self.put_sym(slot, leader_pe, source, me, nreduce);
+            self.quiet();
+            self.coll_signal(leader_pe);
+            self.coll_wait_count(1);
+        }
+    }
+
+    /// Two-level broadcast: the root serves its own socket's members
+    /// directly (that socket's leader included — it is a plain member
+    /// here) and every other socket's leader once; those leaders forward
+    /// socket-locally. The root's own `target` is not written (the
+    /// OpenSHMEM broadcast contract the flat engines keep too).
+    pub(crate) fn bcast_hier<T: Copy>(
+        &self,
+        target: SymPtr<T>,
+        source: SymPtr<T>,
+        nelems: usize,
+        root_idx: usize,
+        set: &ActiveSet,
+        idx: usize,
+    ) {
+        let groups = socket_groups(set, self.pes_per_socket());
+        let g = group_of(&groups, idx);
+        let rg = group_of(&groups, root_idx);
+        let (lo, hi) = groups[g];
+        let bytes = nelems * std::mem::size_of::<T>();
+        let me = self.my_pe();
+        if idx == root_idx {
+            // Everyone this PE serves: own socket's other members, plus
+            // each other socket's leader.
+            let (rlo, rhi) = groups[rg];
+            let served: Vec<usize> = (rlo..rhi)
+                .filter(|&i| i != root_idx)
+                .chain(
+                    groups
+                        .iter()
+                        .enumerate()
+                        .filter(|&(gi, _)| gi != rg)
+                        .map(|(_, &(glo, _))| glo),
+                )
+                .collect();
+            for &i in &served {
+                let pe = set.rank_at(i);
+                // §4.5.2: never write a member's target before it enters.
+                self.coll_wait_entered(pe, CollOpTag::Broadcast);
+                self.coll_check_peer(pe, CollOpTag::Broadcast, bytes);
+                self.put_sym(target, pe, source, me, nelems);
+            }
+            self.fence();
+            for &i in &served {
+                self.coll_signal(set.rank_at(i));
+            }
+        } else if g != rg && idx == lo {
+            // Leader of a socket the root is not on: one cross-socket
+            // arrival, then forward from target socket-locally.
+            self.coll_wait_count(1);
+            for i in lo + 1..hi {
+                let pe = set.rank_at(i);
+                self.coll_wait_entered(pe, CollOpTag::Broadcast);
+                self.coll_check_peer(pe, CollOpTag::Broadcast, bytes);
+                self.put_sym(target, pe, target, me, nelems);
+            }
+            self.fence();
+            for i in lo + 1..hi {
+                self.coll_signal(set.rank_at(i));
+            }
+        } else {
+            // Plain member (the root-socket leader lands here too): exactly
+            // one arrival — from the root or from my socket's leader.
+            self.coll_wait_count(1);
+        }
+    }
+
+    /// Two-level team sync over a reserved slot's cells: members bump their
+    /// leader's `sync_count`, leaders bump the root leader's, and the
+    /// release ripples back down through each cell's `sync_flags[0]` epoch
+    /// word. The counters accumulate monotonically (no resets): after `e`
+    /// syncs a leader of `k` arrivals-per-epoch has seen exactly `e·k`, so
+    /// the wait target is a pure function of the epoch — a fast peer one
+    /// epoch ahead is absorbed by the `>=`, like the dissemination engine's
+    /// mailboxes. Safe to share `sync_flags[0]` with dissemination because
+    /// a team's engine is fixed job-wide (config or per-size tuning).
+    pub(crate) fn team_sync_hier(&self, set: &ActiveSet, slot: usize) {
+        let groups = socket_groups(set, self.pes_per_socket());
+        let ngroups = groups.len();
+        let me = self.my_pe();
+        let idx = set.index_of(me).expect("hierarchical sync by a non-member");
+        let g = group_of(&groups, idx);
+        let (lo, hi) = groups[g];
+        let gsz = hi - lo;
+        let gsz0 = groups[0].1 - groups[0].0;
+        let root_pe = set.root();
+        let my_cell = &self.header_of(me).teams[slot];
+        // Only this PE writes its own sync_epoch on this slot.
+        let e = my_cell.sync_epoch.load(Ordering::Relaxed) + 1;
+        if idx == 0 {
+            // Root leader: own members + the other leaders arrive here.
+            let per_epoch = ((gsz0 - 1) + (ngroups - 1)) as u64;
+            self.spin_wait(|| my_cell.sync_count.load(Ordering::Acquire) >= e * per_epoch);
+            my_cell.sync_flags[0].store(e, Ordering::Release);
+            self.record_sync_rounds((gsz0 - 1) + (ngroups - 1));
+        } else if idx == lo {
+            // Socket leader: absorb my members, arrive at the root, wait
+            // for its release, release my members.
+            self.spin_wait(|| {
+                my_cell.sync_count.load(Ordering::Acquire) >= e * (gsz - 1) as u64
+            });
+            self.header_of(root_pe).teams[slot].sync_count.fetch_add(1, Ordering::AcqRel);
+            let root_cell = &self.header_of(root_pe).teams[slot];
+            self.spin_wait(|| root_cell.sync_flags[0].load(Ordering::Acquire) >= e);
+            my_cell.sync_flags[0].store(e, Ordering::Release);
+            self.record_sync_rounds(gsz + 1);
+        } else {
+            // Member: arrive at my leader, wait for its release.
+            let leader = &self.header_of(set.rank_at(lo)).teams[slot];
+            leader.sync_count.fetch_add(1, Ordering::AcqRel);
+            self.spin_wait(|| leader.sync_flags[0].load(Ordering::Acquire) >= e);
+            self.record_sync_rounds(2);
+        }
+        my_cell.sync_epoch.store(e, Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(start: usize, stride: usize, size: usize) -> ActiveSet {
+        ActiveSet::strided(start, stride, size, 64)
+    }
+
+    #[test]
+    fn groups_are_contiguous_and_cover() {
+        for (s, pps, want) in [
+            // Blocked world team, 2 per socket.
+            (set(0, 1, 8), 2, vec![(0, 2), (2, 4), (4, 6), (6, 8)]),
+            // Flat map: one interval.
+            (set(0, 1, 8), 0, vec![(0, 8)]),
+            // Stride 2 over 4-per-socket: pairs per socket.
+            (set(0, 2, 6), 4, vec![(0, 2), (2, 4), (4, 6)]),
+            // Stride spanning sockets: singleton groups.
+            (set(1, 4, 3), 2, vec![(0, 1), (1, 2), (2, 3)]),
+            // Offset start: first group shorter than pps.
+            (set(1, 1, 5), 2, vec![(0, 1), (1, 3), (3, 5)]),
+        ] {
+            let got = socket_groups(&s, pps);
+            assert_eq!(got, want, "{s:?} pps={pps}");
+            // Invariants: cover 0..size, contiguous, non-empty.
+            assert_eq!(got[0].0, 0);
+            assert_eq!(got.last().unwrap().1, s.size);
+            for w in got.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            assert!(got.iter().all(|&(lo, hi)| hi > lo));
+        }
+    }
+
+    #[test]
+    fn descriptor_encodes_shape() {
+        let s = set(0, 1, 8);
+        let d = descriptor(&s, 2);
+        assert_eq!(d >> 32, 4, "4 groups of 2");
+        assert_eq!(d & 0xFFFF_FFFF, 3, "pps+1");
+        // Flat: one group, pps+1 == 1; still nonzero (0 means unstamped).
+        let f = descriptor(&s, 0);
+        assert_eq!(f >> 32, 1);
+        assert_eq!(f & 0xFFFF_FFFF, 1);
+        assert_ne!(f, 0);
+    }
+
+    #[test]
+    fn group_of_finds_every_index() {
+        let s = set(0, 1, 7);
+        let groups = socket_groups(&s, 3); // (0,3) (3,6) (6,7)
+        for (i, want) in [(0, 0), (2, 0), (3, 1), (5, 1), (6, 2)] {
+            assert_eq!(group_of(&groups, i), want);
+        }
+    }
+}

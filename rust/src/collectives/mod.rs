@@ -45,6 +45,7 @@ pub mod alltoall;
 pub mod barrier;
 pub mod broadcast;
 pub mod collect;
+pub mod hierarchy;
 pub mod reduce;
 pub mod state;
 pub mod tuning;

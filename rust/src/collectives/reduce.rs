@@ -122,7 +122,7 @@ macro_rules! impl_reduce_float {
 impl_reduce_int!(i16, i32, i64, u16, u32, u64);
 impl_reduce_float!(f32, f64);
 
-fn combine_into<T: ReduceElem>(op: ReduceOp, acc: &mut [T], contrib: &[T]) {
+pub(crate) fn combine_into<T: ReduceElem>(op: ReduceOp, acc: &mut [T], contrib: &[T]) {
     debug_assert_eq!(acc.len(), contrib.len());
     for (a, &c) in acc.iter_mut().zip(contrib) {
         *a = T::combine(op, *a, c);
@@ -165,6 +165,9 @@ impl Ctx {
                     // never selects it there — it is not a candidate).
                     self.reduce_linear_put(target, source, nreduce, op, set, idx)
                 }
+            }
+            super::AlgoKind::Hierarchical => {
+                self.reduce_hier(target, source, nreduce, op, set, idx)
             }
             super::AlgoKind::Adaptive => unreachable!("resolved by coll_algo_for"),
         }

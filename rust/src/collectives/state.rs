@@ -302,6 +302,7 @@ impl Ctx {
                 self.team_sync_dissemination(set, slot)
             }
             crate::pe::TeamBarrierKind::LinearFanin => self.team_sync_linear(set, slot),
+            crate::pe::TeamBarrierKind::Hierarchical => self.team_sync_hier(set, slot),
         }
         self.coll_entry_guard_release(slot);
     }

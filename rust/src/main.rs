@@ -39,7 +39,11 @@ OPTIONS (launch):
                       (adaptive = per-call cost-model selection, the
                       default; --coll is an alias; see docs/tuning.md)
   --barrier KIND      dissemination|central
-  --team-barrier KIND adaptive|dissemination|linear (team-sync engine A/B)
+  --team-barrier KIND adaptive|dissemination|linear|hier (team-sync A/B)
+  --pes-per-socket N  force a synthetic blocked PE→socket map (N PEs per
+                      socket) so the NUMA-aware hierarchical collectives
+                      can be exercised on any machine; default: detect
+                      from /sys/devices/system/node
   --shm-engine ENG    posix|memfd segment substrate (default: auto —
                       posix when /dev/shm is writable, memfd otherwise;
                       memfd fds are brokered to the PEs by the launcher)
@@ -136,6 +140,35 @@ fn calibrate_cmd(args: &[String]) {
         lo = r.hi;
     }
     println!("copy dispatch: {}", posh::mem::copy::dispatch_name());
+    // The second (cross-socket) tier, resolved exactly as a job would:
+    // POSH_XSOCK_* postulation, else a pinned cross-node measurement, else
+    // the intra fit scaled by the derived factors.
+    let topo = posh::model::Topology::detect();
+    let forced_pps = std::env::var("POSH_PES_PER_SOCKET")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok());
+    let (xsock, xprov) = posh::collectives::tuning::calibrate_xsock(m);
+    println!("\ntwo-level (NUMA) tier:");
+    println!(
+        "  topology : {topo}{}",
+        match forced_pps {
+            Some(p) => format!(" (POSH_PES_PER_SOCKET={p} forces the blocked map)"),
+            None => String::new(),
+        }
+    );
+    println!(
+        "  {:>6} {:>10} {:>10} {:>8}  provenance",
+        "tier", "alpha_ns", "beta_B/ns", "r2"
+    );
+    println!(
+        "  {:>6} {:>10.2} {:>10.3} {:>8.4}  {}",
+        "intra", m.alpha_ns, m.beta_bytes_per_ns, m.r2,
+        t.source().name()
+    );
+    println!(
+        "  {:>6} {:>10.2} {:>10.3} {:>8.4}  {}",
+        "xsock", xsock.alpha_ns, xsock.beta_bytes_per_ns, xsock.r2, xprov
+    );
     println!("\nadaptive selection (payload bytes per member → algorithm):");
     let probe_sizes = [64usize, 1024, 8192, 65536, 1 << 20];
     for op in [CollOp::Broadcast, CollOp::Reduce, CollOp::Fcollect] {
@@ -147,6 +180,39 @@ fn calibrate_cmd(args: &[String]) {
             println!("  {:9} n={:<2} {}", op.name(), n, picks.join("  "));
         }
     }
+    // The same argmin with the two-level tier armed, wherever the resolved
+    // topology (forced or detected) actually splits the probe team.
+    let pps_for = |n: usize| -> usize {
+        let pps = forced_pps.unwrap_or_else(|| {
+            if topo.sockets() > 1 { topo.pes_per_socket(n) } else { 0 }
+        });
+        if pps == 0 || pps >= n { 0 } else { pps }
+    };
+    let hier_ns: Vec<usize> = [2usize, 4, 8, 16]
+        .into_iter()
+        .filter(|&n| pps_for(n) > 0)
+        .collect();
+    if !hier_ns.is_empty() {
+        println!(
+            "\ntwo-level selection (hier joins the broadcast/reduce candidates):"
+        );
+        for op in [CollOp::Broadcast, CollOp::Reduce] {
+            for &n in &hier_ns {
+                let t2 = t.with_topology(xsock, pps_for(n));
+                let picks: Vec<String> = probe_sizes
+                    .iter()
+                    .map(|&s| format!("{}B:{}", s, t2.select(op, n, s).name()))
+                    .collect();
+                println!(
+                    "  {:9} n={:<2} pps={:<2} {}",
+                    op.name(),
+                    n,
+                    pps_for(n),
+                    picks.join("  ")
+                );
+            }
+        }
+    }
     if let Some(path) = csv {
         let mut out = String::from("quantity,value\n");
         out.push_str(&format!("source,{}\n", t.source().name()));
@@ -156,6 +222,12 @@ fn calibrate_cmd(args: &[String]) {
         out.push_str(&format!("r2,{}\n", m.r2));
         out.push_str(&format!("n_half_bytes,{}\n", m.n_half()));
         out.push_str(&format!("coalesce_threshold_bytes,{}\n", t.coalesce_threshold_bytes()));
+        out.push_str(&format!("topology_sockets,{}\n", topo.sockets()));
+        out.push_str(&format!("topology_source,{}\n", topo.source));
+        out.push_str(&format!("xsock_alpha_ns,{}\n", xsock.alpha_ns));
+        out.push_str(&format!("xsock_beta_bytes_per_ns,{}\n", xsock.beta_bytes_per_ns));
+        out.push_str(&format!("xsock_r2,{}\n", xsock.r2));
+        out.push_str(&format!("xsock_provenance,{xprov}\n"));
         let mut lo = 0usize;
         for (i, r) in t.piecewise().ranges.iter().enumerate() {
             out.push_str(&format!("range{i}_lo_bytes,{lo}\n"));
@@ -224,6 +296,16 @@ fn info() {
         fmt_bytes(cache.l1d),
         fmt_bytes(cache.l2),
         fmt_bytes(cache.llc)
+    );
+    let topo = posh::model::Topology::detect();
+    let forced = std::env::var("POSH_PES_PER_SOCKET").ok();
+    println!(
+        "NUMA topology             : {}{}",
+        topo,
+        match &forced {
+            Some(v) => format!(" (POSH_PES_PER_SOCKET={v} forces the blocked map)"),
+            None => String::new(),
+        }
     );
     println!(
         "collective algo default   : {} (see `oshrun calibrate`)",
@@ -466,6 +548,13 @@ fn launch(args: &[String]) {
             "--team-barrier" => {
                 env.push((
                     "POSH_TEAM_BARRIER".into(),
+                    args.get(i + 1).cloned().unwrap_or_default(),
+                ));
+                i += 2;
+            }
+            "--pes-per-socket" => {
+                env.push((
+                    "POSH_PES_PER_SOCKET".into(),
                     args.get(i + 1).cloned().unwrap_or_default(),
                 ));
                 i += 2;

@@ -16,6 +16,10 @@ pub struct MachineProfile {
     pub name: &'static str,
     /// CPU description from §5.1.
     pub cpu: &'static str,
+    /// Socket (NUMA-node) count from §5.1 — the topology descriptor the
+    /// two-level collective model prices by. 1 = flat (no cross-socket
+    /// tier); the paper's NUMA boxes are Magi10 (4×) and Pastel (2×).
+    pub sockets: usize,
     /// Stock-memcpy model (Table 1).
     pub memcpy: CostModel,
     /// Best tuned copy model (Table 1, best of MMX/MMX2/SSE).
@@ -36,6 +40,7 @@ pub fn paper_machines() -> Vec<MachineProfile> {
         MachineProfile {
             name: "Caire",
             cpu: "Pentium Dual-Core E5300 @ 2.60GHz",
+            sockets: 1,
             memcpy: CostModel::from_alpha_gbps(38.85, 18.40),
             best_copy: CostModel::from_alpha_gbps(38.05, 18.37),
             posh_put: CostModel::from_alpha_gbps(38.40, 18.38),
@@ -46,6 +51,7 @@ pub fn paper_machines() -> Vec<MachineProfile> {
         MachineProfile {
             name: "Jaune",
             cpu: "AMD Athlon 64 X2 5200+",
+            sockets: 1,
             memcpy: CostModel::from_alpha_gbps(1277.90, 9.84),
             best_copy: CostModel::from_alpha_gbps(1279.90, 16.60), // SSE
             posh_put: CostModel::from_alpha_gbps(1665.90, 17.55),
@@ -56,6 +62,7 @@ pub fn paper_machines() -> Vec<MachineProfile> {
         MachineProfile {
             name: "Magi10",
             cpu: "4x Intel Xeon E7-4850 @ 2.00GHz (NUMA)",
+            sockets: 4,
             memcpy: CostModel::from_alpha_gbps(45.40, 22.93),
             best_copy: CostModel::from_alpha_gbps(38.20, 21.13), // MMX latency best
             posh_put: CostModel::from_alpha_gbps(38.40, 20.16),
@@ -66,6 +73,7 @@ pub fn paper_machines() -> Vec<MachineProfile> {
         MachineProfile {
             name: "Maximum",
             cpu: "Intel Core i7-2600 @ 3.40GHz",
+            sockets: 1,
             memcpy: CostModel::from_alpha_gbps(21.70, 67.47),
             best_copy: CostModel::from_alpha_gbps(21.00, 77.91), // SSE
             posh_put: CostModel::from_alpha_gbps(38.40, 76.15),
@@ -76,6 +84,7 @@ pub fn paper_machines() -> Vec<MachineProfile> {
         MachineProfile {
             name: "Pastel",
             cpu: "2x Dual-Core AMD Opteron 2218 @ 2.60GHz (NUMA)",
+            sockets: 2,
             memcpy: CostModel::from_alpha_gbps(1997.30, 20.27),
             best_copy: CostModel::from_alpha_gbps(1997.35, 20.32), // MMX2
             posh_put: CostModel::from_alpha_gbps(1689.60, 25.50),
@@ -129,6 +138,22 @@ mod tests {
         let ms = paper_machines();
         assert_eq!(ms.len(), 5);
         assert_eq!(ms[3].name, "Maximum");
+    }
+
+    #[test]
+    fn topology_descriptors_match_the_cpu_strings() {
+        // The sockets field is the §5.1 machine descriptions made
+        // machine-readable: every profile whose CPU string carries a "Nx …
+        // (NUMA)" prefix must declare N sockets, everything else is flat.
+        for m in paper_machines() {
+            if m.cpu.contains("(NUMA)") {
+                let n: usize = m.cpu.split('x').next().unwrap().parse().unwrap();
+                assert_eq!(m.sockets, n, "{}", m.name);
+                assert!(m.sockets > 1, "{}", m.name);
+            } else {
+                assert_eq!(m.sockets, 1, "{}", m.name);
+            }
+        }
     }
 
     #[test]

@@ -13,11 +13,16 @@
 //! * [`piecewise`] — the per-size-regime extension: one α/β per
 //!   L1/L2/LLC/DRAM bucket, because a single affine fit misprices exactly
 //!   the regimes the paper's Figure 3 sweeps.
+//! * [`topology`] — NUMA layout detection (`/sys/devices/system/node`, with
+//!   a fixture-dir API and a flat fallback): the socket dimension the
+//!   two-level collective schedules and the cross-socket α/β tier price by.
 
 pub mod costmodel;
 pub mod machines;
 pub mod piecewise;
+pub mod topology;
 
 pub use costmodel::CostModel;
 pub use machines::MachineProfile;
 pub use piecewise::{PiecewiseModel, RangeModel};
+pub use topology::{NumaNode, Topology, TopologySource};

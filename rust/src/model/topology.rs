@@ -1,0 +1,272 @@
+//! NUMA topology detection (`/sys/devices/system/node`) with a
+//! parseable-from-fixture-dir API.
+//!
+//! The fitted channel model of §5 is NUMA-oblivious: one α/β pair per node
+//! prices a cross-socket reduce like an L2-resident one. The two-level
+//! collective schedules ([`crate::collectives::hierarchy`]) need to know
+//! *which PEs share a socket*, and the tuning engine needs a second
+//! (cross-socket) α/β tier. This module supplies the topology half:
+//!
+//! * [`Topology::from_sysfs_root`] parses any directory shaped like the
+//!   kernel's `/sys/devices/system/node` tree (`node<N>/cpulist`), which is
+//!   what the fixture trees under `rust/tests/fixtures/topology/` exercise —
+//!   **no test depends on the runner's real topology**;
+//! * [`Topology::detect`] reads the real tree, degrading to the flat
+//!   single-socket fallback when sysfs is absent (non-Linux, sandboxes);
+//! * [`Topology::pe_socket_of`] / [`Topology::pes_per_socket`] derive the
+//!   *blocked* PE→socket map every PE computes identically (a pure function
+//!   of `(n_pes, socket count)` — the determinism the leader-election
+//!   descriptor in [`crate::symheap::layout::TeamCell`] cross-checks).
+//!
+//! Synthetic topologies (`oshrun --pes-per-socket N` /
+//! `POSH_PES_PER_SOCKET`) bypass detection entirely: they shape the blocked
+//! map directly, so the hierarchical schedules can be exercised on any
+//! machine, including a single-socket CI runner.
+
+use std::path::Path;
+
+/// Where a [`Topology`] came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologySource {
+    /// Parsed from a `/sys/devices/system/node`-shaped tree.
+    Sysfs,
+    /// Shaped by `POSH_PES_PER_SOCKET` / `--pes-per-socket` (no sysfs read).
+    Synthetic,
+    /// No usable sysfs: one flat socket.
+    Flat,
+}
+
+impl std::fmt::Display for TopologySource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologySource::Sysfs => write!(f, "sysfs"),
+            TopologySource::Synthetic => write!(f, "synthetic"),
+            TopologySource::Flat => write!(f, "flat"),
+        }
+    }
+}
+
+/// One NUMA node: its kernel id and the CPUs it carries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NumaNode {
+    /// Kernel node id (`nodeN`). Ids need not be contiguous — multi-socket
+    /// boxes with memory-less or offlined nodes leave holes.
+    pub id: usize,
+    /// CPU ids from the node's `cpulist`, ascending.
+    pub cpus: Vec<usize>,
+}
+
+/// A machine's NUMA layout: the nodes that carry CPUs, ascending by id.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// CPU-carrying nodes, ascending by kernel id.
+    pub nodes: Vec<NumaNode>,
+    /// Provenance of the layout.
+    pub source: TopologySource,
+}
+
+impl Topology {
+    /// The degenerate single-socket topology (the no-sysfs fallback).
+    pub fn flat() -> Topology {
+        Topology {
+            nodes: vec![NumaNode { id: 0, cpus: Vec::new() }],
+            source: TopologySource::Flat,
+        }
+    }
+
+    /// A synthetic `sockets`-node topology (what `--pes-per-socket`
+    /// ultimately shapes); `sockets` is clamped to ≥ 1.
+    pub fn synthetic(sockets: usize) -> Topology {
+        Topology {
+            nodes: (0..sockets.max(1))
+                .map(|id| NumaNode { id, cpus: Vec::new() })
+                .collect(),
+            source: TopologySource::Synthetic,
+        }
+    }
+
+    /// Parse a `/sys/devices/system/node`-shaped directory: every entry
+    /// named `node<N>` that carries a parseable, non-empty `cpulist`
+    /// becomes one node. Node numbering may have holes (entries are
+    /// *scanned*, not enumerated `0..n`). Returns `None` when the directory
+    /// is missing or no CPU-carrying node was found — callers fall back to
+    /// [`Topology::flat`].
+    pub fn from_sysfs_root<P: AsRef<Path>>(root: P) -> Option<Topology> {
+        let mut nodes = Vec::new();
+        for entry in std::fs::read_dir(root.as_ref()).ok()? {
+            let entry = entry.ok()?;
+            let name = entry.file_name();
+            let name = name.to_str()?;
+            let id: usize = match name.strip_prefix("node") {
+                Some(digits) if !digits.is_empty() => match digits.parse() {
+                    Ok(id) => id,
+                    Err(_) => continue, // e.g. "node_something"
+                },
+                _ => continue, // "possible", "online", "has_cpu", …
+            };
+            let cpulist = match std::fs::read_to_string(entry.path().join("cpulist")) {
+                Ok(s) => s,
+                Err(_) => continue, // memory-only node or malformed entry
+            };
+            let cpus = parse_cpulist(&cpulist);
+            if cpus.is_empty() {
+                continue; // CPU-less node: no PE can live there
+            }
+            nodes.push(NumaNode { id, cpus });
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        nodes.sort_by_key(|n| n.id);
+        Some(Topology { nodes, source: TopologySource::Sysfs })
+    }
+
+    /// Detect the real machine's topology, falling back to
+    /// [`Topology::flat`] when `/sys/devices/system/node` is absent or
+    /// unusable.
+    pub fn detect() -> Topology {
+        Self::from_sysfs_root("/sys/devices/system/node").unwrap_or_else(Topology::flat)
+    }
+
+    /// Number of CPU-carrying sockets (≥ 1).
+    pub fn sockets(&self) -> usize {
+        self.nodes.len().max(1)
+    }
+
+    /// Total CPUs across all nodes (0 for flat/synthetic layouts, which
+    /// carry no cpulists).
+    pub fn total_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// The blocked PEs-per-socket count for an `n_pes`-PE job:
+    /// `⌈n_pes / sockets⌉`, so PEs `[k·q, (k+1)·q)` land on socket `k`. A
+    /// pure function of `(n_pes, socket count)` — every PE computes the same
+    /// map with no communication.
+    pub fn pes_per_socket(&self, n_pes: usize) -> usize {
+        let s = self.sockets();
+        ((n_pes + s - 1) / s).max(1)
+    }
+
+    /// Socket index of world rank `pe` under the blocked map (always 0 on a
+    /// flat topology).
+    pub fn pe_socket_of(&self, pe: usize, n_pes: usize) -> usize {
+        pe / self.pes_per_socket(n_pes)
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} socket(s) [{}]", self.sockets(), self.source)?;
+        for n in &self.nodes {
+            if !n.cpus.is_empty() {
+                write!(f, " node{}:{}cpus", n.id, n.cpus.len())?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a kernel cpulist ("0-7,16-23", "0", "1,3,5"); malformed pieces are
+/// skipped, the result is ascending and deduplicated.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for piece in s.trim().split(',') {
+        let piece = piece.trim();
+        if piece.is_empty() {
+            continue;
+        }
+        match piece.split_once('-') {
+            Some((lo, hi)) => {
+                if let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                {
+                    if lo <= hi && hi - lo < 1 << 20 {
+                        cpus.extend(lo..=hi);
+                    }
+                }
+            }
+            None => {
+                if let Ok(c) = piece.parse::<usize>() {
+                    cpus.push(c);
+                }
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_forms() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0,2,4"), vec![0, 2, 4]);
+        assert_eq!(parse_cpulist("0-1,8-9"), vec![0, 1, 8, 9]);
+        assert_eq!(parse_cpulist(" 5 "), vec![5]);
+        assert_eq!(parse_cpulist("3,1,1,2"), vec![1, 2, 3]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("x,7,3-"), vec![7]);
+        // Inverted range is skipped, not panicked on.
+        assert_eq!(parse_cpulist("9-3,1"), vec![1]);
+    }
+
+    #[test]
+    fn flat_fallback_shape() {
+        let t = Topology::flat();
+        assert_eq!(t.sockets(), 1);
+        assert_eq!(t.source, TopologySource::Flat);
+        assert_eq!(t.pes_per_socket(8), 8);
+        for pe in 0..8 {
+            assert_eq!(t.pe_socket_of(pe, 8), 0);
+        }
+    }
+
+    #[test]
+    fn synthetic_blocked_map() {
+        let t = Topology::synthetic(2);
+        assert_eq!(t.sockets(), 2);
+        assert_eq!(t.pes_per_socket(4), 2);
+        assert_eq!(
+            (0..4).map(|pe| t.pe_socket_of(pe, 4)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1]
+        );
+        // Ragged division: 5 PEs over 2 sockets → q = 3 → [0,0,0,1,1].
+        assert_eq!(
+            (0..5).map(|pe| t.pe_socket_of(pe, 5)).collect::<Vec<_>>(),
+            vec![0, 0, 0, 1, 1]
+        );
+    }
+
+    #[test]
+    fn missing_root_is_none() {
+        assert!(Topology::from_sysfs_root("/nonexistent/posh/topology").is_none());
+        // detect() must never panic, whatever the runner looks like.
+        let t = Topology::detect();
+        assert!(t.sockets() >= 1);
+    }
+
+    #[test]
+    fn detect_matches_fixture_shape_contract() {
+        // Build a throwaway fixture in a temp dir: 2 sockets + 1 memory-only
+        // node + 1 non-node entry, and check the parser's filtering rules
+        // without touching the runner's real /sys.
+        let dir = std::env::temp_dir().join(format!("posh-topo-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for (node, list) in [("node0", "0-3"), ("node2", "4-7")] {
+            std::fs::create_dir_all(dir.join(node)).unwrap();
+            std::fs::write(dir.join(node).join("cpulist"), list).unwrap();
+        }
+        std::fs::create_dir_all(dir.join("node1")).unwrap(); // no cpulist
+        std::fs::create_dir_all(dir.join("possible")).unwrap();
+        let t = Topology::from_sysfs_root(&dir).unwrap();
+        assert_eq!(t.sockets(), 2);
+        assert_eq!(t.nodes[0].id, 0);
+        assert_eq!(t.nodes[1].id, 2); // hole at node1 preserved by id
+        assert_eq!(t.total_cpus(), 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

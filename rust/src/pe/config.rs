@@ -37,6 +37,12 @@ pub enum TeamBarrierKind {
     Dissemination,
     /// Linear fan-in/fan-out on the team root (pre-dissemination baseline).
     LinearFanin,
+    /// Two-level socket-hierarchical sync: members fan in on their socket
+    /// leader, leaders fan in on the root leader, release flows back down.
+    /// Selected by the tuning engine only on multi-socket topologies; can
+    /// be forced with `POSH_TEAM_BARRIER=hier` (degenerates to a linear
+    /// fan-in on a flat topology — correct, just not faster).
+    Hierarchical,
 }
 
 /// Job-wide configuration.
@@ -76,6 +82,13 @@ pub struct PoshConfig {
     /// the paper's original start-up shape, now opt-in. Default is demand
     /// mapping: peers map on first access.
     pub eager_map: bool,
+    /// Synthetic topology shaping (`POSH_PES_PER_SOCKET` /
+    /// `oshrun --pes-per-socket N`): force the blocked PE→socket map to put
+    /// `N` consecutive world ranks per socket, bypassing sysfs detection.
+    /// `None` (the default) detects the real NUMA layout and falls back to
+    /// flat. This is how the hierarchical schedules are exercised on a
+    /// single-socket CI runner.
+    pub pes_per_socket: Option<usize>,
 }
 
 impl Default for PoshConfig {
@@ -91,6 +104,7 @@ impl Default for PoshConfig {
             safe: cfg!(feature = "safe-mode"),
             max_mapped_segs: None,
             eager_map: false,
+            pes_per_socket: None,
         }
     }
 }
@@ -108,8 +122,10 @@ impl PoshConfig {
     /// Apply `POSH_*` environment overrides (used by `oshrun` children):
     /// `POSH_HEAP_SIZE`, `POSH_STATICS_SIZE`, `POSH_COPY`, `POSH_COLL_ALGO`,
     /// `POSH_BARRIER`, `POSH_TEAM_BARRIER`, `POSH_ALPHA_NS` +
-    /// `POSH_BETA_GBPS`, `POSH_SAFE`. See `docs/tuning.md` for the knob
-    /// handbook.
+    /// `POSH_BETA_GBPS`, `POSH_SAFE`, `POSH_PES_PER_SOCKET`. See
+    /// `docs/tuning.md` for the knob handbook (the cross-socket tier knobs
+    /// `POSH_XSOCK_ALPHA_NS`/`POSH_XSOCK_BETA_GBPS` are read at world
+    /// creation, not here).
     pub fn from_env(mut self) -> Self {
         if let Ok(v) = std::env::var("POSH_HEAP_SIZE") {
             if let Some(n) = parse_size(&v) {
@@ -144,6 +160,7 @@ impl PoshConfig {
         if let Ok(v) = std::env::var("POSH_TEAM_BARRIER") {
             self.team_barrier = match v.to_ascii_lowercase().as_str() {
                 "linear" | "fanin" => Some(TeamBarrierKind::LinearFanin),
+                "hier" | "hierarchical" => Some(TeamBarrierKind::Hierarchical),
                 "adaptive" | "auto" | "" => None,
                 _ => Some(TeamBarrierKind::Dissemination),
             };
@@ -160,6 +177,10 @@ impl PoshConfig {
         }
         if let Ok(v) = std::env::var("POSH_EAGER_MAP") {
             self.eager_map = v == "1" || v.eq_ignore_ascii_case("true");
+        }
+        if let Ok(v) = std::env::var("POSH_PES_PER_SOCKET") {
+            // 0 / unparsable mean "no forcing" (fall back to detection).
+            self.pes_per_socket = v.parse::<usize>().ok().filter(|&n| n > 0);
         }
         self
     }

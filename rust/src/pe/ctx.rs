@@ -50,6 +50,27 @@ impl Ctx {
         &self.shared.tuning
     }
 
+    /// The job's blocked PE→socket map width: how many consecutive world
+    /// ranks share a socket, `0` on a flat (single-socket or undetected)
+    /// topology. Agreed job-wide at world creation — synthetic forcing
+    /// (`--pes-per-socket`) beats sysfs detection, and process mode adopts
+    /// rank 0's published geometry — because the two-level collective
+    /// schedules deadlock if two PEs disagree on who leads a socket.
+    #[inline]
+    pub fn pes_per_socket(&self) -> usize {
+        self.shared.tuning.pes_per_socket()
+    }
+
+    /// The socket a world rank maps to under the job's blocked map
+    /// ([`Ctx::pes_per_socket`]); every PE is on socket 0 on a flat map.
+    #[inline]
+    pub fn socket_of(&self, pe: usize) -> usize {
+        match self.pes_per_socket() {
+            0 => 0,
+            pps => pe / pps,
+        }
+    }
+
     /// Execution mode.
     pub fn mode(&self) -> super::config::Mode {
         self.shared.mode

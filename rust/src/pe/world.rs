@@ -54,6 +54,42 @@ fn resolve_tuning(cfg: &PoshConfig) -> Tuning {
     }
 }
 
+/// Resolve the job's blocked PE→socket map width (0 = flat): the synthetic
+/// `--pes-per-socket` / `POSH_PES_PER_SOCKET` forcing wins, else the
+/// detected NUMA layout spreads the PEs block-wise over its sockets. A map
+/// that puts every PE on one socket carries no second level and collapses
+/// to flat.
+fn resolve_pps(cfg: &PoshConfig, n_pes: usize) -> usize {
+    let pps = match cfg.pes_per_socket {
+        Some(n) => n,
+        None => {
+            let topo = crate::model::Topology::detect();
+            if topo.sockets() > 1 {
+                topo.pes_per_socket(n_pes)
+            } else {
+                0
+            }
+        }
+    };
+    if pps == 0 || pps >= n_pes {
+        0
+    } else {
+        pps
+    }
+}
+
+/// Attach the job topology to a resolved engine: on a flat map the engine
+/// passes through untouched; on a multi-socket one the cross-socket tier is
+/// resolved ([`tuning::calibrate_xsock`]) and the two-level model armed.
+fn with_job_topology(t: Tuning, cfg: &PoshConfig, n_pes: usize) -> Tuning {
+    let pps = resolve_pps(cfg, n_pes);
+    if pps == 0 {
+        return t;
+    }
+    let (xsock, _provenance) = tuning::calibrate_xsock(t.model());
+    t.with_topology(xsock, pps)
+}
+
 /// A POSH job handle.
 pub struct World {
     pub(crate) shared: Arc<WorldShared>,
@@ -76,7 +112,9 @@ impl World {
             heaps.push(SymHeap::new(seg, layout, rank)?);
         }
         let bases = heaps.iter().map(|h| SendPtr(h.base())).collect();
-        let tuning = resolve_tuning(&cfg);
+        // Threads share one address space, so every PE resolving the same
+        // config resolves the same topology — job-wide agreement is free.
+        let tuning = with_job_topology(resolve_tuning(&cfg), &cfg, n);
         Ok(World {
             shared: Arc::new(WorldShared {
                 cfg,
@@ -188,7 +226,7 @@ impl World {
         // until PE 0's segment exists and its header is ready.)
         let hdr0 = unsafe { crate::symheap::layout::HeapHeader::at(table.base_of(0)) };
         let tuning = if rank == 0 {
-            let t = resolve_tuning(&cfg);
+            let t = with_job_topology(resolve_tuning(&cfg), &cfg, n_pes);
             hdr0.tuning_alpha_bits.store(t.model().alpha_ns.to_bits(), Ordering::Relaxed);
             hdr0.tuning_beta_bits
                 .store(t.model().beta_bytes_per_ns.to_bits(), Ordering::Relaxed);
@@ -199,6 +237,15 @@ impl World {
             for (cell, w) in hdr0.tuning_pw.iter().zip(wire) {
                 cell.store(w, Ordering::Relaxed);
             }
+            // The cross-socket tier and the PE→socket geometry ride it too.
+            // Publishing the geometry (rather than every rank re-detecting)
+            // is what makes the socket map a job-wide agreement: the
+            // two-level schedules deadlock if two PEs disagree on who leads.
+            hdr0.tuning_xsock_alpha_bits
+                .store(t.xsock_model().alpha_ns.to_bits(), Ordering::Relaxed);
+            hdr0.tuning_xsock_beta_bits
+                .store(t.xsock_model().beta_bytes_per_ns.to_bits(), Ordering::Relaxed);
+            hdr0.tuning_xsock_geom.store(t.pes_per_socket() as u64, Ordering::Relaxed);
             hdr0.tuning_ready.store(t.source().to_wire(), Ordering::Release);
             t
         } else {
@@ -227,13 +274,31 @@ impl World {
             }
             let pw = crate::model::PiecewiseModel::from_wire(&pw_wire);
             let source = TuningSource::from_wire(wire);
-            if pw.is_degenerate() {
+            let base = if pw.is_degenerate() {
                 // All-zero (legacy publisher) or corrupt regime words:
                 // adopt the scalar model uniformly — identical selections
                 // to a pre-piecewise job.
                 Tuning::new(model, source)
             } else {
                 Tuning::new_piecewise(model, pw, source)
+            };
+            // Adopt the published topology. geom == 0 covers both a genuine
+            // flat map and a legacy publisher whose header predates the
+            // xsock words (they read back all-zero) — flat either way.
+            let geom = hdr0.tuning_xsock_geom.load(Ordering::Relaxed) as usize;
+            if geom == 0 {
+                base
+            } else {
+                let xa = f64::from_bits(hdr0.tuning_xsock_alpha_bits.load(Ordering::Relaxed));
+                let xb = f64::from_bits(hdr0.tuning_xsock_beta_bits.load(Ordering::Relaxed));
+                let xsock = if xa.is_finite() && xa >= 0.0 && xb.is_finite() && xb > 0.0 {
+                    CostModel { alpha_ns: xa, beta_bytes_per_ns: xb, r2: model.r2 }
+                } else {
+                    // Corrupt tier words with a live geometry: re-derive the
+                    // deterministic tier every rank computes identically.
+                    tuning::derived_xsock(&model)
+                };
+                base.with_topology(xsock, geom)
             }
         };
         Ok(World {
@@ -408,6 +473,30 @@ mod tests {
             });
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn synthetic_topology_arms_the_engine() {
+        let mut cfg = PoshConfig::small();
+        cfg.pes_per_socket = Some(2);
+        let w = World::threads(4, cfg).unwrap();
+        assert_eq!(w.shared.tuning.pes_per_socket(), 2);
+        w.run(|ctx| {
+            assert_eq!(ctx.pes_per_socket(), 2);
+            assert_eq!(ctx.socket_of(0), 0);
+            assert_eq!(ctx.socket_of(1), 0);
+            assert_eq!(ctx.socket_of(2), 1);
+            assert_eq!(ctx.socket_of(3), 1);
+        });
+        // A map that fits the whole job on one socket collapses to flat.
+        let mut cfg = PoshConfig::small();
+        cfg.pes_per_socket = Some(8);
+        let w = World::threads(4, cfg).unwrap();
+        assert_eq!(w.shared.tuning.pes_per_socket(), 0);
+        w.run(|ctx| {
+            assert_eq!(ctx.pes_per_socket(), 0);
+            assert_eq!(ctx.socket_of(3), 0);
+        });
     }
 
     #[test]

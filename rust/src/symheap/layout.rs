@@ -171,6 +171,18 @@ pub struct TeamCell {
     /// second entry panics at the call site. Lives in what was padding, so
     /// the pinned 256-byte cell size is unchanged.
     pub entry_guard: AtomicU64,
+    /// Leader/socket descriptor for the two-level (hierarchical) schedules,
+    /// written by every member at split time alongside `start`/`stride`/
+    /// `size`: low 32 bits hold the job's blocked PEs-per-socket count + 1
+    /// (0 = unstamped, i.e. a pre-hierarchy slot or the world team, which
+    /// derives its map from the published job topology), high 32 bits the
+    /// team's socket-group count under that map. Because the blocked map is
+    /// a pure function of `(world rank, pes_per_socket)` and strided teams
+    /// are monotone in world rank, every member computes the same value —
+    /// safe mode cross-checks it against the team root's copy exactly like
+    /// the membership triple. Lives in what was padding: the pinned 256-byte
+    /// cell size is unchanged.
+    pub socket_desc: AtomicU64,
 }
 
 /// The header at offset 0 of every symmetric-heap segment.
@@ -217,9 +229,25 @@ pub struct HeapHeader {
     /// only" (a legacy publisher), in which case adopters fall back to a
     /// uniform piecewise view of the three scalar words.
     pub tuning_pw: [AtomicU64; crate::model::piecewise::WIRE_WORDS],
+    /// Published cross-socket tier, α in ns as `f64::to_bits` (the second
+    /// α/β pair of the two-level collective model). Written by rank 0
+    /// before the `tuning_ready` release store, like `tuning_pw`; all three
+    /// `tuning_xsock_*` words zero means "flat publisher" (a pre-hierarchy
+    /// binary), in which case adopters stay on the flat single-tier model —
+    /// selections remain job-wide identical either way.
+    pub tuning_xsock_alpha_bits: AtomicU64,
+    /// Published cross-socket tier, β in bytes/ns as `f64::to_bits`.
+    pub tuning_xsock_beta_bits: AtomicU64,
+    /// Published job topology geometry: the blocked PEs-per-socket count
+    /// (plain u64; 0 = flat topology, no hierarchical tier). Publishing the
+    /// geometry — rather than letting each rank re-detect — is what makes
+    /// the PE→socket map agreed job-wide even if ranks see different
+    /// environments.
+    pub tuning_xsock_geom: AtomicU64,
     /// 0 until the model is published; then the wire encoding of its
     /// [`crate::collectives::TuningSource`]. Peers spin on this before
-    /// reading the three `tuning_*_bits` words and `tuning_pw`.
+    /// reading the three `tuning_*_bits` words, `tuning_pw`, and the
+    /// `tuning_xsock_*` words.
     pub tuning_ready: AtomicU64,
     /// Per-team sync cells and membership descriptors (OpenSHMEM 1.4 teams).
     pub teams: [TeamCell; MAX_TEAMS],
@@ -323,10 +351,13 @@ mod tests {
         // The entry guard fills the first padding word after the epoch; the
         // cell must NOT grow for it.
         assert_eq!(off(cell, &cell.entry_guard), 64 + 8 * MAX_SYNC_ROUNDS);
+        // The socket/leader descriptor fills the next padding word; the
+        // cell must NOT grow for it either.
+        assert_eq!(off(cell, &cell.socket_desc), 72 + 8 * MAX_SYNC_ROUNDS);
 
         // 7 descriptor/linear words + MAX_SYNC_ROUNDS mailboxes + the epoch
-        // + the entry guard, rounded up to the 128-byte alignment: exactly
-        // 256 bytes today.
+        // + the entry guard + the socket descriptor, rounded up to the
+        // 128-byte alignment: exactly 256 bytes today.
         assert_eq!(std::mem::size_of::<TeamCell>(), 256);
         assert_eq!(std::mem::align_of::<TeamCell>(), 128);
         // Consecutive slots are contiguous (no inter-element padding).

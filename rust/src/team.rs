@@ -256,6 +256,17 @@ impl Team {
             cell.start.store(child_set.start as u64, Ordering::Release);
             cell.stride.store(child_set.stride as u64, Ordering::Release);
             cell.size.store(child_set.size as u64, Ordering::Release);
+            // The socket descriptor (leader/group shape under the job's
+            // blocked PE→socket map) rides the same publication: a pure
+            // function of the membership and the job-wide `pps`, so every
+            // member stamps the same word.
+            cell.socket_desc.store(
+                crate::collectives::hierarchy::descriptor(
+                    &child_set,
+                    self.ctx.pes_per_socket(),
+                ),
+                Ordering::Release,
+            );
         }
         self.sync();
         // Safe mode: my computed membership must agree with the child
@@ -276,6 +287,20 @@ impl Team {
                 child_set.start,
                 child_set.stride,
                 child_set.size
+            );
+            // The socket descriptor must agree too: a disagreement here
+            // means two members would elect different leaders and the
+            // hierarchical schedules would deadlock.
+            let d = root_cell.socket_desc.load(Ordering::Acquire);
+            let want = crate::collectives::hierarchy::descriptor(
+                &child_set,
+                self.ctx.pes_per_socket(),
+            );
+            assert!(
+                d == want,
+                "team socket-descriptor disagreement: PE {} computed {want:#x}, child root \
+                 published {d:#x} (PE→socket map not agreed job-wide?)",
+                self.ctx.my_pe()
             );
         }
 
@@ -363,6 +388,7 @@ impl Team {
                     cell.start.store(0, Ordering::Release);
                     cell.stride.store(0, Ordering::Release);
                     cell.size.store(0, Ordering::Release);
+                    cell.socket_desc.store(0, Ordering::Release);
                     release_team_slot(&self.ctx, slot);
                 }
             }

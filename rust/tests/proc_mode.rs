@@ -14,12 +14,15 @@
 //! `POSH-SKIP[proc_mode]` marker CI greps for. `POSH_SHM_ENGINE` forces an
 //! engine end-to-end (the forced-memfd CI job runs exactly that).
 //!
-//! Two jobs run back to back: the 3-PE workout, then a 32-PE `lazy32`
-//! phase asserting the demand-mapping invariant — a PE never maps the whole
+//! Three jobs run back to back: the 3-PE workout; a 32-PE `lazy32` phase
+//! asserting the demand-mapping invariant — a PE never maps the whole
 //! world just to attach and barrier (a dissemination barrier touches only
-//! ⌈log₂ n⌉ partners).
+//! ⌈log₂ n⌉ partners); and the 4-PE `hier4` forced-topology smoke — a
+//! synthetic 2-PEs-per-socket map with postulated cost-model tiers, so the
+//! adaptive engine must pick flat for small payloads and the two-level
+//! schedule for large ones, deterministically on any runner.
 
-use posh::collectives::ReduceOp;
+use posh::collectives::{AlgoKind, ReduceOp};
 use posh::pe::World;
 use posh::rte::gateway::Gateway;
 use posh::rte::launcher::{JobSpec, Launcher};
@@ -244,6 +247,88 @@ fn lazy32_body() {
     println!("PE {me}: lazy32 OK (mapped {} of {n} after barriers)", s1.mapped);
 }
 
+/// The forced-topology smoke (what `oshrun --pes-per-socket 2` injects,
+/// over 4 process PEs): a synthetic 2-PEs-per-socket map with both
+/// cost-model tiers postulated through the env, so the adaptive argmin is
+/// pure arithmetic and runner-independent — a 64 B payload must resolve to
+/// a flat family, a 256 KiB one to the two-level schedule, and both must
+/// produce correct results over real cross-process segments.
+fn hier4_body() {
+    const HIER_N: usize = 4;
+    let world = World::from_env().expect("attach from oshrun env");
+    let ctx = world.my_ctx();
+    let me = ctx.my_pe();
+    let n = ctx.n_pes();
+    assert_eq!(n, HIER_N);
+    // The blocked map rank 0 published through the tuning_xsock_geom word.
+    assert_eq!(ctx.pes_per_socket(), 2, "PE {me}: synthetic pps not adopted");
+    let map: Vec<usize> = (0..n).map(|pe| ctx.socket_of(pe)).collect();
+    assert_eq!(map, vec![0, 0, 1, 1], "PE {me}: blocked socket map");
+
+    let team = ctx.team_world();
+    const BIG: usize = 32 * 1024; // 256 KiB — far above the ~1.5 KiB crossover
+    const SMALL: usize = 8; // 64 B — far below it
+    let src = ctx.shmalloc_n::<i64>(BIG).unwrap();
+    let dst = ctx.shmalloc_n::<i64>(BIG).unwrap();
+    unsafe {
+        for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+            *s = (me * 7 + j % 13) as i64;
+        }
+    }
+    ctx.barrier_all();
+
+    // Small reduce: the α-heavy two-level schedule must NOT be picked.
+    ctx.reduce_to_all(dst, src, SMALL, ReduceOp::Sum, &team);
+    let small_algo = ctx.last_coll_algo().expect("a collective ran");
+    assert_ne!(
+        small_algo,
+        AlgoKind::Hierarchical,
+        "PE {me}: {SMALL}-elem reduce resolved to the two-level schedule"
+    );
+    for j in 0..SMALL {
+        let want: i64 = (0..n).map(|pe| (pe * 7 + j % 13) as i64).sum();
+        assert_eq!(unsafe { ctx.local(dst)[j] }, want, "PE {me}: small reduce j={j}");
+    }
+
+    // Large reduce: the link-frugal two-level schedule must win.
+    ctx.reduce_to_all(dst, src, BIG, ReduceOp::Sum, &team);
+    assert_eq!(
+        ctx.last_coll_algo(),
+        Some(AlgoKind::Hierarchical),
+        "PE {me}: {BIG}-elem reduce did not resolve hierarchical"
+    );
+    for j in [0usize, 1, BIG / 2, BIG - 1] {
+        let want: i64 = (0..n).map(|pe| (pe * 7 + j % 13) as i64).sum();
+        assert_eq!(unsafe { ctx.local(dst)[j] }, want, "PE {me}: big reduce j={j}");
+    }
+
+    // Broadcast splits at the same boundary (root 2 lives on socket 1, so
+    // the large transfer really exercises the leader exchange).
+    ctx.broadcast(dst, src, SMALL, 2, &team);
+    assert_ne!(
+        ctx.last_coll_algo(),
+        Some(AlgoKind::Hierarchical),
+        "PE {me}: small bcast resolved to the two-level schedule"
+    );
+    ctx.broadcast(dst, src, BIG, 2, &team);
+    assert_eq!(
+        ctx.last_coll_algo(),
+        Some(AlgoKind::Hierarchical),
+        "PE {me}: large bcast did not resolve hierarchical"
+    );
+    if me != 2 {
+        for j in [0usize, 1, BIG / 2, BIG - 1] {
+            assert_eq!(
+                unsafe { ctx.local(dst)[j] },
+                (2 * 7 + j % 13) as i64,
+                "PE {me}: bcast payload j={j}"
+            );
+        }
+    }
+    ctx.barrier_all();
+    println!("PE {me}: hier4 OK (small→{}, large→hierarchical)", small_algo.name());
+}
+
 /// Spawn `n_pes` copies of this binary with `extra_env`, pump their IO
 /// through the gateway, and require every PE to print `marker`.
 fn run_job(n_pes: usize, extra_env: Vec<(String, String)>, marker: &str) {
@@ -299,10 +384,32 @@ fn lazy32_launcher() {
     println!("proc_mode lazy32: {LAZY_N} processes demand-mapped OK");
 }
 
+fn hier4_launcher() {
+    run_job(
+        4,
+        vec![
+            ("POSH_HEAP_SIZE".into(), "16M".into()),
+            ("POSH_TEST_BODY".into(), "hier4".into()),
+            // Exactly what `oshrun --pes-per-socket 2` injects.
+            ("POSH_PES_PER_SOCKET".into(), "2".into()),
+            // Postulate both tiers so the argmin is runner-independent:
+            // intra 100 ns / 80 Gb/s vs cross-socket 1000 ns / 8 Gb/s puts
+            // the flat↔hier crossover near 1.5 KiB for reduce and bcast.
+            ("POSH_ALPHA_NS".into(), "100".into()),
+            ("POSH_BETA_GBPS".into(), "80".into()),
+            ("POSH_XSOCK_ALPHA_NS".into(), "1000".into()),
+            ("POSH_XSOCK_BETA_GBPS".into(), "8".into()),
+        ],
+        "hier4 OK",
+    );
+    println!("proc_mode hier4: forced 2-per-socket topology smoke OK");
+}
+
 fn main() {
     if World::env_present() {
         match std::env::var("POSH_TEST_BODY").as_deref() {
             Ok("lazy32") => lazy32_body(),
+            Ok("hier4") => hier4_body(),
             _ => pe_body(),
         }
         return;
@@ -337,4 +444,5 @@ fn main() {
     }
     launcher_role();
     lazy32_launcher();
+    hier4_launcher();
 }

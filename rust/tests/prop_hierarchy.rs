@@ -1,0 +1,319 @@
+//! Property battery for the NUMA-aware hierarchical collectives: over
+//! random team shapes × random synthetic PE→socket maps (forced with
+//! `PoshConfig::pes_per_socket`, so no test depends on the runner's real
+//! topology), the forced two-level schedules must produce exactly what the
+//! flat engines produce — here checked against the same serial oracles the
+//! flat property tests use. All payloads are integers, where reduction is
+//! exact under any association, so "≡ flat engine" is equality, not
+//! approximation (the hierarchical schedule re-associates the combine
+//! order, which is visible only in floating point).
+//!
+//! Safe mode stays on throughout: every `split_strided` cross-checks the
+//! member-computed socket descriptor against the one the child root
+//! published, so a nondeterministic leader election (different PEs deriving
+//! different group shapes) panics instead of deadlocking.
+
+use posh::collectives::{AlgoKind, ReduceOp};
+use posh::pe::{PoshConfig, TeamBarrierKind, World};
+use posh::util::quickcheck::{forall, Gen};
+
+/// Random strided split parameters `(start, stride, size)` within a world
+/// of `n_pes` — strides beyond 1 make the socket groups non-trivial
+/// sub-intervals of the team index space.
+fn random_split(g: &mut Gen, n_pes: usize) -> (usize, usize, usize) {
+    let stride = g.usize_in(1..4);
+    let max_size = (n_pes + stride - 1) / stride;
+    let size = g.usize_in(1..max_size + 1);
+    let max_start = n_pes - (size - 1) * stride;
+    let start = g.usize_in(0..max_start);
+    (start, stride, size)
+}
+
+fn split_members(start: usize, stride: usize, size: usize) -> Vec<usize> {
+    (0..size).map(|i| start + i * stride).collect()
+}
+
+fn contrib(pe: usize, j: usize) -> i64 {
+    ((pe as i64 + 3) * (j as i64 + 7)) % 41 + 1
+}
+
+fn combine(op: ReduceOp, a: i64, b: i64) -> i64 {
+    use posh::collectives::reduce::ReduceElem;
+    i64::combine(op, a, b)
+}
+
+/// A config that forces the two-level reduce/broadcast schedule under a
+/// synthetic `pps`-wide blocked socket map, with safe mode (descriptor
+/// cross-checking) on.
+fn hier_cfg(pps: usize) -> PoshConfig {
+    let mut cfg = PoshConfig::small();
+    cfg.coll_algo = Some(AlgoKind::Hierarchical);
+    cfg.pes_per_socket = Some(pps);
+    cfg.safe = true;
+    cfg
+}
+
+#[test]
+fn hier_reduce_matches_oracle_random_topologies() {
+    forall("hier reduce oracle", 25, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let (start, stride, size) = random_split(g, n_pes);
+        // pps sweeps through every interesting shape: 1 (every PE its own
+        // socket, all-leader), mid (real two-level splits), ≥ n (collapses
+        // to one flat group).
+        let pps = g.usize_in(1..n_pes + 2);
+        let nreduce = g.usize_in(1..200);
+        let op = g.pick(&ReduceOp::all());
+        let w = World::threads(n_pes, hier_cfg(pps)).unwrap();
+        let results = w.run_collect(move |ctx| {
+            let src = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            let dst = ctx.shmalloc_n::<i64>(nreduce).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = contrib(ctx.my_pe(), j);
+                }
+                ctx.local_mut(dst).fill(i64::MIN);
+            }
+            ctx.barrier_all();
+            let team = ctx.team_world().split_strided(start, stride, size);
+            let out = if let Some(team) = &team {
+                ctx.reduce_to_all(dst, src, nreduce, op, team);
+                Some(unsafe { ctx.local(dst).to_vec() })
+            } else {
+                None
+            };
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
+            }
+            out
+        });
+        let members = split_members(start, stride, size);
+        for j in 0..nreduce {
+            let mut acc = contrib(members[0], j);
+            for &m in &members[1..] {
+                acc = combine(op, acc, contrib(m, j));
+            }
+            for &m in &members {
+                let got = results[m].as_ref().unwrap()[j];
+                if got != acc {
+                    return Err(format!(
+                        "hier {op:?} pps={pps} split ({start},{stride},{size}) elem {j}: \
+                         PE {m} got {got}, want {acc}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hier_broadcast_matches_oracle_random_topologies() {
+    forall("hier broadcast oracle", 25, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let (start, stride, size) = random_split(g, n_pes);
+        let pps = g.usize_in(1..n_pes + 2);
+        let nelems = g.usize_in(1..300);
+        let root_idx = g.usize_in(0..size);
+        let w = World::threads(n_pes, hier_cfg(pps)).unwrap();
+        let results = w.run_collect(move |ctx| {
+            let src = ctx.shmalloc_n::<u64>(nelems).unwrap();
+            let dst = ctx.shmalloc_n::<u64>(nelems).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 1_000 + j) as u64;
+                }
+                ctx.local_mut(dst).fill(u64::MAX);
+            }
+            ctx.barrier_all();
+            let team = ctx.team_world().split_strided(start, stride, size);
+            let out = if let Some(team) = &team {
+                ctx.broadcast(dst, src, nelems, root_idx, team);
+                Some(unsafe { ctx.local(dst).to_vec() })
+            } else {
+                None
+            };
+            ctx.barrier_all();
+            if let Some(team) = team {
+                team.destroy();
+            }
+            out
+        });
+        let members = split_members(start, stride, size);
+        let root_pe = members[root_idx];
+        for &m in &members {
+            let got = results[m].as_ref().unwrap();
+            if m == root_pe {
+                // The spec quirk survives the two-level schedule: the
+                // root's own target is never written.
+                if got.iter().any(|&v| v != u64::MAX) {
+                    return Err(format!("hier pps={pps}: root target written"));
+                }
+            } else {
+                for (j, &v) in got.iter().enumerate() {
+                    let want = (root_pe * 1_000 + j) as u64;
+                    if v != want {
+                        return Err(format!(
+                            "hier pps={pps} split ({start},{stride},{size}) root \
+                             {root_idx}: PE {m} elem {j} = {v}, want {want}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The hierarchical team sync under random shapes: a barrier has no output,
+/// so its oracle is the synchronization contract itself — a put issued
+/// before `team.barrier()` must be visible to its target after the barrier
+/// returns (barrier = quiet + sync), round after round. A broken two-level
+/// release (a member let through before the root leader's epoch flip) shows
+/// up as a stale read; a broken fan-in deadlocks and fails the suite's
+/// timeout.
+#[test]
+fn hier_barrier_synchronizes_random_topologies() {
+    forall("hier barrier contract", 20, |g: &mut Gen| {
+        let n_pes = g.usize_in(2..7);
+        let stride = g.usize_in(1..4);
+        let max_size = (n_pes + stride - 1) / stride;
+        let lo = 2usize.min(max_size);
+        let size = g.usize_in(lo..max_size + 1);
+        let max_start = n_pes - (size - 1) * stride;
+        let start = g.usize_in(0..max_start);
+        let pps = g.usize_in(1..n_pes + 2);
+        let rounds = g.usize_in(3..12);
+        let mut cfg = hier_cfg(pps);
+        cfg.team_barrier = Some(TeamBarrierKind::Hierarchical);
+        let w = World::threads(n_pes, cfg).unwrap();
+        let oks = w.run_collect(move |ctx| {
+            let world = ctx.team_world();
+            let team = world.split_strided(start, stride, size);
+            let mut ok = true;
+            if let Some(t) = &team {
+                let mailbox = ctx.shmalloc_n::<u64>(1).unwrap();
+                unsafe { ctx.local_mut(mailbox)[0] = u64::MAX };
+                t.barrier();
+                let me = t.my_pe();
+                let next = t.world_rank((me + 1) % t.n_pes());
+                for round in 0..rounds as u64 {
+                    ctx.put(mailbox, &[round * 10 + me as u64], next);
+                    t.barrier();
+                    let prev = (me + t.n_pes() - 1) % t.n_pes();
+                    let got = unsafe { ctx.local(mailbox)[0] };
+                    ok &= got == round * 10 + prev as u64;
+                    t.barrier();
+                }
+                ctx.shfree(mailbox).unwrap();
+            }
+            ctx.barrier_all();
+            if let Some(t) = team {
+                t.destroy();
+            }
+            ctx.barrier_all();
+            ok
+        });
+        if oks.iter().all(|&b| b) {
+            Ok(())
+        } else {
+            Err(format!(
+                "hier barrier pps={pps} split ({start},{stride},{size}) let a stale \
+                 read through"
+            ))
+        }
+    });
+}
+
+/// The PE→socket map is a job-wide agreement: every rank derives the same
+/// `pes_per_socket` and the same socket index for every peer — with no
+/// communication. This is the determinism that makes leader election a pure
+/// function (the per-team descriptor cross-check in safe mode is the
+/// protocol-level face of the same property).
+#[test]
+fn socket_map_is_agreed_job_wide() {
+    for (n_pes, pps) in [(4usize, 2usize), (5, 2), (6, 3), (6, 1), (4, 8)] {
+        let w = World::threads(n_pes, hier_cfg(pps)).unwrap();
+        let maps = w.run_collect(move |ctx| {
+            let map: Vec<usize> = (0..ctx.n_pes()).map(|pe| ctx.socket_of(pe)).collect();
+            (ctx.pes_per_socket(), map)
+        });
+        let effective = if pps >= n_pes { 0 } else { pps };
+        for (rank, (got_pps, map)) in maps.iter().enumerate() {
+            assert_eq!(*got_pps, effective, "n={n_pes} pps={pps} rank {rank}");
+            assert_eq!(map, &maps[0].1, "n={n_pes} pps={pps} rank {rank}");
+            for (pe, &s) in map.iter().enumerate() {
+                let want = if effective == 0 { 0 } else { pe / effective };
+                assert_eq!(s, want, "n={n_pes} pps={pps} rank {rank} pe {pe}");
+            }
+        }
+    }
+}
+
+/// Forcing `Hierarchical` on an op with no two-level schedule (fcollect)
+/// runs its single-protocol path — same bytes, no panic. Guards the
+/// dispatch catch-all.
+#[test]
+fn forced_hier_on_single_protocol_ops_degenerates() {
+    for (n_pes, pps) in [(4usize, 2usize), (5, 2), (3, 1)] {
+        let nelems = 37usize;
+        let w = World::threads(n_pes, hier_cfg(pps)).unwrap();
+        let results = w.run_collect(move |ctx| {
+            let team = ctx.team_world();
+            let src = ctx.shmalloc_n::<u32>(nelems).unwrap();
+            let dst = ctx.shmalloc_n::<u32>(nelems * ctx.n_pes()).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = (ctx.my_pe() * 10_000 + j) as u32;
+                }
+            }
+            ctx.barrier_all();
+            ctx.fcollect(dst, src, nelems, &team);
+            let out = unsafe { ctx.local(dst).to_vec() };
+            ctx.barrier_all();
+            out
+        });
+        for (rank, got) in results.iter().enumerate() {
+            for pe in 0..n_pes {
+                for j in 0..nelems {
+                    assert_eq!(
+                        got[pe * nelems + j],
+                        (pe * 10_000 + j) as u32,
+                        "n={n_pes} pps={pps} rank {rank} block {pe} elem {j}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Heap symmetry after hierarchical reductions: the Lemma-1 staging
+/// temporaries (root slots and leader slots both) are freed before the
+/// collective exits, so the live-allocation count is back to exactly the
+/// two user buffers on every PE.
+#[test]
+fn hier_reduce_frees_all_staging() {
+    for pps in [1usize, 2, 3, 8] {
+        let w = World::threads(6, hier_cfg(pps)).unwrap();
+        let counts = w.run_collect(move |ctx| {
+            let team = ctx.team_world();
+            let src = ctx.shmalloc_n::<i64>(100).unwrap();
+            let dst = ctx.shmalloc_n::<i64>(100).unwrap();
+            unsafe {
+                for (j, s) in ctx.local_mut(src).iter_mut().enumerate() {
+                    *s = contrib(ctx.my_pe(), j);
+                }
+            }
+            ctx.barrier_all();
+            for _ in 0..3 {
+                ctx.reduce_to_all(dst, src, 100, ReduceOp::Sum, &team);
+            }
+            ctx.barrier_all();
+            ctx.heap().live_allocations()
+        });
+        for (rank, &live) in counts.iter().enumerate() {
+            assert_eq!(live, 2, "pps={pps} rank {rank}: staging leaked");
+        }
+    }
+}

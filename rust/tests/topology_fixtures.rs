@@ -1,0 +1,124 @@
+//! Topology-parser battery over the sysfs fixture trees under
+//! `tests/fixtures/topology/` — single-node, 2-socket, and a 4-socket box
+//! with holes in the node numbering (a memory-only node and a non-node
+//! entry mixed in). Every test parses a fixture directory through
+//! [`Topology::from_sysfs_root`]; **none depends on the runner's real
+//! topology**, which is exactly what lets the suite pass on a single-node
+//! CI box while still exercising multi-socket parsing.
+
+use posh::model::{Topology, TopologySource};
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/topology")
+        .join(name)
+}
+
+#[test]
+fn single_node_fixture() {
+    let t = Topology::from_sysfs_root(fixture("single-node")).expect("fixture parses");
+    assert_eq!(t.source, TopologySource::Sysfs);
+    assert_eq!(t.sockets(), 1);
+    assert_eq!(t.nodes[0].id, 0);
+    assert_eq!(t.nodes[0].cpus, (0..8).collect::<Vec<_>>());
+    assert_eq!(t.total_cpus(), 8);
+    // One socket ⇒ the blocked map is flat: everyone on socket 0, and the
+    // per-socket quota is the whole job.
+    assert_eq!(t.pes_per_socket(8), 8);
+    for pe in 0..8 {
+        assert_eq!(t.pe_socket_of(pe, 8), 0);
+    }
+}
+
+#[test]
+fn two_socket_fixture() {
+    let t = Topology::from_sysfs_root(fixture("2-socket")).expect("fixture parses");
+    assert_eq!(t.source, TopologySource::Sysfs);
+    assert_eq!(t.sockets(), 2);
+    assert_eq!(t.nodes[0].id, 0);
+    assert_eq!(t.nodes[1].id, 1);
+    assert_eq!(t.nodes[0].cpus.len(), 16);
+    assert_eq!(t.nodes[1].cpus, (16..32).collect::<Vec<_>>());
+    assert_eq!(t.total_cpus(), 32);
+    // Blocked map, even division: 4 PEs → 2 per socket.
+    assert_eq!(t.pes_per_socket(4), 2);
+    assert_eq!(
+        (0..4).map(|pe| t.pe_socket_of(pe, 4)).collect::<Vec<_>>(),
+        vec![0, 0, 1, 1]
+    );
+    // Ragged division: 5 PEs → ⌈5/2⌉ = 3 per socket → [0,0,0,1,1].
+    assert_eq!(t.pes_per_socket(5), 3);
+    assert_eq!(
+        (0..5).map(|pe| t.pe_socket_of(pe, 5)).collect::<Vec<_>>(),
+        vec![0, 0, 0, 1, 1]
+    );
+}
+
+#[test]
+fn four_socket_fixture_with_holes() {
+    let t = Topology::from_sysfs_root(fixture("4-socket-holes")).expect("fixture parses");
+    assert_eq!(t.source, TopologySource::Sysfs);
+    // node1 is memory-only (no cpulist) and `possible` is not a node entry
+    // (even though the fixture gives it a cpulist): both are skipped, and
+    // the surviving ids keep their holes.
+    assert_eq!(t.sockets(), 4);
+    assert_eq!(
+        t.nodes.iter().map(|n| n.id).collect::<Vec<_>>(),
+        vec![0, 2, 4, 6]
+    );
+    // node0's cpulist is a two-range SMT pairing ("0-7,64-71").
+    let cpus0: Vec<usize> = (0..8).chain(64..72).collect();
+    assert_eq!(t.nodes[0].cpus, cpus0);
+    assert_eq!(t.total_cpus(), 16 + 16 + 8 + 8);
+    // Blocked map over 4 sockets: 8 PEs → 2 per socket.
+    assert_eq!(t.pes_per_socket(8), 2);
+    assert_eq!(
+        (0..8).map(|pe| t.pe_socket_of(pe, 8)).collect::<Vec<_>>(),
+        vec![0, 0, 1, 1, 2, 2, 3, 3]
+    );
+}
+
+#[test]
+fn missing_root_falls_back_flat() {
+    // A directory that does not exist parses to None …
+    assert!(Topology::from_sysfs_root(fixture("no-such-fixture")).is_none());
+    // … and the caller-side fallback is the flat single socket.
+    let t = Topology::flat();
+    assert_eq!(t.source, TopologySource::Flat);
+    assert_eq!(t.sockets(), 1);
+    for n in [1usize, 2, 8, 1000] {
+        assert_eq!(t.pes_per_socket(n), n.max(1));
+        assert_eq!(t.pe_socket_of(n.saturating_sub(1), n), 0);
+    }
+}
+
+#[test]
+fn fixture_parse_is_deterministic() {
+    // Leader election hangs off this map being a pure function: two
+    // independent parses of the same tree must agree exactly (directory
+    // enumeration order must not leak into the result).
+    for name in ["single-node", "2-socket", "4-socket-holes"] {
+        let a = Topology::from_sysfs_root(fixture(name)).unwrap();
+        let b = Topology::from_sysfs_root(fixture(name)).unwrap();
+        assert_eq!(a, b, "{name}");
+    }
+}
+
+#[test]
+fn blocked_map_is_monotone_and_covers() {
+    // For every fixture and job size: socket indices are non-decreasing in
+    // world rank (the contiguity the hierarchical schedules' leader
+    // intervals rely on), start at 0, and never exceed the socket count.
+    for name in ["single-node", "2-socket", "4-socket-holes"] {
+        let t = Topology::from_sysfs_root(fixture(name)).unwrap();
+        for n_pes in 1..=12usize {
+            let map: Vec<usize> = (0..n_pes).map(|pe| t.pe_socket_of(pe, n_pes)).collect();
+            assert_eq!(map[0], 0, "{name} n={n_pes}");
+            for w in map.windows(2) {
+                assert!(w[1] == w[0] || w[1] == w[0] + 1, "{name} n={n_pes}: {map:?}");
+            }
+            assert!(*map.last().unwrap() < t.sockets(), "{name} n={n_pes}: {map:?}");
+        }
+    }
+}
